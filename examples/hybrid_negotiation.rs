@@ -1,0 +1,49 @@
+//! Approach 3 deep-dive: sweep the (Z, S_d, S_p) space, show which rule
+//! fires where, and verify the hybrid never picks a catastrophically wrong
+//! mover.
+//!
+//! ```sh
+//! cargo run --release --example hybrid_negotiation
+//! ```
+
+use biomaft::cluster::{preset, ClusterPreset};
+use biomaft::hybrid::negotiate::{hybrid_reinstate_s, negotiate};
+use biomaft::hybrid::rules::{decide, Mover, RuleInputs};
+use biomaft::net::NodeId;
+use biomaft::util::fmt::kb_pow2;
+
+fn main() {
+    let costs = preset(ClusterPreset::Placentia).costs;
+    println!("decision map (Placentia):");
+    println!("{:<6} {:>12} {:>12}  {:>8} {:>9} {:>9}  rule", "Z", "S_d", "S_p", "winner", "agent(s)", "core(s)");
+    let mut conflicts = 0;
+    let mut total = 0;
+    for z in [3usize, 8, 10, 11, 20, 40, 63] {
+        for exp in [19u32, 22, 24, 25, 28, 31] {
+            let kb = 1u64 << exp;
+            let inp = RuleInputs { z, data_kb: kb, proc_kb: kb };
+            let log = negotiate(&costs, inp, NodeId(1), NodeId(2));
+            total += 1;
+            if log.conflicted {
+                conflicts += 1;
+            }
+            let (mover, rule) = decide(inp);
+            println!(
+                "{z:<6} {:>12} {:>12}  {:>8} {:>9.3} {:>9.3}  {rule:?}",
+                kb_pow2(kb),
+                kb_pow2(kb),
+                match mover {
+                    Mover::Agent => "agent",
+                    Mover::Core => "core",
+                },
+                log.agent_estimate_s,
+                log.core_estimate_s,
+            );
+            // sanity: hybrid within the best-of envelope + negotiation
+            let h = hybrid_reinstate_s(&costs, inp);
+            let worst = log.agent_estimate_s.max(log.core_estimate_s);
+            assert!(h <= worst + 1e-3);
+        }
+    }
+    println!("\n{conflicts}/{total} scenarios had conflicting proposals (resolved by rules)");
+}

@@ -1,0 +1,71 @@
+//! Quickstart: predict a core failure and watch the three multi-agent
+//! approaches relocate the sub-job.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use biomaft::cluster::{preset, ClusterPreset};
+use biomaft::agentft::simulate_agent_migration;
+use biomaft::coreft::simulate_core_migration;
+use biomaft::hybrid::negotiate::{hybrid_reinstate_s, negotiate};
+use biomaft::hybrid::rules::RuleInputs;
+use biomaft::net::NodeId;
+use biomaft::sim::Rng;
+use biomaft::util::fmt::kb_pow2;
+
+fn main() -> anyhow::Result<()> {
+    let cluster = preset(ClusterPreset::Placentia);
+    let costs = cluster.costs;
+    let mut rng = Rng::new(42);
+
+    // The genome experiment's configuration: three searchers + combiner,
+    // 512 MB of data per node.
+    let (z, data_kb, proc_kb) = (4usize, 1u64 << 19, 1u64 << 19);
+    println!(
+        "cluster: {}  |  Z = {z}, S_d = {}, S_p = {}\n",
+        cluster.name,
+        kb_pow2(data_kb),
+        kb_pow2(proc_kb)
+    );
+
+    // The agent's vicinity: three adjacent cores, one itself predicted to
+    // fail (the paper's failure scenario).
+    let adjacent = vec![(NodeId(1), false), (NodeId(2), true), (NodeId(3), false)];
+
+    println!("-- Approach 1: agent intelligence (Fig. 3 sequence) --");
+    let a = simulate_agent_migration(&costs.agent, z, data_kb, proc_kb, &adjacent, &mut rng, 0.02)
+        .expect("a healthy adjacent core exists");
+    for s in &a.steps {
+        println!("  {:<22} t={:.3}s  (+{:.3}s)", s.step, s.start_s, s.dur_s);
+    }
+    println!("  moved to node {:?}; reinstated in {:.3}s\n", a.target, a.reinstate_s);
+
+    println!("-- Approach 2: core intelligence (Fig. 5 sequence) --");
+    let c = simulate_core_migration(&costs.core, z, data_kb, proc_kb, &adjacent, &mut rng, 0.02)
+        .expect("a healthy adjacent core exists");
+    for s in &c.steps {
+        println!("  {:<22} t={:.3}s  (+{:.3}s)", s.step, s.start_s, s.dur_s);
+    }
+    println!("  migrated to node {:?}; reinstated in {:.3}s\n", c.target, c.reinstate_s);
+
+    println!("-- Approach 3: hybrid (Fig. 6 negotiation) --");
+    let inp = RuleInputs { z, data_kb, proc_kb };
+    let log = negotiate(&costs, inp, NodeId(1), NodeId(3));
+    println!(
+        "  agent proposes node {:?} (est {:.3}s); core proposes node {:?} (est {:.3}s)",
+        log.agent_target, log.agent_estimate_s, log.core_target, log.core_estimate_s
+    );
+    println!(
+        "  {:?} fired -> {:?} moves the sub-job to node {:?} ({}conflict)",
+        log.rule,
+        log.winner,
+        log.chosen_target,
+        if log.conflicted { "" } else { "no " }
+    );
+    println!("  hybrid reinstate: {:.3}s", hybrid_reinstate_s(&costs, inp));
+
+    println!("\nnever migrated onto node 2 (predicted to fail): {}",
+        a.target != NodeId(2) && c.target != NodeId(2));
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! The empirical study (Figs. 8-13): parallel-reduction sub-jobs on all
+//! four clusters, sweeping dependencies, data size and process size —
+//! prints the CSV series behind every figure.
+//!
+//! ```sh
+//! cargo run --release --example reduction_study [trials]
+//! ```
+
+use biomaft::experiments::figures;
+use biomaft::job::DepGraph;
+
+fn main() {
+    let trials: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(30);
+    let seed = 2014;
+
+    // The workload: a parallel summation tree (Fig. 7). Show how Z maps to
+    // the tree's fan-in, as used by the sweeps.
+    println!("parallel reduction trees (Fig. 7): Z = fan_in + 1 at internal nodes");
+    for fan_in in [2usize, 9, 62] {
+        let g = DepGraph::reduction_tree(fan_in * 2, fan_in);
+        let internal = biomaft::net::message::SubJobId(fan_in * 2);
+        println!("  fan-in {fan_in:>2}: {} sub-jobs, internal Z = {}", g.len(), g.z(internal));
+    }
+    println!();
+
+    for (name, fig) in [
+        ("fig8", figures::fig8 as fn(usize, u64) -> biomaft::metrics::Series),
+        ("fig9", figures::fig9),
+        ("fig10", figures::fig10),
+        ("fig11", figures::fig11),
+        ("fig12", figures::fig12),
+        ("fig13", figures::fig13),
+    ] {
+        let s = fig(trials, seed);
+        println!("{}", s.render());
+        println!("# CSV ({name})\n{}", s.to_csv());
+    }
+}

@@ -1,0 +1,99 @@
+"""AOT bridge: lower every L2 function to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out ../artifacts
+Emits   artifacts/<name>.hlo.txt plus artifacts/manifest.txt with one line
+per artifact:  ``name|in=<dtype>:<shape>;...|out=<dtype>:<shape>;...``
+(shapes comma-separated, outputs always a tuple because we lower with
+return_tuple=True).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_specs():
+    """(name, fn, example_args) for every executable the runtime loads."""
+    return [
+        (
+            "genome_search",
+            model.genome_search_fn,
+            (
+                _spec((model.CHUNK,), jnp.int8),
+                _spec((model.N_PATTERNS, model.WIDTH), jnp.int8),
+                _spec((model.N_PATTERNS,), jnp.int32),
+            ),
+        ),
+        (
+            "reduce",
+            model.reduce_fn,
+            (_spec((model.REDUCE_N,), jnp.float32),),
+        ),
+        (
+            "collate",
+            model.collate_fn,
+            (_spec((model.COLLATE_NODES, model.N_PATTERNS), jnp.int32),),
+        ),
+    ]
+
+
+def _fmt_aval(aval) -> str:
+    shape = "x".join(str(d) for d in aval.shape) or "scalar"
+    return f"{aval.dtype}:{shape}"
+
+
+def emit(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, fn, args in artifact_specs():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        ins = ";".join(_fmt_aval(a) for a in args)
+        outs_s = ";".join(_fmt_aval(o) for o in outs)
+        manifest_lines.append(f"{name}|in={ins}|out={outs_s}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return manifest_lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    emit(args.out)
+
+
+if __name__ == "__main__":
+    main()

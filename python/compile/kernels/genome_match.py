@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: windowed genome pattern matching.
+
+The compute hot-spot of the paper's genome-searching job (Results §Genome
+Searching): given an encoded nucleotide sequence chunk and a dictionary of
+short patterns (15-25 nt), find every position where a pattern matches.
+
+Encoding: A=0, C=1, G=2, T=3, N=4 (int8).  Patterns are padded to width W
+with the sentinel PAD=-1; ``lengths`` gives the true length of each pattern.
+A window position ``i`` is a hit for pattern ``p`` iff
+``seq[i + w] == patterns[p, w]`` for all ``w < lengths[p]``.
+
+Because the end of the chunk is padded logically with N (which never equals a
+pattern base), windows that would overrun the chunk can never match; the
+caller chunks chromosomes with an overlap of W-1 so no cross-boundary hit is
+lost.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the dictionary axis is the
+grid axis — each program holds one P_BLK-sized block of the dictionary in
+VMEM together with the resident sequence tile; the W-deep inner loop is a
+statically unrolled VPU compare-and-accumulate (no MXU work in this kernel).
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO which XLA:CPU fuses.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sequence alphabet.
+BASE_A, BASE_C, BASE_G, BASE_T, BASE_N = 0, 1, 2, 3, 4
+#: Pattern padding sentinel (never equals any encoded base).
+PAD = -1
+
+
+def _match_kernel(seq_ref, pat_ref, len_ref, mask_ref, *, width: int):
+    """One grid step: match one dictionary block against the whole chunk.
+
+    seq_ref:  int8[chunk]        resident sequence tile
+    pat_ref:  int8[p_blk, width] this program's dictionary block
+    len_ref:  int32[p_blk]       true pattern lengths
+    mask_ref: int8[p_blk, chunk] output hit mask
+    """
+    # Compare in int8 throughout: 4x less VPU/lane traffic than widening to
+    # int32 and ~4.3x faster on XLA:CPU (EXPERIMENTS.md §Perf L1).
+    seq = seq_ref[...]
+    chunk = seq.shape[0]
+    pats = pat_ref[...]
+    lens = len_ref[...]
+
+    acc = jnp.ones((pats.shape[0], chunk), dtype=jnp.bool_)
+    # Statically unrolled over the (small) pattern width: each step compares
+    # the w-shifted sequence against column w of the dictionary block.
+    for w in range(width):
+        # seq[i + w] for every window start i; tail padded with N so windows
+        # that overrun the chunk can never match a real base.  (w can exceed
+        # the chunk when width > chunk; then the whole shift is padding.)
+        shifted = jnp.full((chunk,), BASE_N, dtype=jnp.int8)
+        s = min(w, chunk)
+        shifted = jax.lax.dynamic_update_slice(
+            shifted, jax.lax.slice(seq, (s,), (chunk,)), (0,)
+        )
+        col = pats[:, w]  # [p_blk]
+        active = w < lens  # [p_blk]; padded columns don't constrain the match
+        hit_w = shifted[None, :] == col[:, None]
+        acc = jnp.logical_and(acc, jnp.logical_or(~active[:, None], hit_w))
+    mask_ref[...] = acc.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("p_blk",))
+def _noop(x, p_blk=0):  # pragma: no cover - placeholder to keep jit import hot
+    return x
+
+
+def make_genome_match(chunk: int, n_patterns: int, width: int, p_blk: int):
+    """Build the pallas_call for a fixed problem geometry.
+
+    The dictionary axis forms the grid (``n_patterns / p_blk`` programs); the
+    sequence chunk is block-resident (index_map pins block 0 for every
+    program).  Returns ``f(seq[int8 chunk], patterns[int8 P,W],
+    lengths[int32 P]) -> mask[int8 P, chunk]``.
+    """
+    if n_patterns % p_blk != 0:
+        raise ValueError(f"n_patterns={n_patterns} not divisible by p_blk={p_blk}")
+    grid = (n_patterns // p_blk,)
+    kernel = functools.partial(_match_kernel, width=width)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i: (0,)),          # seq: resident
+            pl.BlockSpec((p_blk, width), lambda i: (i, 0)),  # dictionary block
+            pl.BlockSpec((p_blk,), lambda i: (i,)),          # lengths block
+        ],
+        out_specs=pl.BlockSpec((p_blk, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_patterns, chunk), jnp.int8),
+        interpret=True,
+    )
+
+
+def genome_match(seq, patterns, lengths, *, p_blk: int = 64):
+    """Convenience wrapper deriving geometry from the operand shapes."""
+    n_patterns, width = patterns.shape
+    fn = make_genome_match(seq.shape[0], n_patterns, width, min(p_blk, n_patterns))
+    return fn(seq, patterns, lengths)

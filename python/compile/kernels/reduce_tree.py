@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: blocked tree reduction (the paper's parallel summation).
+
+The paper's empirical study (Figs. 8-13) uses a generic parallel summation
+algorithm: inputs flow leaves -> N1 -> N2 -> N3 with the (+) operator.  A
+sub-job is "sum this block of data"; this kernel is that block sum, written
+as a two-level tree inside one pallas grid: each program reduces one block
+to a partial, the L2 graph (model.py) reduces the partials.
+
+TPU mapping: one block per program resident in VMEM, lane-parallel VPU adds;
+the block size is the VMEM tile knob.  interpret=True (see genome_match.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_sum_kernel(x_ref, out_ref):
+    """Reduce one resident block to a single partial sum."""
+    out_ref[...] = jnp.sum(x_ref[...], dtype=jnp.float32).reshape((1,))
+
+
+def make_block_reduce(n: int, block: int):
+    """Build ``f(x[f32 n]) -> partials[f32 n/block]`` with a 1-D grid."""
+    if n % block != 0:
+        raise ValueError(f"n={n} not divisible by block={block}")
+    grid = (n // block,)
+    return pl.pallas_call(
+        _block_sum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // block,), jnp.float32),
+        interpret=True,
+    )
+
+
+def tree_reduce(x, *, block: int = 4096):
+    """Two-level tree sum: pallas partials + jnp root reduction."""
+    n = x.shape[0]
+    block = min(block, n)
+    while n % block != 0:  # degrade gracefully for awkward sizes (tests)
+        block -= 1
+    partials = make_block_reduce(n, block)(x)
+    return jnp.sum(partials, dtype=jnp.float32)

@@ -1,0 +1,59 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis).  They use a *different formulation* than the kernels so a shared
+bug is unlikely: the oracle gathers full windows and compares them as rows,
+the kernel walks shifted columns.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .genome_match import BASE_N
+
+
+def genome_match_ref(seq, patterns, lengths):
+    """Oracle for genome_match: gather-window formulation.
+
+    Returns int8[P, chunk] with mask[p, i] == 1 iff
+    seq[i : i + lengths[p]] == patterns[p, : lengths[p]] (windows that
+    overrun the chunk never match).
+    """
+    seq = jnp.asarray(seq, dtype=jnp.int32)
+    patterns = jnp.asarray(patterns, dtype=jnp.int32)
+    lengths = jnp.asarray(lengths, dtype=jnp.int32)
+    chunk = seq.shape[0]
+    n_pat, width = patterns.shape
+    # windows[i, w] = seq[i + w], N-padded past the end.
+    padded = jnp.concatenate([seq, jnp.full((width,), BASE_N, jnp.int32)])
+    idx = jnp.arange(chunk)[:, None] + jnp.arange(width)[None, :]
+    windows = padded[idx]  # [chunk, width]
+    # eq[p, i, w]
+    eq = windows[None, :, :] == patterns[:, None, :]
+    active = jnp.arange(width)[None, :] < lengths[:, None]  # [P, width]
+    ok = jnp.logical_or(~active[:, None, :], eq)
+    return jnp.all(ok, axis=-1).astype(jnp.int8)
+
+
+def genome_match_ref_np(seq, patterns, lengths):
+    """Naive numpy scan — a third, loop-based formulation for hypothesis."""
+    seq = np.asarray(seq, dtype=np.int64)
+    patterns = np.asarray(patterns, dtype=np.int64)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    chunk = seq.shape[0]
+    n_pat = patterns.shape[0]
+    out = np.zeros((n_pat, chunk), dtype=np.int8)
+    for p in range(n_pat):
+        plen = int(lengths[p])
+        pat = patterns[p, :plen]
+        for i in range(chunk - plen + 1):
+            if np.array_equal(seq[i : i + plen], pat):
+                out[p, i] = 1
+    return out
+
+
+def tree_reduce_ref(x):
+    """Oracle for tree_reduce."""
+    return jnp.sum(jnp.asarray(x, dtype=jnp.float32), dtype=jnp.float32)

@@ -1,0 +1,57 @@
+"""L2: the JAX compute graphs the rust coordinator executes per sub-job.
+
+Two workloads from the paper:
+
+* ``genome_search_fn`` — the genome-searching sub-job (Results §Genome
+  Searching): match a dictionary block against a chromosome chunk and also
+  return per-pattern hit counts so the coordinator can collate cheaply.
+* ``reduce_fn`` — the parallel-summation sub-job of the empirical study
+  (Figs. 8-13): tree-sum one data block.
+
+Both call the L1 Pallas kernels so the whole sub-job lowers into a single
+fused HLO module.  These functions are lowered once by aot.py; python never
+runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.genome_match import make_genome_match
+from .kernels.reduce_tree import make_block_reduce
+
+# Fixed AOT geometry — rust pads operands to these shapes (see
+# rust/src/runtime/artifact.rs and artifacts/manifest.txt).
+CHUNK = 32_768           # chromosome chunk length (bases)
+N_PATTERNS = 512         # dictionary block per executable invocation
+WIDTH = 25               # max pattern length (paper: 15-25 nt)
+P_BLK = 32               # pallas grid block over the dictionary axis (perf: §Perf L1 sweep)
+
+REDUCE_N = 1 << 20       # elements per summation sub-job
+REDUCE_BLK = 1 << 17     # pallas block (VMEM tile; perf: §Perf L1 sweep)
+
+
+def genome_search_fn(seq, patterns, lengths):
+    """Sub-job: search one dictionary block over one chunk.
+
+    Returns ``(mask[int8 N_PATTERNS, CHUNK], counts[int32 N_PATTERNS])``.
+    """
+    match = make_genome_match(CHUNK, N_PATTERNS, WIDTH, P_BLK)
+    mask = match(seq, patterns, lengths)
+    counts = jnp.sum(mask.astype(jnp.int32), axis=1)
+    return mask, counts
+
+
+def reduce_fn(x):
+    """Sub-job: tree-sum one block of the parallel summation."""
+    partials = make_block_reduce(REDUCE_N, REDUCE_BLK)(x)
+    return (jnp.sum(partials, dtype=jnp.float32),)
+
+
+def collate_fn(counts):
+    """Combining-node sub-job: merge per-search-node count vectors."""
+    return (jnp.sum(counts, axis=0, dtype=jnp.int32),)
+
+
+# Combining node merges up to this many search-node count vectors at once.
+COLLATE_NODES = 16

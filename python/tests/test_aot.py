@@ -1,0 +1,61 @@
+"""AOT emission tests: HLO text artifacts + manifest consistency."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    lines = aot.emit(str(out))
+    return out, lines
+
+
+def test_all_artifacts_emitted(emitted):
+    out, lines = emitted
+    names = {l.split("|")[0] for l in lines}
+    assert names == {"genome_search", "reduce", "collate"}
+    for n in names:
+        p = out / f"{n}.hlo.txt"
+        assert p.exists() and p.stat().st_size > 100
+
+
+def test_hlo_text_is_parseable_header(emitted):
+    out, _ = emitted
+    for n in ("genome_search", "reduce", "collate"):
+        text = (out / f"{n}.hlo.txt").read_text()
+        assert text.startswith("HloModule"), n
+        assert "ROOT" in text
+        # must be the text format, not a serialized proto
+        assert "\x00" not in text
+
+
+def test_manifest_shapes_match_model(emitted):
+    _, lines = emitted
+    m = {l.split("|")[0]: l for l in lines}
+    gs = m["genome_search"]
+    assert f"int8:{model.CHUNK}" in gs
+    assert f"int8:{model.N_PATTERNS}x{model.WIDTH}" in gs
+    assert f"int8:{model.N_PATTERNS}x{model.CHUNK}" in gs  # mask output
+    rd = m["reduce"]
+    assert f"float32:{model.REDUCE_N}" in rd
+    assert "float32:scalar" in rd
+
+
+def test_entry_layout_mentions_tuple_output(emitted):
+    """We lower with return_tuple=True; rust unwraps with to_tupleN."""
+    out, _ = emitted
+    text = (out / "reduce.hlo.txt").read_text()
+    first = text.splitlines()[0]
+    assert "->(" in first.replace(" ", "")
+
+
+def test_collate_fn_semantics():
+    counts = np.arange(model.COLLATE_NODES * model.N_PATTERNS, dtype=np.int32)
+    counts = counts.reshape(model.COLLATE_NODES, model.N_PATTERNS)
+    (merged,) = model.collate_fn(counts)
+    np.testing.assert_array_equal(np.asarray(merged), counts.sum(axis=0))

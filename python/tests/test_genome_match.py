@@ -1,0 +1,172 @@
+"""Kernel-vs-oracle tests for the genome_match Pallas kernel."""
+
+import numpy as np
+import pytest
+
+from compile.kernels.genome_match import (
+    BASE_A,
+    BASE_N,
+    BASE_T,
+    PAD,
+    genome_match,
+    make_genome_match,
+)
+from compile.kernels.ref import genome_match_ref, genome_match_ref_np
+
+
+def _mk_patterns(rng, seq, n_pat, width, min_len=2):
+    """Plant half the patterns in seq, make the other half random."""
+    pats = np.full((n_pat, width), PAD, np.int8)
+    lens = np.zeros(n_pat, np.int32)
+    for p in range(n_pat):
+        plen = int(rng.integers(min_len, width + 1))
+        lens[p] = plen
+        if p % 2 == 0 and len(seq) > width:
+            start = int(rng.integers(0, len(seq) - width))
+            pats[p, :plen] = seq[start : start + plen]
+        else:
+            pats[p, :plen] = rng.integers(0, 4, plen).astype(np.int8)
+    return pats, lens
+
+
+@pytest.mark.parametrize("chunk,n_pat,width,p_blk", [
+    (64, 4, 5, 2),
+    (128, 8, 8, 4),
+    (256, 16, 25, 8),
+    (1024, 32, 25, 8),
+    (333, 6, 7, 3),        # chunk not a power of two
+    (64, 4, 25, 4),        # width comparable to chunk
+])
+def test_kernel_matches_ref(chunk, n_pat, width, p_blk):
+    rng = np.random.default_rng(chunk * 31 + n_pat)
+    seq = rng.integers(0, 4, chunk).astype(np.int8)
+    pats, lens = _mk_patterns(rng, seq, n_pat, width)
+    got = np.asarray(genome_match(seq, pats, lens, p_blk=p_blk))
+    want = np.asarray(genome_match_ref(seq, pats, lens))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ref_matches_naive_numpy():
+    rng = np.random.default_rng(7)
+    seq = rng.integers(0, 4, 200).astype(np.int8)
+    pats, lens = _mk_patterns(rng, seq, 10, 9)
+    np.testing.assert_array_equal(
+        np.asarray(genome_match_ref(seq, pats, lens)),
+        genome_match_ref_np(seq, pats, lens),
+    )
+
+
+def test_planted_pattern_found():
+    seq = np.zeros(128, np.int8)  # all A
+    seq[40:45] = [1, 2, 3, 1, 2]  # CGTCG at 40
+    pats = np.full((2, 8), PAD, np.int8)
+    pats[0, :5] = [1, 2, 3, 1, 2]
+    pats[1, :3] = [3, 3, 3]  # TTT never present
+    lens = np.array([5, 3], np.int32)
+    mask = np.asarray(genome_match(seq, pats, lens, p_blk=2))
+    assert mask[0, 40] == 1
+    assert mask[0].sum() == 1
+    assert mask[1].sum() == 0
+
+
+def test_pattern_at_chunk_end_exact_fit():
+    seq = np.zeros(32, np.int8)
+    seq[29:32] = [3, 3, 3]
+    pats = np.full((2, 4), PAD, np.int8)
+    pats[0, :3] = [3, 3, 3]
+    pats[1, :4] = [3, 3, 3, 3]  # would overrun -> no hit
+    lens = np.array([3, 4], np.int32)
+    mask = np.asarray(genome_match(seq, pats, lens, p_blk=2))
+    assert mask[0, 29] == 1
+    assert mask[1].sum() == 0
+
+
+def test_window_overrun_never_matches():
+    """A real-base pattern longer than the remaining chunk never matches."""
+    seq = np.array([0, 1, 2, 3], np.int8)
+    pats = np.full((2, 6), PAD, np.int8)
+    pats[0, :6] = [0, 1, 2, 3, 0, 0]  # prefix matches, tail overruns chunk
+    pats[1, :2] = [2, 3]
+    lens = np.array([6, 2], np.int32)
+    mask = np.asarray(genome_match(seq, pats, lens, p_blk=2))
+    assert mask[0].sum() == 0  # overrun positions are N-padding != base A
+    assert mask[1, 2] == 1
+
+
+def test_width_exceeds_chunk():
+    """width > chunk (degenerate shift) must not crash and never hit."""
+    seq = np.array([0, 1], np.int8)
+    pats = np.full((1, 5), PAD, np.int8)
+    pats[0, :5] = [0, 1, 0, 1, 0]
+    lens = np.array([5], np.int32)
+    mask = np.asarray(genome_match(seq, pats, lens, p_blk=1))
+    assert mask.sum() == 0
+
+
+def test_length_one_pattern():
+    seq = np.array([0, 1, 0, 1, 0], np.int8)
+    pats = np.full((2, 3), PAD, np.int8)
+    pats[0, 0] = 0
+    pats[1, 0] = 1
+    lens = np.array([1, 1], np.int32)
+    mask = np.asarray(genome_match(seq, pats, lens, p_blk=2))
+    np.testing.assert_array_equal(mask[0], [1, 0, 1, 0, 1])
+    np.testing.assert_array_equal(mask[1], [0, 1, 0, 1, 0])
+
+
+def test_n_bases_never_match():
+    seq = np.full(16, BASE_N, np.int8)
+    pats = np.full((2, 2), PAD, np.int8)
+    pats[0, :2] = [0, 0]
+    pats[1, :2] = [BASE_N, BASE_N]  # pattern of Ns: policy = never matches? no:
+    lens = np.array([2, 2], np.int32)
+    mask = np.asarray(genome_match(seq, pats, lens, p_blk=2))
+    assert mask[0].sum() == 0
+    # N in pattern DOES equal N in sequence under exact-integer match; the
+    # generator never emits N patterns, but the kernel semantics are exact.
+    want = np.asarray(genome_match_ref(seq, pats, lens))
+    np.testing.assert_array_equal(mask, want)
+
+
+def test_identical_patterns_identical_rows():
+    rng = np.random.default_rng(3)
+    seq = rng.integers(0, 4, 256).astype(np.int8)
+    pats = np.full((4, 5), PAD, np.int8)
+    pats[:, :5] = seq[10:15]  # all four identical
+    lens = np.full(4, 5, np.int32)
+    mask = np.asarray(genome_match(seq, pats, lens, p_blk=2))
+    for p in range(1, 4):
+        np.testing.assert_array_equal(mask[0], mask[p])
+
+
+def test_grid_blocking_invariant():
+    """Result must not depend on the dictionary grid block size."""
+    rng = np.random.default_rng(11)
+    seq = rng.integers(0, 4, 512).astype(np.int8)
+    pats, lens = _mk_patterns(rng, seq, 16, 12)
+    outs = []
+    for p_blk in (1, 2, 4, 8, 16):
+        fn = make_genome_match(512, 16, 12, p_blk)
+        outs.append(np.asarray(fn(seq, pats, lens)))
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+def test_bad_geometry_raises():
+    with pytest.raises(ValueError):
+        make_genome_match(64, 10, 5, 4)  # 10 % 4 != 0
+
+
+def test_aot_geometry_smoke():
+    """The exact geometry aot.py freezes must execute correctly."""
+    from compile import model
+
+    rng = np.random.default_rng(5)
+    seq = rng.integers(0, 4, model.CHUNK).astype(np.int8)
+    pats, lens = _mk_patterns(rng, seq, model.N_PATTERNS, model.WIDTH, min_len=15)
+    fn = make_genome_match(model.CHUNK, model.N_PATTERNS, model.WIDTH, model.P_BLK)
+    mask = np.asarray(fn(seq, pats, lens))
+    want = np.asarray(genome_match_ref(seq, pats, lens))
+    np.testing.assert_array_equal(mask, want)
+    # planted patterns must be found at least once
+    assert (mask[::2].sum(axis=1) >= 1).all()

@@ -1,0 +1,83 @@
+"""Hypothesis property sweeps over the Pallas kernels' shape/dtype space."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.genome_match import PAD, genome_match
+from compile.kernels.ref import genome_match_ref, tree_reduce_ref
+from compile.kernels.reduce_tree import tree_reduce
+
+
+@st.composite
+def match_problem(draw):
+    chunk = draw(st.integers(8, 300))
+    width = draw(st.integers(1, 12))
+    n_pat = draw(st.integers(1, 12))
+    p_blk = draw(st.sampled_from([1, 2, 4]).filter(lambda b: n_pat % b == 0 or b == 1))
+    if n_pat % p_blk != 0:
+        p_blk = 1
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    seq = rng.integers(0, 5, chunk).astype(np.int8)  # includes N bases
+    pats = np.full((n_pat, width), PAD, np.int8)
+    lens = np.zeros(n_pat, np.int32)
+    for p in range(n_pat):
+        plen = int(rng.integers(1, width + 1))
+        lens[p] = plen
+        if rng.random() < 0.5 and chunk > width:
+            s = int(rng.integers(0, chunk - width))
+            pats[p, :plen] = seq[s : s + plen]
+        else:
+            pats[p, :plen] = rng.integers(0, 4, plen).astype(np.int8)
+    return seq, pats, lens, p_blk
+
+
+@settings(max_examples=40, deadline=None)
+@given(match_problem())
+def test_match_kernel_equals_oracle(problem):
+    seq, pats, lens, p_blk = problem
+    got = np.asarray(genome_match(seq, pats, lens, p_blk=p_blk))
+    want = np.asarray(genome_match_ref(seq, pats, lens))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=40, deadline=None)
+@given(match_problem())
+def test_match_planted_window_is_hit(problem):
+    """Any window physically present in seq must be reported at that index."""
+    seq, pats, lens, p_blk = problem
+    mask = np.asarray(genome_match(seq, pats, lens, p_blk=p_blk))
+    for p in range(pats.shape[0]):
+        plen = int(lens[p])
+        pat = pats[p, :plen].astype(np.int64)
+        for i in range(len(seq) - plen + 1):
+            if np.array_equal(seq[i : i + plen].astype(np.int64), pat):
+                assert mask[p, i] == 1, (p, i)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(1, 5000),
+    st.integers(0, 2**31 - 1),
+    st.sampled_from([np.float32, np.float64, np.int32]),
+)
+def test_tree_reduce_dtypes_and_sizes(n, seed, dtype):
+    rng = np.random.default_rng(seed)
+    if dtype is np.int32:
+        x = rng.integers(-100, 100, n).astype(dtype)
+    else:
+        x = rng.normal(size=n).astype(dtype)
+    got = float(tree_reduce(np.asarray(x, np.float32)))
+    want = float(tree_reduce_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 2000), st.integers(0, 2**31 - 1))
+def test_tree_reduce_permutation_invariant(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=n).astype(np.float32)
+    perm = rng.permutation(n)
+    a = float(tree_reduce(x))
+    b = float(tree_reduce(x[perm]))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)

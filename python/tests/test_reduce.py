@@ -1,0 +1,56 @@
+"""Kernel-vs-oracle tests for the reduce_tree Pallas kernel."""
+
+import numpy as np
+import pytest
+
+from compile.kernels.reduce_tree import make_block_reduce, tree_reduce
+from compile.kernels.ref import tree_reduce_ref
+
+
+@pytest.mark.parametrize("n,block", [
+    (16, 4), (64, 64), (4096, 256), (1 << 14, 1 << 10), (100, 10), (7, 7),
+])
+def test_block_reduce_matches_sum(n, block):
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=n).astype(np.float32)
+    partials = np.asarray(make_block_reduce(n, block)(x))
+    assert partials.shape == (n // block,)
+    np.testing.assert_allclose(partials.sum(), x.sum(), rtol=1e-5)
+    # each partial is the sum of its block
+    for i in range(n // block):
+        np.testing.assert_allclose(
+            partials[i], x[i * block : (i + 1) * block].sum(), rtol=1e-5
+        )
+
+
+@pytest.mark.parametrize("n", [1, 2, 9, 100, 1000, 12345, 1 << 16])
+def test_tree_reduce_matches_ref(n):
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=n).astype(np.float32)
+    got = float(tree_reduce(x))
+    want = float(tree_reduce_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_tree_reduce_zeros_and_constants():
+    assert float(tree_reduce(np.zeros(128, np.float32))) == 0.0
+    np.testing.assert_allclose(float(tree_reduce(np.ones(128, np.float32))), 128.0)
+
+
+def test_tree_reduce_negative_cancellation():
+    x = np.array([1e6, -1e6, 1.0, -1.0, 0.5] * 20, np.float32)
+    np.testing.assert_allclose(float(tree_reduce(x)), x.sum(), atol=1e-2)
+
+
+def test_block_reduce_bad_geometry():
+    with pytest.raises(ValueError):
+        make_block_reduce(10, 3)
+
+
+def test_aot_geometry_smoke():
+    from compile import model
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=model.REDUCE_N).astype(np.float32)
+    (got,) = model.reduce_fn(x)
+    np.testing.assert_allclose(float(got), x.sum(), rtol=1e-3, atol=1e-1)

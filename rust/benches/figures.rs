@@ -1,0 +1,19 @@
+//! Benches regenerating Figs. 8-13 (one bench per figure) — measures the
+//! cost of the full sweep at reduced trial counts plus single-point episode
+//! costs.
+
+use biomaft::bench::Suite;
+use biomaft::experiments::figures;
+
+fn main() {
+    std::env::set_var("BIOMAFT_BENCH_SAMPLES", std::env::var("BIOMAFT_BENCH_SAMPLES").unwrap_or_else(|_| "10".into()));
+    let mut s = Suite::new("figures (Figs. 8-13 regeneration)");
+    let trials = 8;
+    s.bench("fig8_deps_agent_sweep", || figures::fig8(trials, 1));
+    s.bench("fig9_deps_core_sweep", || figures::fig9(trials, 2));
+    s.bench("fig10_datasize_agent_sweep", || figures::fig10(trials, 3));
+    s.bench("fig11_datasize_core_sweep", || figures::fig11(trials, 4));
+    s.bench("fig12_procsize_agent_sweep", || figures::fig12(trials, 5));
+    s.bench("fig13_procsize_core_sweep", || figures::fig13(trials, 6));
+    s.finish();
+}

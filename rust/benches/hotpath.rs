@@ -1,0 +1,95 @@
+//! L3 hot-path micro-benchmarks: the DES engine, migration episodes,
+//! predictor scoring, hit collation — the paths the §Perf pass optimizes.
+
+use biomaft::agentft::simulate_agent_migration;
+use biomaft::bench::Suite;
+use biomaft::cluster::core::{Core, CoreId, HealthSample};
+use biomaft::cluster::{preset, ClusterPreset};
+use biomaft::coreft::simulate_core_migration;
+use biomaft::failure::predictor::Predictor;
+use biomaft::genome::{self, Strand};
+use biomaft::net::NodeId;
+use biomaft::sim::engine::{ActorId, Engine, Outbox};
+use biomaft::sim::{Rng, SimTime};
+
+fn main() {
+    std::env::set_var("BIOMAFT_BENCH_SAMPLES", std::env::var("BIOMAFT_BENCH_SAMPLES").unwrap_or_else(|_| "20".into()));
+    let mut s = Suite::new("hotpath");
+
+    // DES engine event throughput: self-rescheduling actor, 100k events.
+    s.bench_throughput("engine_100k_events", 100_000.0, || {
+        let mut eng: Engine<u32> = Engine::new();
+        let a = eng.add_actor(Box::new(|_me: ActorId, msg: u32, out: &mut Outbox<'_, u32>| {
+            if msg < 100_000 {
+                out.send_in(SimTime(1), ActorId(0), msg + 1);
+            }
+        }));
+        eng.schedule(SimTime::ZERO, a, 0u32);
+        eng.run();
+        eng.dispatched()
+    });
+
+    // Migration episodes (the Fig. 3 / Fig. 5 protocol simulations).
+    let costs = preset(ClusterPreset::Placentia).costs;
+    let adjacent: Vec<(NodeId, bool)> = (1..=3).map(|i| (NodeId(i), false)).collect();
+    s.bench("agent_migration_episode_z10", || {
+        let mut rng = Rng::new(1);
+        simulate_agent_migration(&costs.agent, 10, 1 << 24, 1 << 24, &adjacent, &mut rng, 0.025)
+    });
+    s.bench("core_migration_episode_z10", || {
+        let mut rng = Rng::new(2);
+        simulate_core_migration(&costs.core, 10, 1 << 24, 1 << 24, &adjacent, &mut rng, 0.025)
+    });
+    s.bench("agent_migration_episode_z63", || {
+        let mut rng = Rng::new(3);
+        simulate_agent_migration(&costs.agent, 63, 1 << 24, 1 << 24, &adjacent, &mut rng, 0.025)
+    });
+
+    // Predictor scoring over a full health log.
+    let mut core = Core::new(CoreId(0), 64);
+    for i in 0..64 {
+        core.observe(HealthSample {
+            at: SimTime::from_secs(i as f64),
+            load: 0.5,
+            wear: 0.2 + 0.01 * i as f64,
+            soft_errors: i % 7 == 0,
+        });
+    }
+    let pred = Predictor::default();
+    s.bench_throughput("predictor_score_1k_logs", 1000.0, || {
+        let mut acc = 0.0;
+        for _ in 0..1000 {
+            acc += pred.score(core.log());
+        }
+        acc
+    });
+
+    // Hit collation from a kernel mask (combining-node hot loop).
+    let n_pat = 512;
+    let chunk = 32_768;
+    let mut rng = Rng::new(9);
+    let mut mask = vec![0i8; n_pat * chunk];
+    for _ in 0..2000 {
+        let i = rng.range_usize(0, mask.len());
+        mask[i] = 1;
+    }
+    let lengths = vec![20i32; n_pat];
+    s.bench_throughput("collate_hits_16M_mask", (n_pat * chunk) as f64, || {
+        let mut hits = Vec::new();
+        genome::hits::collate_hits(
+            &mask, n_pat, chunk, 0, chunk, 0, &lengths, n_pat, 0, Strand::Forward, &mut hits,
+        );
+        hits.len()
+    });
+
+    // Naive search oracle (for scale comparison with the PJRT path).
+    let g = genome::synthesize_genome(100_000, 4);
+    let spec = genome::PatternSpec { n_patterns: 64, ..Default::default() };
+    let dict = genome::PatternDict::build(&spec, &g, &mut rng);
+    let bases: usize = g.iter().map(|c| c.seq.len()).sum();
+    s.bench_throughput("naive_search_100kb_64pat", (bases * 64) as f64, || {
+        genome::search_naive(&g, &dict, Strand::Forward).len()
+    });
+
+    s.finish();
+}

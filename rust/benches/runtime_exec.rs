@@ -1,0 +1,46 @@
+//! PJRT request-path benchmarks: executable invocation latency and
+//! throughput for each AOT artifact (skipped when artifacts are absent).
+
+use biomaft::bench::Suite;
+use biomaft::runtime::client::geom;
+use biomaft::runtime::{Manifest, Runtime};
+use biomaft::sim::Rng;
+
+fn main() {
+    std::env::set_var("BIOMAFT_BENCH_SAMPLES", std::env::var("BIOMAFT_BENCH_SAMPLES").unwrap_or_else(|_| "10".into()));
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        println!("runtime_exec: no artifacts at {dir:?} — run `make artifacts`; skipping");
+        return;
+    }
+    let rt = Runtime::load(&dir).expect("load artifacts");
+    let mut s = Suite::new("runtime_exec (PJRT request path)");
+
+    let mut rng = Rng::new(1);
+    let seq: Vec<i8> = (0..geom::CHUNK).map(|_| rng.range_u64(0, 4) as i8).collect();
+    let mut patterns = vec![-1i8; geom::N_PATTERNS * geom::WIDTH];
+    let mut lengths = vec![0i32; geom::N_PATTERNS];
+    for p in 0..geom::N_PATTERNS {
+        let len = rng.range_usize(15, 26);
+        lengths[p] = len as i32;
+        for w in 0..len {
+            patterns[p * geom::WIDTH + w] = rng.range_u64(0, 4) as i8;
+        }
+    }
+    let windows = (geom::CHUNK * geom::N_PATTERNS) as f64;
+    s.bench_throughput("genome_search_chunk_512pat", windows, || {
+        rt.genome_search(&seq, &patterns, &lengths).unwrap()
+    });
+
+    let x: Vec<f32> = (0..geom::REDUCE_N).map(|_| rng.f64() as f32).collect();
+    s.bench_throughput("reduce_1M_f32", geom::REDUCE_N as f64, || rt.reduce(&x).unwrap());
+
+    let counts = vec![3i32; geom::COLLATE_NODES * geom::N_PATTERNS];
+    s.bench_throughput(
+        "collate_16x512",
+        (geom::COLLATE_NODES * geom::N_PATTERNS) as f64,
+        || rt.collate(&counts).unwrap(),
+    );
+
+    s.finish();
+}

@@ -1,0 +1,26 @@
+//! Benches regenerating Tables 1 and 2 end-to-end, plus the cold-restart
+//! survival simulation and the prediction census.
+
+use biomaft::bench::Suite;
+use biomaft::checkpoint::cold_restart::{mean_cold_restart, ColdRestartParams};
+use biomaft::experiments::{prediction, tables};
+use biomaft::sim::Rng;
+
+fn main() {
+    std::env::set_var("BIOMAFT_BENCH_SAMPLES", std::env::var("BIOMAFT_BENCH_SAMPLES").unwrap_or_else(|_| "10".into()));
+    let mut s = Suite::new("tables (Tables 1-2 regeneration)");
+    s.bench("table1_full", || tables::table1());
+    s.bench("table2_full", || tables::table2());
+    s.bench_throughput("cold_restart_survival_2k_trials", 2000.0, || {
+        let mut rng = Rng::new(1);
+        mean_cold_restart(&ColdRestartParams::random_5h(5.0 * 3600.0), 2000, &mut rng)
+    });
+    s.bench_throughput("prediction_census_1k_windows", 1000.0, || {
+        let mut rng = Rng::new(2);
+        prediction::run_prediction(
+            &prediction::PredictionCfg { windows: 1000, ..Default::default() },
+            &mut rng,
+        )
+    });
+    s.finish();
+}

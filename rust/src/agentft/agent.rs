@@ -1,0 +1,129 @@
+//! The mobile agent: a wrapper that situates a sub-job on a core.
+//!
+//! "The agents and the sub-job are independent of each other; in other
+//! words, an agent acts as a wrapper around a sub-job to situate the
+//! sub-job on a core." — Methods, Approach 1.
+
+use crate::net::message::SubJobId;
+use crate::net::NodeId;
+
+/// Lifecycle of an agent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AgentState {
+    /// Executing its payload on `home`.
+    Executing,
+    /// Mid-migration to the embedded target.
+    Moving { to: NodeId },
+    /// Payload finished; results handed to the collator.
+    Finished,
+    /// The core failed before the agent could move (unpredicted failure).
+    Dead,
+}
+
+/// An agent carrying one sub-job as payload.
+///
+/// The three computational requirements of the paper (knowledge of the
+/// overall job, access to the payload's data, knowledge of the operation)
+/// map to `job_tag`, `data_kb` and the executable named by `op`.
+#[derive(Debug, Clone)]
+pub struct Agent {
+    pub sub_job: SubJobId,
+    /// Which overall job this agent participates in.
+    pub job_tag: u64,
+    /// Name of the AOT executable implementing the payload operation
+    /// (resolved by `runtime::artifact`).
+    pub op: &'static str,
+    pub data_kb: u64,
+    pub proc_kb: u64,
+    pub home: NodeId,
+    pub state: AgentState,
+    /// Dependency endpoints the agent must carry and re-establish on move.
+    pub deps: Vec<SubJobId>,
+    /// Number of completed migrations (for instability accounting).
+    pub moves: usize,
+}
+
+impl Agent {
+    pub fn new(
+        sub_job: SubJobId,
+        job_tag: u64,
+        op: &'static str,
+        data_kb: u64,
+        proc_kb: u64,
+        home: NodeId,
+        deps: Vec<SubJobId>,
+    ) -> Self {
+        Self {
+            sub_job,
+            job_tag,
+            op,
+            data_kb,
+            proc_kb,
+            home,
+            state: AgentState::Executing,
+            deps,
+            moves: 0,
+        }
+    }
+
+    /// The paper's Z for this agent.
+    pub fn z(&self) -> usize {
+        self.deps.len()
+    }
+
+    /// Begin moving to `target`.
+    pub fn start_move(&mut self, target: NodeId) {
+        debug_assert!(matches!(self.state, AgentState::Executing));
+        self.state = AgentState::Moving { to: target };
+    }
+
+    /// Complete the move: the agent is now executing on the target.
+    pub fn finish_move(&mut self) {
+        if let AgentState::Moving { to } = self.state {
+            self.home = to;
+            self.state = AgentState::Executing;
+            self.moves += 1;
+        } else {
+            panic!("finish_move while not moving");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agent() -> Agent {
+        Agent::new(
+            SubJobId(3),
+            7,
+            "genome_search",
+            1 << 19,
+            1 << 19,
+            NodeId(2),
+            vec![SubJobId(0), SubJobId(1), SubJobId(9)],
+        )
+    }
+
+    #[test]
+    fn z_counts_deps() {
+        assert_eq!(agent().z(), 3);
+    }
+
+    #[test]
+    fn move_lifecycle() {
+        let mut a = agent();
+        a.start_move(NodeId(5));
+        assert_eq!(a.state, AgentState::Moving { to: NodeId(5) });
+        a.finish_move();
+        assert_eq!(a.home, NodeId(5));
+        assert_eq!(a.state, AgentState::Executing);
+        assert_eq!(a.moves, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn finish_without_start_panics() {
+        agent().finish_move();
+    }
+}

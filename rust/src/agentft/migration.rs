@@ -1,0 +1,290 @@
+//! The Fig. 3 failure-scenario episode as a discrete-event simulation.
+//!
+//! The episode starts when the hardware probing process on `C_PF` notifies
+//! the agent process `P_PF` of a predicted failure and ends when the new
+//! agent process has re-established its last dependency. Each protocol step
+//! runs in virtual time derived from the cluster's calibrated
+//! [`AgentCosts`]; per-step lognormal jitter models trial-to-trial
+//! variation. With jitter disabled the episode total equals
+//! `AgentCosts::reinstate_s` exactly (asserted in tests) — the DES and the
+//! closed form are two views of the same model.
+
+use crate::cluster::spec::{size_log_factor, AgentCosts};
+use crate::net::NodeId;
+use crate::sim::engine::{ActorId, Engine, Outbox};
+use crate::sim::{Rng, SimTime};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// One recorded protocol step (name, start, duration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepTrace {
+    pub step: &'static str,
+    pub start_s: f64,
+    pub dur_s: f64,
+}
+
+/// Result of a migration episode.
+#[derive(Debug, Clone)]
+pub struct MigrationOutcome {
+    /// Total time to reinstate execution (the paper's ΔT_A2).
+    pub reinstate_s: f64,
+    /// The adjacent core the agent moved to.
+    pub target: NodeId,
+    /// Step-by-step trace (Fig. 3 sequence).
+    pub steps: Vec<StepTrace>,
+}
+
+/// Episode messages the state machine sends itself.
+#[derive(Debug, Clone)]
+enum Ep {
+    PredictionNotified,
+    PredictionsGathered,
+    Spawned,
+    StateTransferred,
+    DependencyDone { _idx: usize },
+}
+
+struct EpisodeActor {
+    costs: AgentCosts,
+    z: usize,
+    data_kb: u64,
+    proc_kb: u64,
+    jitter: Vec<f64>,
+    deps_done: usize,
+    trace: Rc<RefCell<Vec<StepTrace>>>,
+    finished: Rc<RefCell<Option<f64>>>,
+}
+
+impl EpisodeActor {
+    fn record(&self, step: &'static str, start: SimTime, dur: f64) {
+        self.trace.borrow_mut().push(StepTrace { step, start_s: start.as_secs(), dur_s: dur });
+    }
+}
+
+impl crate::sim::engine::Actor<Ep> for EpisodeActor {
+    fn on_msg(&mut self, me: ActorId, msg: Ep, out: &mut Outbox<'_, Ep>) {
+        let now = out.now();
+        match msg {
+            // P_PF learns of the prediction; request predictions from the
+            // probing processes on all adjacent cores (parallel RTTs).
+            Ep::PredictionNotified => {
+                let dur = self.costs.probe_gather_s * self.jitter[0];
+                self.record("gather_predictions", now, dur);
+                out.send_in(SimTime::from_secs(dur), me, Ep::PredictionsGathered);
+            }
+            // Create the replacement process on the chosen adjacent core.
+            Ep::PredictionsGathered => {
+                let dur = self.costs.spawn_s * self.jitter[1];
+                self.record("spawn_process", now, dur);
+                out.send_in(SimTime::from_secs(dur), me, Ep::Spawned);
+            }
+            // Transfer the agent's working state: handle/segment
+            // registration scales with log2 of the payload sizes, plus the
+            // fixed agent-layer cost.
+            Ep::Spawned => {
+                let dur = (self.costs.layer_s
+                    + self.costs.data_log_coef_s * size_log_factor(self.data_kb)
+                    + self.costs.proc_log_coef_s * size_log_factor(self.proc_kb))
+                    * self.jitter[2];
+                self.record("transfer_state", now, dur);
+                out.send_in(SimTime::from_secs(dur), me, Ep::StateTransferred);
+            }
+            // Notify dependents and re-establish each dependency. The
+            // handshakes pipeline through a window of `dep_window` parallel
+            // channels; beyond the window each extra handshake only adds the
+            // overlap tail, and past the NIC queue depth retransmissions add
+            // congestion cost. Completion times follow that schedule.
+            Ep::StateTransferred => {
+                if self.z == 0 {
+                    self.finished.borrow_mut().replace(now.as_secs());
+                    out.stop = true;
+                    return;
+                }
+                let j = self.jitter[3];
+                for i in 0..self.z {
+                    let within = (i + 1).min(self.costs.dep_window) as f64;
+                    let beyond = (i + 1).saturating_sub(self.costs.dep_window) as f64;
+                    let mut off = self.costs.dep_handshake_s * (within + self.costs.dep_tail * beyond);
+                    let over = (i + 1).saturating_sub(self.costs.congestion_threshold) as f64;
+                    off += self.costs.congestion_s * over;
+                    out.send_in(SimTime::from_secs(off * j), me, Ep::DependencyDone { _idx: i });
+                }
+                self.record("dependency_phase", now, self.costs.dep_phase_s(self.z) * j);
+            }
+            Ep::DependencyDone { .. } => {
+                self.deps_done += 1;
+                if self.deps_done == self.z {
+                    // Old agent process terminated; new process fully wired.
+                    self.finished.borrow_mut().replace(now.as_secs());
+                    out.stop = true;
+                }
+            }
+        }
+    }
+}
+
+/// Choose the migration target among adjacent cores, skipping any that are
+/// themselves predicted to fail (the paper's scenario: "any adjacent core
+/// onto which the job needs to be reallocated can also fail").
+///
+/// Returns `None` when every adjacent core is predicted to fail — the
+/// caller must then fall back to checkpoint recovery.
+pub fn choose_target(adjacent: &[(NodeId, bool)], rng: &mut Rng) -> Option<NodeId> {
+    let healthy: Vec<NodeId> =
+        adjacent.iter().filter(|(_, doomed)| !doomed).map(|(n, _)| *n).collect();
+    if healthy.is_empty() {
+        None
+    } else {
+        Some(*rng.pick(&healthy))
+    }
+}
+
+/// Run one agent-intelligence migration episode.
+///
+/// * `adjacent` — the agent's vicinity with per-core failure predictions.
+/// * `noise_sigma` — per-step lognormal jitter (0 ⇒ deterministic; the
+///   episode then equals `costs.reinstate_s(z, data_kb, proc_kb)` exactly).
+pub fn simulate_agent_migration(
+    costs: &AgentCosts,
+    z: usize,
+    data_kb: u64,
+    proc_kb: u64,
+    adjacent: &[(NodeId, bool)],
+    rng: &mut Rng,
+    noise_sigma: f64,
+) -> Option<MigrationOutcome> {
+    let target = choose_target(adjacent, rng)?;
+    let jitter: Vec<f64> = (0..4)
+        .map(|_| if noise_sigma > 0.0 { rng.jitter(noise_sigma) } else { 1.0 })
+        .collect();
+    let trace = Rc::new(RefCell::new(Vec::new()));
+    let finished = Rc::new(RefCell::new(None));
+    let mut eng: Engine<Ep> = Engine::new();
+    let actor = EpisodeActor {
+        costs: *costs,
+        z,
+        data_kb,
+        proc_kb,
+        jitter,
+        deps_done: 0,
+        trace: trace.clone(),
+        finished: finished.clone(),
+    };
+    let id = eng.add_actor(Box::new(actor));
+    eng.schedule(SimTime::ZERO, id, Ep::PredictionNotified);
+    eng.run();
+    let reinstate_s = finished.borrow().expect("episode did not finish");
+    let steps = trace.borrow().clone();
+    Some(MigrationOutcome { reinstate_s, target, steps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{preset, ClusterPreset};
+
+    fn adj(n: usize) -> Vec<(NodeId, bool)> {
+        (0..n).map(|i| (NodeId(i + 100), false)).collect()
+    }
+
+    #[test]
+    fn deterministic_episode_matches_closed_form() {
+        let costs = preset(ClusterPreset::Placentia).costs.agent;
+        let mut rng = Rng::new(1);
+        for z in [1usize, 3, 10, 25, 63] {
+            for kb in [1u64 << 19, 1 << 24, 1 << 31] {
+                let out =
+                    simulate_agent_migration(&costs, z, kb, kb, &adj(4), &mut rng, 0.0).unwrap();
+                let want = costs.reinstate_s(z, kb, kb);
+                assert!(
+                    (out.reinstate_s - want).abs() < 1e-9,
+                    "z={z} kb={kb}: DES {} vs closed {want}",
+                    out.reinstate_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_deps_episode_finishes() {
+        let costs = preset(ClusterPreset::Placentia).costs.agent;
+        let mut rng = Rng::new(2);
+        let out = simulate_agent_migration(&costs, 0, 1, 1, &adj(2), &mut rng, 0.0).unwrap();
+        assert!(out.reinstate_s > 0.0);
+        assert_eq!(out.steps.len(), 3); // no dependency phase
+    }
+
+    #[test]
+    fn steps_follow_fig3_order() {
+        let costs = preset(ClusterPreset::Placentia).costs.agent;
+        let mut rng = Rng::new(3);
+        let out = simulate_agent_migration(&costs, 5, 1 << 20, 1 << 20, &adj(3), &mut rng, 0.0)
+            .unwrap();
+        let names: Vec<_> = out.steps.iter().map(|s| s.step).collect();
+        assert_eq!(
+            names,
+            vec!["gather_predictions", "spawn_process", "transfer_state", "dependency_phase"]
+        );
+        // contiguous, ordered in time
+        for w in out.steps.windows(2) {
+            assert!(w[1].start_s >= w[0].start_s + w[0].dur_s - 1e-9);
+        }
+    }
+
+    #[test]
+    fn target_never_predicted_to_fail() {
+        let mut rng = Rng::new(4);
+        let adjacent = vec![
+            (NodeId(1), true),
+            (NodeId(2), false),
+            (NodeId(3), true),
+            (NodeId(4), false),
+        ];
+        for _ in 0..200 {
+            let t = choose_target(&adjacent, &mut rng).unwrap();
+            assert!(t == NodeId(2) || t == NodeId(4));
+        }
+    }
+
+    #[test]
+    fn all_adjacent_doomed_returns_none() {
+        let mut rng = Rng::new(5);
+        let adjacent = vec![(NodeId(1), true), (NodeId(2), true)];
+        assert!(choose_target(&adjacent, &mut rng).is_none());
+        let costs = preset(ClusterPreset::Placentia).costs.agent;
+        assert!(simulate_agent_migration(&costs, 3, 1, 1, &adjacent, &mut rng, 0.0).is_none());
+    }
+
+    #[test]
+    fn jitter_produces_spread_with_median_near_model() {
+        let costs = preset(ClusterPreset::Placentia).costs.agent;
+        let mut rng = Rng::new(6);
+        let want = costs.reinstate_s(4, 1 << 19, 1 << 19);
+        let xs: Vec<f64> = (0..200)
+            .map(|_| {
+                simulate_agent_migration(&costs, 4, 1 << 19, 1 << 19, &adj(3), &mut rng, 0.025)
+                    .unwrap()
+                    .reinstate_s
+            })
+            .collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - want).abs() / want < 0.02, "mean {mean} want {want}");
+        let min = xs.iter().cloned().fold(f64::MAX, f64::min);
+        let max = xs.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max > min, "no spread");
+    }
+
+    #[test]
+    fn trials_deterministic_for_same_seed() {
+        let costs = preset(ClusterPreset::Acet).costs.agent;
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            simulate_agent_migration(&costs, 7, 1 << 22, 1 << 22, &adj(4), &mut rng, 0.025)
+                .unwrap()
+                .reinstate_s
+        };
+        assert_eq!(run(99), run(99));
+        assert_ne!(run(99), run(100));
+    }
+}

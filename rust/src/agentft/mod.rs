@@ -1,0 +1,15 @@
+//! Approach 1 — fault tolerance incorporating **agent intelligence**.
+//!
+//! Sub-jobs are payloads of mobile agents situated on computing cores. The
+//! agent probes its core; when a failure is predicted it executes the
+//! Fig. 3 communication sequence: gather adjacent predictions, spawn a
+//! replacement process on a healthy adjacent core, transfer its working
+//! state, notify every input/output-dependent agent, terminate the old
+//! process, and re-establish each dependency *individually* (the structural
+//! difference from Approach 2, where re-binding is automatic).
+
+pub mod agent;
+pub mod migration;
+
+pub use agent::{Agent, AgentState};
+pub use migration::{simulate_agent_migration, MigrationOutcome, StepTrace};

@@ -1,0 +1,143 @@
+//! Benchmark harness (criterion substitute — the vendored crate set has no
+//! criterion). Used by `rust/benches/*.rs` with `harness = false`.
+//!
+//! Reports min/mean/median/p95 over N timed samples after warmup, plus
+//! derived throughput when a unit count is given. Samples use
+//! `std::time::Instant` and a `black_box` to defeat dead-code elimination.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// One benchmark's measurements (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> crate::metrics::Summary {
+        crate::metrics::Summary::of(&self.samples)
+    }
+
+    /// Render one line, criterion-style.
+    pub fn render(&self) -> String {
+        let s = self.summary();
+        let mut line = format!(
+            "{:<44} {:>12}/iter  (median {:>12}, p95 {:>12}, n={})",
+            self.name,
+            fmt_t(s.mean),
+            fmt_t(s.median),
+            fmt_t(s.p95),
+            s.n
+        );
+        if let Some(u) = self.units_per_iter {
+            line.push_str(&format!("  [{:.2e} units/s]", u / s.mean));
+        }
+        line
+    }
+}
+
+fn fmt_t(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// A suite of benchmarks sharing a header.
+pub struct Suite {
+    title: String,
+    results: Vec<BenchResult>,
+    /// Target samples per benchmark (overridable with BIOMAFT_BENCH_SAMPLES).
+    samples: usize,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        let samples = std::env::var("BIOMAFT_BENCH_SAMPLES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(20);
+        println!("=== bench suite: {title} ===");
+        Self { title: title.to_string(), results: Vec::new(), samples }
+    }
+
+    /// Time `f`, which must return something observable (passed through
+    /// black_box).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_units(name, None, &mut f)
+    }
+
+    /// Time `f` and report throughput in `units` per iteration.
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        units: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_units(name, Some(units), &mut f)
+    }
+
+    fn bench_units<T>(
+        &mut self,
+        name: &str,
+        units: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        // warmup
+        for _ in 0..3.min(self.samples) {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult { name: name.to_string(), samples, units_per_iter: units };
+        println!("{}", r.render());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Final summary block.
+    pub fn finish(self) {
+        println!("=== {}: {} benchmarks ===\n", self.title, self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        std::env::remove_var("BIOMAFT_BENCH_SAMPLES");
+        let mut s = Suite::new("t");
+        let r = s.bench("noop-ish", || (0..100).sum::<u64>());
+        assert_eq!(r.samples.len(), 20);
+        assert!(r.summary().mean >= 0.0);
+    }
+
+    #[test]
+    fn throughput_line_mentions_units() {
+        let mut s = Suite::new("t2");
+        let r = s.bench_throughput("tp", 1000.0, || (0..1000).sum::<u64>());
+        assert!(r.render().contains("units/s"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_t(2e-9).contains("ns"));
+        assert!(fmt_t(2e-6).contains("µs"));
+        assert!(fmt_t(2e-3).contains("ms"));
+        assert!(fmt_t(2.0).contains(" s"));
+    }
+}

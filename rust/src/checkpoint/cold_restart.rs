@@ -1,0 +1,197 @@
+//! Cold restart with a human administrator — the paper's "no fault
+//! tolerance" baseline (Table 2).
+//!
+//! On every node failure the only option is to restart the job from the
+//! beginning after ~10 minutes of administrator reaction. The paper's
+//! totals (≈21 h for a 5 h job under one periodic failure/hour, ≈80 h under
+//! five random failures/hour) are only reachable if failures keep striking
+//! *during re-execution*; a deterministic one-per-hour process would never
+//! let the job finish at all. We therefore model each hourly failure slot as
+//! striking with a survival probability, simulate the restart process to
+//! completion, and calibrate the strike probabilities to the paper's
+//! magnitudes (documented in EXPERIMENTS.md):
+//!
+//! * 1 periodic/hour → strike prob 0.33 at minute 14 of each running hour;
+//! * 1 random/hour  → strike prob 0.33 at a uniform minute;
+//! * 5 random/hour  → 5 slots/hour, strike prob 0.15 each.
+
+use crate::sim::Rng;
+
+/// Parameters of a cold-restart simulation.
+#[derive(Debug, Clone, Copy)]
+pub struct ColdRestartParams {
+    /// Nominal failure-free job duration, seconds.
+    pub job_s: f64,
+    /// Administrator reaction + resubmission time per failure.
+    pub admin_s: f64,
+    /// Failure slots per running hour.
+    pub slots_per_hour: usize,
+    /// Probability a slot strikes.
+    pub strike_p: f64,
+    /// Fixed offset into the hour for periodic mode (`None` = uniform).
+    pub periodic_offset_s: Option<f64>,
+    /// Safety cap on simulated wall-clock (avoid unbounded runs at p→1).
+    pub max_wall_s: f64,
+}
+
+impl ColdRestartParams {
+    /// Table 2's "one periodic failure per hour" configuration.
+    pub fn periodic_1h(job_s: f64) -> Self {
+        Self {
+            job_s,
+            admin_s: 600.0,
+            slots_per_hour: 1,
+            strike_p: 0.33,
+            periodic_offset_s: Some(14.0 * 60.0),
+            max_wall_s: 400.0 * 3600.0,
+        }
+    }
+
+    /// Table 2's "one random failure per hour".
+    pub fn random_1h(job_s: f64) -> Self {
+        Self { periodic_offset_s: None, ..Self::periodic_1h(job_s) }
+    }
+
+    /// Table 2's "five random failures per hour".
+    pub fn random_5h(job_s: f64) -> Self {
+        Self {
+            slots_per_hour: 5,
+            strike_p: 0.15,
+            periodic_offset_s: None,
+            ..Self::periodic_1h(job_s)
+        }
+    }
+}
+
+/// Outcome of one cold-restart trial.
+#[derive(Debug, Clone, Copy)]
+pub struct ColdRestartOutcome {
+    pub total_s: f64,
+    pub failures: usize,
+}
+
+/// Simulate one trial: run the job; in each running hour the failure slots
+/// may strike; a strike restarts the job from zero after `admin_s`.
+pub fn simulate_cold_restart(p: &ColdRestartParams, rng: &mut Rng) -> ColdRestartOutcome {
+    let mut wall = 0.0;
+    let mut failures = 0;
+    'attempt: loop {
+        // progress through the job hour by hour
+        let mut progressed = 0.0;
+        while progressed < p.job_s {
+            let hour_len = (p.job_s - progressed).min(3600.0);
+            // strike times within this running hour
+            let mut strikes: Vec<f64> = Vec::new();
+            for s in 0..p.slots_per_hour {
+                if rng.chance(p.strike_p) {
+                    let at = match p.periodic_offset_s {
+                        Some(off) => off * (s as f64 + 1.0) / p.slots_per_hour as f64,
+                        None => rng.uniform(0.0, 3600.0),
+                    };
+                    if at < hour_len {
+                        strikes.push(at);
+                    }
+                }
+            }
+            if let Some(&first) = strikes.iter().min_by(|a, b| a.partial_cmp(b).unwrap()) {
+                wall += first + p.admin_s;
+                failures += 1;
+                if wall > p.max_wall_s {
+                    // cap reached — report the cap (documented limitation)
+                    return ColdRestartOutcome { total_s: wall, failures };
+                }
+                continue 'attempt; // restart from zero
+            }
+            progressed += hour_len;
+            wall += hour_len;
+        }
+        return ColdRestartOutcome { total_s: wall, failures };
+    }
+}
+
+/// Mean over `trials` independent trials (the paper uses 5000).
+pub fn mean_cold_restart(p: &ColdRestartParams, trials: usize, rng: &mut Rng) -> ColdRestartOutcome {
+    let mut total = 0.0;
+    let mut fails = 0usize;
+    for t in 0..trials {
+        let mut trial_rng = rng.fork(t as u64);
+        let o = simulate_cold_restart(p, &mut trial_rng);
+        total += o.total_s;
+        fails += o.failures;
+    }
+    ColdRestartOutcome {
+        total_s: total / trials as f64,
+        failures: (fails as f64 / trials as f64).round() as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const H5: f64 = 5.0 * 3600.0;
+
+    #[test]
+    fn no_failures_means_nominal_time() {
+        let mut rng = Rng::new(1);
+        let p = ColdRestartParams { strike_p: 0.0, ..ColdRestartParams::periodic_1h(H5) };
+        let o = simulate_cold_restart(&p, &mut rng);
+        assert_eq!(o.total_s, H5);
+        assert_eq!(o.failures, 0);
+    }
+
+    #[test]
+    fn periodic_band_matches_paper_magnitude() {
+        // Paper: > 21 h for the 5 h job with one periodic failure/hour.
+        let mut rng = Rng::new(2);
+        let o = mean_cold_restart(&ColdRestartParams::periodic_1h(H5), 3000, &mut rng);
+        let hours = o.total_s / 3600.0;
+        assert!((15.0..30.0).contains(&hours), "mean {hours} h");
+    }
+
+    #[test]
+    fn random_band_matches_paper_magnitude() {
+        // Paper: > 23 h with one random failure/hour.
+        let mut rng = Rng::new(3);
+        let o = mean_cold_restart(&ColdRestartParams::random_1h(H5), 3000, &mut rng);
+        let hours = o.total_s / 3600.0;
+        assert!((15.0..32.0).contains(&hours), "mean {hours} h");
+    }
+
+    #[test]
+    fn five_random_band_matches_paper_magnitude() {
+        // Paper: > 80 h (≈16× nominal) with five random failures/hour.
+        let mut rng = Rng::new(4);
+        let o = mean_cold_restart(&ColdRestartParams::random_5h(H5), 1500, &mut rng);
+        let hours = o.total_s / 3600.0;
+        assert!((55.0..115.0).contains(&hours), "mean {hours} h");
+    }
+
+    #[test]
+    fn ordering_periodic_random_five() {
+        let mut rng = Rng::new(5);
+        let p1 = mean_cold_restart(&ColdRestartParams::periodic_1h(H5), 1500, &mut rng).total_s;
+        let r5 = mean_cold_restart(&ColdRestartParams::random_5h(H5), 1500, &mut rng).total_s;
+        assert!(r5 > 2.0 * p1, "five-random {r5} vs periodic {p1}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = ColdRestartParams::random_1h(H5);
+        let a = mean_cold_restart(&p, 100, &mut Rng::new(7)).total_s;
+        let b = mean_cold_restart(&p, 100, &mut Rng::new(7)).total_s;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn wall_cap_respected() {
+        let mut rng = Rng::new(8);
+        let p = ColdRestartParams {
+            strike_p: 1.0,
+            max_wall_s: 3600.0 * 3.0,
+            ..ColdRestartParams::periodic_1h(H5)
+        };
+        let o = simulate_cold_restart(&p, &mut rng);
+        assert!(o.total_s <= 3600.0 * 3.0 + 600.0 + 840.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Checkpointing baselines and the cold-restart (manual) baseline.
+//!
+//! These are the comparators of Tables 1 and 2: centralised checkpointing
+//! on a single server, centralised on multiple servers, decentralised on
+//! multiple servers, and cold restart with a human administrator.
+
+pub mod cold_restart;
+pub mod strategy;
+
+pub use cold_restart::{simulate_cold_restart, ColdRestartParams};
+pub use strategy::{periodicity_factors, CheckpointStrategy};

@@ -1,0 +1,202 @@
+//! Checkpoint strategies: reinstate and overhead cost models.
+//!
+//! Reinstate = detect + restore all nodes' state from the server(s) +
+//! resync; overhead = epoch coordination + write all nodes' state. The
+//! effective bandwidths are *shared-storage* figures (the paper's point:
+//! checkpoint traffic saturates the path to stable storage).
+//!
+//! Longer checkpoint periodicity accumulates more mutated state per epoch,
+//! growing both columns; the growth factors are calibrated to Table 2's
+//! anchors (1 h → 2 h → 4 h) and log-interpolated elsewhere.
+
+use crate::cluster::spec::CheckpointCosts;
+
+/// The three checkpointing baselines of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CheckpointStrategy {
+    CentralSingle,
+    CentralMulti,
+    Decentral,
+}
+
+impl CheckpointStrategy {
+    pub fn all() -> [CheckpointStrategy; 3] {
+        [Self::CentralSingle, Self::CentralMulti, Self::Decentral]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::CentralSingle => "centralised checkpointing, single server",
+            Self::CentralMulti => "centralised checkpointing, multiple servers",
+            Self::Decentral => "decentralised checkpointing, multiple servers",
+        }
+    }
+}
+
+/// (overhead factor, reinstate factor) for a checkpoint periodicity in
+/// hours. Anchors from Table 2: 1 h → (1.0, 1.0); 2 h → (1.27, 1.108);
+/// 4 h → (1.465, 1.164); log2-interpolated/extrapolated elsewhere.
+pub fn periodicity_factors(period_h: f64) -> (f64, f64) {
+    assert!(period_h > 0.0);
+    let anchors = [(0.0_f64, 1.0_f64, 1.0_f64), (1.0, 1.27, 1.108), (2.0, 1.465, 1.164)];
+    let x = period_h.log2();
+    // clamp below the first anchor
+    if x <= anchors[0].0 {
+        return (anchors[0].1, anchors[0].2);
+    }
+    for w in anchors.windows(2) {
+        let (x0, o0, r0) = w[0];
+        let (x1, o1, r1) = w[1];
+        if x <= x1 {
+            let t = (x - x0) / (x1 - x0);
+            return (o0 + t * (o1 - o0), r0 + t * (r1 - r0));
+        }
+    }
+    // extrapolate past 4 h with the last slope
+    let (x0, o0, r0) = anchors[1];
+    let (x1, o1, r1) = anchors[2];
+    let t = (x - x0) / (x1 - x0);
+    (o0 + t * (o1 - o0), r0 + t * (r1 - r0))
+}
+
+impl CheckpointStrategy {
+    /// Time to reinstate execution after one failure (Table 1 column b/c —
+    /// identical for periodic and random failures: the rollback restores the
+    /// same checkpoint either way).
+    pub fn reinstate_s(
+        self,
+        c: &CheckpointCosts,
+        n_nodes: usize,
+        data_kb_per_node: u64,
+        period_h: f64,
+    ) -> f64 {
+        let (_, rf) = periodicity_factors(period_h);
+        let total_bytes = n_nodes as f64 * data_kb_per_node as f64 * 1024.0;
+        let restore = total_bytes / c.restore_bw_bps;
+        let discovery = match self {
+            CheckpointStrategy::Decentral => c.discovery_s,
+            _ => 0.0,
+        };
+        (c.detect_s + discovery + restore + c.resync_s) * rf
+    }
+
+    /// Per-failure overhead: creating the checkpoint + transferring it to
+    /// the server(s) (Table 1 column d/e).
+    pub fn overhead_s(
+        self,
+        c: &CheckpointCosts,
+        n_nodes: usize,
+        data_kb_per_node: u64,
+        period_h: f64,
+    ) -> f64 {
+        let (of, _) = periodicity_factors(period_h);
+        let total_bytes = n_nodes as f64 * data_kb_per_node as f64 * 1024.0;
+        let (coord, write) = match self {
+            CheckpointStrategy::CentralSingle => {
+                (c.coord_single_s, total_bytes / c.ckpt_bw_bps)
+            }
+            CheckpointStrategy::CentralMulti => {
+                (c.coord_multi_s, total_bytes * c.multi_write_factor / c.ckpt_bw_bps)
+            }
+            CheckpointStrategy::Decentral => {
+                (c.coord_decentral_s, total_bytes / (c.ckpt_bw_bps * c.decentral_bw_factor))
+            }
+        };
+        (coord + write) * of
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{preset, ClusterPreset};
+
+    const KB19: u64 = 1 << 19;
+
+    fn costs() -> crate::cluster::spec::CheckpointCosts {
+        preset(ClusterPreset::Placentia).costs.ckpt
+    }
+
+    #[test]
+    fn table1_anchor_central_single() {
+        let c = costs();
+        let r = CheckpointStrategy::CentralSingle.reinstate_s(&c, 4, KB19, 1.0);
+        let o = CheckpointStrategy::CentralSingle.overhead_s(&c, 4, KB19, 1.0);
+        assert!((r - 848.0).abs() < 6.0, "reinstate {r}"); // 00:14:08
+        assert!((o - 485.0).abs() < 6.0, "overhead {o}"); // 00:08:05
+    }
+
+    #[test]
+    fn table1_anchor_central_multi() {
+        let c = costs();
+        let r = CheckpointStrategy::CentralMulti.reinstate_s(&c, 4, KB19, 1.0);
+        let o = CheckpointStrategy::CentralMulti.overhead_s(&c, 4, KB19, 1.0);
+        assert!((r - 848.0).abs() < 6.0, "reinstate {r}"); // same restore path
+        assert!((o - 554.0).abs() < 8.0, "overhead {o}"); // 00:09:14
+    }
+
+    #[test]
+    fn table1_anchor_decentral() {
+        let c = costs();
+        let r = CheckpointStrategy::Decentral.reinstate_s(&c, 4, KB19, 1.0);
+        let o = CheckpointStrategy::Decentral.overhead_s(&c, 4, KB19, 1.0);
+        assert!((r - 927.0).abs() < 8.0, "reinstate {r}"); // 00:15:27
+        assert!((o - 404.0).abs() < 8.0, "overhead {o}"); // 00:06:44
+    }
+
+    #[test]
+    fn periodicity_factor_anchors() {
+        let (o1, r1) = periodicity_factors(1.0);
+        assert_eq!((o1, r1), (1.0, 1.0));
+        let (o2, r2) = periodicity_factors(2.0);
+        assert!((o2 - 1.27).abs() < 1e-9 && (r2 - 1.108).abs() < 1e-9);
+        let (o4, r4) = periodicity_factors(4.0);
+        assert!((o4 - 1.465).abs() < 1e-9 && (r4 - 1.164).abs() < 1e-9);
+    }
+
+    #[test]
+    fn periodicity_interpolates_monotone() {
+        let mut prev = 0.0;
+        for p in [0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0] {
+            let (o, r) = periodicity_factors(p);
+            assert!(o >= prev, "p={p}");
+            assert!(r >= 1.0 || p < 1.0);
+            prev = o;
+        }
+    }
+
+    #[test]
+    fn table2_anchor_2h_central_single() {
+        let c = costs();
+        let r = CheckpointStrategy::CentralSingle.reinstate_s(&c, 4, KB19, 2.0);
+        let o = CheckpointStrategy::CentralSingle.overhead_s(&c, 4, KB19, 2.0);
+        assert!((r - 940.0).abs() < 10.0, "reinstate {r}"); // 00:15:40
+        assert!((o - 617.0).abs() < 10.0, "overhead {o}"); // 00:10:17
+    }
+
+    #[test]
+    fn table2_anchor_4h_central_single() {
+        let c = costs();
+        let r = CheckpointStrategy::CentralSingle.reinstate_s(&c, 4, KB19, 4.0);
+        let o = CheckpointStrategy::CentralSingle.overhead_s(&c, 4, KB19, 4.0);
+        assert!((r - 987.0).abs() < 10.0, "reinstate {r}"); // 00:16:27
+        assert!((o - 713.0).abs() < 10.0, "overhead {o}"); // 00:11:53
+    }
+
+    #[test]
+    fn overhead_scales_with_nodes_and_data() {
+        let c = costs();
+        let s = CheckpointStrategy::CentralSingle;
+        assert!(s.overhead_s(&c, 8, KB19, 1.0) > s.overhead_s(&c, 4, KB19, 1.0));
+        assert!(s.overhead_s(&c, 4, KB19 * 2, 1.0) > s.overhead_s(&c, 4, KB19, 1.0));
+    }
+
+    #[test]
+    fn multi_overhead_exceeds_single_decentral_lowest() {
+        let c = costs();
+        let single = CheckpointStrategy::CentralSingle.overhead_s(&c, 4, KB19, 1.0);
+        let multi = CheckpointStrategy::CentralMulti.overhead_s(&c, 4, KB19, 1.0);
+        let dec = CheckpointStrategy::Decentral.overhead_s(&c, 4, KB19, 1.0);
+        assert!(multi > single && dec < single);
+    }
+}

@@ -1,0 +1,112 @@
+//! Hardware computing-core state and its health log.
+//!
+//! Each core runs a *hardware probing process* (paper, Methods): it samples
+//! local health indicators and maintains the log the failure predictor
+//! learns from.
+
+use crate::sim::SimTime;
+
+/// Identifies a hardware core within a cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CoreId(pub usize);
+
+/// One probe observation appended to the core's health log.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthSample {
+    pub at: SimTime,
+    /// Normalised load (0..1).
+    pub load: f64,
+    /// Temperature-like wear indicator (0..1); drifts up before failure.
+    pub wear: f64,
+    /// Whether correctable-error counters ticked since the last probe.
+    pub soft_errors: bool,
+}
+
+/// Lifecycle of a core as seen by the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreState {
+    Healthy,
+    /// A failure has been injected and will strike at the embedded time.
+    Doomed { fails_at: SimTime },
+    Failed,
+}
+
+/// A hardware core: state + bounded health log.
+#[derive(Debug, Clone)]
+pub struct Core {
+    pub id: CoreId,
+    pub state: CoreState,
+    log: Vec<HealthSample>,
+    cap: usize,
+}
+
+impl Core {
+    pub fn new(id: CoreId, log_capacity: usize) -> Self {
+        Self { id, state: CoreState::Healthy, log: Vec::new(), cap: log_capacity.max(1) }
+    }
+
+    /// Append a sample, evicting the oldest past capacity.
+    pub fn observe(&mut self, s: HealthSample) {
+        if self.log.len() == self.cap {
+            self.log.remove(0);
+        }
+        self.log.push(s);
+    }
+
+    pub fn log(&self) -> &[HealthSample] {
+        &self.log
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self.state, CoreState::Failed)
+    }
+
+    /// True once the injected failure time has passed.
+    pub fn tick(&mut self, now: SimTime) -> bool {
+        if let CoreState::Doomed { fails_at } = self.state {
+            if now >= fails_at {
+                self.state = CoreState::Failed;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: f64, wear: f64) -> HealthSample {
+        HealthSample { at: SimTime::from_secs(t), load: 0.5, wear, soft_errors: false }
+    }
+
+    #[test]
+    fn log_bounded() {
+        let mut c = Core::new(CoreId(0), 3);
+        for i in 0..10 {
+            c.observe(sample(i as f64, 0.1));
+        }
+        assert_eq!(c.log().len(), 3);
+        assert_eq!(c.log()[0].at, SimTime::from_secs(7.0));
+    }
+
+    #[test]
+    fn doomed_core_fails_at_time() {
+        let mut c = Core::new(CoreId(1), 4);
+        c.state = CoreState::Doomed { fails_at: SimTime::from_secs(100.0) };
+        assert!(!c.tick(SimTime::from_secs(99.0)));
+        assert!(!c.is_failed());
+        assert!(c.tick(SimTime::from_secs(100.0)));
+        assert!(c.is_failed());
+        // Subsequent ticks report no *new* failure.
+        assert!(!c.tick(SimTime::from_secs(101.0)));
+    }
+
+    #[test]
+    fn healthy_never_fails_on_tick() {
+        let mut c = Core::new(CoreId(2), 4);
+        assert!(!c.tick(SimTime::from_secs(1e9)));
+        assert_eq!(c.state, CoreState::Healthy);
+    }
+}

@@ -1,0 +1,15 @@
+//! Cluster descriptions: nodes, cores, interconnects, and the calibrated
+//! per-cluster protocol cost parameters.
+//!
+//! Four presets mirror the paper's platform section: ACET (Reading) and the
+//! three ACEnet clusters Brasdor, Glooscap, Placentia.
+
+pub mod core;
+pub mod node;
+pub mod presets;
+pub mod spec;
+
+pub use core::{CoreId, CoreState, HealthSample};
+pub use node::Node;
+pub use presets::{preset, preset_names, ClusterPreset};
+pub use spec::{ClusterSpec, FtCosts};

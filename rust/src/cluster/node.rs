@@ -1,0 +1,75 @@
+//! A compute node: a set of hardware cores behind one NIC.
+
+use super::core::{Core, CoreId};
+use crate::net::NodeId;
+use crate::sim::SimTime;
+
+/// One cluster node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub cores: Vec<Core>,
+    /// RAM in MiB (from the paper's platform table; used for sanity checks
+    /// against process sizes).
+    pub ram_mib: u64,
+}
+
+impl Node {
+    pub fn new(id: NodeId, n_cores: usize, ram_mib: u64, log_capacity: usize) -> Self {
+        let cores = (0..n_cores)
+            .map(|c| Core::new(CoreId(id.0 * 1024 + c), log_capacity))
+            .collect();
+        Self { id, cores, ram_mib }
+    }
+
+    /// Node fails when all its cores failed (single-core nodes in the
+    /// experiments: node failure == core failure, as in the paper's
+    /// "single node failure" scenarios).
+    pub fn is_failed(&self) -> bool {
+        self.cores.iter().all(|c| c.is_failed())
+    }
+
+    /// Advance injected failures; returns true if the node newly failed.
+    pub fn tick(&mut self, now: SimTime) -> bool {
+        let was = self.is_failed();
+        for c in &mut self.cores {
+            c.tick(now);
+        }
+        !was && self.is_failed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::core::CoreState;
+
+    #[test]
+    fn node_fails_when_all_cores_fail() {
+        let mut n = Node::new(NodeId(0), 2, 1024, 8);
+        n.cores[0].state = CoreState::Failed;
+        assert!(!n.is_failed());
+        n.cores[1].state = CoreState::Failed;
+        assert!(n.is_failed());
+    }
+
+    #[test]
+    fn tick_reports_transition_once() {
+        let mut n = Node::new(NodeId(1), 1, 512, 8);
+        n.cores[0].state = CoreState::Doomed { fails_at: SimTime::from_secs(5.0) };
+        assert!(!n.tick(SimTime::from_secs(4.0)));
+        assert!(n.tick(SimTime::from_secs(5.0)));
+        assert!(!n.tick(SimTime::from_secs(6.0)));
+    }
+
+    #[test]
+    fn core_ids_unique_across_nodes() {
+        let a = Node::new(NodeId(0), 4, 1024, 8);
+        let b = Node::new(NodeId(1), 4, 1024, 8);
+        for ca in &a.cores {
+            for cb in &b.cores {
+                assert_ne!(ca.id, cb.id);
+            }
+        }
+    }
+}

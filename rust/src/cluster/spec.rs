@@ -1,0 +1,300 @@
+//! Cluster specification + calibrated fault-tolerance cost parameters.
+//!
+//! ## Calibration
+//!
+//! The paper measures *time to reinstate execution* after a predicted
+//! failure. Those times are sub-second even for multi-terabyte `S_d`
+//! (Figs. 10-13), which tells us reinstatement moves *handles and
+//! metadata*, not payload bytes (payload re-staging happens in the
+//! background and is accounted in the paper's separate "overhead" column).
+//! We therefore model the data/process-size contribution as logarithmic
+//! (`u(S) = max(log2(S_KB) - 18, 0)`, i.e. zero below 2^18 KB) — the number
+//! of segment/handle registrations grows with log of size.
+//!
+//! Constants below are calibrated (on the Placentia preset) to the paper's
+//! anchors, and the calibration is enforced by tests in
+//! `experiments::rules_validation`:
+//!
+//! * agent reinstate ≈ 0.47 s and core ≈ 0.38 s at `Z = 4, S_d = 2^19 KB`
+//!   (genome experiment, Results);
+//! * core beats agent for `Z <= 10` at `S_d = 2^24 KB` (Rule 1 / Figs. 8-9);
+//! * agent beats core for `S_d <= 2^24 KB` at `Z = 10` (Rule 2 / Figs. 10-11),
+//!   with equality at the `(Z = 10, S_d = 2^24)` boundary;
+//! * agent reinstate stays ≤ 0.56 s up to `Z = 63` (Fig. 8);
+//! * ACET slowest / Placentia fastest for the agent approach, ACET re-rising
+//!   after `Z ≈ 25` (NIC queue congestion), core times near-uniform across
+//!   clusters until `Z = 10` then diverging (Figs. 8-9).
+//!
+//! Note: the paper's *narrative* says core-side dependency re-binding is
+//! automatic and therefore cheap, yet its *data* (Rule 1 holding only up to
+//! Z = 10, Fig. 9's divergence) show core time growing faster in Z than the
+//! agent approach. We calibrate to the data and discuss the tension in
+//! EXPERIMENTS.md.
+
+use crate::net::LinkParams;
+
+/// Log-scale size factor: `max(log2(kb) - 18, 0)`; zero below 2^18 KB.
+pub fn size_log_factor(kb: u64) -> f64 {
+    if kb == 0 {
+        return 0.0;
+    }
+    ((kb as f64).log2() - 18.0).max(0.0)
+}
+
+/// Agent-intelligence (Approach 1) protocol step costs.
+#[derive(Debug, Clone, Copy)]
+pub struct AgentCosts {
+    /// Gathering predictions from adjacent probing processes (parallel RTTs).
+    pub probe_gather_s: f64,
+    /// `MPI_COMM_SPAWN`-style replacement-process creation.
+    pub spawn_s: f64,
+    /// Fixed cost of the agent software layer (the paper's "virtualised
+    /// layer in the communication stack").
+    pub layer_s: f64,
+    /// One dependency notify + re-establish handshake.
+    pub dep_handshake_s: f64,
+    /// Handshakes proceed in parallel windows of this size...
+    pub dep_window: usize,
+    /// ...and overlap beyond the window at this fractional cost.
+    pub dep_tail: f64,
+    /// NIC queue depth: beyond this many dependents, retransmissions kick in
+    /// (`usize::MAX` = never; ACET's small buffers set 25).
+    pub congestion_threshold: usize,
+    /// Extra per-dependent cost past the congestion threshold.
+    pub congestion_s: f64,
+    /// Per-`u(S_d)` handle-registration cost for the carried data.
+    pub data_log_coef_s: f64,
+    /// Per-`u(S_p)` cost for the process image.
+    pub proc_log_coef_s: f64,
+}
+
+impl AgentCosts {
+    /// Effective dependency phase duration for `z` dependencies.
+    pub fn dep_phase_s(&self, z: usize) -> f64 {
+        let w = self.dep_window.min(z);
+        let tail = z.saturating_sub(self.dep_window);
+        let mut t = self.dep_handshake_s * (w as f64 + self.dep_tail * tail as f64);
+        let over = z.saturating_sub(self.congestion_threshold);
+        t += self.congestion_s * over as f64;
+        t
+    }
+
+    /// Closed-form reinstate time (the DES protocol reproduces this sum
+    /// step-by-step; equality is asserted in agentft tests).
+    pub fn reinstate_s(&self, z: usize, data_kb: u64, proc_kb: u64) -> f64 {
+        self.probe_gather_s
+            + self.spawn_s
+            + self.layer_s
+            + self.dep_phase_s(z)
+            + self.data_log_coef_s * size_log_factor(data_kb)
+            + self.proc_log_coef_s * size_log_factor(proc_kb)
+    }
+}
+
+/// Core-intelligence (Approach 2) protocol step costs.
+#[derive(Debug, Clone, Copy)]
+pub struct CoreCosts {
+    pub probe_gather_s: f64,
+    /// AMPI/Charm++-style object-migration machinery setup.
+    pub migrate_setup_s: f64,
+    /// One runtime dependency-table rebind round.
+    pub rebind_round_s: f64,
+    pub rebind_window: usize,
+    /// Post-window overlap factor (the clusters diverge here: Fig. 9).
+    pub rebind_tail: f64,
+    pub data_log_coef_s: f64,
+    pub proc_log_coef_s: f64,
+    /// Extra data cost past this `u` threshold (ACET's slower storage path
+    /// shows for n > 24 in Fig. 11).
+    pub data_overflow_threshold: f64,
+    pub data_overflow_coef_s: f64,
+}
+
+impl CoreCosts {
+    pub fn rebind_phase_s(&self, z: usize) -> f64 {
+        let w = self.rebind_window.min(z);
+        let tail = z.saturating_sub(self.rebind_window);
+        self.rebind_round_s * (w as f64 + self.rebind_tail * tail as f64)
+    }
+
+    fn data_term_s(&self, data_kb: u64) -> f64 {
+        let u = size_log_factor(data_kb);
+        let over = (u - self.data_overflow_threshold).max(0.0);
+        self.data_log_coef_s * u + self.data_overflow_coef_s * over
+    }
+
+    pub fn reinstate_s(&self, z: usize, data_kb: u64, proc_kb: u64) -> f64 {
+        self.probe_gather_s
+            + self.migrate_setup_s
+            + self.rebind_phase_s(z)
+            + self.data_term_s(data_kb)
+            + self.proc_log_coef_s * size_log_factor(proc_kb)
+    }
+}
+
+/// Checkpointing baseline costs (shared-storage dominated — the point the
+/// paper makes about checkpoint overheads).
+#[derive(Debug, Clone, Copy)]
+pub struct CheckpointCosts {
+    /// Failure detection by the monitoring process.
+    pub detect_s: f64,
+    /// Post-restore barrier/resync across the job's nodes.
+    pub resync_s: f64,
+    /// Effective restore bandwidth from a checkpoint server (contended).
+    pub restore_bw_bps: f64,
+    /// Effective checkpoint-write bandwidth to a server (contended).
+    pub ckpt_bw_bps: f64,
+    /// Coordination time to open a checkpoint epoch (single server).
+    pub coord_single_s: f64,
+    pub coord_multi_s: f64,
+    pub coord_decentral_s: f64,
+    /// Multi-server replication write amplification.
+    pub multi_write_factor: f64,
+    /// Decentralised: nearest-server write speedup.
+    pub decentral_bw_factor: f64,
+    /// Decentralised restore: time to discover the server nearest the
+    /// failed node.
+    pub discovery_s: f64,
+    /// Cold restart: human administrator reaction + resubmission.
+    pub cold_restart_admin_s: f64,
+}
+
+/// Failure-prediction quality (Discussion: 29 % of faults predicted, 64 %
+/// of predictions correct, ≈38 s from anomaly to positive prediction).
+#[derive(Debug, Clone, Copy)]
+pub struct PredictCosts {
+    pub predict_time_s: f64,
+    /// Fraction of real faults that are predicted (recall).
+    pub coverage: f64,
+    /// Fraction of predictions that are followed by a real fault.
+    pub precision: f64,
+}
+
+/// Per-failure background overhead of the multi-agent approaches (probing,
+/// relocation logistics, background data re-staging) — the paper's
+/// "overheads related to one failure" column.
+#[derive(Debug, Clone, Copy)]
+pub struct AgentOverheadCosts {
+    pub base_s: f64,
+    pub per_dep_s: f64,
+    /// Background re-staging of the sub-job's data.
+    pub restage_bw_bps: f64,
+}
+
+impl AgentOverheadCosts {
+    pub fn overhead_s(&self, z: usize, data_kb: u64) -> f64 {
+        self.base_s + self.per_dep_s * z as f64 + (data_kb as f64 * 1024.0) / self.restage_bw_bps
+    }
+}
+
+/// All calibrated FT costs of one cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct FtCosts {
+    pub agent: AgentCosts,
+    pub core: CoreCosts,
+    pub agent_overhead: AgentOverheadCosts,
+    pub core_overhead: AgentOverheadCosts,
+    pub ckpt: CheckpointCosts,
+    pub predict: PredictCosts,
+    /// Lognormal sigma of trial-to-trial measurement noise.
+    pub noise_sigma: f64,
+}
+
+/// A cluster: platform facts (paper, Results §Platform) + cost model.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: &'static str,
+    pub n_nodes: usize,
+    pub total_cores: usize,
+    pub ram_mib_min: u64,
+    pub ram_mib_max: u64,
+    pub link: LinkParams,
+    pub costs: FtCosts,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agent() -> AgentCosts {
+        AgentCosts {
+            probe_gather_s: 0.05,
+            spawn_s: 0.28,
+            layer_s: 0.12,
+            dep_handshake_s: 0.004,
+            dep_window: 10,
+            dep_tail: 0.15,
+            congestion_threshold: usize::MAX,
+            congestion_s: 0.0,
+            data_log_coef_s: 0.002,
+            proc_log_coef_s: 0.002,
+        }
+    }
+
+    #[test]
+    fn size_log_factor_anchors() {
+        assert_eq!(size_log_factor(0), 0.0);
+        assert_eq!(size_log_factor(1), 0.0); // far below 2^18
+        assert_eq!(size_log_factor(1 << 18), 0.0);
+        assert_eq!(size_log_factor(1 << 19), 1.0);
+        assert_eq!(size_log_factor(1 << 24), 6.0);
+        assert_eq!(size_log_factor(1 << 31), 13.0);
+    }
+
+    #[test]
+    fn dep_phase_saturates_at_window() {
+        let a = agent();
+        let t10 = a.dep_phase_s(10);
+        let t11 = a.dep_phase_s(11);
+        let t3 = a.dep_phase_s(3);
+        // steep region below the window, shallow beyond
+        assert!((t10 - 0.04).abs() < 1e-12);
+        assert!((t11 - t10) < (t10 - t3) / 7.0 + 1e-12);
+        assert!((t11 - t10 - 0.004 * 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn congestion_kicks_in_past_threshold() {
+        let mut a = agent();
+        a.congestion_threshold = 25;
+        a.congestion_s = 0.006;
+        let below = a.dep_phase_s(25);
+        let above = a.dep_phase_s(26);
+        assert!((above - below - (0.004 * 0.15 + 0.006)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn agent_reinstate_monotone_in_everything() {
+        let a = agent();
+        assert!(a.reinstate_s(4, 1 << 19, 1 << 19) < a.reinstate_s(10, 1 << 19, 1 << 19));
+        assert!(a.reinstate_s(4, 1 << 19, 1 << 19) < a.reinstate_s(4, 1 << 24, 1 << 19));
+        assert!(a.reinstate_s(4, 1 << 19, 1 << 19) < a.reinstate_s(4, 1 << 19, 1 << 24));
+    }
+
+    #[test]
+    fn core_overflow_term() {
+        let c = CoreCosts {
+            probe_gather_s: 0.05,
+            migrate_setup_s: 0.24,
+            rebind_round_s: 0.021,
+            rebind_window: 10,
+            rebind_tail: 0.02,
+            data_log_coef_s: 0.0008,
+            proc_log_coef_s: 0.0008,
+            data_overflow_threshold: 6.0,
+            data_overflow_coef_s: 0.01,
+        };
+        let at_thresh = c.reinstate_s(4, 1 << 24, 1 << 19);
+        let above = c.reinstate_s(4, 1 << 25, 1 << 19);
+        assert!((above - at_thresh - (0.0008 + 0.01)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overhead_grows_with_deps_and_data() {
+        let o = AgentOverheadCosts { base_s: 108.0, per_dep_s: 3.0, restage_bw_bps: 2.7e6 };
+        let base = o.overhead_s(4, 1 << 19);
+        assert!(base > 300.0 && base < 330.0, "{base}");
+        assert!(o.overhead_s(12, 1 << 19) > base);
+        assert!(o.overhead_s(4, 1 << 20) > base);
+    }
+}

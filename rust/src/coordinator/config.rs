@@ -1,0 +1,123 @@
+//! Config-file driven experiments (`biomaft run --config <file>`).
+//!
+//! Example (TOML subset, see `configs/`):
+//! ```text
+//! cluster = "placentia"
+//! strategy = "hybrid"     # agent|core|hybrid|ckpt-single|ckpt-multi|ckpt-decentral|cold-restart
+//! z = 4
+//! data_kb = 524_288
+//! proc_kb = 524_288
+//! job_h = 1.0
+//! period_h = 1.0
+//! periodic_offset_min = 15.0
+//! trials = 30
+//! seed = 2014
+//! ```
+
+use super::ftmanager::Strategy;
+use super::run::ExperimentCfg;
+use crate::checkpoint::CheckpointStrategy;
+use crate::cluster::{preset, ClusterPreset};
+use crate::util::conf::Conf;
+
+/// Parse a strategy name (CLI + config share this).
+pub fn parse_strategy(s: &str) -> anyhow::Result<Strategy> {
+    Ok(match s {
+        "agent" => Strategy::Agent,
+        "core" => Strategy::Core,
+        "hybrid" => Strategy::Hybrid,
+        "ckpt-single" => Strategy::Checkpoint(CheckpointStrategy::CentralSingle),
+        "ckpt-multi" => Strategy::Checkpoint(CheckpointStrategy::CentralMulti),
+        "ckpt-decentral" => Strategy::Checkpoint(CheckpointStrategy::Decentral),
+        "cold-restart" => Strategy::ColdRestart,
+        other => anyhow::bail!(
+            "unknown strategy `{other}` (agent|core|hybrid|ckpt-single|ckpt-multi|ckpt-decentral|cold-restart)"
+        ),
+    })
+}
+
+/// A full run description from a config document.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub cfg: ExperimentCfg,
+    pub strategy: Strategy,
+}
+
+impl RunConfig {
+    pub fn from_conf(c: &Conf) -> anyhow::Result<Self> {
+        let cluster_name = c.str_or("cluster", "placentia");
+        let cluster = ClusterPreset::from_name(&cluster_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown cluster `{cluster_name}`"))?;
+        let strategy = parse_strategy(&c.str_or("strategy", "hybrid"))?;
+        let base = ExperimentCfg::table1(preset(cluster));
+        let cfg = ExperimentCfg {
+            n_nodes: c.int_or("n_nodes", base.n_nodes as i64) as usize,
+            z: c.int_or("z", base.z as i64) as usize,
+            data_kb: c.int_or("data_kb", base.data_kb as i64) as u64,
+            proc_kb: c.int_or("proc_kb", base.proc_kb as i64) as u64,
+            job_h: c.float_or("job_h", base.job_h),
+            period_h: c.float_or("period_h", base.period_h),
+            periodic_offset_min: c.float_or("periodic_offset_min", base.periodic_offset_min),
+            trials: c.int_or("trials", base.trials as i64) as usize,
+            seed: c.int_or("seed", base.seed as i64) as u64,
+            cluster: base.cluster,
+        };
+        anyhow::ensure!(cfg.job_h > 0.0 && cfg.period_h > 0.0, "durations must be positive");
+        anyhow::ensure!(cfg.n_nodes >= 1, "need at least one node");
+        Ok(Self { cfg, strategy })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_conf(&Conf::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_parses() {
+        let doc = r#"
+cluster = "acet"
+strategy = "agent"
+z = 12
+data_kb = 1_048_576
+job_h = 5.0
+period_h = 2.0
+trials = 10
+"#;
+        let rc = RunConfig::from_conf(&Conf::parse(doc).unwrap()).unwrap();
+        assert_eq!(rc.cfg.cluster.name, "acet");
+        assert_eq!(rc.strategy, Strategy::Agent);
+        assert_eq!(rc.cfg.z, 12);
+        assert_eq!(rc.cfg.data_kb, 1 << 20);
+        assert_eq!(rc.cfg.period_h, 2.0);
+        assert_eq!(rc.cfg.trials, 10);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let rc = RunConfig::from_conf(&Conf::parse("").unwrap()).unwrap();
+        assert_eq!(rc.cfg.cluster.name, "placentia");
+        assert_eq!(rc.strategy, Strategy::Hybrid);
+        assert_eq!(rc.cfg.z, 4);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(RunConfig::from_conf(&Conf::parse("cluster = \"nowhere\"").unwrap()).is_err());
+        assert!(RunConfig::from_conf(&Conf::parse("strategy = \"magic\"").unwrap()).is_err());
+        assert!(RunConfig::from_conf(&Conf::parse("job_h = -1").unwrap()).is_err());
+    }
+
+    #[test]
+    fn every_strategy_name_parses() {
+        for s in [
+            "agent", "core", "hybrid", "ckpt-single", "ckpt-multi", "ckpt-decentral",
+            "cold-restart",
+        ] {
+            assert!(parse_strategy(s).is_ok(), "{s}");
+        }
+    }
+}

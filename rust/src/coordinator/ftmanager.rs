@@ -1,0 +1,135 @@
+//! Strategy dispatch: the seven fault-tolerance strategies the paper
+//! compares, behind one enum.
+
+use crate::checkpoint::CheckpointStrategy;
+use crate::cluster::spec::FtCosts;
+use crate::hybrid::rules::{decide, Mover, RuleInputs};
+
+/// Every strategy of Tables 1 and 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Cold restart with a human administrator (Table 2 only).
+    ColdRestart,
+    Checkpoint(CheckpointStrategy),
+    /// Approach 1 — agent intelligence.
+    Agent,
+    /// Approach 2 — core intelligence.
+    Core,
+    /// Approach 3 — hybrid (rules + negotiation).
+    Hybrid,
+}
+
+impl Strategy {
+    pub fn all_table1() -> Vec<Strategy> {
+        vec![
+            Strategy::Checkpoint(CheckpointStrategy::CentralSingle),
+            Strategy::Checkpoint(CheckpointStrategy::CentralMulti),
+            Strategy::Checkpoint(CheckpointStrategy::Decentral),
+            Strategy::Agent,
+            Strategy::Core,
+            Strategy::Hybrid,
+        ]
+    }
+
+    pub fn all_table2() -> Vec<Strategy> {
+        let mut v = vec![Strategy::ColdRestart];
+        v.extend(Self::all_table1());
+        v
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::ColdRestart => "cold restart (no fault tolerance)",
+            Strategy::Checkpoint(c) => c.name(),
+            Strategy::Agent => "agent intelligence",
+            Strategy::Core => "core intelligence",
+            Strategy::Hybrid => "hybrid intelligence",
+        }
+    }
+
+    /// Is this one of the proactive multi-agent approaches?
+    pub fn is_multi_agent(self) -> bool {
+        matches!(self, Strategy::Agent | Strategy::Core | Strategy::Hybrid)
+    }
+
+    /// Closed-form reinstate time for one predicted failure (multi-agent
+    /// strategies only; checkpoint strategies go through
+    /// `CheckpointStrategy::reinstate_s`, cold restart through the survival
+    /// model).
+    pub fn ma_reinstate_s(self, costs: &FtCosts, z: usize, data_kb: u64, proc_kb: u64) -> f64 {
+        match self {
+            Strategy::Agent => costs.agent.reinstate_s(z, data_kb, proc_kb),
+            Strategy::Core => costs.core.reinstate_s(z, data_kb, proc_kb),
+            Strategy::Hybrid => crate::hybrid::negotiate::hybrid_reinstate_s(
+                costs,
+                RuleInputs { z, data_kb, proc_kb },
+            ),
+            _ => panic!("ma_reinstate_s on non-multi-agent strategy"),
+        }
+    }
+
+    /// Per-failure background overhead (multi-agent strategies).
+    pub fn ma_overhead_s(self, costs: &FtCosts, z: usize, data_kb: u64) -> f64 {
+        match self {
+            Strategy::Agent => costs.agent_overhead.overhead_s(z, data_kb),
+            Strategy::Core => costs.core_overhead.overhead_s(z, data_kb),
+            Strategy::Hybrid => {
+                // the winner's machinery carries the background work
+                match decide(RuleInputs { z, data_kb, proc_kb: data_kb }).0 {
+                    Mover::Agent => costs.agent_overhead.overhead_s(z, data_kb),
+                    Mover::Core => costs.core_overhead.overhead_s(z, data_kb),
+                }
+            }
+            _ => panic!("ma_overhead_s on non-multi-agent strategy"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{preset, ClusterPreset};
+
+    #[test]
+    fn table_rosters() {
+        assert_eq!(Strategy::all_table1().len(), 6);
+        assert_eq!(Strategy::all_table2().len(), 7);
+        assert_eq!(Strategy::all_table2()[0], Strategy::ColdRestart);
+    }
+
+    #[test]
+    fn multi_agent_flag() {
+        assert!(Strategy::Agent.is_multi_agent());
+        assert!(Strategy::Hybrid.is_multi_agent());
+        assert!(!Strategy::ColdRestart.is_multi_agent());
+        assert!(!Strategy::Checkpoint(CheckpointStrategy::Decentral).is_multi_agent());
+    }
+
+    #[test]
+    fn hybrid_tracks_core_at_table1_point() {
+        let costs = preset(ClusterPreset::Placentia).costs;
+        let h = Strategy::Hybrid.ma_reinstate_s(&costs, 4, 1 << 19, 1 << 19);
+        let c = Strategy::Core.ma_reinstate_s(&costs, 4, 1 << 19, 1 << 19);
+        assert!((h - c).abs() < 1e-3);
+        let ho = Strategy::Hybrid.ma_overhead_s(&costs, 4, 1 << 19);
+        let co = Strategy::Core.ma_overhead_s(&costs, 4, 1 << 19);
+        assert_eq!(ho, co);
+    }
+
+    #[test]
+    fn overhead_anchors() {
+        // Table 1: agent overhead ≈ 5:14 (314 s), core ≈ 4:27 (267 s).
+        let costs = preset(ClusterPreset::Placentia).costs;
+        let a = Strategy::Agent.ma_overhead_s(&costs, 4, 1 << 19);
+        let c = Strategy::Core.ma_overhead_s(&costs, 4, 1 << 19);
+        assert!((a - 314.0).abs() < 10.0, "agent overhead {a}");
+        assert!((c - 267.0).abs() < 10.0, "core overhead {c}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn checkpoint_reinstate_via_ma_panics() {
+        let costs = preset(ClusterPreset::Placentia).costs;
+        Strategy::ColdRestart.ma_reinstate_s(&costs, 1, 1, 1);
+    }
+}

@@ -1,0 +1,21 @@
+//! The coordinator: strategy dispatch, sub-job placement, experiment
+//! execution and execution timelines.
+//!
+//! This is the leader-side glue that the paper's tables measure: given a
+//! cluster, a job decomposition, a failure process and a fault-tolerance
+//! strategy, produce reinstate / overhead / total-execution times.
+
+pub mod combined;
+pub mod config;
+pub mod ftmanager;
+pub mod livesim;
+pub mod run;
+pub mod scheduler;
+pub mod timeline;
+
+pub use combined::Combined;
+pub use config::RunConfig;
+pub use ftmanager::Strategy;
+pub use run::{measure_reinstate, window_row, ExperimentCfg, WindowRow};
+pub use scheduler::Placement;
+pub use timeline::{render_timeline, TimelineEvent};

@@ -1,0 +1,107 @@
+//! Sub-job placement onto cluster nodes.
+//!
+//! The experiments place one sub-job per node (the paper's genome runs:
+//! "three nodes of the cluster performed the search operation while the
+//! fourth node combined the results"). The scheduler also exposes the
+//! adjacency view a protocol episode needs (which neighbours exist and
+//! which are predicted to fail).
+
+use crate::job::graph::DepGraph;
+use crate::net::message::SubJobId;
+use crate::net::{NodeId, Topology};
+
+/// A placement of sub-jobs onto nodes.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// node hosting each sub-job, indexed by SubJobId.
+    pub host: Vec<NodeId>,
+}
+
+impl Placement {
+    /// Round-robin placement of `n_subs` sub-jobs over the topology's nodes.
+    pub fn round_robin(n_subs: usize, topo: &Topology) -> Self {
+        let n = topo.len();
+        Self { host: (0..n_subs).map(|i| NodeId(i % n)).collect() }
+    }
+
+    /// Place a dependency graph so that adjacent graph levels land on
+    /// distinct nodes where possible (reduces co-failure of producer and
+    /// consumer).
+    pub fn spread(graph: &DepGraph, topo: &Topology) -> Self {
+        let order = graph.topo_order();
+        let n = topo.len();
+        let mut host = vec![NodeId(0); graph.len()];
+        for (i, s) in order.iter().enumerate() {
+            host[s.0] = NodeId(i % n);
+        }
+        Self { host }
+    }
+
+    pub fn node_of(&self, s: SubJobId) -> NodeId {
+        self.host[s.0]
+    }
+
+    /// Sub-jobs hosted on `node`.
+    pub fn on_node(&self, node: NodeId) -> Vec<SubJobId> {
+        self.host
+            .iter()
+            .enumerate()
+            .filter(|(_, &h)| h == node)
+            .map(|(i, _)| SubJobId(i))
+            .collect()
+    }
+
+    /// The adjacency view used by a migration episode for `s`: every
+    /// neighbour of its host, flagged with the given predicate ("is this
+    /// neighbour predicted to fail?").
+    pub fn adjacency_view(
+        &self,
+        s: SubJobId,
+        topo: &Topology,
+        doomed: impl Fn(NodeId) -> bool,
+    ) -> Vec<(NodeId, bool)> {
+        topo.neighbours(self.node_of(s)).iter().map(|&n| (n, doomed(n))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_wraps() {
+        let topo = Topology::mesh(3);
+        let p = Placement::round_robin(7, &topo);
+        assert_eq!(p.host.len(), 7);
+        assert_eq!(p.node_of(SubJobId(0)), NodeId(0));
+        assert_eq!(p.node_of(SubJobId(3)), NodeId(0));
+        assert_eq!(p.node_of(SubJobId(5)), NodeId(2));
+    }
+
+    #[test]
+    fn on_node_inverse_of_host() {
+        let topo = Topology::mesh(2);
+        let p = Placement::round_robin(4, &topo);
+        assert_eq!(p.on_node(NodeId(0)), vec![SubJobId(0), SubJobId(2)]);
+        assert_eq!(p.on_node(NodeId(1)), vec![SubJobId(1), SubJobId(3)]);
+    }
+
+    #[test]
+    fn spread_covers_all_subjobs() {
+        let g = DepGraph::reduction_tree(8, 2);
+        let topo = Topology::ring(5, 1);
+        let p = Placement::spread(&g, &topo);
+        assert_eq!(p.host.len(), g.len());
+    }
+
+    #[test]
+    fn adjacency_view_flags_doomed() {
+        let topo = Topology::ring(5, 1);
+        let p = Placement::round_robin(5, &topo);
+        let view = p.adjacency_view(SubJobId(2), &topo, |n| n == NodeId(3));
+        // node 2's ring neighbours: 1 and 3
+        assert_eq!(view.len(), 2);
+        assert!(view.contains(&(NodeId(1), false)));
+        assert!(view.contains(&(NodeId(3), true)));
+    }
+}

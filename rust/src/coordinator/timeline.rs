@@ -1,0 +1,97 @@
+//! Execution timelines — the schematic content of Figs. 16 and 17 rendered
+//! from actual simulated runs.
+
+use crate::sim::SimTime;
+
+/// A labelled event on a job timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineEvent {
+    pub at: SimTime,
+    pub label: String,
+}
+
+/// Build the checkpoint/failure timeline of one window configuration.
+///
+/// * `job_h` — nominal job hours; * `period_h` — checkpoint periodicity;
+/// * `failure_offsets_s` — failure times (absolute seconds from start).
+pub fn build_timeline(job_h: f64, period_h: f64, failure_offsets_s: &[f64]) -> Vec<TimelineEvent> {
+    let mut ev = vec![TimelineEvent { at: SimTime::ZERO, label: "start".into() }];
+    let mut t = period_h * 3600.0;
+    let mut i = 1;
+    while t < job_h * 3600.0 - 1.0 {
+        ev.push(TimelineEvent { at: SimTime::from_secs(t), label: format!("C{i}") });
+        t += period_h * 3600.0;
+        i += 1;
+    }
+    for (k, &f) in failure_offsets_s.iter().enumerate() {
+        ev.push(TimelineEvent { at: SimTime::from_secs(f), label: format!("F{}", k + 1) });
+    }
+    ev.push(TimelineEvent { at: SimTime::from_secs(job_h * 3600.0), label: "complete".into() });
+    ev.sort_by_key(|e| e.at);
+    ev
+}
+
+/// Render a timeline as a single ASCII lane.
+pub fn render_timeline(events: &[TimelineEvent]) -> String {
+    if events.is_empty() {
+        return String::new();
+    }
+    let end = events.last().unwrap().at.as_secs().max(1.0);
+    const W: usize = 72;
+    let mut lane: Vec<char> = "-".repeat(W).chars().collect();
+    let mut labels = Vec::new();
+    for e in events {
+        let pos = ((e.at.as_secs() / end) * (W - 1) as f64).round() as usize;
+        lane[pos.min(W - 1)] = '|';
+        labels.push(format!("{}@{}", e.label, crate::util::fmt::hms(e.at.as_secs())));
+    }
+    format!("{}\n{}\n", lane.iter().collect::<String>(), labels.join("  "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig17b_one_hour_periodicity_has_four_checkpoints() {
+        // 5 h job, 1 h periodicity: C1..C4 (Fig. 17(b)).
+        let tl = build_timeline(5.0, 1.0, &[]);
+        let cs: Vec<_> = tl.iter().filter(|e| e.label.starts_with('C')).collect();
+        assert_eq!(cs.len(), 4);
+        assert_eq!(cs[0].at, SimTime::from_secs(3600.0));
+    }
+
+    #[test]
+    fn fig17c_two_hour_periodicity_has_two() {
+        let tl = build_timeline(5.0, 2.0, &[]);
+        let cs: Vec<_> = tl.iter().filter(|e| e.label.starts_with('C')).collect();
+        assert_eq!(cs.len(), 2);
+    }
+
+    #[test]
+    fn fig17d_four_hour_periodicity_has_one() {
+        let tl = build_timeline(5.0, 4.0, &[]);
+        let cs: Vec<_> = tl.iter().filter(|e| e.label.starts_with('C')).collect();
+        assert_eq!(cs.len(), 1);
+        assert_eq!(cs[0].at, SimTime::from_secs(4.0 * 3600.0));
+    }
+
+    #[test]
+    fn failures_interleave_sorted() {
+        let tl = build_timeline(2.0, 1.0, &[840.0, 4440.0]);
+        for w in tl.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(tl.iter().any(|e| e.label == "F1"));
+        assert!(tl.iter().any(|e| e.label == "F2"));
+    }
+
+    #[test]
+    fn render_marks_events() {
+        let tl = build_timeline(1.0, 1.0, &[900.0]);
+        let r = render_timeline(&tl);
+        assert!(r.contains('|'));
+        assert!(r.contains("F1@00:15:00"));
+        assert!(r.contains("complete@01:00:00"));
+    }
+}

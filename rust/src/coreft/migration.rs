@@ -1,0 +1,217 @@
+//! The Fig. 5 core-intelligence episode as a discrete-event simulation.
+//!
+//! Sequence: the hardware probing process on `C_PF` notifies the virtual
+//! core; predictions are gathered from adjacent probing processes; the job
+//! object migrates to the chosen adjacent virtual core; the runtime updates
+//! the dependency tables (automatic re-binding — no per-dependency
+//! handshake by the job itself, but the runtime's rebind rounds still cost
+//! time and diverge across clusters beyond the window, Fig. 9).
+
+use crate::agentft::migration::{choose_target, StepTrace};
+use crate::cluster::spec::{size_log_factor, CoreCosts};
+use crate::net::NodeId;
+use crate::sim::engine::{ActorId, Engine, Outbox};
+use crate::sim::{Rng, SimTime};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Result of a core-intelligence migration episode.
+#[derive(Debug, Clone)]
+pub struct CoreMigrationOutcome {
+    /// Total time to reinstate execution (the paper's ΔT_C2).
+    pub reinstate_s: f64,
+    pub target: NodeId,
+    pub steps: Vec<StepTrace>,
+}
+
+#[derive(Debug, Clone)]
+enum Ep {
+    PredictionNotified,
+    PredictionsGathered,
+    ObjectMigrated,
+    RebindDone { _idx: usize },
+}
+
+struct EpisodeActor {
+    costs: CoreCosts,
+    z: usize,
+    data_kb: u64,
+    proc_kb: u64,
+    jitter: Vec<f64>,
+    rebinds_done: usize,
+    trace: Rc<RefCell<Vec<StepTrace>>>,
+    finished: Rc<RefCell<Option<f64>>>,
+}
+
+impl EpisodeActor {
+    fn record(&self, step: &'static str, start: SimTime, dur: f64) {
+        self.trace.borrow_mut().push(StepTrace { step, start_s: start.as_secs(), dur_s: dur });
+    }
+
+    fn data_term_s(&self) -> f64 {
+        let u = size_log_factor(self.data_kb);
+        let over = (u - self.costs.data_overflow_threshold).max(0.0);
+        self.costs.data_log_coef_s * u
+            + self.costs.data_overflow_coef_s * over
+            + self.costs.proc_log_coef_s * size_log_factor(self.proc_kb)
+    }
+}
+
+impl crate::sim::engine::Actor<Ep> for EpisodeActor {
+    fn on_msg(&mut self, me: ActorId, msg: Ep, out: &mut Outbox<'_, Ep>) {
+        let now = out.now();
+        match msg {
+            Ep::PredictionNotified => {
+                let dur = self.costs.probe_gather_s * self.jitter[0];
+                self.record("gather_predictions", now, dur);
+                out.send_in(SimTime::from_secs(dur), me, Ep::PredictionsGathered);
+            }
+            // Object migration: serialization machinery setup plus the
+            // handle/segment registration for data + process image.
+            Ep::PredictionsGathered => {
+                let dur = (self.costs.migrate_setup_s + self.data_term_s()) * self.jitter[1];
+                self.record("migrate_object", now, dur);
+                out.send_in(SimTime::from_secs(dur), me, Ep::ObjectMigrated);
+            }
+            // Runtime dependency-table rebind rounds: windowed like the
+            // agent handshakes but owned by the runtime, with a
+            // cluster-specific overlap tail (Fig. 9 divergence).
+            Ep::ObjectMigrated => {
+                if self.z == 0 {
+                    self.finished.borrow_mut().replace(now.as_secs());
+                    out.stop = true;
+                    return;
+                }
+                let j = self.jitter[2];
+                for i in 0..self.z {
+                    let within = (i + 1).min(self.costs.rebind_window) as f64;
+                    let beyond = (i + 1).saturating_sub(self.costs.rebind_window) as f64;
+                    let off = self.costs.rebind_round_s * (within + self.costs.rebind_tail * beyond);
+                    out.send_in(SimTime::from_secs(off * j), me, Ep::RebindDone { _idx: i });
+                }
+                self.record("rebind_phase", now, self.costs.rebind_phase_s(self.z) * j);
+            }
+            Ep::RebindDone { .. } => {
+                self.rebinds_done += 1;
+                if self.rebinds_done == self.z {
+                    self.finished.borrow_mut().replace(now.as_secs());
+                    out.stop = true;
+                }
+            }
+        }
+    }
+}
+
+/// Run one core-intelligence migration episode (Fig. 5).
+pub fn simulate_core_migration(
+    costs: &CoreCosts,
+    z: usize,
+    data_kb: u64,
+    proc_kb: u64,
+    adjacent: &[(NodeId, bool)],
+    rng: &mut Rng,
+    noise_sigma: f64,
+) -> Option<CoreMigrationOutcome> {
+    let target = choose_target(adjacent, rng)?;
+    let jitter: Vec<f64> = (0..3)
+        .map(|_| if noise_sigma > 0.0 { rng.jitter(noise_sigma) } else { 1.0 })
+        .collect();
+    let trace = Rc::new(RefCell::new(Vec::new()));
+    let finished = Rc::new(RefCell::new(None));
+    let mut eng: Engine<Ep> = Engine::new();
+    let actor = EpisodeActor {
+        costs: *costs,
+        z,
+        data_kb,
+        proc_kb,
+        jitter,
+        rebinds_done: 0,
+        trace: trace.clone(),
+        finished: finished.clone(),
+    };
+    let id = eng.add_actor(Box::new(actor));
+    eng.schedule(SimTime::ZERO, id, Ep::PredictionNotified);
+    eng.run();
+    let reinstate_s = finished.borrow().expect("episode did not finish");
+    let steps = trace.borrow().clone();
+    Some(CoreMigrationOutcome { reinstate_s, target, steps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{preset, ClusterPreset};
+
+    fn adj(n: usize) -> Vec<(NodeId, bool)> {
+        (0..n).map(|i| (NodeId(i + 200), false)).collect()
+    }
+
+    #[test]
+    fn deterministic_episode_matches_closed_form() {
+        let mut rng = Rng::new(1);
+        for p in ClusterPreset::all() {
+            let costs = preset(p).costs.core;
+            for z in [1usize, 4, 10, 40] {
+                for kb in [1u64 << 19, 1 << 25, 1 << 31] {
+                    let out = simulate_core_migration(&costs, z, kb, kb, &adj(4), &mut rng, 0.0)
+                        .unwrap();
+                    let want = costs.reinstate_s(z, kb, kb);
+                    assert!(
+                        (out.reinstate_s - want).abs() < 1e-9,
+                        "{p:?} z={z} kb={kb}: {} vs {want}",
+                        out.reinstate_s
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn steps_follow_fig5_order() {
+        let costs = preset(ClusterPreset::Glooscap).costs.core;
+        let mut rng = Rng::new(2);
+        let out =
+            simulate_core_migration(&costs, 6, 1 << 20, 1 << 20, &adj(3), &mut rng, 0.0).unwrap();
+        let names: Vec<_> = out.steps.iter().map(|s| s.step).collect();
+        assert_eq!(names, vec!["gather_predictions", "migrate_object", "rebind_phase"]);
+    }
+
+    #[test]
+    fn core_beats_agent_at_genome_anchor() {
+        // Z = 4, S_d = 2^19 KB on Placentia: core 0.38 s vs agent 0.47 s.
+        let costs = preset(ClusterPreset::Placentia).costs;
+        let mut rng = Rng::new(3);
+        let core = simulate_core_migration(&costs.core, 4, 1 << 19, 1 << 19, &adj(3), &mut rng, 0.0)
+            .unwrap();
+        let agent = crate::agentft::simulate_agent_migration(
+            &costs.agent,
+            4,
+            1 << 19,
+            1 << 19,
+            &adj(3),
+            &mut rng,
+            0.0,
+        )
+        .unwrap();
+        assert!((core.reinstate_s - 0.38).abs() < 0.01, "{}", core.reinstate_s);
+        assert!((agent.reinstate_s - 0.47).abs() < 0.01, "{}", agent.reinstate_s);
+        assert!(core.reinstate_s < agent.reinstate_s);
+    }
+
+    #[test]
+    fn all_doomed_returns_none() {
+        let costs = preset(ClusterPreset::Placentia).costs.core;
+        let mut rng = Rng::new(4);
+        let adjacent = vec![(NodeId(1), true)];
+        assert!(simulate_core_migration(&costs, 3, 1, 1, &adjacent, &mut rng, 0.0).is_none());
+    }
+
+    #[test]
+    fn zero_deps_finishes() {
+        let costs = preset(ClusterPreset::Brasdor).costs.core;
+        let mut rng = Rng::new(5);
+        let out = simulate_core_migration(&costs, 0, 1, 1, &adj(1), &mut rng, 0.0).unwrap();
+        assert!(out.reinstate_s > 0.0);
+        assert_eq!(out.steps.len(), 2);
+    }
+}

@@ -1,0 +1,14 @@
+//! Approach 2 — fault tolerance incorporating **core intelligence**.
+//!
+//! Sub-jobs sit on *virtual cores*, an abstraction over the hardware cores
+//! (the paper implements this on AMPI/Charm++ object migration). The
+//! virtual core probes its hardware core and, on a predicted failure,
+//! executes the Fig. 5 sequence: gather adjacent predictions, migrate the
+//! job object to an adjacent virtual core, and let the runtime re-bind
+//! dependencies automatically.
+
+pub mod migration;
+pub mod vcore;
+
+pub use migration::{simulate_core_migration, CoreMigrationOutcome};
+pub use vcore::{VCore, VCoreState};

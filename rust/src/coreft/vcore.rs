@@ -1,0 +1,87 @@
+//! The virtual core: a logical core bound to a hardware core, able to
+//! migrate the job object it hosts.
+
+use crate::net::message::SubJobId;
+use crate::net::NodeId;
+
+/// Lifecycle of a virtual core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VCoreState {
+    /// Bound to its hardware core, executing its sub-job.
+    Bound,
+    /// Migrating its sub-job to the embedded target virtual core.
+    Migrating { to: NodeId },
+    /// Its sub-job finished.
+    Drained,
+    /// The hardware core failed under it before migration completed.
+    Dead,
+}
+
+/// A virtual core hosting at most one sub-job.
+#[derive(Debug, Clone)]
+pub struct VCore {
+    /// The hardware node this virtual core is currently mapped onto.
+    pub hw: NodeId,
+    pub sub_job: Option<SubJobId>,
+    pub state: VCoreState,
+    /// Dependency table maintained by the runtime — re-bound automatically
+    /// on migration (difference (iv) in the paper's comparison).
+    pub dep_table: Vec<SubJobId>,
+    pub migrations: usize,
+}
+
+impl VCore {
+    pub fn new(hw: NodeId, sub_job: SubJobId, deps: Vec<SubJobId>) -> Self {
+        Self { hw, sub_job: Some(sub_job), state: VCoreState::Bound, dep_table: deps, migrations: 0 }
+    }
+
+    pub fn z(&self) -> usize {
+        self.dep_table.len()
+    }
+
+    pub fn start_migration(&mut self, to: NodeId) {
+        debug_assert!(matches!(self.state, VCoreState::Bound));
+        self.state = VCoreState::Migrating { to };
+    }
+
+    /// Complete migration: the virtual core is re-bound onto the target
+    /// hardware core; the dependency table survives untouched.
+    pub fn finish_migration(&mut self) {
+        if let VCoreState::Migrating { to } = self.state {
+            self.hw = to;
+            self.state = VCoreState::Bound;
+            self.migrations += 1;
+        } else {
+            panic!("finish_migration while not migrating");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn migration_preserves_dep_table() {
+        let deps = vec![SubJobId(1), SubJobId(2)];
+        let mut v = VCore::new(NodeId(0), SubJobId(9), deps.clone());
+        v.start_migration(NodeId(3));
+        v.finish_migration();
+        assert_eq!(v.hw, NodeId(3));
+        assert_eq!(v.dep_table, deps);
+        assert_eq!(v.migrations, 1);
+        assert_eq!(v.state, VCoreState::Bound);
+    }
+
+    #[test]
+    fn z_counts_table() {
+        let v = VCore::new(NodeId(0), SubJobId(0), vec![SubJobId(1); 5]);
+        assert_eq!(v.z(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn finish_without_start_panics() {
+        VCore::new(NodeId(0), SubJobId(0), vec![]).finish_migration();
+    }
+}

@@ -1,0 +1,159 @@
+//! Ablations over the design choices DESIGN.md calls out, plus the paper's
+//! proposed extension (agents + checkpointing combined).
+
+use crate::checkpoint::CheckpointStrategy;
+use crate::cluster::{preset, ClusterPreset};
+use crate::coordinator::combined::Combined;
+use crate::coordinator::ftmanager::Strategy;
+use crate::coordinator::run::{window_row, ExperimentCfg};
+use crate::experiments::prediction::PredictionCfg;
+use crate::metrics::Table;
+use crate::sim::Rng;
+use crate::util::fmt::hms;
+
+/// Extension table: combined strategies vs their pure components (the
+/// Discussion's "first line of anticipatory response backed by
+/// checkpointing").
+pub fn combined_table() -> Table {
+    let cfg = ExperimentCfg::table1(preset(ClusterPreset::Placentia));
+    let mut t = Table::new(
+        "Extension: combined multi-agent + checkpointing (expected totals, coverage 29%, precision 64%)",
+        &["strategy", "exec: 1 random/h", "exec: 5 random/h", "penalty vs no-failure"],
+    );
+    let mut add = |name: String, one: f64, five: f64| {
+        let penalty = 100.0 * (one - 3600.0) / 3600.0;
+        t.row(&[name, hms(one), hms(five), format!("+{penalty:.0}%")]);
+    };
+    for s in [
+        Strategy::Checkpoint(CheckpointStrategy::CentralSingle),
+        Strategy::Core,
+    ] {
+        let r = window_row(s, &cfg);
+        add(s.name().to_string(), r.total_one_random_s, r.total_five_random_s);
+    }
+    for agent in [Strategy::Agent, Strategy::Core, Strategy::Hybrid] {
+        let c = Combined { agent, backstop: CheckpointStrategy::CentralSingle };
+        let r = c.window_row(&cfg);
+        add(c.name(), r.total_one_random_s, r.total_five_random_s);
+    }
+    t
+}
+
+/// Ablation: the agent's dependency-handshake window — the knob behind the
+/// Fig. 8 knee at Z = 10. The window bounds how many handshakes pay full
+/// cost before overlapping kicks in, so the knee moves with it.
+pub fn window_ablation() -> Table {
+    let mut t = Table::new(
+        "Ablation: agent dependency-handshake window vs reinstate time (placentia, S=2^24)",
+        &["window", "Z=5", "Z=10", "Z=25", "Z=63"],
+    );
+    for window in [1usize, 5, 10, 20, 40] {
+        let mut costs = preset(ClusterPreset::Placentia).costs.agent;
+        costs.dep_window = window;
+        let cells: Vec<String> = [5usize, 10, 25, 63]
+            .iter()
+            .map(|&z| format!("{:.3}s", costs.reinstate_s(z, 1 << 24, 1 << 24)))
+            .collect();
+        t.row(&[
+            window.to_string(),
+            cells[0].clone(),
+            cells[1].clone(),
+            cells[2].clone(),
+            cells[3].clone(),
+        ]);
+    }
+    t
+}
+
+/// Ablation: predictor threshold → coverage/precision trade-off (the knob
+/// the paper's future work wants to push).
+pub fn predictor_ablation(seed: u64) -> Table {
+    let mut t = Table::new(
+        "Ablation: predictor threshold vs coverage/precision (2000 windows)",
+        &["threshold", "coverage", "precision", "false alarms"],
+    );
+    for thr in [0.40, 0.48, 0.55, 0.62, 0.70] {
+        let mut rng = Rng::new(seed);
+        let cfg = PredictionCfg { windows: 2000, ..Default::default() };
+        let stats = run_with_threshold(&cfg, thr, &mut rng);
+        t.row(&[
+            format!("{thr:.2}"),
+            format!("{:.1}%", 100.0 * stats.0),
+            format!("{:.1}%", 100.0 * stats.1),
+            stats.2.to_string(),
+        ]);
+    }
+    t
+}
+
+/// (coverage, precision, false alarms) at a given predictor threshold.
+fn run_with_threshold(cfg: &PredictionCfg, threshold: f64, rng: &mut Rng) -> (f64, f64, usize) {
+    let stats =
+        crate::experiments::prediction::run_prediction_threshold(cfg, threshold, rng);
+    (stats.coverage(), stats.precision(), stats.false_alarms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combined_table_rows() {
+        let t = combined_table();
+        assert_eq!(t.n_rows(), 5);
+        let r = t.render();
+        assert!(r.contains("combined"));
+    }
+
+    #[test]
+    fn combined_sits_between_components() {
+        // rendered penalties: ckpt ~+88%, pure core ~+9%, combined between
+        let r = combined_table().to_csv();
+        let penalties: Vec<f64> = r
+            .lines()
+            .skip(1)
+            .map(|l| l.rsplit('+').next().unwrap().trim_end_matches('%').parse().unwrap())
+            .collect();
+        let (ckpt, core) = (penalties[0], penalties[1]);
+        for &c in &penalties[2..] {
+            assert!(c > core && c < ckpt, "combined {c} vs ({core}, {ckpt})");
+        }
+    }
+
+    #[test]
+    fn window_ablation_shapes() {
+        let t = window_ablation();
+        assert_eq!(t.n_rows(), 5);
+        // the window bounds the full-cost handshake phase: a narrower
+        // window moves handshakes into the overlapped tail earlier, so at
+        // large Z reinstate time grows with the window until it saturates
+        let csv = t.to_csv();
+        let z63: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').last().unwrap().trim_end_matches('s').parse().unwrap())
+            .collect();
+        assert!(z63.windows(2).all(|w| w[1] >= w[0] - 1e-9), "{z63:?}");
+        // at Z=5 any window >= 5 behaves identically
+        let z5: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(1).unwrap().trim_end_matches('s').parse().unwrap())
+            .collect();
+        assert!((z5[2] - z5[4]).abs() < 1e-9, "{z5:?}");
+    }
+
+    #[test]
+    fn predictor_ablation_tradeoff() {
+        let t = predictor_ablation(3);
+        let csv = t.to_csv();
+        let rows: Vec<Vec<&str>> =
+            csv.lines().skip(1).map(|l| l.split(',').collect()).collect();
+        let cov: Vec<f64> =
+            rows.iter().map(|r| r[1].trim_end_matches('%').parse().unwrap()).collect();
+        let fa: Vec<f64> = rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        // lower threshold → more coverage AND more false alarms
+        assert!(cov.first().unwrap() > cov.last().unwrap(), "{cov:?}");
+        assert!(fa.first().unwrap() > fa.last().unwrap(), "{fa:?}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Figs. 8-13: reinstate time vs dependencies / data size / process size,
+//! one series per cluster, mean of 30 DES trials per point.
+
+use crate::cluster::{preset, ClusterPreset};
+use crate::coordinator::ftmanager::Strategy;
+use crate::coordinator::run::{measure_reinstate, ExperimentCfg};
+use crate::metrics::Series;
+use crate::sim::Rng;
+
+/// The paper's dependency sweep: Z from 3 to 63.
+pub fn z_values() -> Vec<usize> {
+    let mut v = vec![3, 5, 7, 10, 15, 20, 25, 30, 35, 40, 45, 50, 55, 60, 63];
+    v.dedup();
+    v
+}
+
+/// The paper's size sweep: `2^n KB` for n = 19, 19.5, …, 31.
+pub fn size_exponents() -> Vec<f64> {
+    let mut v = Vec::new();
+    let mut n = 19.0;
+    while n <= 31.0 + 1e-9 {
+        v.push(n);
+        n += 0.5;
+    }
+    v
+}
+
+fn kb_of(n: f64) -> u64 {
+    2f64.powf(n).round() as u64
+}
+
+fn measure(
+    strategy: Strategy,
+    p: ClusterPreset,
+    z: usize,
+    data_kb: u64,
+    proc_kb: u64,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    let cfg = ExperimentCfg {
+        z,
+        data_kb,
+        proc_kb,
+        trials,
+        ..ExperimentCfg::table1(preset(p))
+    };
+    let mut rng = Rng::new(seed);
+    measure_reinstate(strategy, &cfg, &mut rng).mean
+}
+
+fn sweep_z(strategy: Strategy, title: &str, trials: usize, seed: u64) -> Series {
+    let zs = z_values();
+    let mut s = Series::new(
+        title,
+        "dependencies Z",
+        "reinstate time (s)",
+        zs.iter().map(|&z| z as f64).collect(),
+    );
+    for p in ClusterPreset::all() {
+        let y: Vec<f64> = zs
+            .iter()
+            .map(|&z| measure(strategy, p, z, 1 << 24, 1 << 24, trials, seed ^ z as u64))
+            .collect();
+        s.push(p.name(), y);
+    }
+    s
+}
+
+fn sweep_size(strategy: Strategy, title: &str, vary_data: bool, trials: usize, seed: u64) -> Series {
+    let ns = size_exponents();
+    let mut s = Series::new(
+        title,
+        "size 2^n KB (n)",
+        "reinstate time (s)",
+        ns.clone(),
+    );
+    for p in ClusterPreset::all() {
+        let y: Vec<f64> = ns
+            .iter()
+            .map(|&n| {
+                let kb = kb_of(n);
+                let (d, pr) = if vary_data { (kb, 1 << 19) } else { (1 << 19, kb) };
+                measure(strategy, p, 10, d, pr, trials, seed ^ n.to_bits())
+            })
+            .collect();
+        s.push(p.name(), y);
+    }
+    s
+}
+
+/// Fig. 8 — Z vs reinstate, agent intelligence (S_d = 2^24 KB).
+pub fn fig8(trials: usize, seed: u64) -> Series {
+    sweep_z(Strategy::Agent, "Fig 8: dependencies vs reinstate (agent intelligence)", trials, seed)
+}
+
+/// Fig. 9 — Z vs reinstate, core intelligence.
+pub fn fig9(trials: usize, seed: u64) -> Series {
+    sweep_z(Strategy::Core, "Fig 9: dependencies vs reinstate (core intelligence)", trials, seed)
+}
+
+/// Fig. 10 — S_d vs reinstate, agent intelligence (Z = 10).
+pub fn fig10(trials: usize, seed: u64) -> Series {
+    sweep_size(Strategy::Agent, "Fig 10: data size vs reinstate (agent intelligence)", true, trials, seed)
+}
+
+/// Fig. 11 — S_d vs reinstate, core intelligence.
+pub fn fig11(trials: usize, seed: u64) -> Series {
+    sweep_size(Strategy::Core, "Fig 11: data size vs reinstate (core intelligence)", true, trials, seed)
+}
+
+/// Fig. 12 — S_p vs reinstate, agent intelligence.
+pub fn fig12(trials: usize, seed: u64) -> Series {
+    sweep_size(Strategy::Agent, "Fig 12: process size vs reinstate (agent intelligence)", false, trials, seed)
+}
+
+/// Fig. 13 — S_p vs reinstate, core intelligence.
+pub fn fig13(trials: usize, seed: u64) -> Series {
+    sweep_size(Strategy::Core, "Fig 13: process size vs reinstate (core intelligence)", false, trials, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col<'a>(s: &'a Series, name: &str) -> &'a [f64] {
+        &s.series.iter().find(|(n, _)| n == name).unwrap().1
+    }
+
+    #[test]
+    fn fig8_orderings() {
+        let s = fig8(8, 1);
+        assert_eq!(s.series.len(), 4);
+        let acet = col(&s, "acet");
+        let plac = col(&s, "placentia");
+        // ACET slowest, Placentia fastest, everywhere
+        for i in 0..s.x.len() {
+            assert!(acet[i] > plac[i], "x={}", s.x[i]);
+        }
+        // steep rise until Z=10 then shallow (placentia)
+        let i3 = s.x.iter().position(|&x| x == 3.0).unwrap();
+        let i10 = s.x.iter().position(|&x| x == 10.0).unwrap();
+        let i25 = s.x.iter().position(|&x| x == 25.0).unwrap();
+        let early_slope = (plac[i10] - plac[i3]) / 7.0;
+        let late_slope = (plac[i25] - plac[i10]) / 15.0;
+        assert!(early_slope > 2.0 * late_slope, "early {early_slope} late {late_slope}");
+        // ACET rises again after Z=25 (congestion)
+        let acet25 = acet[i25];
+        let acet_last = acet[s.x.len() - 1];
+        assert!(acet_last - acet25 > 0.1, "{acet25} -> {acet_last}");
+        // sub-second everywhere on placentia
+        assert!(plac.iter().all(|&v| v < 0.6));
+    }
+
+    #[test]
+    fn fig9_uniform_then_divergent() {
+        let s = fig9(8, 2);
+        let i5 = s.x.iter().position(|&x| x == 5.0).unwrap();
+        let at = |i: usize| -> Vec<f64> { s.series.iter().map(|(_, y)| y[i]).collect() };
+        let spread = |v: &[f64]| {
+            v.iter().cloned().fold(f64::MIN, f64::max) - v.iter().cloned().fold(f64::MAX, f64::min)
+        };
+        let last = s.x.len() - 1;
+        assert!(spread(&at(i5)) < 0.08, "spread at Z=5: {:?}", at(i5));
+        assert!(spread(&at(last)) > 2.0 * spread(&at(i5)));
+    }
+
+    #[test]
+    fn rule1_visible_in_fig8_vs_fig9() {
+        let f8 = fig8(8, 3);
+        let f9 = fig9(8, 3);
+        // core below agent for Z <= 10 on every cluster (S_d = 2^24)
+        for (name, _) in &f8.series {
+            let a = col(&f8, name);
+            let c = col(&f9, name);
+            for (i, &z) in f8.x.iter().enumerate() {
+                if z <= 10.0 {
+                    assert!(c[i] < a[i] + 0.02, "{name} z={z}: core {} agent {}", c[i], a[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rule2_visible_in_fig10_vs_fig11() {
+        let f10 = fig10(8, 4);
+        let f11 = fig11(8, 4);
+        let a = col(&f10, "placentia");
+        let c = col(&f11, "placentia");
+        for (i, &n) in f10.x.iter().enumerate() {
+            if n <= 24.0 {
+                assert!(a[i] <= c[i] + 0.02, "n={n}: agent {} core {}", a[i], c[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn fig11_acet_worse_past_2p24() {
+        let f11 = fig11(8, 5);
+        let acet = col(&f11, "acet");
+        let plac = col(&f11, "placentia");
+        let i22 = f11.x.iter().position(|&x| x == 22.0).unwrap();
+        let i30 = f11.x.iter().position(|&x| x == 30.0).unwrap();
+        let gap22 = acet[i22] - plac[i22];
+        let gap30 = acet[i30] - plac[i30];
+        assert!(gap30 > gap22 + 0.05, "gap22 {gap22} gap30 {gap30}");
+    }
+
+    #[test]
+    fn fig12_13_similar_to_fig10_11() {
+        // paper: "The second scenario performs similar to the first"
+        let f10 = fig10(8, 6);
+        let f12 = fig12(8, 6);
+        let a10 = col(&f10, "glooscap");
+        let a12 = col(&f12, "glooscap");
+        for i in 0..f10.x.len() {
+            assert!((a10[i] - a12[i]).abs() < 0.05, "i={i}");
+        }
+    }
+
+    #[test]
+    fn sweeps_deterministic() {
+        let a = fig10(4, 9).to_csv();
+        let b = fig10(4, 9).to_csv();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,79 @@
+//! The molecular-dynamics decision map: which fault-tolerance approach the
+//! rules select for each decomposition/scale — the application the paper's
+//! Decision Making Rules section motivates.
+
+use crate::job::molecular::{Decomposition, MdConfig};
+use crate::hybrid::rules::Mover;
+use crate::metrics::Table;
+use crate::util::fmt::kb_pow2;
+
+/// Build the decision map over a grid of simulation scales.
+pub fn decision_map() -> Table {
+    let mut t = Table::new(
+        "MD fault-tolerance decision map (Rules 1-3 applied to the paper's decompositions)",
+        &["decomposition", "cores", "atoms", "Z", "S_d", "S_p", "approach"],
+    );
+    for d in [Decomposition::Atom, Decomposition::Force, Decomposition::Spatial] {
+        for (cores, atoms, steps) in [
+            (8usize, 100_000usize, 500u64),
+            (64, 1_000_000, 1_000),
+            (512, 10_000_000, 10_000),
+        ] {
+            let c = MdConfig {
+                decomposition: d,
+                n_cores: cores,
+                n_atoms: atoms,
+                bytes_per_atom: 512,
+                steps_per_window: steps,
+            };
+            let inp = c.rule_inputs();
+            t.row(&[
+                format!("{d:?}").to_lowercase(),
+                cores.to_string(),
+                atoms.to_string(),
+                inp.z.to_string(),
+                kb_pow2(inp.data_kb),
+                kb_pow2(inp.proc_kb),
+                match c.recommended() {
+                    Mover::Agent => "agent".into(),
+                    Mover::Core => "core".into(),
+                },
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_covers_all_decompositions() {
+        let t = decision_map();
+        assert_eq!(t.n_rows(), 9);
+        let r = t.render();
+        for d in ["atom", "force", "spatial"] {
+            assert!(r.contains(d), "{d}");
+        }
+    }
+
+    #[test]
+    fn spatial_always_core() {
+        // spatial: Z = 6 <= 10 everywhere → Rule 1 → core, matching the
+        // paper's observation that local-interaction decompositions suit
+        // core intelligence
+        let csv = decision_map().to_csv();
+        for line in csv.lines().filter(|l| l.starts_with("spatial")) {
+            assert!(line.ends_with("core"), "{line}");
+        }
+    }
+
+    #[test]
+    fn atom_decomposition_prefers_agent_until_data_blows_up() {
+        let csv = decision_map().to_csv();
+        let atom_rows: Vec<&str> = csv.lines().filter(|l| l.starts_with("atom")).collect();
+        // at least one atom-decomposition configuration goes to agent
+        assert!(atom_rows.iter().any(|l| l.ends_with("agent")), "{atom_rows:?}");
+    }
+}

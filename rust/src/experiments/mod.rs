@@ -1,0 +1,15 @@
+//! The experiment harness: one entry per paper table/figure (see DESIGN.md
+//! §Experiment index). Every experiment regenerates its artefact as text
+//! (table, CSV series or timeline) so `biomaft experiment <id>` reproduces
+//! the paper's evaluation.
+
+pub mod ablations;
+pub mod figures;
+pub mod fig14;
+pub mod md_decisions;
+pub mod prediction;
+pub mod registry;
+pub mod rules_validation;
+pub mod tables;
+
+pub use registry::{list, run_by_id, Experiment};

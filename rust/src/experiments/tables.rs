@@ -1,0 +1,176 @@
+//! Tables 1 and 2: fault-tolerance strategy comparison on the genome
+//! searching job (Placentia cluster).
+
+use crate::cluster::{preset, ClusterPreset};
+use crate::coordinator::ftmanager::Strategy;
+use crate::coordinator::run::{window_row, ExperimentCfg, WindowRow};
+use crate::metrics::Table;
+use crate::util::fmt::{hms, hms_ms};
+
+fn fmt_rein(s: f64) -> String {
+    if s < 60.0 {
+        hms_ms(s)
+    } else {
+        hms(s)
+    }
+}
+
+fn push_row(t: &mut Table, label: &str, r: &WindowRow) {
+    t.row(&[
+        label.to_string(),
+        r.predict_s.map(hms).unwrap_or_else(|| "-".into()),
+        fmt_rein(r.reinstate_periodic_s),
+        fmt_rein(r.reinstate_random_s),
+        if r.overhead_periodic_s > 0.0 { hms(r.overhead_periodic_s) } else { "-".into() },
+        if r.overhead_random_s > 0.0 { hms(r.overhead_random_s) } else { "-".into() },
+        hms(r.total_nofail_s),
+        hms(r.total_one_periodic_s),
+        hms(r.total_one_random_s),
+        hms(r.total_five_random_s),
+    ]);
+}
+
+const HEADER: [&str; 10] = [
+    "fault tolerant approach",
+    "predict",
+    "reinstate (periodic)",
+    "reinstate (random)",
+    "overheads (periodic)",
+    "overheads (random)",
+    "exec: no failures",
+    "exec: 1 periodic/h",
+    "exec: 1 random/h",
+    "exec: 5 random/h",
+];
+
+/// Table 1: 1-hour job, checkpoints one hour apart, S_d = 2^19 KB, Z = 4.
+pub fn table1() -> (Table, Vec<WindowRow>) {
+    let cfg = ExperimentCfg::table1(preset(ClusterPreset::Placentia));
+    let mut t = Table::new(
+        "Table 1: comparing fault tolerant approaches between checkpoints (1 h periodicity)",
+        &HEADER,
+    );
+    let mut rows = Vec::new();
+    for s in Strategy::all_table1() {
+        let r = window_row(s, &cfg);
+        push_row(&mut t, s.name(), &r);
+        rows.push(r);
+    }
+    (t, rows)
+}
+
+/// Table 2: 5-hour job; cold restart + every strategy at 1/2/4 h
+/// periodicity.
+pub fn table2() -> (Table, Vec<WindowRow>) {
+    let mut t = Table::new(
+        "Table 2: five hour job with checkpoints at 1, 2 and 4 hour periodicity",
+        &HEADER,
+    );
+    let mut rows = Vec::new();
+    // cold restart has no periodicity
+    let cold_cfg = ExperimentCfg::table2(preset(ClusterPreset::Placentia), 1.0);
+    let cold = window_row(Strategy::ColdRestart, &cold_cfg);
+    push_row(&mut t, "cold restart (no fault tolerance)", &cold);
+    rows.push(cold);
+    for s in Strategy::all_table1() {
+        for period in [1.0, 2.0, 4.0] {
+            let cfg = ExperimentCfg::table2(preset(ClusterPreset::Placentia), period);
+            let r = window_row(s, &cfg);
+            push_row(&mut t, &format!("{} ({} h periodicity)", s.name(), period), &r);
+            rows.push(r);
+        }
+    }
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::CheckpointStrategy;
+
+    #[test]
+    fn table1_shape() {
+        let (t, rows) = table1();
+        assert_eq!(t.n_rows(), 6);
+        assert_eq!(rows.len(), 6);
+        let rendered = t.render();
+        assert!(rendered.contains("agent intelligence"));
+        assert!(rendered.contains("01:00:00"));
+    }
+
+    #[test]
+    fn table1_headline_claim() {
+        // Checkpointing adds ~90% under one random failure; multi-agent ~10%.
+        let (_, rows) = table1();
+        let job = 3600.0;
+        for r in &rows {
+            let penalty = (r.total_one_random_s - job) / job;
+            match r.strategy {
+                Strategy::Checkpoint(_) => {
+                    assert!((0.80..1.05).contains(&penalty), "{:?}: {penalty}", r.strategy)
+                }
+                _ => assert!(penalty < 0.15, "{:?}: {penalty}", r.strategy),
+            }
+        }
+    }
+
+    #[test]
+    fn table1_core_fastest_multi_agent() {
+        let (_, rows) = table1();
+        let total = |s: Strategy| {
+            rows.iter().find(|r| r.strategy == s).unwrap().total_one_periodic_s
+        };
+        assert!(total(Strategy::Core) < total(Strategy::Agent));
+        // hybrid tracks core (Z=4 → Rule 1)
+        assert!((total(Strategy::Hybrid) - total(Strategy::Core)).abs() < 2.0);
+    }
+
+    #[test]
+    fn table2_shape_and_ordering() {
+        let (t, rows) = table2();
+        assert_eq!(t.n_rows(), 1 + 6 * 3);
+        // cold restart worst at five random failures
+        let cold = &rows[0];
+        for r in &rows[1..] {
+            assert!(
+                cold.total_five_random_s > r.total_five_random_s,
+                "{:?} p={}",
+                r.strategy,
+                r.period_h
+            );
+        }
+        // checkpoint totals decrease with periodicity (less overhead charged)
+        let ck = |p: f64| {
+            rows.iter()
+                .find(|r| {
+                    r.strategy == Strategy::Checkpoint(CheckpointStrategy::CentralSingle)
+                        && r.period_h == p
+                })
+                .unwrap()
+                .total_five_random_s
+        };
+        assert!(ck(1.0) > ck(2.0) && ck(2.0) > ck(4.0));
+    }
+
+    #[test]
+    fn table2_multi_agent_quarter_of_checkpointing() {
+        // paper: multi-agent ≈ 1/4 the added time of checkpointing for the
+        // 5 h job with five failures/hour
+        let (_, rows) = table2();
+        let job = 5.0 * 3600.0;
+        let ck = rows
+            .iter()
+            .find(|r| {
+                r.strategy == Strategy::Checkpoint(CheckpointStrategy::CentralSingle)
+                    && r.period_h == 1.0
+            })
+            .unwrap();
+        let core = rows
+            .iter()
+            .find(|r| r.strategy == Strategy::Core && r.period_h == 1.0)
+            .unwrap();
+        let ck_penalty = ck.total_five_random_s - job;
+        let core_penalty = core.total_five_random_s - job;
+        assert!(core_penalty < ck_penalty / 3.0, "ck {ck_penalty} core {core_penalty}");
+    }
+}

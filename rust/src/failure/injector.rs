@@ -1,0 +1,178 @@
+//! Failure injection: the two single-node failure processes of Fig. 16 plus
+//! a Poisson process and trace replay for extensions.
+
+use crate::net::NodeId;
+use crate::sim::{Rng, SimTime};
+
+/// One injected failure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureEvent {
+    pub at: SimTime,
+    pub node: NodeId,
+}
+
+/// The failure process driving an experiment window.
+#[derive(Debug, Clone)]
+pub enum FailureProcess {
+    /// One failure per window at a fixed offset (paper: 14 or 15 minutes
+    /// after the checkpoint, depending on the experiment).
+    Periodic { offset_s: f64 },
+    /// One failure per window, uniform over the window (paper: mean lands at
+    /// ~31 m 14 s over 5000 trials of a 1 h window).
+    RandomUniform,
+    /// `k` failures per window, each uniform over the window.
+    RandomUniformK { k: usize },
+    /// Poisson arrivals with the given rate (failures per window).
+    Poisson { rate_per_window: f64 },
+    /// Replay an explicit trace of offsets (seconds into the window).
+    Trace { offsets_s: Vec<f64> },
+}
+
+/// A concrete plan: which node fails when, for each window of a run.
+#[derive(Debug, Clone)]
+pub struct FailurePlan {
+    pub events: Vec<FailureEvent>,
+}
+
+impl FailureProcess {
+    /// Sample the failure offsets (seconds) within one window.
+    pub fn sample_offsets(&self, window_s: f64, rng: &mut Rng) -> Vec<f64> {
+        match self {
+            FailureProcess::Periodic { offset_s } => {
+                if *offset_s <= window_s {
+                    vec![*offset_s]
+                } else {
+                    vec![]
+                }
+            }
+            FailureProcess::RandomUniform => vec![rng.uniform(0.0, window_s)],
+            FailureProcess::RandomUniformK { k } => {
+                let mut v: Vec<f64> = (0..*k).map(|_| rng.uniform(0.0, window_s)).collect();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v
+            }
+            FailureProcess::Poisson { rate_per_window } => {
+                let mut t = 0.0;
+                let mean_gap = window_s / rate_per_window.max(1e-12);
+                let mut v = Vec::new();
+                loop {
+                    t += rng.exponential(mean_gap);
+                    if t >= window_s {
+                        break;
+                    }
+                    v.push(t);
+                }
+                v
+            }
+            FailureProcess::Trace { offsets_s } => {
+                offsets_s.iter().copied().filter(|&o| o <= window_s).collect()
+            }
+        }
+    }
+
+    /// Build a plan over `windows` consecutive windows, picking a victim
+    /// node uniformly among `n_nodes` for each failure.
+    pub fn plan(&self, windows: usize, window_s: f64, n_nodes: usize, rng: &mut Rng) -> FailurePlan {
+        assert!(n_nodes > 0);
+        let mut events = Vec::new();
+        for w in 0..windows {
+            let base = w as f64 * window_s;
+            for off in self.sample_offsets(window_s, rng) {
+                events.push(FailureEvent {
+                    at: SimTime::from_secs(base + off),
+                    node: NodeId(rng.range_usize(0, n_nodes)),
+                });
+            }
+        }
+        events.sort_by_key(|e| e.at);
+        FailurePlan { events }
+    }
+}
+
+impl FailurePlan {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_single_offset() {
+        let mut rng = Rng::new(1);
+        let p = FailureProcess::Periodic { offset_s: 14.0 * 60.0 };
+        let offs = p.sample_offsets(3600.0, &mut rng);
+        assert_eq!(offs, vec![840.0]);
+    }
+
+    #[test]
+    fn periodic_beyond_window_dropped() {
+        let mut rng = Rng::new(1);
+        let p = FailureProcess::Periodic { offset_s: 4000.0 };
+        assert!(p.sample_offsets(3600.0, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn random_uniform_mean_matches_paper() {
+        // Paper: over 5000 trials of a 1 h window the mean failure time is
+        // ~31 m 14 s (i.e. ~the window midpoint).
+        let mut rng = Rng::new(42);
+        let p = FailureProcess::RandomUniform;
+        let n = 5000;
+        let mean: f64 =
+            (0..n).map(|_| p.sample_offsets(3600.0, &mut rng)[0]).sum::<f64>() / n as f64;
+        assert!((mean - 1800.0).abs() < 40.0, "mean={mean}");
+    }
+
+    #[test]
+    fn random_k_sorted_and_counted() {
+        let mut rng = Rng::new(3);
+        let p = FailureProcess::RandomUniformK { k: 5 };
+        let offs = p.sample_offsets(3600.0, &mut rng);
+        assert_eq!(offs.len(), 5);
+        assert!(offs.windows(2).all(|w| w[0] <= w[1]));
+        assert!(offs.iter().all(|&o| (0.0..3600.0).contains(&o)));
+    }
+
+    #[test]
+    fn poisson_rate_approximate() {
+        let mut rng = Rng::new(4);
+        let p = FailureProcess::Poisson { rate_per_window: 3.0 };
+        let total: usize = (0..2000).map(|_| p.sample_offsets(3600.0, &mut rng).len()).sum();
+        let rate = total as f64 / 2000.0;
+        assert!((rate - 3.0).abs() < 0.15, "rate={rate}");
+    }
+
+    #[test]
+    fn trace_replay_filters() {
+        let mut rng = Rng::new(5);
+        let p = FailureProcess::Trace { offsets_s: vec![10.0, 20.0, 9999.0] };
+        assert_eq!(p.sample_offsets(100.0, &mut rng), vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn plan_spans_windows_sorted() {
+        let mut rng = Rng::new(6);
+        let p = FailureProcess::Periodic { offset_s: 840.0 };
+        let plan = p.plan(5, 3600.0, 4, &mut rng);
+        assert_eq!(plan.len(), 5);
+        for (w, e) in plan.events.iter().enumerate() {
+            assert_eq!(e.at, SimTime::from_secs(w as f64 * 3600.0 + 840.0));
+            assert!(e.node.0 < 4);
+        }
+    }
+
+    #[test]
+    fn plan_deterministic_per_seed() {
+        let p = FailureProcess::RandomUniformK { k: 3 };
+        let a = p.plan(4, 3600.0, 8, &mut Rng::new(9));
+        let b = p.plan(4, 3600.0, 8, &mut Rng::new(9));
+        assert_eq!(a.events, b.events);
+    }
+}

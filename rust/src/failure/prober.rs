@@ -1,0 +1,103 @@
+//! The hardware probing process: periodic local health sampling plus
+//! "are you alive?" exchanges with adjacent nodes.
+//!
+//! Before a real failure strikes, the victim core's health indicators drift
+//! (wear ramps, soft errors appear). The prober records those samples into
+//! the core's log; the [`crate::failure::predictor`] reads the log.
+
+use crate::cluster::core::{Core, CoreState, HealthSample};
+use crate::sim::{Rng, SimTime};
+
+/// Generates health samples for a core, with pre-failure drift.
+#[derive(Debug, Clone)]
+pub struct Prober {
+    /// Probe period in seconds (high frequency, tiny payload — the paper's
+    /// point about probing traffic vs checkpoint traffic).
+    pub period_s: f64,
+    /// How long before an injected failure the drift becomes visible.
+    /// Failures with shorter lead time are unpredictable (deadlocks, power
+    /// loss) — this is what caps coverage at ~29 %.
+    pub drift_lead_s: f64,
+}
+
+impl Default for Prober {
+    fn default() -> Self {
+        Self { period_s: 5.0, drift_lead_s: 60.0 }
+    }
+}
+
+impl Prober {
+    /// Sample the core at `now`, appending to its health log.
+    pub fn probe(&self, core: &mut Core, now: SimTime, rng: &mut Rng) -> HealthSample {
+        let base_load = 0.45 + 0.1 * rng.normal(0.0, 1.0).clamp(-3.0, 3.0);
+        let (wear, soft) = match core.state {
+            CoreState::Doomed { fails_at } if fails_at > now => {
+                let lead = (fails_at.as_secs() - now.as_secs()).max(0.0);
+                if lead <= self.drift_lead_s {
+                    // ramp from 0.3 → 0.95 as the failure approaches
+                    let frac = 1.0 - lead / self.drift_lead_s;
+                    (0.3 + 0.65 * frac, rng.chance(0.3 + 0.6 * frac))
+                } else {
+                    (0.15 + 0.1 * rng.f64(), rng.chance(0.02))
+                }
+            }
+            _ => (0.15 + 0.1 * rng.f64(), rng.chance(0.02)),
+        };
+        let s = HealthSample { at: now, load: base_load.clamp(0.0, 1.0), wear, soft_errors: soft };
+        core.observe(s);
+        s
+    }
+
+    /// Cost of one probe exchange in seconds of virtual time (tiny —
+    /// contrast with checkpoint traffic).
+    pub fn probe_cost_s(&self, rtt_s: f64) -> f64 {
+        rtt_s + 1e-4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::core::CoreId;
+
+    #[test]
+    fn healthy_core_low_wear() {
+        let mut core = Core::new(CoreId(0), 64);
+        let p = Prober::default();
+        let mut rng = Rng::new(1);
+        for i in 0..50 {
+            p.probe(&mut core, SimTime::from_secs(i as f64 * 5.0), &mut rng);
+        }
+        let avg: f64 =
+            core.log().iter().map(|s| s.wear).sum::<f64>() / core.log().len() as f64;
+        assert!(avg < 0.3, "avg wear {avg}");
+    }
+
+    #[test]
+    fn doomed_core_wear_ramps_near_failure() {
+        let mut core = Core::new(CoreId(1), 64);
+        core.state = CoreState::Doomed { fails_at: SimTime::from_secs(300.0) };
+        let p = Prober::default();
+        let mut rng = Rng::new(2);
+        let early = p.probe(&mut core, SimTime::from_secs(100.0), &mut rng);
+        let late = p.probe(&mut core, SimTime::from_secs(295.0), &mut rng);
+        assert!(early.wear < 0.3, "early {}", early.wear);
+        assert!(late.wear > 0.8, "late {}", late.wear);
+    }
+
+    #[test]
+    fn drift_invisible_before_lead() {
+        let mut core = Core::new(CoreId(2), 64);
+        core.state = CoreState::Doomed { fails_at: SimTime::from_secs(10_000.0) };
+        let p = Prober::default();
+        let mut rng = Rng::new(3);
+        let s = p.probe(&mut core, SimTime::from_secs(100.0), &mut rng);
+        assert!(s.wear < 0.3);
+    }
+
+    #[test]
+    fn probe_cost_small() {
+        let p = Prober::default();
+        assert!(p.probe_cost_s(16e-6) < 1e-3);
+    }
+}

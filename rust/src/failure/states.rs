@@ -1,0 +1,64 @@
+//! Fig. 15 outcome classification: the four prediction/failure states of a
+//! job between two checkpoints.
+
+use crate::sim::SimTime;
+
+/// The four cases of Fig. 15.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutcomeClass {
+    /// (a) no prediction, no failure — ideal quiet state.
+    Ideal,
+    /// (b) failure occurred but was not predicted — the system fails if the
+    /// multi-agent approaches are employed alone.
+    UnpredictedFailure,
+    /// (c) a prediction fired but no failure followed — unstable state
+    /// (sub-job shuffled for nothing).
+    FalseAlarm,
+    /// (d) a prediction fired and the failure followed — ideal prediction.
+    IdealPrediction,
+}
+
+/// Classify a window given the prediction and failure times observed in it.
+pub fn classify(prediction: Option<SimTime>, failure: Option<SimTime>) -> OutcomeClass {
+    match (prediction, failure) {
+        (None, None) => OutcomeClass::Ideal,
+        (None, Some(_)) => OutcomeClass::UnpredictedFailure,
+        (Some(_), None) => OutcomeClass::FalseAlarm,
+        (Some(p), Some(f)) => {
+            if p <= f {
+                OutcomeClass::IdealPrediction
+            } else {
+                // Prediction after the fact is useless: the failure was
+                // effectively unpredicted.
+                OutcomeClass::UnpredictedFailure
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> Option<SimTime> {
+        Some(SimTime::from_secs(s))
+    }
+
+    #[test]
+    fn four_quadrants() {
+        assert_eq!(classify(None, None), OutcomeClass::Ideal);
+        assert_eq!(classify(None, t(10.0)), OutcomeClass::UnpredictedFailure);
+        assert_eq!(classify(t(10.0), None), OutcomeClass::FalseAlarm);
+        assert_eq!(classify(t(5.0), t(10.0)), OutcomeClass::IdealPrediction);
+    }
+
+    #[test]
+    fn late_prediction_counts_as_unpredicted() {
+        assert_eq!(classify(t(20.0), t(10.0)), OutcomeClass::UnpredictedFailure);
+    }
+
+    #[test]
+    fn simultaneous_counts_as_predicted() {
+        assert_eq!(classify(t(10.0), t(10.0)), OutcomeClass::IdealPrediction);
+    }
+}

@@ -1,0 +1,145 @@
+//! Seeded synthetic genome: seven chromosomes named like *C. elegans*
+//! (chrI..chrV, chrX, chrM) with proportional lengths scaled to a total
+//! budget, plus redundant-copy amplification (the paper replicates input
+//! data on each node "to obtain a sizeable input").
+
+use super::encode::{BASE_N, PAD};
+use crate::sim::Rng;
+
+/// One synthetic chromosome.
+#[derive(Debug, Clone)]
+pub struct Chromosome {
+    pub name: &'static str,
+    /// Encoded sequence (A=0..T=3 with occasional N).
+    pub seq: Vec<i8>,
+}
+
+/// Real ce10 chromosome lengths (bp), used as proportions.
+const CE_PROPORTIONS: [(&str, f64); 7] = [
+    ("chrI", 15_072_423.0),
+    ("chrII", 15_279_345.0),
+    ("chrIII", 13_783_700.0),
+    ("chrIV", 17_493_793.0),
+    ("chrV", 20_924_149.0),
+    ("chrX", 17_718_866.0),
+    ("chrM", 13_794.0),
+];
+
+/// Synthesise the seven-chromosome genome with a total of ~`total_bases`
+/// bases, deterministically from `seed`. A small N fraction (~0.1 %)
+/// mimics assembly gaps.
+pub fn synthesize_genome(total_bases: usize, seed: u64) -> Vec<Chromosome> {
+    assert!(total_bases >= 7, "need at least one base per chromosome");
+    let total_prop: f64 = CE_PROPORTIONS.iter().map(|(_, p)| p).sum();
+    let mut rng = Rng::new(seed);
+    CE_PROPORTIONS
+        .iter()
+        .map(|(name, prop)| {
+            let len = ((prop / total_prop) * total_bases as f64).round().max(1.0) as usize;
+            let mut chr_rng = rng.fork(fxhash(name));
+            let seq = (0..len)
+                .map(|_| {
+                    if chr_rng.chance(0.001) {
+                        BASE_N
+                    } else {
+                        chr_rng.range_u64(0, 4) as i8
+                    }
+                })
+                .collect();
+            Chromosome { name, seq }
+        })
+        .collect()
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+impl Chromosome {
+    /// Split into fixed-size chunks with `overlap` bases of overlap so no
+    /// cross-boundary window is missed; the final chunk is padded with PAD
+    /// (never matches). Returns (chunk_start, padded_chunk) pairs.
+    pub fn chunks(&self, chunk: usize, overlap: usize) -> Vec<(usize, Vec<i8>)> {
+        assert!(chunk > overlap, "chunk must exceed overlap");
+        let stride = chunk - overlap;
+        let mut out = Vec::new();
+        let mut start = 0;
+        loop {
+            let end = (start + chunk).min(self.seq.len());
+            let mut c = self.seq[start..end].to_vec();
+            c.resize(chunk, PAD);
+            out.push((start, c));
+            if end == self.seq.len() {
+                break;
+            }
+            start += stride;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_chromosomes_proportional() {
+        let g = synthesize_genome(100_000, 1);
+        assert_eq!(g.len(), 7);
+        let names: Vec<_> = g.iter().map(|c| c.name).collect();
+        assert_eq!(names, vec!["chrI", "chrII", "chrIII", "chrIV", "chrV", "chrX", "chrM"]);
+        let v = g.iter().find(|c| c.name == "chrV").unwrap();
+        let m = g.iter().find(|c| c.name == "chrM").unwrap();
+        assert!(v.seq.len() > 50 * m.seq.len().max(1));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = synthesize_genome(10_000, 42);
+        let b = synthesize_genome(10_000, 42);
+        assert_eq!(a[0].seq, b[0].seq);
+        let c = synthesize_genome(10_000, 43);
+        assert_ne!(a[0].seq, c[0].seq);
+    }
+
+    #[test]
+    fn bases_in_range() {
+        let g = synthesize_genome(20_000, 7);
+        for c in &g {
+            assert!(c.seq.iter().all(|&b| (0..=4).contains(&b)));
+        }
+    }
+
+    #[test]
+    fn n_fraction_small() {
+        let g = synthesize_genome(200_000, 9);
+        let total: usize = g.iter().map(|c| c.seq.len()).sum();
+        let ns: usize =
+            g.iter().map(|c| c.seq.iter().filter(|&&b| b == BASE_N).count()).sum();
+        let frac = ns as f64 / total as f64;
+        assert!(frac < 0.01, "N fraction {frac}");
+    }
+
+    #[test]
+    fn chunks_cover_and_overlap() {
+        let chr = Chromosome { name: "t", seq: (0..100).map(|i| (i % 4) as i8).collect() };
+        let chunks = chr.chunks(40, 10);
+        assert_eq!(chunks[0].0, 0);
+        assert_eq!(chunks[1].0, 30);
+        // overlap: last 10 of chunk 0 == first 10 of chunk 1
+        assert_eq!(&chunks[0].1[30..40], &chunks[1].1[0..10]);
+        // all chunks padded to length
+        assert!(chunks.iter().all(|(_, c)| c.len() == 40));
+        // final chunk reaches the end
+        let (last_start, _) = *chunks.last().unwrap();
+        assert!(last_start + 40 >= 100);
+    }
+
+    #[test]
+    fn chunk_padding_is_pad() {
+        let chr = Chromosome { name: "t", seq: vec![0; 50] };
+        let chunks = chr.chunks(40, 10);
+        let (_, last) = chunks.last().unwrap();
+        assert_eq!(last[last.len() - 1], PAD);
+    }
+}

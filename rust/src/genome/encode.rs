@@ -1,0 +1,89 @@
+//! Nucleotide encoding shared with the Pallas kernel:
+//! A=0, C=1, G=2, T=3, N=4; pattern padding = -1.
+
+pub const BASE_A: i8 = 0;
+pub const BASE_C: i8 = 1;
+pub const BASE_G: i8 = 2;
+pub const BASE_T: i8 = 3;
+pub const BASE_N: i8 = 4;
+/// Pattern-matrix padding sentinel (must match kernels/genome_match.py).
+pub const PAD: i8 = -1;
+
+/// Encode one base character (case-insensitive); unknown characters encode
+/// as N, as Bioconductor does for ambiguity codes.
+pub fn encode_base(c: u8) -> i8 {
+    match c.to_ascii_uppercase() {
+        b'A' => BASE_A,
+        b'C' => BASE_C,
+        b'G' => BASE_G,
+        b'T' => BASE_T,
+        _ => BASE_N,
+    }
+}
+
+/// Decode to a character.
+pub fn decode_base(b: i8) -> char {
+    match b {
+        BASE_A => 'A',
+        BASE_C => 'C',
+        BASE_G => 'G',
+        BASE_T => 'T',
+        _ => 'N',
+    }
+}
+
+pub fn encode_seq(s: &str) -> Vec<i8> {
+    s.bytes().map(encode_base).collect()
+}
+
+pub fn decode_seq(v: &[i8]) -> String {
+    v.iter().map(|&b| decode_base(b)).collect()
+}
+
+/// Reverse complement (N maps to N) — used to search the reverse strand
+/// with the same forward kernel.
+pub fn revcomp(v: &[i8]) -> Vec<i8> {
+    v.iter()
+        .rev()
+        .map(|&b| match b {
+            BASE_A => BASE_T,
+            BASE_T => BASE_A,
+            BASE_C => BASE_G,
+            BASE_G => BASE_C,
+            other => other,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let s = "ACGTNacgtn";
+        let e = encode_seq(s);
+        assert_eq!(e, vec![0, 1, 2, 3, 4, 0, 1, 2, 3, 4]);
+        assert_eq!(decode_seq(&e), "ACGTNACGTN");
+    }
+
+    #[test]
+    fn unknown_encodes_as_n() {
+        assert_eq!(encode_base(b'R'), BASE_N);
+        assert_eq!(encode_base(b'-'), BASE_N);
+    }
+
+    #[test]
+    fn revcomp_basic() {
+        // revcomp(ACGT) = ACGT; revcomp(AACG) = CGTT
+        assert_eq!(revcomp(&encode_seq("ACGT")), encode_seq("ACGT"));
+        assert_eq!(revcomp(&encode_seq("AACG")), encode_seq("CGTT"));
+        assert_eq!(revcomp(&encode_seq("AN")), encode_seq("NT"));
+    }
+
+    #[test]
+    fn revcomp_involution() {
+        let s = encode_seq("ACGTTGCANNGT");
+        assert_eq!(revcomp(&revcomp(&s)), s);
+    }
+}

@@ -1,0 +1,172 @@
+//! Hit records and the Fig. 14 output format:
+//! `seqname start end patternID strand`.
+
+/// Strand of a hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strand {
+    Forward,
+    Reverse,
+}
+
+impl Strand {
+    pub fn symbol(self) -> char {
+        match self {
+            Strand::Forward => '+',
+            Strand::Reverse => '-',
+        }
+    }
+}
+
+/// One search hit (coordinates are 1-based inclusive, as in the paper's
+/// sample output).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hit {
+    pub chrom_idx: usize,
+    pub start: usize,
+    pub end: usize,
+    pub pattern_id: usize,
+    pub strand: Strand,
+}
+
+/// Collate hits from a kernel mask block.
+///
+/// `mask` is row-major [n_patterns x chunk]; `chunk_start` is the chunk's
+/// offset within the chromosome; `pattern_base` is the dictionary index of
+/// mask row 0; rows at or beyond `n_real` are block padding.
+#[allow(clippy::too_many_arguments)]
+pub fn collate_hits(
+    mask: &[i8],
+    n_patterns: usize,
+    chunk: usize,
+    chunk_start: usize,
+    chrom_len: usize,
+    pattern_base: usize,
+    lengths: &[i32],
+    n_real: usize,
+    chrom_idx: usize,
+    strand: Strand,
+    out: &mut Vec<Hit>,
+) {
+    debug_assert_eq!(mask.len(), n_patterns * chunk);
+    for p in 0..n_patterns.min(n_real) {
+        let plen = lengths[p] as usize;
+        let row = &mask[p * chunk..(p + 1) * chunk];
+        // The mask is overwhelmingly zero (hit density ~1e-4): scan 8 bytes
+        // at a time and skip zero words — ~10x on the combining-node path
+        // (EXPERIMENTS.md §Perf).
+        let mut emit = |i: usize| {
+            let gstart = chunk_start + i;
+            let gend = gstart + plen; // exclusive
+            if gend <= chrom_len {
+                out.push(Hit {
+                    chrom_idx,
+                    start: gstart + 1, // 1-based
+                    end: gend,
+                    pattern_id: pattern_base + p,
+                    strand,
+                });
+            }
+        };
+        let words = row.len() / 8;
+        for w in 0..words {
+            let bytes: [i8; 8] = row[w * 8..w * 8 + 8].try_into().unwrap();
+            if u64::from_ne_bytes(bytes.map(|b| b as u8)) == 0 {
+                continue;
+            }
+            for (b, &v) in bytes.iter().enumerate() {
+                if v != 0 {
+                    emit(w * 8 + b);
+                }
+            }
+        }
+        for i in words * 8..row.len() {
+            if row[i] != 0 {
+                emit(i);
+            }
+        }
+    }
+}
+
+/// Deduplicate hits found twice in chunk overlaps.
+pub fn dedup_hits(hits: &mut Vec<Hit>) {
+    hits.sort_by_key(|h| (h.chrom_idx, h.pattern_id, h.start, h.strand.symbol() as u8));
+    hits.dedup();
+}
+
+/// Render the Fig. 14 table: seqname, start, end, patternID, strand.
+pub fn format_hits(hits: &[Hit], chrom_names: &[&str], limit: usize) -> String {
+    let mut out = String::from("seqname  start     end       patternID   strand\n");
+    for h in hits.iter().take(limit) {
+        out.push_str(&format!(
+            "{:<8} {:<9} {:<9} pattern{:<6} {}\n",
+            chrom_names[h.chrom_idx],
+            h.start,
+            h.end,
+            h.pattern_id,
+            h.strand.symbol()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collate_finds_positions() {
+        // 2 patterns x chunk 8; hits for p0 at 2, p1 at 5
+        let mut mask = vec![0i8; 16];
+        mask[2] = 1;
+        mask[8 + 5] = 1;
+        let mut hits = Vec::new();
+        collate_hits(&mask, 2, 8, 100, 1000, 40, &[3, 2], 2, 0, Strand::Forward, &mut hits);
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0], Hit { chrom_idx: 0, start: 103, end: 105, pattern_id: 40, strand: Strand::Forward });
+        assert_eq!(hits[1].pattern_id, 41);
+        assert_eq!(hits[1].start, 106);
+        assert_eq!(hits[1].end, 107);
+    }
+
+    #[test]
+    fn hits_beyond_chrom_len_dropped() {
+        let mut mask = vec![0i8; 8];
+        mask[6] = 1; // start 6 + len 5 > chrom_len 10
+        let mut hits = Vec::new();
+        collate_hits(&mask, 1, 8, 0, 10, 0, &[5], 1, 0, Strand::Forward, &mut hits);
+        assert!(hits.is_empty());
+    }
+
+    #[test]
+    fn padded_rows_ignored() {
+        let mask = vec![1i8; 16]; // both rows "hit" everywhere
+        let mut hits = Vec::new();
+        collate_hits(&mask, 2, 8, 0, 100, 0, &[2, 2], 1, 0, Strand::Forward, &mut hits);
+        assert!(hits.iter().all(|h| h.pattern_id == 0));
+    }
+
+    #[test]
+    fn dedup_removes_overlap_duplicates() {
+        let h = Hit { chrom_idx: 0, start: 5, end: 9, pattern_id: 1, strand: Strand::Forward };
+        let mut hits = vec![h, h, Hit { start: 6, ..h }];
+        dedup_hits(&mut hits);
+        assert_eq!(hits.len(), 2);
+    }
+
+    #[test]
+    fn fig14_format() {
+        let hits = vec![Hit {
+            chrom_idx: 0,
+            start: 5_942_496,
+            end: 5_942_511,
+            pattern_id: 17,
+            strand: Strand::Forward,
+        }];
+        let s = format_hits(&hits, &["chrI"], 10);
+        assert!(s.contains("seqname"));
+        assert!(s.contains("chrI"));
+        assert!(s.contains("5942496"));
+        assert!(s.contains("pattern17"));
+        assert!(s.contains('+'));
+    }
+}

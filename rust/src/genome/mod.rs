@@ -1,0 +1,21 @@
+//! Genome-searching workload: synthetic *C. elegans*-scale chromosomes,
+//! pattern dictionaries, hit records (Fig. 14) and a pure-Rust reference
+//! search used as the oracle for the PJRT compute path.
+//!
+//! Substitution note (DESIGN.md): the paper uses Bioconductor BSgenome
+//! ce2/ce6/ce10 data. Without network access we synthesise seeded
+//! chromosomes with the same alphabet, the same seven-chromosome layout
+//! (chrI..chrV, chrX, chrM) and the paper's pattern-length distribution
+//! (15-25 nt); the compute path is identical.
+
+pub mod data;
+pub mod encode;
+pub mod hits;
+pub mod patterns;
+pub mod search;
+
+pub use data::{synthesize_genome, Chromosome};
+pub use encode::{decode_seq, encode_base, encode_seq, revcomp, BASE_N, PAD};
+pub use hits::{collate_hits, format_hits, Hit, Strand};
+pub use patterns::{PatternDict, PatternSpec};
+pub use search::search_naive;

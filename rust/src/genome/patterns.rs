@@ -1,0 +1,191 @@
+//! Pattern dictionaries: the paper's "list of 5000 genome patterns each of
+//! which is a short nucleotide sequence of 15 to 25 bases".
+
+use super::data::Chromosome;
+use super::encode::{revcomp, PAD};
+use crate::sim::Rng;
+
+/// How to build a dictionary.
+#[derive(Debug, Clone, Copy)]
+pub struct PatternSpec {
+    pub n_patterns: usize,
+    pub min_len: usize,
+    pub max_len: usize,
+    /// Fraction of patterns planted from the genome (guaranteed hits).
+    pub planted_frac: f64,
+    /// Matrix width (the AOT kernel's WIDTH).
+    pub width: usize,
+}
+
+impl Default for PatternSpec {
+    fn default() -> Self {
+        Self { n_patterns: 5000, min_len: 15, max_len: 25, planted_frac: 0.5, width: 25 }
+    }
+}
+
+/// A dictionary in kernel layout.
+#[derive(Debug, Clone)]
+pub struct PatternDict {
+    /// Row-major [n_patterns x width], PAD-padded.
+    pub matrix: Vec<i8>,
+    pub lengths: Vec<i32>,
+    pub width: usize,
+    /// pattern ids (their dictionary index); names render as "patternN".
+    pub n: usize,
+}
+
+impl PatternDict {
+    /// Build from a genome: planted patterns are sampled from random
+    /// chromosome positions (avoiding Ns), the rest are random sequences.
+    pub fn build(spec: &PatternSpec, genome: &[Chromosome], rng: &mut Rng) -> Self {
+        assert!(spec.min_len >= 1 && spec.max_len <= spec.width);
+        assert!(spec.min_len <= spec.max_len);
+        let mut matrix = vec![PAD; spec.n_patterns * spec.width];
+        let mut lengths = vec![0i32; spec.n_patterns];
+        for p in 0..spec.n_patterns {
+            let len = rng.range_usize(spec.min_len, spec.max_len + 1);
+            lengths[p] = len as i32;
+            let row = &mut matrix[p * spec.width..(p + 1) * spec.width];
+            let planted = rng.chance(spec.planted_frac) && !genome.is_empty();
+            if planted {
+                // sample a window from a random chromosome (N allowed only
+                // if sampling fails repeatedly)
+                let mut placed = false;
+                for _ in 0..16 {
+                    let chr = rng.pick(genome);
+                    if chr.seq.len() < len {
+                        continue;
+                    }
+                    let start = rng.range_usize(0, chr.seq.len() - len + 1);
+                    let window = &chr.seq[start..start + len];
+                    if window.iter().all(|&b| b < 4) {
+                        row[..len].copy_from_slice(window);
+                        placed = true;
+                        break;
+                    }
+                }
+                if placed {
+                    continue;
+                }
+            }
+            for slot in row.iter_mut().take(len) {
+                *slot = rng.range_u64(0, 4) as i8;
+            }
+        }
+        Self { matrix, lengths, width: spec.width, n: spec.n_patterns }
+    }
+
+    pub fn row(&self, p: usize) -> &[i8] {
+        &self.matrix[p * self.width..(p + 1) * self.width]
+    }
+
+    pub fn pattern(&self, p: usize) -> &[i8] {
+        &self.row(p)[..self.lengths[p] as usize]
+    }
+
+    /// The reverse-complement dictionary (for reverse-strand search with
+    /// the same forward kernel).
+    pub fn revcomp(&self) -> Self {
+        let mut matrix = vec![PAD; self.matrix.len()];
+        for p in 0..self.n {
+            let rc = revcomp(self.pattern(p));
+            matrix[p * self.width..p * self.width + rc.len()].copy_from_slice(&rc);
+        }
+        Self { matrix, lengths: self.lengths.clone(), width: self.width, n: self.n }
+    }
+
+    /// Slice a block of patterns [start, start+count) into a padded
+    /// (matrix, lengths) pair of exactly `count` rows (short blocks pad with
+    /// empty never-matching rows of length `width`+sentinel).
+    pub fn block(&self, start: usize, count: usize) -> (Vec<i8>, Vec<i32>) {
+        let mut m = vec![PAD; count * self.width];
+        // length `width` with all-PAD rows never matches any real base
+        let mut l = vec![self.width as i32; count];
+        for i in 0..count {
+            let p = start + i;
+            if p < self.n {
+                m[i * self.width..(i + 1) * self.width].copy_from_slice(self.row(p));
+                l[i] = self.lengths[p];
+            }
+        }
+        (m, l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::data::synthesize_genome;
+
+    fn dict() -> (Vec<Chromosome>, PatternDict) {
+        let g = synthesize_genome(50_000, 3);
+        let mut rng = Rng::new(11);
+        let spec = PatternSpec { n_patterns: 100, ..Default::default() };
+        let d = PatternDict::build(&spec, &g, &mut rng);
+        (g, d)
+    }
+
+    #[test]
+    fn lengths_in_paper_range() {
+        let (_, d) = dict();
+        assert!(d.lengths.iter().all(|&l| (15..=25).contains(&l)));
+    }
+
+    #[test]
+    fn rows_padded_with_sentinel() {
+        let (_, d) = dict();
+        for p in 0..d.n {
+            let row = d.row(p);
+            let len = d.lengths[p] as usize;
+            assert!(row[..len].iter().all(|&b| (0..4).contains(&b)));
+            assert!(row[len..].iter().all(|&b| b == PAD));
+        }
+    }
+
+    #[test]
+    fn planted_patterns_exist_in_genome() {
+        let (g, d) = dict();
+        // at least a third of patterns must be findable (planted_frac 0.5
+        // minus collisions)
+        let mut found = 0;
+        for p in 0..d.n {
+            let pat = d.pattern(p);
+            if g.iter().any(|c| {
+                c.seq.windows(pat.len()).any(|w| w == pat)
+            }) {
+                found += 1;
+            }
+        }
+        assert!(found >= d.n / 3, "only {found}/{} found", d.n);
+    }
+
+    #[test]
+    fn revcomp_dict_consistent() {
+        let (_, d) = dict();
+        let rc = d.revcomp();
+        for p in 0..d.n {
+            assert_eq!(rc.pattern(p), revcomp(d.pattern(p)).as_slice());
+        }
+    }
+
+    #[test]
+    fn block_slicing_pads_tail() {
+        let (_, d) = dict();
+        let (m, l) = d.block(96, 8); // 4 real + 4 padding rows
+        assert_eq!(m.len(), 8 * d.width);
+        assert_eq!(l.len(), 8);
+        assert_eq!(&m[0..d.width], d.row(96));
+        // padded rows: all PAD with full width length -> can never match
+        assert!(m[4 * d.width..].iter().all(|&b| b == PAD));
+        assert!(l[4..].iter().all(|&x| x == d.width as i32));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = synthesize_genome(10_000, 5);
+        let spec = PatternSpec { n_patterns: 20, ..Default::default() };
+        let a = PatternDict::build(&spec, &g, &mut Rng::new(1));
+        let b = PatternDict::build(&spec, &g, &mut Rng::new(1));
+        assert_eq!(a.matrix, b.matrix);
+    }
+}

@@ -1,0 +1,11 @@
+//! Approach 3 — **hybrid** fault tolerance: agents on virtual cores.
+//!
+//! When a failure is predicted both the agent and the virtual core can
+//! respond; they negotiate (Fig. 6) using the empirically derived decision
+//! rules of the paper's "Decision Making Rules" section.
+
+pub mod negotiate;
+pub mod rules;
+
+pub use negotiate::{negotiate, NegotiationLog};
+pub use rules::{decide, Mover, RuleInputs, RuleTrace};

@@ -1,0 +1,111 @@
+//! The paper's three decision rules (Decision Making Rules section):
+//!
+//! * **Rule 1** — if `Z <= 10` use core intelligence, else either.
+//! * **Rule 2** — if `S_d <= 2^24 KB` use agent intelligence, else either.
+//! * **Rule 3** — if `S_p <= 2^24 KB` use agent intelligence, else either.
+//!
+//! Rules are ordered: dependency structure dominates (it is what Table 1's
+//! hybrid row keys on — with `Z = 4 <= 10` the hybrid behaves exactly like
+//! core intelligence). When no rule is decisive the approaches are
+//! comparable and the tie-break prefers core intelligence (the paper's
+//! observation that "the approach incorporating core intelligence takes
+//! lesser time").
+
+/// Who moves the sub-job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mover {
+    /// The agent moves itself (Approach 1 path).
+    Agent,
+    /// The virtual core migrates the agent (Approach 2 path).
+    Core,
+}
+
+/// Inputs to the decision.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInputs {
+    pub z: usize,
+    pub data_kb: u64,
+    pub proc_kb: u64,
+}
+
+/// Rule-1/2/3 thresholds (KB) — `2^24 KB` in the paper.
+pub const DATA_THRESHOLD_KB: u64 = 1 << 24;
+pub const PROC_THRESHOLD_KB: u64 = 1 << 24;
+pub const Z_THRESHOLD: usize = 10;
+
+/// Which rule fired, for reporting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuleTrace {
+    Rule1Core,
+    Rule2Agent,
+    Rule3Agent,
+    TieBreakCore,
+}
+
+/// Apply the decision rules.
+pub fn decide(inp: RuleInputs) -> (Mover, RuleTrace) {
+    if inp.z <= Z_THRESHOLD {
+        return (Mover::Core, RuleTrace::Rule1Core);
+    }
+    if inp.data_kb <= DATA_THRESHOLD_KB {
+        return (Mover::Agent, RuleTrace::Rule2Agent);
+    }
+    if inp.proc_kb <= PROC_THRESHOLD_KB {
+        return (Mover::Agent, RuleTrace::Rule3Agent);
+    }
+    (Mover::Core, RuleTrace::TieBreakCore)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(z: usize, d: u64, p: u64) -> RuleInputs {
+        RuleInputs { z, data_kb: d, proc_kb: p }
+    }
+
+    #[test]
+    fn rule1_small_z_core() {
+        // Table 1 hybrid row: Z = 4 ⇒ behaves like core intelligence.
+        let (m, t) = decide(inputs(4, 1 << 19, 1 << 19));
+        assert_eq!(m, Mover::Core);
+        assert_eq!(t, RuleTrace::Rule1Core);
+        // boundary inclusive
+        assert_eq!(decide(inputs(10, 1 << 30, 1 << 30)).0, Mover::Core);
+    }
+
+    #[test]
+    fn rule2_small_data_agent() {
+        let (m, t) = decide(inputs(12, 1 << 20, 1 << 30));
+        assert_eq!(m, Mover::Agent);
+        assert_eq!(t, RuleTrace::Rule2Agent);
+        // boundary inclusive
+        assert_eq!(decide(inputs(12, 1 << 24, 1 << 30)).0, Mover::Agent);
+    }
+
+    #[test]
+    fn rule3_small_proc_agent() {
+        let (m, t) = decide(inputs(12, 1 << 30, 1 << 22));
+        assert_eq!(m, Mover::Agent);
+        assert_eq!(t, RuleTrace::Rule3Agent);
+    }
+
+    #[test]
+    fn tiebreak_everything_large_core() {
+        let (m, t) = decide(inputs(50, 1 << 30, 1 << 30));
+        assert_eq!(m, Mover::Core);
+        assert_eq!(t, RuleTrace::TieBreakCore);
+    }
+
+    #[test]
+    fn decision_total_over_grid() {
+        // totality: every input yields a decision (no panics)
+        for z in [0usize, 1, 10, 11, 63] {
+            for d in [0u64, 1 << 19, 1 << 24, (1 << 24) + 1, 1 << 31] {
+                for p in [0u64, 1 << 19, 1 << 24, (1 << 24) + 1, 1 << 31] {
+                    let _ = decide(inputs(z, d, p));
+                }
+            }
+        }
+    }
+}

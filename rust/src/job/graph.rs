@@ -1,0 +1,233 @@
+//! Dependency graphs: reduction trees (Fig. 7) and search/combine stars.
+//!
+//! `Z = d_i + d_o` — the paper's dependency count for a sub-job is its input
+//! plus output degree; the experiments vary `Z` from 3 to 63 by widening the
+//! fan-in of a node.
+
+use crate::net::message::SubJobId;
+
+/// How the graph was built (for reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphKind {
+    /// k-ary reduction tree with the given fan-in.
+    ReductionTree { fan_in: usize },
+    /// `n-1` searchers feeding one combiner (the genome job).
+    SearchCombine,
+    /// 3-D halo-exchange stencil (molecular-dynamics spatial decomposition).
+    Stencil { nx: usize, ny: usize, nz: usize },
+}
+
+/// A DAG over sub-jobs: edges point from producer to consumer.
+#[derive(Debug, Clone)]
+pub struct DepGraph {
+    pub kind: GraphKind,
+    n: usize,
+    /// children[i] = sub-jobs consuming i's output.
+    children: Vec<Vec<SubJobId>>,
+    /// parents[i] = sub-jobs whose output i consumes.
+    parents: Vec<Vec<SubJobId>>,
+}
+
+impl DepGraph {
+    fn empty(kind: GraphKind, n: usize) -> Self {
+        Self { kind, n, children: vec![Vec::new(); n], parents: vec![Vec::new(); n] }
+    }
+
+    fn add_edge(&mut self, from: SubJobId, to: SubJobId) {
+        self.children[from.0].push(to);
+        self.parents[to.0].push(from);
+    }
+
+    /// Construct an empty graph for external builders (e.g.
+    /// [`crate::job::molecular::spatial_stencil`]).
+    pub fn raw(kind: GraphKind, n: usize) -> Self {
+        Self::empty(kind, n)
+    }
+
+    /// Public edge insertion for external builders.
+    pub fn add_edge_pub(&mut self, from: SubJobId, to: SubJobId) {
+        self.add_edge(from, to);
+    }
+
+    /// Build a reduction tree over `leaves` leaf sub-jobs with fan-in `k`.
+    /// Internal nodes are appended after the leaves; the root is the last
+    /// sub-job. Total node count is returned by `len()`.
+    pub fn reduction_tree(leaves: usize, fan_in: usize) -> Self {
+        assert!(leaves > 0 && fan_in >= 2, "need leaves>0, fan_in>=2");
+        // Compute total nodes first: levels of ceil(n/k).
+        let mut counts = vec![leaves];
+        while *counts.last().unwrap() > 1 {
+            let prev = *counts.last().unwrap();
+            counts.push(prev.div_ceil(fan_in));
+        }
+        let total: usize = counts.iter().sum();
+        let mut g = Self::empty(GraphKind::ReductionTree { fan_in }, total);
+        // Wire level l (offset) to level l+1.
+        let mut offset = 0;
+        for w in counts.windows(2) {
+            let (cur, next) = (w[0], w[1]);
+            for i in 0..cur {
+                let parent = offset + cur + i / fan_in;
+                debug_assert!(parent < offset + cur + next);
+                g.add_edge(SubJobId(offset + i), SubJobId(parent));
+            }
+            offset += cur;
+        }
+        g
+    }
+
+    /// `searchers` nodes all feeding one combiner (paper: genome searching
+    /// with `Z = searchers + 1` at the combiner... `Z` of a *searcher* is its
+    /// 1 output; the experiments' `Z` counts the combiner's dependencies).
+    pub fn search_combine(searchers: usize) -> Self {
+        assert!(searchers > 0);
+        let mut g = Self::empty(GraphKind::SearchCombine, searchers + 1);
+        let combiner = SubJobId(searchers);
+        for i in 0..searchers {
+            g.add_edge(SubJobId(i), combiner);
+        }
+        g
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn inputs(&self, s: SubJobId) -> &[SubJobId] {
+        &self.parents[s.0]
+    }
+
+    pub fn outputs(&self, s: SubJobId) -> &[SubJobId] {
+        &self.children[s.0]
+    }
+
+    /// The paper's dependency count for a sub-job: `Z = d_i + d_o`.
+    pub fn z(&self, s: SubJobId) -> usize {
+        self.parents[s.0].len() + self.children[s.0].len()
+    }
+
+    /// Leaves (no inputs).
+    pub fn leaves(&self) -> Vec<SubJobId> {
+        (0..self.n).filter(|&i| self.parents[i].is_empty()).map(SubJobId).collect()
+    }
+
+    /// Root(s) (no outputs).
+    pub fn roots(&self) -> Vec<SubJobId> {
+        (0..self.n).filter(|&i| self.children[i].is_empty()).map(SubJobId).collect()
+    }
+
+    /// Topological order (Kahn). Panics if cyclic — construction APIs can't
+    /// produce cycles, but property tests verify this for all builders.
+    pub fn topo_order(&self) -> Vec<SubJobId> {
+        let mut indeg: Vec<usize> = (0..self.n).map(|i| self.parents[i].len()).collect();
+        let mut ready: Vec<usize> = (0..self.n).filter(|&i| indeg[i] == 0).collect();
+        let mut out = Vec::with_capacity(self.n);
+        while let Some(i) = ready.pop() {
+            out.push(SubJobId(i));
+            for &c in &self.children[i] {
+                indeg[c.0] -= 1;
+                if indeg[c.0] == 0 {
+                    ready.push(c.0);
+                }
+            }
+        }
+        assert_eq!(out.len(), self.n, "dependency graph has a cycle");
+        out
+    }
+
+    /// Structural fingerprint for isomorphism checks across migrations:
+    /// sorted edge list (migration relocates sub-jobs across cores but must
+    /// never change the graph).
+    pub fn fingerprint(&self) -> Vec<(usize, usize)> {
+        let mut edges = Vec::new();
+        for i in 0..self.n {
+            for &c in &self.children[i] {
+                edges.push((i, c.0));
+            }
+        }
+        edges.sort_unstable();
+        edges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_tree_shape() {
+        // 4 leaves, fan-in 2: 4 + 2 + 1 = 7 nodes; internal z = 3 (paper's
+        // binary-tree example: two inputs + one output).
+        let g = DepGraph::reduction_tree(4, 2);
+        assert_eq!(g.len(), 7);
+        assert_eq!(g.leaves().len(), 4);
+        assert_eq!(g.roots(), vec![SubJobId(6)]);
+        assert_eq!(g.z(SubJobId(4)), 3);
+        assert_eq!(g.z(SubJobId(6)), 2); // root: two inputs, no output
+        assert_eq!(g.z(SubJobId(0)), 1); // leaf: one output
+    }
+
+    #[test]
+    fn fan_in_controls_z() {
+        // paper varies Z by changing input dependencies: fan-in k gives an
+        // internal node z = k + 1.
+        for k in [2usize, 5, 9, 31, 62] {
+            let g = DepGraph::reduction_tree(k * 2, k);
+            // first internal node has k inputs and 1 output
+            let internal = SubJobId(k * 2);
+            assert_eq!(g.z(internal), k + 1, "k={k}");
+        }
+    }
+
+    #[test]
+    fn uneven_leaves_still_reduce() {
+        let g = DepGraph::reduction_tree(5, 2); // 5+3+2+1 = 11
+        assert_eq!(g.len(), 11);
+        assert_eq!(g.roots().len(), 1);
+        let order = g.topo_order();
+        assert_eq!(order.len(), 11);
+    }
+
+    #[test]
+    fn search_combine_star() {
+        let g = DepGraph::search_combine(3);
+        assert_eq!(g.len(), 4);
+        let comb = SubJobId(3);
+        assert_eq!(g.inputs(comb).len(), 3);
+        assert_eq!(g.z(comb), 3);
+        for i in 0..3 {
+            assert_eq!(g.z(SubJobId(i)), 1);
+        }
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = DepGraph::reduction_tree(8, 2);
+        let order = g.topo_order();
+        let pos: std::collections::HashMap<usize, usize> =
+            order.iter().enumerate().map(|(i, s)| (s.0, i)).collect();
+        for (a, b) in g.fingerprint() {
+            assert!(pos[&a] < pos[&b], "edge {a}->{b} violated");
+        }
+    }
+
+    #[test]
+    fn fingerprint_stable() {
+        let a = DepGraph::reduction_tree(6, 3).fingerprint();
+        let b = DepGraph::reduction_tree(6, 3).fingerprint();
+        assert_eq!(a, b);
+        let c = DepGraph::reduction_tree(6, 2).fingerprint();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn single_leaf_tree() {
+        let g = DepGraph::reduction_tree(1, 2);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.leaves(), g.roots());
+    }
+}

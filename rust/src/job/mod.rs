@@ -1,0 +1,13 @@
+//! Jobs, sub-jobs and their dependency structure.
+//!
+//! A job `J` is decomposed into sub-jobs `J_1..J_n` (paper, Methods Step 1);
+//! the dependency graph for the empirical study is the parallel-reduction
+//! tree of Fig. 7, and for the genome study a search/combine star.
+
+pub mod graph;
+pub mod molecular;
+pub mod spec;
+
+pub use graph::{DepGraph, GraphKind};
+pub use molecular::{Decomposition, MdConfig};
+pub use spec::{Job, JobKind, SubJob, SubJobState};

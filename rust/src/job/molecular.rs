@@ -1,0 +1,215 @@
+//! Molecular-dynamics decompositions — the paper's motivating workload for
+//! the decision rules (Decision Making Rules section).
+//!
+//! The paper describes three ways to parallelise an MD simulation and ties
+//! each to the dependency/data/process-size profile that drives the
+//! agent-vs-core choice:
+//!
+//! * **atom decomposition** — a group of atoms per core; interactions are
+//!   global, so dependencies are high and grow with the core count;
+//! * **force decomposition** — a block of the force matrix per core; scales
+//!   better, dependencies along matrix rows/columns;
+//! * **spatial decomposition** — a 3-D region per core; interactions are
+//!   local to adjacent regions, so Z is the region's neighbour count.
+//!
+//! `md_profile` maps a simulation configuration to the `(Z, S_d, S_p)`
+//! inputs of [`crate::hybrid::rules::decide`], and `md_job` builds the
+//! dependency graph for the simulation's halo exchanges.
+
+use super::graph::{DepGraph, GraphKind};
+use crate::hybrid::rules::{decide, Mover, RuleInputs};
+use crate::net::message::SubJobId;
+
+/// The three MD parallelisation strategies of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decomposition {
+    Atom,
+    Force,
+    Spatial,
+}
+
+/// An MD simulation configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MdConfig {
+    pub decomposition: Decomposition,
+    /// Number of cores the simulation is decomposed over.
+    pub n_cores: usize,
+    /// Total atoms simulated.
+    pub n_atoms: usize,
+    /// Bytes of state per atom (positions, velocities, forces, history).
+    pub bytes_per_atom: u64,
+    /// Simulated steps between checkpoints (drives accumulated state).
+    pub steps_per_window: u64,
+}
+
+impl MdConfig {
+    /// Atoms handled per core.
+    pub fn atoms_per_core(&self) -> usize {
+        self.n_atoms.div_ceil(self.n_cores)
+    }
+
+    /// The paper's `Z` for a sub-job of this decomposition.
+    ///
+    /// * atom: interactions are global — every other core is a dependency;
+    /// * force: row + column blocks of the force matrix (2·(√P − 1));
+    /// * spatial: the face-neighbour stencil of a 3-D region (6 under the
+    ///   periodic face-exchange of `spatial_stencil`).
+    pub fn z(&self) -> usize {
+        match self.decomposition {
+            Decomposition::Atom => self.n_cores.saturating_sub(1),
+            Decomposition::Force => {
+                let side = (self.n_cores as f64).sqrt().round().max(1.0) as usize;
+                2 * side.saturating_sub(1)
+            }
+            Decomposition::Spatial => 6.min(self.n_cores.saturating_sub(1)),
+        }
+    }
+
+    /// Data size per core in KB (the paper's S_d): the atoms a core owns
+    /// plus the halo it needs.
+    pub fn data_kb(&self) -> u64 {
+        let own = self.atoms_per_core() as u64 * self.bytes_per_atom;
+        let halo_factor = match self.decomposition {
+            Decomposition::Atom => 2.0,    // global exchange buffers
+            Decomposition::Force => 1.5,   // row/col blocks
+            Decomposition::Spatial => 1.2, // thin shells
+        };
+        ((own as f64 * halo_factor) / 1024.0).ceil() as u64
+    }
+
+    /// Process size per core in KB (the paper's S_p): working state grows
+    /// with the trajectory history accumulated between checkpoints.
+    pub fn proc_kb(&self) -> u64 {
+        let history = self.atoms_per_core() as u64
+            * self.bytes_per_atom
+            * (self.steps_per_window / 100).max(1);
+        (history / 1024).max(1)
+    }
+
+    pub fn rule_inputs(&self) -> RuleInputs {
+        RuleInputs { z: self.z(), data_kb: self.data_kb(), proc_kb: self.proc_kb() }
+    }
+
+    /// Which approach the rules select for this simulation.
+    pub fn recommended(&self) -> Mover {
+        decide(self.rule_inputs()).0
+    }
+}
+
+/// Build the halo-exchange dependency graph of a spatial decomposition over
+/// a `nx × ny × nz` region grid (periodic boundaries): each region depends
+/// on its face neighbours. Atom/force decompositions reduce over all-to-all
+/// and block rows which the reduction-tree/search-combine builders already
+/// model; spatial needs its own stencil.
+pub fn spatial_stencil(nx: usize, ny: usize, nz: usize) -> DepGraph {
+    assert!(nx > 0 && ny > 0 && nz > 0);
+    let n = nx * ny * nz;
+    let idx = |x: usize, y: usize, z: usize| -> usize { (z * ny + y) * nx + x };
+    let mut g = DepGraph::raw(GraphKind::Stencil { nx, ny, nz }, n);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let me = idx(x, y, z);
+                // +x, +y, +z face neighbours (periodic); the reverse edges
+                // come from the neighbours' own loops.
+                for (dx, dy, dz) in [(1usize, 0usize, 0usize), (0, 1, 0), (0, 0, 1)] {
+                    let nb = idx((x + dx) % nx, (y + dy) % ny, (z + dz) % nz);
+                    if nb != me {
+                        g.add_edge_pub(SubJobId(me), SubJobId(nb));
+                    }
+                }
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(d: Decomposition, cores: usize) -> MdConfig {
+        MdConfig {
+            decomposition: d,
+            n_cores: cores,
+            n_atoms: 1_000_000,
+            bytes_per_atom: 512,
+            steps_per_window: 1000,
+        }
+    }
+
+    #[test]
+    fn z_profiles_match_paper_narrative() {
+        // atom: global interactions — highest Z; spatial: local — lowest
+        let atom = cfg(Decomposition::Atom, 64).z();
+        let force = cfg(Decomposition::Force, 64).z();
+        let spatial = cfg(Decomposition::Spatial, 64).z();
+        assert!(atom > force && force > spatial, "{atom} {force} {spatial}");
+        assert_eq!(atom, 63);
+        assert_eq!(force, 14);
+        assert_eq!(spatial, 6);
+    }
+
+    #[test]
+    fn spatial_small_cluster_caps_z() {
+        assert_eq!(cfg(Decomposition::Spatial, 8).z(), 6);
+        assert_eq!(cfg(Decomposition::Spatial, 4).z(), 3);
+    }
+
+    #[test]
+    fn rules_pick_core_for_spatial_small_sim() {
+        // small spatial sim on few cores: Z <= 10 → core intelligence
+        let c = MdConfig {
+            decomposition: Decomposition::Spatial,
+            n_cores: 8,
+            n_atoms: 100_000,
+            bytes_per_atom: 256,
+            steps_per_window: 100,
+        };
+        assert!(c.z() <= 10);
+        assert_eq!(c.recommended(), Mover::Core);
+    }
+
+    #[test]
+    fn rules_pick_agent_for_atom_decomposition_small_data() {
+        // atom decomposition on many cores: Z > 10; with modest data the
+        // rules fall to Rule 2 → agent
+        let c = cfg(Decomposition::Atom, 64);
+        assert!(c.z() > 10);
+        assert!(c.data_kb() <= 1 << 24);
+        assert_eq!(c.recommended(), Mover::Agent);
+    }
+
+    #[test]
+    fn long_windows_inflate_process_size() {
+        let short = cfg(Decomposition::Spatial, 64);
+        let long = MdConfig { steps_per_window: 100_000, ..short };
+        assert!(long.proc_kb() >= 100 * short.proc_kb());
+    }
+
+    #[test]
+    fn stencil_shape() {
+        let g = spatial_stencil(4, 4, 4);
+        assert_eq!(g.len(), 64);
+        // periodic 3-face stencil: undirected degree 6 → z = 6 (3 in, 3 out)
+        for i in 0..64 {
+            assert_eq!(g.z(SubJobId(i)), 6, "region {i}");
+        }
+    }
+
+    #[test]
+    fn stencil_degenerate_axes() {
+        let g = spatial_stencil(1, 1, 4); // a ring in z
+        assert_eq!(g.len(), 4);
+        for i in 0..4 {
+            assert_eq!(g.z(SubJobId(i)), 2);
+        }
+    }
+
+    #[test]
+    fn data_kb_ordering_by_halo() {
+        let a = cfg(Decomposition::Atom, 64).data_kb();
+        let s = cfg(Decomposition::Spatial, 64).data_kb();
+        assert!(a > s);
+    }
+}

@@ -1,0 +1,114 @@
+//! Job and sub-job descriptions.
+
+use crate::net::message::SubJobId;
+
+/// What the sub-jobs compute (selects the AOT executable on the real path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Parallel summation (Fig. 7) — the empirical-study workload.
+    Reduction,
+    /// Genome pattern search + combine — the validation workload.
+    GenomeSearch,
+}
+
+/// One sub-job: the unit carried by an agent / placed on a virtual core.
+#[derive(Debug, Clone)]
+pub struct SubJob {
+    pub id: SubJobId,
+    /// Input data size in KB (the paper's `S_d`).
+    pub data_kb: u64,
+    /// Process image size in KB (the paper's `S_p`).
+    pub proc_kb: u64,
+    /// Nominal compute duration in seconds of virtual time.
+    pub compute_s: f64,
+    pub state: SubJobState,
+}
+
+/// Lifecycle of a sub-job in the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubJobState {
+    Pending,
+    Running,
+    /// Being relocated after a predicted failure.
+    Migrating,
+    Done,
+    /// Lost to an unpredicted failure (must be recovered by a baseline).
+    Lost,
+}
+
+/// A whole job.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub kind: JobKind,
+    pub subs: Vec<SubJob>,
+    /// Nominal failure-free execution time in seconds (1 h and 5 h in the
+    /// paper's tables).
+    pub nominal_s: f64,
+}
+
+impl Job {
+    /// Decompose a job into `n` identical sub-jobs (Methods, Step 1-2).
+    pub fn decompose(kind: JobKind, n: usize, data_kb: u64, proc_kb: u64, nominal_s: f64) -> Self {
+        assert!(n > 0, "job must have at least one sub-job");
+        let subs = (0..n)
+            .map(|i| SubJob {
+                id: SubJobId(i),
+                data_kb,
+                proc_kb,
+                compute_s: nominal_s,
+                state: SubJobState::Pending,
+            })
+            .collect();
+        Self { kind, subs, nominal_s }
+    }
+
+    pub fn n_subs(&self) -> usize {
+        self.subs.len()
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.subs.iter().all(|s| s.state == SubJobState::Done)
+    }
+
+    pub fn any_lost(&self) -> bool {
+        self.subs.iter().any(|s| s.state == SubJobState::Lost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decompose_counts() {
+        let j = Job::decompose(JobKind::Reduction, 8, 1 << 19, 1 << 19, 3600.0);
+        assert_eq!(j.n_subs(), 8);
+        assert!(j.subs.iter().all(|s| s.state == SubJobState::Pending));
+        assert!(!j.all_done());
+    }
+
+    #[test]
+    fn ids_are_dense() {
+        let j = Job::decompose(JobKind::GenomeSearch, 4, 1, 1, 10.0);
+        for (i, s) in j.subs.iter().enumerate() {
+            assert_eq!(s.id.0, i);
+        }
+    }
+
+    #[test]
+    fn all_done_and_lost_flags() {
+        let mut j = Job::decompose(JobKind::Reduction, 2, 1, 1, 1.0);
+        j.subs[0].state = SubJobState::Done;
+        assert!(!j.all_done());
+        j.subs[1].state = SubJobState::Done;
+        assert!(j.all_done());
+        j.subs[0].state = SubJobState::Lost;
+        assert!(j.any_lost());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_subjobs_panics() {
+        Job::decompose(JobKind::Reduction, 0, 1, 1, 1.0);
+    }
+}

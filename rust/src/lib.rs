@@ -1,0 +1,40 @@
+//! # biomaft — Multi-agent fault tolerance for HPC computational biology jobs
+//!
+//! A reproduction of Varghese, McKee & Alexandrov, *"Automating Fault
+//! Tolerance in High-Performance Computational Biological Jobs Using
+//! Multi-Agent Approaches"* (Computers in Biology and Medicine, 2014).
+//!
+//! The crate is organised as the L3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: mobile-agent
+//!   fault tolerance ([`agentft`]), virtual-core fault tolerance ([`coreft`]),
+//!   the hybrid approach ([`hybrid`]), checkpointing baselines
+//!   ([`checkpoint`]), all running over a deterministic discrete-event
+//!   cluster simulator ([`sim`], [`net`], [`cluster`], [`failure`]).
+//! * **L2/L1 (python, build-time only)** — the genome-search and parallel
+//!   reduction compute graphs (JAX + Pallas), AOT-lowered to HLO text and
+//!   executed from [`runtime`] via the PJRT CPU client. Python never runs on
+//!   the request path.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod agentft;
+pub mod bench;
+pub mod checkpoint;
+pub mod cluster;
+pub mod coordinator;
+pub mod coreft;
+pub mod experiments;
+pub mod failure;
+pub mod genome;
+pub mod hybrid;
+pub mod job;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

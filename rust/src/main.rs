@@ -1,0 +1,166 @@
+//! `biomaft` — the leader binary.
+//!
+//! Subcommands:
+//! * `list` — show the experiment registry (one entry per paper artifact);
+//! * `experiment <id>` — regenerate a table/figure;
+//! * `genome-search` — run the real AOT genome search end-to-end;
+//! * `reinstate` — one-off reinstate measurement (cluster, approach, Z, sizes);
+//! * `clusters` — show the cluster presets.
+
+use biomaft::cluster::{preset, ClusterPreset};
+use biomaft::coordinator::ftmanager::Strategy;
+use biomaft::coordinator::run::{measure_reinstate, ExperimentCfg};
+use biomaft::experiments;
+use biomaft::sim::Rng;
+use biomaft::util::cli::Command;
+use biomaft::util::fmt::{hms_ms, kb_pow2};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    let mut s = String::from(
+        "biomaft — multi-agent fault tolerance for HPC computational biology jobs\n\n\
+         usage: biomaft <subcommand> [options]\n\nsubcommands:\n",
+    );
+    for c in commands() {
+        s.push_str(&format!("\n{}", c.help()));
+    }
+    s
+}
+
+fn commands() -> Vec<Command> {
+    vec![
+        Command::new("list", "list all experiments (paper tables/figures)"),
+        Command::new("experiment", "regenerate a paper table/figure: experiment <id>")
+            .opt("trials", "30", "trials per measured point")
+            .opt("seed", "2014", "experiment seed"),
+        Command::new("genome-search", "run the real AOT genome search (PJRT)")
+            .opt("bases", "200000", "synthetic genome size in bases")
+            .opt("patterns", "128", "dictionary size")
+            .opt("seed", "7", "genome/dictionary seed")
+            .opt("limit", "20", "hits to print"),
+        Command::new("reinstate", "measure reinstate time for one configuration")
+            .opt("cluster", "placentia", "acet|brasdor|glooscap|placentia")
+            .opt("approach", "core", "agent|core|hybrid")
+            .opt("z", "4", "dependencies")
+            .opt("data-kb", "524288", "S_d in KB")
+            .opt("proc-kb", "524288", "S_p in KB")
+            .opt("trials", "30", "trials")
+            .opt("seed", "1", "seed"),
+        Command::new("clusters", "print the cluster presets"),
+        Command::new("run", "run a config-file experiment: run --config <file>")
+            .opt_req("config", "path to a TOML-subset config (see configs/)"),
+    ]
+}
+
+fn run() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(sub) = args.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    let cmds = commands();
+    let find = |name: &str| cmds.iter().find(|c| c.name == name).unwrap();
+    match sub.as_str() {
+        "list" => {
+            println!("{:<12} description", "id");
+            println!("{}", "-".repeat(60));
+            for e in experiments::list() {
+                println!("{:<12} {}", e.id, e.what);
+            }
+        }
+        "experiment" => {
+            let p = find("experiment").parse(rest)?;
+            let id = p
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("usage: biomaft experiment <id>"))?;
+            let trials: usize = p.req("trials")?;
+            let seed: u64 = p.req("seed")?;
+            println!("{}", experiments::run_by_id(id, trials, seed)?);
+        }
+        "genome-search" => {
+            let p = find("genome-search").parse(rest)?;
+            let f = experiments::fig14::run(p.req("bases")?, p.req("patterns")?, p.req("seed")?)?;
+            println!("{}", experiments::fig14::render(&f, p.req("limit")?));
+        }
+        "reinstate" => {
+            let p = find("reinstate").parse(rest)?;
+            let cluster = ClusterPreset::from_name(&p.req::<String>("cluster")?)
+                .ok_or_else(|| anyhow::anyhow!("unknown cluster"))?;
+            let strategy = match p.req::<String>("approach")?.as_str() {
+                "agent" => Strategy::Agent,
+                "core" => Strategy::Core,
+                "hybrid" => Strategy::Hybrid,
+                other => anyhow::bail!("unknown approach `{other}`"),
+            };
+            let cfg = ExperimentCfg {
+                z: p.req("z")?,
+                data_kb: p.req("data-kb")?,
+                proc_kb: p.req("proc-kb")?,
+                trials: p.req("trials")?,
+                ..ExperimentCfg::table1(preset(cluster))
+            };
+            let mut rng = Rng::new(p.req("seed")?);
+            let s = measure_reinstate(strategy, &cfg, &mut rng);
+            println!(
+                "{} on {}: Z={} S_d={} S_p={}",
+                strategy.name(),
+                cluster.name(),
+                cfg.z,
+                kb_pow2(cfg.data_kb),
+                kb_pow2(cfg.proc_kb)
+            );
+            println!(
+                "reinstate: mean {} (±{:.1} ms over {} trials, min {} max {})",
+                hms_ms(s.mean),
+                s.ci95() * 1e3,
+                s.n,
+                hms_ms(s.min),
+                hms_ms(s.max)
+            );
+        }
+        "clusters" => {
+            for p in ClusterPreset::all() {
+                let c = preset(p);
+                println!(
+                    "{:<10} {:>4} nodes {:>5} cores  link: {:.0} µs / {:.0} MB/s",
+                    c.name,
+                    c.n_nodes,
+                    c.total_cores,
+                    c.link.latency_s * 1e6,
+                    c.link.bandwidth_bps / 1e6
+                );
+            }
+        }
+        "run" => {
+            let p = find("run").parse(rest)?;
+            let path: String = p.req("config")?;
+            let rc = biomaft::coordinator::RunConfig::load(std::path::Path::new(&path))?;
+            let row = biomaft::coordinator::run::window_row(rc.strategy, &rc.cfg);
+            println!(
+                "{} on {} (Z={}, S_d={}, period {} h)",
+                rc.strategy.name(),
+                rc.cfg.cluster.name,
+                rc.cfg.z,
+                kb_pow2(rc.cfg.data_kb),
+                rc.cfg.period_h
+            );
+            println!("  reinstate:   {}", hms_ms(row.reinstate_periodic_s));
+            println!("  overhead:    {}", hms_ms(row.overhead_periodic_s));
+            println!("  no failures: {}", biomaft::util::fmt::hms(row.total_nofail_s));
+            println!("  1 periodic/h: {}", biomaft::util::fmt::hms(row.total_one_periodic_s));
+            println!("  1 random/h:  {}", biomaft::util::fmt::hms(row.total_one_random_s));
+            println!("  5 random/h:  {}", biomaft::util::fmt::hms(row.total_five_random_s));
+        }
+        "--help" | "-h" | "help" => println!("{}", usage()),
+        other => anyhow::bail!("unknown subcommand `{other}`\n\n{}", usage()),
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Figure series: (x, per-cluster y) data behind Figs. 8-13, with a CSV
+//! emitter and a crude ASCII sparkline for terminal inspection.
+
+/// One plotted figure: an x-axis plus one named series per cluster.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub x: Vec<f64>,
+    /// (cluster name, y values — same length as x)
+    pub series: Vec<(String, Vec<f64>)>,
+}
+
+impl Series {
+    pub fn new(title: &str, x_label: &str, y_label: &str, x: Vec<f64>) -> Self {
+        Self {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            x,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, name: &str, y: Vec<f64>) {
+        assert_eq!(y.len(), self.x.len(), "series length mismatch");
+        self.series.push((name.to_string(), y));
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(&self.x_label);
+        for (name, _) in &self.series {
+            out.push(',');
+            out.push_str(name);
+        }
+        out.push('\n');
+        for (i, x) in self.x.iter().enumerate() {
+            out.push_str(&format!("{x}"));
+            for (_, y) in &self.series {
+                out.push_str(&format!(",{:.6}", y[i]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Terminal rendering: per-series min/max plus a sparkline.
+    pub fn render(&self) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let mut out = format!("## {} — y: {}, x: {}\n", self.title, self.y_label, self.x_label);
+        let lo = self
+            .series
+            .iter()
+            .flat_map(|(_, y)| y.iter())
+            .cloned()
+            .fold(f64::MAX, f64::min);
+        let hi = self
+            .series
+            .iter()
+            .flat_map(|(_, y)| y.iter())
+            .cloned()
+            .fold(f64::MIN, f64::max);
+        for (name, y) in &self.series {
+            let line: String = y
+                .iter()
+                .map(|&v| {
+                    let t = if hi > lo { (v - lo) / (hi - lo) } else { 0.0 };
+                    BARS[((t * 7.0).round() as usize).min(7)]
+                })
+                .collect();
+            out.push_str(&format!(
+                "{name:>12} {line}  [{:.3} .. {:.3}]\n",
+                y.iter().cloned().fold(f64::MAX, f64::min),
+                y.iter().cloned().fold(f64::MIN, f64::max),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig() -> Series {
+        let mut s = Series::new("Fig X", "Z", "seconds", vec![3.0, 10.0, 63.0]);
+        s.push("acet", vec![0.6, 0.7, 0.8]);
+        s.push("placentia", vec![0.45, 0.5, 0.55]);
+        s
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = fig().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "Z,acet,placentia");
+        assert_eq!(lines.len(), 4);
+        assert!(lines[1].starts_with("3,0.6"));
+    }
+
+    #[test]
+    fn render_contains_all_series() {
+        let r = fig().render();
+        assert!(r.contains("acet"));
+        assert!(r.contains("placentia"));
+        assert!(r.contains("Fig X"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_length_panics() {
+        let mut s = Series::new("t", "x", "y", vec![1.0, 2.0]);
+        s.push("bad", vec![1.0]);
+    }
+}

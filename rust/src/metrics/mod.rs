@@ -1,0 +1,10 @@
+//! Measurement utilities: summary statistics, ASCII tables and CSV series
+//! emitters used by the experiment harness.
+
+pub mod figure;
+pub mod stats;
+pub mod table;
+
+pub use figure::Series;
+pub use stats::Summary;
+pub use table::Table;

@@ -1,0 +1,91 @@
+//! Link timing model: per-message latency plus bandwidth-limited payload.
+
+use crate::sim::SimTime;
+
+/// Parameters of one interconnect class (GigE vs InfiniBand in the paper's
+/// clusters).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkParams {
+    /// One-way small-message latency, seconds.
+    pub latency_s: f64,
+    /// Sustained point-to-point bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Per-message software overhead (MPI stack), seconds.
+    pub sw_overhead_s: f64,
+}
+
+impl LinkParams {
+    pub const fn new(latency_s: f64, bandwidth_bps: f64, sw_overhead_s: f64) -> Self {
+        Self { latency_s, bandwidth_bps, sw_overhead_s }
+    }
+
+    /// Gigabit Ethernet (ACET, Brasdor).
+    pub const fn gige() -> Self {
+        Self::new(80e-6, 110e6, 25e-6)
+    }
+
+    /// InfiniBand (Glooscap, Placentia).
+    pub const fn infiniband() -> Self {
+        Self::new(8e-6, 1_200e6, 5e-6)
+    }
+
+    /// Time to move `bytes` in one message.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + self.sw_overhead_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Round-trip time of a small control message (e.g. "are you alive?").
+    pub fn rtt(&self) -> f64 {
+        2.0 * (self.latency_s + self.sw_overhead_s)
+    }
+
+    pub fn transfer(&self, bytes: u64) -> SimTime {
+        SimTime::from_secs(self.transfer_time(bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let l = LinkParams::gige();
+        let t = l.transfer_time(64);
+        assert!(t < 2.0 * (l.latency_s + l.sw_overhead_s));
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_messages() {
+        let l = LinkParams::gige();
+        let bytes = 1u64 << 30; // 1 GiB
+        let t = l.transfer_time(bytes);
+        let bw_term = bytes as f64 / l.bandwidth_bps;
+        assert!((t - bw_term) / t < 0.01);
+    }
+
+    #[test]
+    fn infiniband_faster_than_gige() {
+        let g = LinkParams::gige();
+        let i = LinkParams::infiniband();
+        assert!(i.rtt() < g.rtt());
+        assert!(i.transfer_time(1 << 20) < g.transfer_time(1 << 20));
+    }
+
+    #[test]
+    fn transfer_monotone_in_bytes() {
+        let l = LinkParams::infiniband();
+        let mut prev = 0.0;
+        for sh in 0..30 {
+            let t = l.transfer_time(1 << sh);
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn simtime_conversion() {
+        let l = LinkParams::gige();
+        assert_eq!(l.transfer(0), SimTime::from_secs(l.latency_s + l.sw_overhead_s));
+    }
+}

@@ -1,0 +1,177 @@
+//! Typed messages exchanged by the fault-tolerance protocols.
+//!
+//! One shared enum keeps the DES engine monomorphic across protocols; the
+//! variants follow the communication sequences of Fig. 3 (agent
+//! intelligence), Fig. 5 (core intelligence) and the checkpointing
+//! baselines.
+
+use super::topology::NodeId;
+use crate::sim::SimTime;
+
+/// Identifies a sub-job (and hence its agent / virtual core binding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SubJobId(pub usize);
+
+/// Payload-free protocol message kinds; sizes are carried alongside so the
+/// transport can compute timing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MsgKind {
+    // --- probing / prediction (both approaches) ---
+    /// Hardware probing process tick on a core.
+    ProbeTick,
+    /// "Are you alive?" query to an adjacent node.
+    AliveQuery,
+    /// Response carrying the responder's health estimate.
+    AliveReply { healthy: bool },
+    /// The probing process notifies the local agent/core of a prediction.
+    FailurePredicted { node: NodeId },
+
+    // --- Fig. 3: agent intelligence failure scenario ---
+    /// P_PF requests predictions from adjacent probing processes.
+    PredictionRequest,
+    PredictionReply { will_fail: bool },
+    /// Agent creates a replacement process on the chosen adjacent core.
+    SpawnProcess { sub_job: SubJobId },
+    SpawnAck,
+    /// Agent streams its working data to the new process.
+    TransferState { bytes: u64 },
+    TransferDone,
+    /// Notify one input/output-dependent agent of the relocation.
+    NotifyDependent { sub_job: SubJobId },
+    NotifyAck,
+    /// New process re-establishes one dependency channel.
+    EstablishDependency { sub_job: SubJobId },
+    DependencyReady,
+    /// Old agent process terminates.
+    Terminate,
+
+    // --- Fig. 5: core intelligence failure scenario ---
+    /// Virtual core migrates the job object to an adjacent virtual core.
+    MigrateObject { sub_job: SubJobId, bytes: u64 },
+    MigrateAck,
+    /// Runtime-level dependency table update (automatic re-binding).
+    RebindRound { remaining: usize },
+
+    // --- checkpointing baselines ---
+    CheckpointBegin,
+    CheckpointWrite { bytes: u64 },
+    CheckpointAck,
+    RestoreRequest { bytes: u64 },
+    RestoreData,
+    /// Decentralised variant: locate the nearest checkpoint server.
+    ServerDiscovery,
+
+    // --- failure injection / job lifecycle ---
+    InjectFailure { node: NodeId },
+    SubJobDone { sub_job: SubJobId },
+    CollateResults,
+}
+
+/// A message in flight.
+#[derive(Debug, Clone)]
+pub struct Message {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub kind: MsgKind,
+    /// Time the message was sent (for in-flight accounting / tracing).
+    pub sent_at: SimTime,
+}
+
+impl MsgKind {
+    /// Stable tag for determinism traces.
+    pub fn tag(&self) -> u64 {
+        match self {
+            MsgKind::ProbeTick => 1,
+            MsgKind::AliveQuery => 2,
+            MsgKind::AliveReply { .. } => 3,
+            MsgKind::FailurePredicted { .. } => 4,
+            MsgKind::PredictionRequest => 5,
+            MsgKind::PredictionReply { .. } => 6,
+            MsgKind::SpawnProcess { .. } => 7,
+            MsgKind::SpawnAck => 8,
+            MsgKind::TransferState { .. } => 9,
+            MsgKind::TransferDone => 10,
+            MsgKind::NotifyDependent { .. } => 11,
+            MsgKind::NotifyAck => 12,
+            MsgKind::EstablishDependency { .. } => 13,
+            MsgKind::DependencyReady => 14,
+            MsgKind::Terminate => 15,
+            MsgKind::MigrateObject { .. } => 16,
+            MsgKind::MigrateAck => 17,
+            MsgKind::RebindRound { .. } => 18,
+            MsgKind::CheckpointBegin => 19,
+            MsgKind::CheckpointWrite { .. } => 20,
+            MsgKind::CheckpointAck => 21,
+            MsgKind::RestoreRequest { .. } => 22,
+            MsgKind::RestoreData => 23,
+            MsgKind::ServerDiscovery => 24,
+            MsgKind::InjectFailure { .. } => 25,
+            MsgKind::SubJobDone { .. } => 26,
+            MsgKind::CollateResults => 27,
+        }
+    }
+
+    /// Wire size in bytes for transport timing: control messages are small;
+    /// state transfers carry their payload size.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            MsgKind::TransferState { bytes }
+            | MsgKind::MigrateObject { bytes, .. }
+            | MsgKind::CheckpointWrite { bytes }
+            | MsgKind::RestoreRequest { bytes } => *bytes,
+            _ => 256, // control message envelope
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_unique() {
+        let kinds = [
+            MsgKind::ProbeTick,
+            MsgKind::AliveQuery,
+            MsgKind::AliveReply { healthy: true },
+            MsgKind::FailurePredicted { node: NodeId(0) },
+            MsgKind::PredictionRequest,
+            MsgKind::PredictionReply { will_fail: false },
+            MsgKind::SpawnProcess { sub_job: SubJobId(0) },
+            MsgKind::SpawnAck,
+            MsgKind::TransferState { bytes: 1 },
+            MsgKind::TransferDone,
+            MsgKind::NotifyDependent { sub_job: SubJobId(0) },
+            MsgKind::NotifyAck,
+            MsgKind::EstablishDependency { sub_job: SubJobId(0) },
+            MsgKind::DependencyReady,
+            MsgKind::Terminate,
+            MsgKind::MigrateObject { sub_job: SubJobId(0), bytes: 1 },
+            MsgKind::MigrateAck,
+            MsgKind::RebindRound { remaining: 1 },
+            MsgKind::CheckpointBegin,
+            MsgKind::CheckpointWrite { bytes: 1 },
+            MsgKind::CheckpointAck,
+            MsgKind::RestoreRequest { bytes: 1 },
+            MsgKind::RestoreData,
+            MsgKind::ServerDiscovery,
+            MsgKind::InjectFailure { node: NodeId(0) },
+            MsgKind::SubJobDone { sub_job: SubJobId(0) },
+            MsgKind::CollateResults,
+        ];
+        let mut tags: Vec<u64> = kinds.iter().map(|k| k.tag()).collect();
+        tags.sort();
+        tags.dedup();
+        assert_eq!(tags.len(), kinds.len());
+    }
+
+    #[test]
+    fn payload_sizes_flow_through() {
+        assert_eq!(MsgKind::TransferState { bytes: 12345 }.wire_bytes(), 12345);
+        assert_eq!(MsgKind::AliveQuery.wire_bytes(), 256);
+        assert_eq!(
+            MsgKind::MigrateObject { sub_job: SubJobId(1), bytes: 99 }.wire_bytes(),
+            99
+        );
+    }
+}

@@ -1,0 +1,14 @@
+//! Cluster interconnect model: topology, link timing, typed messages.
+//!
+//! The paper's measurements are dominated by message latency, handshake
+//! counts and bytes moved; this module provides those primitives for the
+//! protocol layers ([`crate::agentft`], [`crate::coreft`],
+//! [`crate::checkpoint`]) running on the DES.
+
+pub mod link;
+pub mod message;
+pub mod topology;
+
+pub use link::LinkParams;
+pub use message::{Message, MsgKind};
+pub use topology::{NodeId, Topology};

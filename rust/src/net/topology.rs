@@ -1,0 +1,155 @@
+//! Node graph with adjacency — "the landscape" in the paper's terms.
+//!
+//! Agents gather predictions from *adjacent* cores and migrate to adjacent
+//! cores (Methods, Approach 1); virtual cores monitor their *neighbours*
+//! (Approach 2). Adjacency here is the communication neighbourhood, built
+//! as a ring-of-switches / star / full mesh depending on the cluster.
+
+/// Index of a compute node in the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+/// Undirected adjacency over nodes.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    n: usize,
+    adj: Vec<Vec<NodeId>>,
+}
+
+impl Topology {
+    /// Ring topology with `k` neighbours on each side (the "vicinity" used
+    /// by the probing processes).
+    pub fn ring(n: usize, k: usize) -> Self {
+        assert!(n > 0, "empty topology");
+        let mut adj = vec![Vec::new(); n];
+        for i in 0..n {
+            for d in 1..=k {
+                let a = (i + d) % n;
+                let b = (i + n - d % n) % n;
+                if a != i && !adj[i].contains(&NodeId(a)) {
+                    adj[i].push(NodeId(a));
+                }
+                if b != i && !adj[i].contains(&NodeId(b)) {
+                    adj[i].push(NodeId(b));
+                }
+            }
+            adj[i].sort();
+        }
+        Self { n, adj }
+    }
+
+    /// Star: node 0 is the head (checkpoint server / combiner host).
+    pub fn star(n: usize) -> Self {
+        assert!(n > 1, "star needs >= 2 nodes");
+        let mut adj = vec![Vec::new(); n];
+        for i in 1..n {
+            adj[0].push(NodeId(i));
+            adj[i].push(NodeId(0));
+        }
+        Self { n, adj }
+    }
+
+    /// Full mesh (small experiments, every core in every core's vicinity).
+    pub fn mesh(n: usize) -> Self {
+        assert!(n > 0, "empty topology");
+        let mut adj = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    adj[i].push(NodeId(j));
+                }
+            }
+        }
+        Self { n, adj }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn neighbours(&self, node: NodeId) -> &[NodeId] {
+        &self.adj[node.0]
+    }
+
+    pub fn are_adjacent(&self, a: NodeId, b: NodeId) -> bool {
+        self.adj[a.0].contains(&b)
+    }
+
+    /// All nodes, useful for schedulers.
+    pub fn nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.n).map(NodeId)
+    }
+
+    /// Degree of a node.
+    pub fn degree(&self, node: NodeId) -> usize {
+        self.adj[node.0].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_adjacency_symmetric() {
+        let t = Topology::ring(10, 2);
+        for i in t.nodes() {
+            for &j in t.neighbours(i) {
+                assert!(t.are_adjacent(j, i), "{i:?} {j:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_degree() {
+        let t = Topology::ring(10, 2);
+        for i in t.nodes() {
+            assert_eq!(t.degree(i), 4);
+        }
+        let t1 = Topology::ring(10, 1);
+        for i in t1.nodes() {
+            assert_eq!(t1.degree(i), 2);
+        }
+    }
+
+    #[test]
+    fn tiny_ring_no_self_or_dup() {
+        let t = Topology::ring(3, 2); // k >= n/2: neighbours must dedup
+        for i in t.nodes() {
+            let nb = t.neighbours(i);
+            assert!(!nb.contains(&i));
+            let mut d = nb.to_vec();
+            d.dedup();
+            assert_eq!(d.len(), nb.len());
+        }
+    }
+
+    #[test]
+    fn star_shape() {
+        let t = Topology::star(5);
+        assert_eq!(t.degree(NodeId(0)), 4);
+        for i in 1..5 {
+            assert_eq!(t.degree(NodeId(i)), 1);
+            assert!(t.are_adjacent(NodeId(i), NodeId(0)));
+        }
+    }
+
+    #[test]
+    fn mesh_complete() {
+        let t = Topology::mesh(6);
+        for i in t.nodes() {
+            assert_eq!(t.degree(i), 5);
+        }
+    }
+
+    #[test]
+    fn single_node_mesh() {
+        let t = Topology::mesh(1);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.degree(NodeId(0)), 0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Artifact manifest parsing.
+//!
+//! `aot.py` writes `manifest.txt` with one line per executable:
+//! `name|in=<dtype>:<shape>;...|out=<dtype>:<shape>;...` where shape is
+//! `d0xd1x...` or `scalar`.
+
+use std::path::{Path, PathBuf};
+
+/// Tensor spec: dtype name + dims (empty = scalar).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (dtype, shape) =
+            s.split_once(':').ok_or_else(|| anyhow::anyhow!("bad tensor spec `{s}`"))?;
+        let dims = if shape == "scalar" {
+            Vec::new()
+        } else {
+            shape
+                .split('x')
+                .map(|d| d.parse::<usize>().map_err(|e| anyhow::anyhow!("dim `{d}`: {e}")))
+                .collect::<anyhow::Result<Vec<_>>>()?
+        };
+        Ok(Self { dtype: dtype.to_string(), dims })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// One executable's interface.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub hlo_path: PathBuf,
+}
+
+/// The whole artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(dir: &Path, text: &str) -> anyhow::Result<Self> {
+        let mut artifacts = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split('|');
+            let name = parts
+                .next()
+                .filter(|s| !s.is_empty())
+                .ok_or_else(|| anyhow::anyhow!("manifest line {}: missing name", i + 1))?;
+            let mut inputs = Vec::new();
+            let mut outputs = Vec::new();
+            for part in parts {
+                if let Some(body) = part.strip_prefix("in=") {
+                    inputs = body.split(';').map(TensorSpec::parse).collect::<anyhow::Result<_>>()?;
+                } else if let Some(body) = part.strip_prefix("out=") {
+                    outputs =
+                        body.split(';').map(TensorSpec::parse).collect::<anyhow::Result<_>>()?;
+                } else {
+                    anyhow::bail!("manifest line {}: unknown section `{part}`", i + 1);
+                }
+            }
+            artifacts.push(ArtifactSpec {
+                name: name.to_string(),
+                inputs,
+                outputs,
+                hlo_path: dir.join(format!("{name}.hlo.txt")),
+            });
+        }
+        Ok(Self { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .map_err(|e| anyhow::anyhow!("reading manifest in {}: {e}", dir.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Default artifact directory: `$BIOMAFT_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("BIOMAFT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+genome_search|in=int8:32768;int8:512x25;int32:512|out=int8:512x32768;int32:512
+reduce|in=float32:1048576|out=float32:scalar
+";
+
+    #[test]
+    fn parses_specs() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let gs = m.get("genome_search").unwrap();
+        assert_eq!(gs.inputs.len(), 3);
+        assert_eq!(gs.inputs[1].dims, vec![512, 25]);
+        assert_eq!(gs.outputs[0].elements(), 512 * 32768);
+        assert_eq!(gs.hlo_path, Path::new("/tmp/a/genome_search.hlo.txt"));
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let t = TensorSpec::parse("float32:scalar").unwrap();
+        assert!(t.dims.is_empty());
+        assert_eq!(t.elements(), 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(TensorSpec::parse("float32").is_err());
+        assert!(TensorSpec::parse("int8:axb").is_err());
+        assert!(Manifest::parse(Path::new("."), "name|zap=1").is_err());
+    }
+
+    #[test]
+    fn missing_name_rejected() {
+        assert!(Manifest::parse(Path::new("."), "|in=int8:4|out=int8:4").is_err());
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // integration smoke when `make artifacts` has run
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("genome_search").is_some());
+            assert!(m.get("reduce").is_some());
+            assert!(m.get("collate").is_some());
+            for a in &m.artifacts {
+                assert!(a.hlo_path.exists(), "{:?}", a.hlo_path);
+            }
+        }
+    }
+}

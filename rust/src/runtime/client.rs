@@ -1,0 +1,161 @@
+//! The PJRT client wrapper: compile HLO-text artifacts once, execute many
+//! times.
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+
+use super::artifact::Manifest;
+use std::collections::HashMap;
+use std::path::Path;
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Geometry constants frozen by `python/compile/model.py` (checked against
+/// the manifest at load time).
+pub mod geom {
+    pub const CHUNK: usize = 32_768;
+    pub const N_PATTERNS: usize = 512;
+    pub const WIDTH: usize = 25;
+    pub const REDUCE_N: usize = 1 << 20;
+    pub const COLLATE_NODES: usize = 16;
+}
+
+/// A loaded runtime: PJRT client + compiled executables.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: PjRtClient,
+    execs: HashMap<String, PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` and compile it on the CPU PJRT client.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut execs = HashMap::new();
+        for art in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(&art.hlo_path)
+                .map_err(|e| anyhow::anyhow!("loading {}: {e:?}", art.hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", art.name))?;
+            execs.insert(art.name.clone(), exe);
+        }
+        Ok(Self { client, execs, manifest })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> anyhow::Result<Self> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    fn exec(&self, name: &str) -> anyhow::Result<&PjRtLoadedExecutable> {
+        self.execs.get(name).ok_or_else(|| anyhow::anyhow!("no artifact `{name}`"))
+    }
+
+    /// Run the genome-search executable on one chunk against one
+    /// dictionary block.
+    ///
+    /// * `seq` — int8[CHUNK]; * `patterns` — row-major
+    ///   int8[N_PATTERNS x WIDTH]; * `lengths` — int32[N_PATTERNS].
+    ///
+    /// Returns `(mask, counts)`: mask is row-major int8[N_PATTERNS x CHUNK],
+    /// counts int32[N_PATTERNS].
+    pub fn genome_search(
+        &self,
+        seq: &[i8],
+        patterns: &[i8],
+        lengths: &[i32],
+    ) -> anyhow::Result<(Vec<i8>, Vec<i32>)> {
+        anyhow::ensure!(seq.len() == geom::CHUNK, "seq len {}", seq.len());
+        anyhow::ensure!(patterns.len() == geom::N_PATTERNS * geom::WIDTH);
+        anyhow::ensure!(lengths.len() == geom::N_PATTERNS);
+        let seq_l = lit_i8(seq, &[geom::CHUNK])?;
+        let pat_l = lit_i8(patterns, &[geom::N_PATTERNS, geom::WIDTH])?;
+        let len_l = lit_i32(lengths, &[geom::N_PATTERNS])?;
+        let result = self
+            .exec("genome_search")?
+            .execute::<Literal>(&[seq_l, pat_l, len_l])
+            .map_err(|e| anyhow::anyhow!("genome_search exec: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("genome_search sync: {e:?}"))?;
+        let (mask_l, counts_l) =
+            result.to_tuple2().map_err(|e| anyhow::anyhow!("tuple2: {e:?}"))?;
+        let mask = mask_l.to_vec::<i8>().map_err(|e| anyhow::anyhow!("mask: {e:?}"))?;
+        let counts = counts_l.to_vec::<i32>().map_err(|e| anyhow::anyhow!("counts: {e:?}"))?;
+        Ok((mask, counts))
+    }
+
+    /// Run the parallel-summation sub-job on one block of `REDUCE_N` f32s.
+    pub fn reduce(&self, x: &[f32]) -> anyhow::Result<f32> {
+        anyhow::ensure!(x.len() == geom::REDUCE_N, "reduce len {}", x.len());
+        let xl = Literal::vec1(x).reshape(&[geom::REDUCE_N as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let result = self
+            .exec("reduce")?
+            .execute::<Literal>(&[xl])
+            .map_err(|e| anyhow::anyhow!("reduce exec: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("reduce sync: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple1: {e:?}"))?;
+        let v = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        Ok(v[0])
+    }
+
+    /// Run the combining-node executable: merge per-node count vectors.
+    /// `counts` is row-major int32[COLLATE_NODES x N_PATTERNS].
+    pub fn collate(&self, counts: &[i32]) -> anyhow::Result<Vec<i32>> {
+        anyhow::ensure!(counts.len() == geom::COLLATE_NODES * geom::N_PATTERNS);
+        let cl = lit_i32(counts, &[geom::COLLATE_NODES, geom::N_PATTERNS])?;
+        let result = self
+            .exec("collate")?
+            .execute::<Literal>(&[cl])
+            .map_err(|e| anyhow::anyhow!("collate exec: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("collate sync: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple1: {e:?}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+}
+
+fn lit_i8(data: &[i8], dims: &[usize]) -> anyhow::Result<Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Literal::create_from_shape_and_untyped_data(ElementType::S8, dims, bytes)
+        .map_err(|e| anyhow::anyhow!("i8 literal: {e:?}"))
+}
+
+fn lit_i32(data: &[i32], dims: &[usize]) -> anyhow::Result<Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow::anyhow!("i32 literal: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised by `rust/tests/runtime_integration.rs` (requires artifacts);
+    // unit-level literal helpers tested here.
+    use super::*;
+
+    #[test]
+    fn i8_literal_roundtrip() {
+        let data: Vec<i8> = vec![-1, 0, 1, 2, 3, 4];
+        let l = lit_i8(&data, &[2, 3]).unwrap();
+        assert_eq!(l.to_vec::<i8>().unwrap(), data);
+    }
+
+    #[test]
+    fn i32_literal_roundtrip() {
+        let data: Vec<i32> = vec![1, -2, 3, 4];
+        let l = lit_i32(&data, &[4]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn wrong_byte_count_rejected() {
+        assert!(lit_i32(&[1, 2, 3], &[4]).is_err());
+    }
+}

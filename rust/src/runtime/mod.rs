@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python never runs here — the artifacts are compiled once per process by
+//! the `xla` crate's PJRT CPU client and then executed from the coordinator
+//! (and from the worker pool that plays the cluster's "search nodes" in the
+//! end-to-end example).
+
+pub mod artifact;
+pub mod client;
+pub mod pool;
+
+pub use artifact::{ArtifactSpec, Manifest};
+pub use client::Runtime;
+pub use pool::{SearchPool, SearchResult, SearchTask};

@@ -1,0 +1,126 @@
+//! The search-node worker pool: plays the cluster's search nodes in the
+//! end-to-end genome example.
+//!
+//! PJRT executables hold raw pointers (`!Send`), so each worker thread
+//! builds its *own* `Runtime` (own CPU client + compiled executables) —
+//! exactly the process-per-node shape of the real cluster. Work and results
+//! flow over channels; the coordinator thread plays the combining node.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::client::Runtime;
+
+/// One unit of search work: a chromosome chunk against a dictionary block.
+#[derive(Debug, Clone)]
+pub struct SearchTask {
+    pub task_id: usize,
+    pub chrom_idx: usize,
+    pub chunk_start: usize,
+    pub chrom_len: usize,
+    pub seq: Vec<i8>,
+    /// Row-major [N_PATTERNS x WIDTH] dictionary block.
+    pub patterns: Vec<i8>,
+    pub lengths: Vec<i32>,
+    /// Dictionary index of row 0 and number of real rows in this block.
+    pub pattern_base: usize,
+    pub n_real: usize,
+    /// Reverse strand flag (the block is already reverse-complemented).
+    pub reverse: bool,
+}
+
+/// Result of one task.
+#[derive(Debug)]
+pub struct SearchResult {
+    pub task_id: usize,
+    pub worker: usize,
+    pub task: SearchTask,
+    pub mask: Vec<i8>,
+    pub counts: Vec<i32>,
+}
+
+/// A pool of search-node workers.
+pub struct SearchPool {
+    tx: Sender<SearchTask>,
+    rx: Receiver<anyhow::Result<SearchResult>>,
+    handles: Vec<JoinHandle<()>>,
+    in_flight: usize,
+}
+
+impl SearchPool {
+    /// Spawn `n_workers` threads, each loading its own runtime from
+    /// `artifact_dir`.
+    pub fn spawn(n_workers: usize, artifact_dir: PathBuf) -> Self {
+        assert!(n_workers > 0);
+        let (task_tx, task_rx) = channel::<SearchTask>();
+        let task_rx = Arc::new(Mutex::new(task_rx));
+        let (res_tx, res_rx) = channel::<anyhow::Result<SearchResult>>();
+        let mut handles = Vec::new();
+        for w in 0..n_workers {
+            let rx = task_rx.clone();
+            let tx = res_tx.clone();
+            let dir = artifact_dir.clone();
+            handles.push(std::thread::spawn(move || {
+                let rt = match Runtime::load(&dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = tx.send(Err(anyhow::anyhow!("worker {w}: {e}")));
+                        return;
+                    }
+                };
+                loop {
+                    let task = {
+                        let guard = rx.lock().expect("task queue poisoned");
+                        match guard.recv() {
+                            Ok(t) => t,
+                            Err(_) => break, // pool dropped
+                        }
+                    };
+                    let res = rt
+                        .genome_search(&task.seq, &task.patterns, &task.lengths)
+                        .map(|(mask, counts)| SearchResult {
+                            task_id: task.task_id,
+                            worker: w,
+                            task,
+                            mask,
+                            counts,
+                        });
+                    if tx.send(res).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        Self { tx: task_tx, rx: res_rx, handles, in_flight: 0 }
+    }
+
+    /// Submit a task.
+    pub fn submit(&mut self, task: SearchTask) -> anyhow::Result<()> {
+        self.tx.send(task).map_err(|_| anyhow::anyhow!("pool closed"))?;
+        self.in_flight += 1;
+        Ok(())
+    }
+
+    /// Receive the next completed result (blocking).
+    pub fn recv(&mut self) -> anyhow::Result<SearchResult> {
+        anyhow::ensure!(self.in_flight > 0, "no work in flight");
+        self.in_flight -= 1;
+        self.rx.recv().map_err(|_| anyhow::anyhow!("pool workers gone"))?
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Close the queue and join the workers.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+// Integration-tested in rust/tests/runtime_integration.rs (needs artifacts).

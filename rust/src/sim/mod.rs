@@ -1,0 +1,12 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! Every experiment in the paper is a *time* measurement over a cluster; we
+//! reproduce them on a virtual-time engine so five-hour jobs run in
+//! milliseconds of wall clock and every trial is exactly reproducible from
+//! its seed (a property the test suite leans on heavily).
+
+pub mod engine;
+pub mod rng;
+
+pub use engine::{Engine, EventLog, SimTime};
+pub use rng::Rng;

@@ -1,0 +1,163 @@
+//! Property-based testing mini-framework (proptest substitute — the
+//! vendored crate set has no proptest).
+//!
+//! Usage:
+//! ```no_run
+//! use biomaft::testkit::{forall, Gen};
+//! forall(100, 42, |g| {
+//!     let z = g.usize(0, 64);
+//!     let kb = g.u64(1, 1 << 32);
+//!     // property body: panic/assert on violation
+//!     assert!(z <= 64 && kb >= 1);
+//! });
+//! ```
+//!
+//! On failure the harness re-raises the panic with the failing case number
+//! and the seed to reproduce it. Shrinking is by case replay: the failing
+//! case's draws are reported through the `Gen` trace.
+
+use crate::sim::Rng;
+
+/// A generator handle for one property case.
+pub struct Gen {
+    rng: Rng,
+    /// Draw trace for failure reports.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), trace: Vec::new() }
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        let v = if lo >= hi { lo } else { self.rng.range_usize(lo, hi) };
+        self.trace.push(format!("usize[{lo},{hi})={v}"));
+        v
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        let v = if lo >= hi { lo } else { self.rng.range_u64(lo, hi) };
+        self.trace.push(format!("u64[{lo},{hi})={v}"));
+        v
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform(lo, hi);
+        self.trace.push(format!("f64[{lo},{hi})={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    /// Power-of-two-ish size in KB, log-uniform over [2^lo, 2^hi] — the
+    /// paper's size axes are log scale.
+    pub fn size_kb(&mut self, lo_exp: f64, hi_exp: f64) -> u64 {
+        let n = self.rng.uniform(lo_exp, hi_exp);
+        let v = 2f64.powf(n).round() as u64;
+        self.trace.push(format!("size_kb(2^{n:.2})={v}"));
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = if xs.len() <= 1 { 0 } else { self.rng.range_usize(0, xs.len()) };
+        self.trace.push(format!("pick#{i}"));
+        &xs[i]
+    }
+
+    pub fn vec_i8(&mut self, len: usize, lo: i8, hi: i8) -> Vec<i8> {
+        let v: Vec<i8> =
+            (0..len).map(|_| self.rng.range_u64(lo as u64, hi as u64 + 1) as i8).collect();
+        self.trace.push(format!("vec_i8[{len}]"));
+        v
+    }
+
+    /// Access the underlying RNG for domain-specific draws.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` cases derived from `seed`. Panics with the case
+/// seed and draw trace on the first failure.
+pub fn forall(cases: usize, seed: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(case_seed);
+            prop(&mut g);
+            g.trace
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            // Re-run to collect the trace (deterministic), tolerating the
+            // re-panic.
+            let trace = std::panic::catch_unwind(|| {
+                let mut g = Gen::new(case_seed);
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+                g.trace
+            })
+            .unwrap_or_default();
+            panic!(
+                "property failed at case {case}/{cases} (case_seed={case_seed}):\n  {msg}\n  draws: {}",
+                trace.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(50, 1, |g| {
+            let a = g.usize(0, 10);
+            assert!(a < 10);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed_and_trace() {
+        let r = std::panic::catch_unwind(|| {
+            forall(100, 2, |g| {
+                let v = g.usize(0, 100);
+                assert!(v < 95, "v too big: {v}");
+            });
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("case_seed="), "{msg}");
+        assert!(msg.contains("draws:"), "{msg}");
+    }
+
+    #[test]
+    fn size_kb_in_range() {
+        forall(100, 3, |g| {
+            let kb = g.size_kb(19.0, 31.0);
+            assert!(kb >= (1 << 19) - 1 && kb <= (1u64 << 31) + (1 << 30));
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..20 {
+            assert_eq!(a.u64(0, 1000), b.u64(0, 1000));
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Minimal declarative CLI argument parser.
+//!
+//! The vendored crate set has no `clap`, so this module provides the small
+//! subset the binaries need: subcommands, `--flag`, `--key value` /
+//! `--key=value` options with defaults, typed accessors, and generated help.
+
+use std::collections::BTreeMap;
+
+/// Description of one option for help output and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A parsed command line: positional arguments plus resolved options.
+#[derive(Debug, Default, Clone)]
+pub struct Parsed {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Parsed {
+    /// String option (falls back to the declared default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option accessor; parse errors surface as anyhow errors.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name}={v}: {e}")),
+        }
+    }
+
+    /// Required typed option.
+    pub fn req<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get_parse::<T>(name)?
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// A command (or subcommand) specification.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse `args` (no program name) against this command.
+    pub fn parse(&self, args: &[String]) -> anyhow::Result<Parsed> {
+        let mut out = Parsed::default();
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                out.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key} for `{}`", self.name))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("flag --{key} takes no value");
+                    }
+                    out.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{key} expects a value"))?
+                        }
+                    };
+                    out.opts.insert(key, val);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Render help text for this command.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let def = match o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if !o.is_flag => " [required]".to_string(),
+                None => String::new(),
+            };
+            s.push_str(&format!("  --{}{kind}\t{}{def}\n", o.name, o.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("run", "run things")
+            .opt("cluster", "placentia", "cluster preset")
+            .opt("trials", "30", "trial count")
+            .opt_req("id", "experiment id")
+            .flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cmd().parse(&args(&["--id", "fig8"])).unwrap();
+        assert_eq!(p.get("cluster"), Some("placentia"));
+        assert_eq!(p.req::<u32>("trials").unwrap(), 30);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let p = cmd().parse(&args(&["--id=t1", "--trials", "7", "--verbose"])).unwrap();
+        assert_eq!(p.get("id"), Some("t1"));
+        assert_eq!(p.req::<u32>("trials").unwrap(), 7);
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = cmd().parse(&args(&["--id", "x", "extra1", "extra2"])).unwrap();
+        assert_eq!(p.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&args(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&args(&["--id"])).is_err());
+    }
+
+    #[test]
+    fn missing_required_surfaces_on_req() {
+        let p = cmd().parse(&args(&[])).unwrap();
+        assert!(p.req::<String>("id").is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&args(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports_option() {
+        let p = cmd().parse(&args(&["--id", "x", "--trials", "NaNope"])).unwrap();
+        let err = p.req::<u32>("trials").unwrap_err().to_string();
+        assert!(err.contains("trials"), "{err}");
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cmd().help();
+        assert!(h.contains("--cluster"));
+        assert!(h.contains("[default: placentia]"));
+        assert!(h.contains("[required]"));
+    }
+}

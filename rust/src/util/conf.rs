@@ -1,0 +1,287 @@
+//! Minimal TOML-subset configuration parser.
+//!
+//! The vendored crate set has no `serde`/`toml`, so experiments and cluster
+//! descriptions are loaded with this hand-rolled parser. Supported subset:
+//! `[table]` headers, `key = value` with string / integer / float / bool /
+//! flat arrays, `#` comments, and underscored integer literals (`1_000`).
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A configuration document: `table.key -> Value` (root table keys have no
+/// prefix).
+#[derive(Debug, Default, Clone)]
+pub struct Conf {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Conf {
+    /// Parse a document; errors carry the line number.
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut table = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unterminated table header", lineno + 1))?;
+                table = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                anyhow::bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if table.is_empty() { key.to_string() } else { format!("{table}.{key}") };
+            let value = parse_value(val.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            entries.insert(full, value);
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Keys of one table (without the table prefix).
+    pub fn table_keys(&self, table: &str) -> Vec<String> {
+        let prefix = format!("{table}.");
+        self.entries
+            .keys()
+            .filter_map(|k| k.strip_prefix(&prefix).map(|s| s.to_string()))
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<Value> {
+    if s.is_empty() {
+        anyhow::bail!("empty value");
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or_else(|| anyhow::anyhow!("unterminated array"))?;
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = split_top_level(body)
+            .into_iter()
+            .map(|p| parse_value(p.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    anyhow::bail!("cannot parse value `{s}`")
+}
+
+/// Split an array body on commas that are not inside strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# experiment config
+name = "fig8"
+trials = 30
+noise = 0.03          # lognormal sigma
+enabled = true
+sizes = [1, 2, 3]
+
+[cluster]
+preset = "placentia"
+latency_us = 8.5
+tags = ["infiniband", "acenet"]
+"#;
+
+    #[test]
+    fn parses_scalars() {
+        let c = Conf::parse(DOC).unwrap();
+        assert_eq!(c.get("name").unwrap().as_str(), Some("fig8"));
+        assert_eq!(c.get("trials").unwrap().as_int(), Some(30));
+        assert_eq!(c.get("noise").unwrap().as_float(), Some(0.03));
+        assert_eq!(c.get("enabled").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_tables() {
+        let c = Conf::parse(DOC).unwrap();
+        assert_eq!(c.str_or("cluster.preset", "x"), "placentia");
+        assert_eq!(c.float_or("cluster.latency_us", 0.0), 8.5);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let c = Conf::parse(DOC).unwrap();
+        let arr = c.get("sizes").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_int(), Some(3));
+        let tags = c.get("cluster.tags").unwrap().as_array().unwrap();
+        assert_eq!(tags[0].as_str(), Some("infiniband"));
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let c = Conf::parse(DOC).unwrap();
+        assert_eq!(c.int_or("missing", 7), 7);
+        assert_eq!(c.str_or("cluster.missing", "d"), "d");
+        assert!(c.bool_or("missing", true));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let c = Conf::parse("x = 4").unwrap();
+        assert_eq!(c.float_or("x", 0.0), 4.0);
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let c = Conf::parse("n = 1_048_576").unwrap();
+        assert_eq!(c.int_or("n", 0), 1 << 20);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c = Conf::parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(c.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Conf::parse("a = 1\nbroken").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn table_keys_listed() {
+        let c = Conf::parse(DOC).unwrap();
+        let keys = c.table_keys("cluster");
+        assert!(keys.contains(&"preset".to_string()));
+        assert!(keys.contains(&"latency_us".to_string()));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(Conf::parse("a = ").is_err());
+        assert!(Conf::parse("a = \"open").is_err());
+        assert!(Conf::parse("a = [1, 2").is_err());
+        assert!(Conf::parse("[open").is_err());
+    }
+}

@@ -1,0 +1,104 @@
+//! Formatting helpers for the paper's units: `hh:mm:ss`, seconds with
+//! sub-second precision, and KB-denominated data sizes (the paper quotes
+//! sizes like `2^19 KB`).
+
+/// Format a duration in seconds as `hh:mm:ss` (paper table format).
+pub fn hms(seconds: f64) -> String {
+    let total = seconds.round() as i64;
+    let (h, rem) = (total / 3600, total % 3600);
+    let (m, s) = (rem / 60, rem % 60);
+    format!("{h:02}:{m:02}:{s:02}")
+}
+
+/// Format a duration in seconds as `hh:mm:ss.mmm` when sub-second detail
+/// matters (reinstating times are fractions of a second).
+pub fn hms_ms(seconds: f64) -> String {
+    let whole = seconds.floor();
+    let ms = ((seconds - whole) * 1000.0).round() as i64;
+    format!("{}.{ms:03}", hms(whole))
+}
+
+/// Human-readable seconds: chooses ms / s / m / h scale.
+pub fn secs(seconds: f64) -> String {
+    if seconds < 1.0 {
+        format!("{:.0} ms", seconds * 1e3)
+    } else if seconds < 120.0 {
+        format!("{seconds:.2} s")
+    } else if seconds < 7200.0 {
+        format!("{:.1} min", seconds / 60.0)
+    } else {
+        format!("{:.2} h", seconds / 3600.0)
+    }
+}
+
+/// Format a size given in **kilobytes** (the paper's unit) as a power of two
+/// plus a human-readable suffix, e.g. `2^19 KB (512 MiB)`.
+pub fn kb_pow2(kb: u64) -> String {
+    let log = (kb as f64).log2();
+    let human = human_bytes(kb.saturating_mul(1024));
+    if (log - log.round()).abs() < 1e-9 {
+        format!("2^{} KB ({human})", log.round() as u32)
+    } else {
+        format!("{kb} KB ({human})")
+    }
+}
+
+/// Human-readable byte count.
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hms_basic() {
+        assert_eq!(hms(0.0), "00:00:00");
+        assert_eq!(hms(3661.0), "01:01:01");
+        assert_eq!(hms(5.0 * 3600.0 + 27.0 * 60.0 + 15.0), "05:27:15");
+    }
+
+    #[test]
+    fn hms_rounds() {
+        assert_eq!(hms(59.6), "00:01:00");
+    }
+
+    #[test]
+    fn hms_ms_subsecond() {
+        assert_eq!(hms_ms(0.47), "00:00:00.470");
+        assert_eq!(hms_ms(65.038), "00:01:05.038");
+    }
+
+    #[test]
+    fn secs_scales() {
+        assert_eq!(secs(0.5), "500 ms");
+        assert_eq!(secs(2.0), "2.00 s");
+        assert!(secs(600.0).ends_with("min"));
+        assert!(secs(10_000.0).ends_with("h"));
+    }
+
+    #[test]
+    fn kb_pow2_exact() {
+        assert_eq!(kb_pow2(1 << 19), "2^19 KB (512.0 MiB)");
+        assert!(kb_pow2(1000).starts_with("1000 KB"));
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(10), "10 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(1 << 30), "1.0 GiB");
+    }
+}

@@ -1,0 +1,5 @@
+//! Small shared utilities: time/byte formatting, CLI parsing, config files.
+
+pub mod cli;
+pub mod conf;
+pub mod fmt;

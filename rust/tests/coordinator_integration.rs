@@ -1,0 +1,179 @@
+//! Integration: full failure→prediction→migration→completion story on the
+//! simulated cluster, composing injector, prober, predictor, scheduler and
+//! the migration episodes.
+
+use biomaft::agentft::simulate_agent_migration;
+use biomaft::cluster::core::{Core, CoreId, CoreState};
+use biomaft::cluster::{preset, ClusterPreset};
+use biomaft::coordinator::ftmanager::Strategy;
+use biomaft::coordinator::run::{window_row, ExperimentCfg};
+use biomaft::coordinator::scheduler::Placement;
+use biomaft::failure::injector::FailureProcess;
+use biomaft::failure::predictor::Predictor;
+use biomaft::failure::prober::Prober;
+use biomaft::job::{DepGraph, Job, JobKind};
+use biomaft::net::{NodeId, Topology};
+use biomaft::sim::{Rng, SimTime};
+
+/// Drive a probing loop on a doomed core until prediction, then migrate.
+#[test]
+fn failure_predicted_then_job_relocated_and_completed() {
+    let cluster = preset(ClusterPreset::Placentia);
+    let topo = Topology::ring(8, 2);
+    let graph = DepGraph::search_combine(3); // genome job: 3 searchers + combiner
+    let mut job = Job::decompose(JobKind::GenomeSearch, graph.len(), 1 << 19, 1 << 19, 3600.0);
+    let placement = Placement::round_robin(job.n_subs(), &topo);
+
+    // inject one failure on the node hosting sub-job 1
+    let victim_sub = biomaft::net::message::SubJobId(1);
+    let victim = placement.node_of(victim_sub);
+    let mut rng = Rng::new(5);
+    let plan = FailureProcess::Periodic { offset_s: 840.0 }.plan(1, 3600.0, 1, &mut rng);
+    let fails_at = plan.events[0].at;
+
+    // probing loop on the victim core
+    let mut core = Core::new(CoreId(victim.0), 64);
+    core.state = CoreState::Doomed { fails_at };
+    let prober = Prober::default();
+    let predictor = Predictor::default();
+    let mut t = 0.0;
+    let mut predicted_at = None;
+    while t < fails_at.as_secs() {
+        prober.probe(&mut core, SimTime::from_secs(t), &mut rng);
+        if let Some(p) = predictor.evaluate(&core, SimTime::from_secs(t)) {
+            predicted_at = Some(p.at);
+            break;
+        }
+        t += prober.period_s;
+    }
+    let predicted_at = predicted_at.expect("drifty failure must be predicted");
+    assert!(predicted_at < fails_at, "prediction must precede the failure");
+
+    // migrate: adjacency view marks the victim's neighbours healthy
+    let adjacent = placement.adjacency_view(victim_sub, &topo, |_| false);
+    job.subs[victim_sub.0].state = biomaft::job::SubJobState::Migrating;
+    let out = simulate_agent_migration(
+        &cluster.costs.agent,
+        graph.z(victim_sub),
+        1 << 19,
+        1 << 19,
+        &adjacent,
+        &mut rng,
+        0.02,
+    )
+    .expect("healthy neighbours exist");
+    assert!(out.reinstate_s < 1.0, "sub-second reinstatement: {}", out.reinstate_s);
+    assert!(topo.are_adjacent(victim, out.target), "moved to an adjacent node");
+
+    // reinstatement completes before the hardware actually fails only if
+    // prediction left enough lead; check the timeline composes
+    let done_at = predicted_at.as_secs() + out.reinstate_s;
+    assert!(done_at < fails_at.as_secs(), "migration completed before the failure struck");
+
+    // job finishes: mark everything done
+    for s in &mut job.subs {
+        s.state = biomaft::job::SubJobState::Done;
+    }
+    assert!(job.all_done());
+    assert!(!job.any_lost());
+}
+
+/// The four-cluster story of the figures composes through the public API.
+#[test]
+fn cross_cluster_reinstate_orderings() {
+    for z in [4usize, 10] {
+        let mut times = Vec::new();
+        for p in ClusterPreset::all() {
+            let cfg = ExperimentCfg {
+                z,
+                trials: 20,
+                ..ExperimentCfg::table1(preset(p))
+            };
+            let mut rng = Rng::new(77);
+            let s = biomaft::coordinator::run::measure_reinstate(Strategy::Agent, &cfg, &mut rng);
+            times.push((p.name(), s.mean));
+        }
+        // acet slowest, placentia fastest
+        assert!(times[0].1 > times[3].1, "{times:?}");
+    }
+}
+
+/// Table rows compose with every strategy without panicking, across
+/// periodicities and clusters.
+#[test]
+fn window_rows_compose_everywhere() {
+    for p in [ClusterPreset::Placentia, ClusterPreset::Acet] {
+        for period in [1.0, 2.0, 4.0] {
+            let cfg = ExperimentCfg::table2(preset(p), period);
+            for s in Strategy::all_table2() {
+                let r = window_row(s, &cfg);
+                assert!(r.total_nofail_s <= r.total_one_periodic_s);
+                assert!(r.total_one_periodic_s <= r.total_five_random_s + 1.0);
+            }
+        }
+    }
+}
+
+/// Unpredictable failures (no drift) are NOT predicted — the 71 % the paper
+/// says the approach misses; they must fall through to checkpointing.
+#[test]
+fn unpredictable_failure_not_predicted() {
+    let mut core = Core::new(CoreId(0), 64);
+    // instantaneous failure: doomed with zero lead (state stays healthy-looking)
+    let prober = Prober { drift_lead_s: 0.0, ..Default::default() };
+    let predictor = Predictor::default();
+    let mut rng = Rng::new(3);
+    core.state = CoreState::Doomed { fails_at: SimTime::from_secs(500.0) };
+    let mut t = 0.0;
+    while t < 500.0 {
+        prober.probe(&mut core, SimTime::from_secs(t), &mut rng);
+        assert!(
+            predictor.evaluate(&core, SimTime::from_secs(t)).is_none(),
+            "no-drift failure must not be predicted (t={t})"
+        );
+        t += prober.period_s;
+    }
+}
+
+/// Agents can survive several failures in sequence (migration storm):
+/// state machine stays consistent and the job is never lost.
+#[test]
+fn migration_storm_preserves_job() {
+    let cluster = preset(ClusterPreset::Glooscap);
+    let topo = Topology::ring(16, 2);
+    let mut agent = biomaft::agentft::Agent::new(
+        biomaft::net::message::SubJobId(0),
+        1,
+        "genome_search",
+        1 << 20,
+        1 << 20,
+        NodeId(0),
+        vec![biomaft::net::message::SubJobId(1), biomaft::net::message::SubJobId(2)],
+    );
+    let mut rng = Rng::new(11);
+    for round in 0..10 {
+        let adjacent: Vec<(NodeId, bool)> = topo
+            .neighbours(agent.home)
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (n, i == 0 && round % 2 == 0)) // some neighbours doomed
+            .collect();
+        let out = simulate_agent_migration(
+            &cluster.costs.agent,
+            agent.z(),
+            agent.data_kb,
+            agent.proc_kb,
+            &adjacent,
+            &mut rng,
+            0.02,
+        )
+        .expect("ring always has a healthy neighbour");
+        agent.start_move(out.target);
+        agent.finish_move();
+        assert_eq!(agent.home, out.target);
+        // dependencies survive every hop
+        assert_eq!(agent.z(), 2);
+    }
+    assert_eq!(agent.moves, 10);
+    assert!(matches!(agent.state, biomaft::agentft::AgentState::Executing));
+}

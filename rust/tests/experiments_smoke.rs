@@ -1,0 +1,69 @@
+//! Smoke tests: every registered experiment runs end-to-end at reduced
+//! trial counts and produces non-trivial output.
+
+use biomaft::experiments;
+
+#[test]
+fn every_experiment_runs() {
+    for e in experiments::list() {
+        // fig14 needs artifacts or falls back; either way it must run
+        let out = experiments::run_by_id(e.id, 3, 42)
+            .unwrap_or_else(|err| panic!("{} failed: {err}", e.id));
+        assert!(out.len() > 40, "{} output too small:\n{out}", e.id);
+    }
+}
+
+#[test]
+fn table1_contains_all_strategies() {
+    let out = experiments::run_by_id("table1", 3, 1).unwrap();
+    for needle in [
+        "centralised checkpointing, single server",
+        "centralised checkpointing, multiple servers",
+        "decentralised checkpointing, multiple servers",
+        "agent intelligence",
+        "core intelligence",
+        "hybrid intelligence",
+    ] {
+        assert!(out.contains(needle), "missing {needle}");
+    }
+}
+
+#[test]
+fn table2_contains_cold_restart_and_periodicities() {
+    let out = experiments::run_by_id("table2", 3, 1).unwrap();
+    assert!(out.contains("cold restart"));
+    for p in ["(1 h periodicity)", "(2 h periodicity)", "(4 h periodicity)"] {
+        assert!(out.contains(p), "missing {p}");
+    }
+}
+
+#[test]
+fn figure_csv_has_four_clusters() {
+    let out = experiments::run_by_id("fig9", 3, 1).unwrap();
+    for c in ["acet", "brasdor", "glooscap", "placentia"] {
+        assert!(out.contains(c), "missing {c}");
+    }
+}
+
+#[test]
+fn rules_experiment_reports_all_three_rules() {
+    let out = experiments::run_by_id("rules", 3, 1).unwrap();
+    for r in ["Rule 1", "Rule 2", "Rule 3"] {
+        assert!(out.contains(r), "missing {r}");
+    }
+    assert!(!out.contains(" NO "), "a decision rule failed:\n{out}");
+}
+
+#[test]
+fn prediction_experiment_reports_bands() {
+    let out = experiments::run_by_id("prediction", 3, 7).unwrap();
+    assert!(out.contains("coverage"));
+    assert!(out.contains("precision"));
+}
+
+#[test]
+fn deterministic_outputs_for_fixed_seed() {
+    let a = experiments::run_by_id("fig10", 3, 5).unwrap();
+    let b = experiments::run_by_id("fig10", 3, 5).unwrap();
+    assert_eq!(a, b);
+}

@@ -1,0 +1,236 @@
+//! Property-based tests over coordinator invariants (testkit framework).
+
+use biomaft::agentft::migration::{choose_target, simulate_agent_migration};
+use biomaft::cluster::{preset, ClusterPreset};
+use biomaft::coordinator::scheduler::Placement;
+use biomaft::coreft::simulate_core_migration;
+use biomaft::hybrid::negotiate::hybrid_reinstate_s;
+use biomaft::hybrid::rules::{decide, RuleInputs};
+use biomaft::job::DepGraph;
+use biomaft::net::message::SubJobId;
+use biomaft::net::{NodeId, Topology};
+use biomaft::sim::engine::{ActorId, Engine, Outbox};
+use biomaft::sim::{Rng, SimTime};
+use biomaft::testkit::{forall, Gen};
+
+fn any_preset(g: &mut Gen) -> ClusterPreset {
+    *g.pick(&ClusterPreset::all())
+}
+
+#[test]
+fn prop_migration_target_never_doomed() {
+    // routing invariant: a sub-job is never relocated onto a core that is
+    // itself predicted to fail
+    forall(300, 101, |g| {
+        let n = g.usize(1, 8);
+        let adjacent: Vec<(NodeId, bool)> =
+            (0..n).map(|i| (NodeId(i), g.bool())).collect();
+        let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+        match choose_target(&adjacent, &mut rng) {
+            Some(t) => {
+                let entry = adjacent.iter().find(|(id, _)| *id == t).unwrap();
+                assert!(!entry.1, "picked doomed target {t:?}");
+            }
+            None => assert!(adjacent.iter().all(|(_, d)| *d), "None despite healthy option"),
+        }
+    });
+}
+
+#[test]
+fn prop_des_episode_equals_closed_form() {
+    // the DES protocol and the calibrated closed form are the same model
+    forall(200, 102, |g| {
+        let p = any_preset(g);
+        let costs = preset(p).costs;
+        let z = g.usize(0, 64);
+        let data_kb = g.size_kb(10.0, 31.0);
+        let proc_kb = g.size_kb(10.0, 31.0);
+        let adjacent = vec![(NodeId(1), false)];
+        let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+        let a = simulate_agent_migration(&costs.agent, z, data_kb, proc_kb, &adjacent, &mut rng, 0.0)
+            .unwrap();
+        assert!((a.reinstate_s - costs.agent.reinstate_s(z, data_kb, proc_kb)).abs() < 1e-9);
+        let c = simulate_core_migration(&costs.core, z, data_kb, proc_kb, &adjacent, &mut rng, 0.0)
+            .unwrap();
+        assert!((c.reinstate_s - costs.core.reinstate_s(z, data_kb, proc_kb)).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_engine_deterministic_trace() {
+    // same seed + same actor program => identical event trace
+    forall(60, 103, |g| {
+        let seed = g.u64(0, u64::MAX - 1);
+        let steps = g.usize(1, 200) as u32;
+        let run = |seed: u64| {
+            let mut eng: Engine<u32> = Engine::new();
+            let mut rng = Rng::new(seed);
+            let a = eng.add_actor(Box::new(move |_me: ActorId, msg: u32, out: &mut Outbox<'_, u32>| {
+                if msg < steps {
+                    let delay = SimTime::from_micros(rng.uniform(1.0, 50.0));
+                    out.send_in(delay, ActorId(0), msg + 1);
+                }
+            }));
+            eng.capture_log(|m| *m as u64);
+            eng.schedule(SimTime::ZERO, a, 0);
+            eng.run();
+            eng.log().clone()
+        };
+        assert_eq!(run(seed), run(seed));
+    });
+}
+
+#[test]
+fn prop_engine_time_monotone() {
+    forall(50, 104, |g| {
+        let seed = g.u64(0, u64::MAX - 1);
+        let mut eng: Engine<u32> = Engine::new();
+        let mut rng = Rng::new(seed);
+        let a = eng.add_actor(Box::new(move |_me: ActorId, msg: u32, out: &mut Outbox<'_, u32>| {
+            if msg < 100 {
+                out.send_in(SimTime::from_micros(rng.uniform(0.0, 10.0)), ActorId(0), msg + 1);
+            }
+        }));
+        eng.capture_log(|m| *m as u64);
+        eng.schedule(SimTime::ZERO, a, 0);
+        eng.run();
+        let log = eng.log();
+        for w in log.windows(2) {
+            assert!(w[0].0 <= w[1].0, "virtual time went backwards");
+        }
+    });
+}
+
+#[test]
+fn prop_reduction_tree_is_dag_with_single_root() {
+    forall(200, 105, |g| {
+        let leaves = g.usize(1, 200);
+        let fan_in = g.usize(2, 16);
+        let t = DepGraph::reduction_tree(leaves, fan_in);
+        // topo_order panics on cycles
+        let order = t.topo_order();
+        assert_eq!(order.len(), t.len());
+        assert_eq!(t.roots().len(), 1);
+        assert_eq!(t.leaves().len(), leaves.min(t.len()));
+        // every non-root has exactly one output
+        for i in 0..t.len() {
+            let s = SubJobId(i);
+            if !t.roots().contains(&s) {
+                assert_eq!(t.outputs(s).len(), 1);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_graph_fingerprint_preserved_across_placement() {
+    // migration/placement must never mutate the dependency graph
+    forall(100, 106, |g| {
+        let leaves = g.usize(2, 64);
+        let fan_in = g.usize(2, 8);
+        let nodes = g.usize(2, 20);
+        let t = DepGraph::reduction_tree(leaves, fan_in);
+        let before = t.fingerprint();
+        let topo = Topology::ring(nodes, 1.max(g.usize(1, 3)));
+        let _p1 = Placement::round_robin(t.len(), &topo);
+        let _p2 = Placement::spread(&t, &topo);
+        assert_eq!(t.fingerprint(), before);
+    });
+}
+
+#[test]
+fn prop_hybrid_bounded_by_envelope() {
+    // hybrid never exceeds max(agent, core) + negotiation
+    forall(300, 107, |g| {
+        let p = any_preset(g);
+        let costs = preset(p).costs;
+        let inp = RuleInputs {
+            z: g.usize(0, 70),
+            data_kb: g.size_kb(10.0, 32.0),
+            proc_kb: g.size_kb(10.0, 32.0),
+        };
+        let h = hybrid_reinstate_s(&costs, inp);
+        let a = costs.agent.reinstate_s(inp.z, inp.data_kb, inp.proc_kb);
+        let c = costs.core.reinstate_s(inp.z, inp.data_kb, inp.proc_kb);
+        assert!(h <= a.max(c) + 1e-3, "h={h} a={a} c={c}");
+        // and the decision is total
+        let _ = decide(inp);
+    });
+}
+
+#[test]
+fn prop_placement_total_and_in_range() {
+    // no sub-job lost: every sub-job has exactly one host, in range
+    forall(200, 108, |g| {
+        let n_subs = g.usize(1, 300);
+        let n_nodes = g.usize(1, 50);
+        let topo = Topology::mesh(n_nodes);
+        let p = Placement::round_robin(n_subs, &topo);
+        assert_eq!(p.host.len(), n_subs);
+        let mut seen = vec![0usize; n_nodes];
+        for i in 0..n_subs {
+            let h = p.node_of(SubJobId(i));
+            assert!(h.0 < n_nodes);
+            seen[h.0] += 1;
+        }
+        // round robin balance: max-min <= 1
+        let max = seen.iter().max().unwrap();
+        let min = seen.iter().min().unwrap();
+        assert!(max - min <= 1, "imbalance {seen:?}");
+        // on_node is the exact inverse
+        let total: usize = (0..n_nodes).map(|n| p.on_node(NodeId(n)).len()).sum();
+        assert_eq!(total, n_subs);
+    });
+}
+
+#[test]
+fn prop_trial_noise_preserves_ordering_in_the_mean() {
+    // core < agent at Z<=10, S=2^24 must survive trial noise (30-trial mean)
+    forall(30, 109, |g| {
+        let costs = preset(ClusterPreset::Placentia).costs;
+        let z = g.usize(3, 11);
+        let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+        let adjacent = vec![(NodeId(1), false), (NodeId(2), false)];
+        let mean = |agent: bool, rng: &mut Rng| -> f64 {
+            (0..30)
+                .map(|_| {
+                    if agent {
+                        simulate_agent_migration(
+                            &costs.agent, z, 1 << 24, 1 << 24, &adjacent, rng, 0.025,
+                        )
+                        .unwrap()
+                        .reinstate_s
+                    } else {
+                        simulate_core_migration(
+                            &costs.core, z, 1 << 24, 1 << 24, &adjacent, rng, 0.025,
+                        )
+                        .unwrap()
+                        .reinstate_s
+                    }
+                })
+                .sum::<f64>()
+                / 30.0
+        };
+        let a = mean(true, &mut rng);
+        let c = mean(false, &mut rng);
+        assert!(c < a + 0.01, "z={z}: core {c} agent {a}");
+    });
+}
+
+#[test]
+fn prop_topologies_symmetric_and_self_free() {
+    forall(150, 110, |g| {
+        let n = g.usize(2, 60);
+        let topo = match g.usize(0, 3) {
+            0 => Topology::ring(n, g.usize(1, 4)),
+            1 => Topology::star(n),
+            _ => Topology::mesh(n),
+        };
+        for a in topo.nodes() {
+            assert!(!topo.neighbours(a).contains(&a), "self-loop at {a:?}");
+            for &b in topo.neighbours(a) {
+                assert!(topo.are_adjacent(b, a), "asymmetric edge {a:?}-{b:?}");
+            }
+        }
+    });
+}

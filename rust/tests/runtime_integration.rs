@@ -1,0 +1,136 @@
+//! Integration tests over the real AOT artifacts (requires `make artifacts`
+//! to have run; tests are skipped politely when artifacts are absent so
+//! `cargo test` stays green in a fresh checkout).
+
+use biomaft::genome::{self, encode::PAD, Strand};
+use biomaft::runtime::client::geom;
+use biomaft::runtime::{Manifest, Runtime};
+use biomaft::sim::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifacts load"))
+}
+
+#[test]
+fn reduce_matches_cpu_sum() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..geom::REDUCE_N).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+    let got = rt.reduce(&x).unwrap();
+    let want: f64 = x.iter().map(|&v| v as f64).sum();
+    assert!(
+        (got as f64 - want).abs() < 0.4,
+        "pjrt {got} vs cpu {want}"
+    );
+}
+
+#[test]
+fn genome_search_matches_naive_oracle() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(7);
+    // One synthetic chromosome that fits in a single chunk.
+    let genome = genome::synthesize_genome(20_000, 5);
+    let chr = &genome[4]; // chrV, the longest
+    let spec = genome::PatternSpec { n_patterns: 64, ..Default::default() };
+    let dict = genome::PatternDict::build(&spec, std::slice::from_ref(chr), &mut rng);
+
+    // pad chunk + dictionary block to AOT geometry
+    let mut seq = chr.seq.clone();
+    seq.resize(geom::CHUNK, PAD);
+    let (patterns, lengths) = dict.block(0, geom::N_PATTERNS);
+
+    let (mask, counts) = rt.genome_search(&seq, &patterns, &lengths).unwrap();
+
+    // collate and compare against the pure-rust naive scan
+    let mut hits = Vec::new();
+    genome::hits::collate_hits(
+        &mask,
+        geom::N_PATTERNS,
+        geom::CHUNK,
+        0,
+        chr.seq.len(),
+        0,
+        &lengths,
+        dict.n,
+        4,
+        Strand::Forward,
+        &mut hits,
+    );
+    genome::hits::dedup_hits(&mut hits);
+    let mut want = genome::search_naive(std::slice::from_ref(chr), &dict, Strand::Forward);
+    for h in &mut want {
+        h.chrom_idx = 4;
+    }
+    genome::hits::dedup_hits(&mut want);
+    assert_eq!(hits, want, "pjrt hits vs naive oracle");
+    assert!(!hits.is_empty(), "planted patterns should hit");
+
+    // counts column consistent with the mask
+    for p in 0..dict.n {
+        let row_hits =
+            mask[p * geom::CHUNK..(p + 1) * geom::CHUNK].iter().filter(|&&m| m != 0).count();
+        assert_eq!(counts[p] as usize, row_hits, "pattern {p}");
+    }
+}
+
+#[test]
+fn collate_merges_counts() {
+    let Some(rt) = runtime() else { return };
+    let mut counts = vec![0i32; geom::COLLATE_NODES * geom::N_PATTERNS];
+    for (i, c) in counts.iter_mut().enumerate() {
+        *c = (i % 7) as i32;
+    }
+    let merged = rt.collate(&counts).unwrap();
+    for p in 0..geom::N_PATTERNS {
+        let want: i32 = (0..geom::COLLATE_NODES).map(|n| counts[n * geom::N_PATTERNS + p]).sum();
+        assert_eq!(merged[p], want, "pattern {p}");
+    }
+}
+
+#[test]
+fn pool_runs_tasks_across_workers() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        return;
+    }
+    let mut rng = Rng::new(9);
+    let genome = genome::synthesize_genome(8_000, 2);
+    let chr = &genome[0];
+    let spec = genome::PatternSpec { n_patterns: 32, ..Default::default() };
+    let dict = genome::PatternDict::build(&spec, std::slice::from_ref(chr), &mut rng);
+    let (patterns, lengths) = dict.block(0, geom::N_PATTERNS);
+    let mut seq = chr.seq.clone();
+    seq.resize(geom::CHUNK, PAD);
+
+    let mut pool = biomaft::runtime::SearchPool::spawn(2, dir);
+    for t in 0..4 {
+        pool.submit(biomaft::runtime::SearchTask {
+            task_id: t,
+            chrom_idx: 0,
+            chunk_start: 0,
+            chrom_len: chr.seq.len(),
+            seq: seq.clone(),
+            patterns: patterns.clone(),
+            lengths: lengths.clone(),
+            pattern_base: 0,
+            n_real: dict.n,
+            reverse: false,
+        })
+        .unwrap();
+    }
+    let mut results = Vec::new();
+    for _ in 0..4 {
+        results.push(pool.recv().unwrap());
+    }
+    pool.shutdown();
+    assert_eq!(results.len(), 4);
+    // identical tasks → identical counts
+    for r in &results[1..] {
+        assert_eq!(r.counts, results[0].counts);
+    }
+}
