@@ -8,6 +8,10 @@ use biomaft::sim::Rng;
 
 fn main() {
     std::env::set_var("BIOMAFT_BENCH_SAMPLES", std::env::var("BIOMAFT_BENCH_SAMPLES").unwrap_or_else(|_| "10".into()));
+    if !cfg!(feature = "pjrt") {
+        println!("runtime_exec: built without the `pjrt` feature; skipping");
+        return;
+    }
     let dir = Manifest::default_dir();
     if !dir.join("manifest.txt").exists() {
         println!("runtime_exec: no artifacts at {dir:?} — run `make artifacts`; skipping");

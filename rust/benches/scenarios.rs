@@ -1,0 +1,69 @@
+//! Scenario batch-runner benchmark: serial vs parallel trial throughput.
+//!
+//! Emits a JSON baseline (BENCH_scenarios.json schema) so the perf
+//! trajectory of the batch runner can be tracked across PRs:
+//!
+//! ```text
+//! cd rust && BIOMAFT_BENCH_JSON=../BENCH_scenarios.json \
+//!     cargo bench --bench scenarios
+//! ```
+//!
+//! Environment knobs: `BIOMAFT_BENCH_TRIALS` (default 2000),
+//! `BIOMAFT_BENCH_JSON` (path to write; stdout when unset).
+
+use biomaft::coordinator::ftmanager::Strategy;
+use biomaft::scenario::{default_threads, run_batch, BatchCfg, FailureRegime, ScenarioSpec};
+
+fn spec() -> ScenarioSpec {
+    ScenarioSpec::placentia_ring16(
+        Strategy::Hybrid,
+        0.8,
+        16,
+        FailureRegime::ConcurrentK { k: 3, offset_s: 600.0, spacing_s: 60.0 },
+    )
+}
+
+fn main() {
+    let trials: usize = std::env::var("BIOMAFT_BENCH_TRIALS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+    let s = spec();
+    let cores = default_threads();
+
+    println!("=== bench suite: scenarios (batch runner, {trials} trials, {cores} cores) ===");
+    let serial = run_batch(&s, &BatchCfg { trials, base_seed: 1, threads: 1 });
+    println!(
+        "serial:   {:>10.3} s  ({:>10.1} trials/s)",
+        serial.wall_s, serial.trials_per_s
+    );
+    let parallel = run_batch(&s, &BatchCfg { trials, base_seed: 1, threads: 0 });
+    println!(
+        "parallel: {:>10.3} s  ({:>10.1} trials/s, {} threads)",
+        parallel.wall_s, parallel.trials_per_s, parallel.threads
+    );
+    let speedup = serial.wall_s / parallel.wall_s.max(1e-12);
+    println!("speedup:  {speedup:>10.2}x");
+    assert_eq!(
+        serial.completed_s, parallel.completed_s,
+        "batch results must be independent of thread count"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"scenario_batch\",\n  \"generated\": true,\n  \"machine_cores\": {cores},\n  \"trials\": {trials},\n  \"events_per_trial\": {:.1},\n  \"serial_s\": {:.4},\n  \"serial_trials_per_s\": {:.1},\n  \"parallel_s\": {:.4},\n  \"parallel_trials_per_s\": {:.1},\n  \"parallel_threads\": {},\n  \"speedup\": {:.2}\n}}\n",
+        serial.events as f64 / trials as f64,
+        serial.wall_s,
+        serial.trials_per_s,
+        parallel.wall_s,
+        parallel.trials_per_s,
+        parallel.threads,
+        speedup,
+    );
+    match std::env::var("BIOMAFT_BENCH_JSON") {
+        Ok(path) => {
+            std::fs::write(&path, &json).expect("write bench json");
+            println!("wrote {path}");
+        }
+        Err(_) => println!("{json}"),
+    }
+}

@@ -8,21 +8,20 @@
 //! variation. With jitter disabled the episode total equals
 //! `AgentCosts::reinstate_s` exactly (asserted in tests) — the DES and the
 //! closed form are two views of the same model.
+//!
+//! The episode runs on the generic [`sim::harness`](crate::sim::harness)
+//! scenario runtime. Randomness is split out of the simulation: a trial's
+//! draws ([`EpisodeDraws`]) are sampled *serially* from the caller's RNG
+//! (bit-compatible with the historical serial trial loop) and the episode
+//! itself is then fully deterministic — which is what lets
+//! `scenario::batch` fan trials across threads without changing a single
+//! result.
 
 use crate::cluster::spec::{size_log_factor, AgentCosts};
 use crate::net::NodeId;
-use crate::sim::engine::{ActorId, Engine, Outbox};
-use crate::sim::{Rng, SimTime};
-use std::cell::RefCell;
-use std::rc::Rc;
+use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime};
 
-/// One recorded protocol step (name, start, duration).
-#[derive(Debug, Clone, PartialEq)]
-pub struct StepTrace {
-    pub step: &'static str,
-    pub start_s: f64,
-    pub dur_s: f64,
-}
+pub use crate::sim::harness::StepTrace;
 
 /// Result of a migration episode.
 #[derive(Debug, Clone)]
@@ -52,32 +51,25 @@ struct EpisodeActor {
     proc_kb: u64,
     jitter: Vec<f64>,
     deps_done: usize,
-    trace: Rc<RefCell<Vec<StepTrace>>>,
-    finished: Rc<RefCell<Option<f64>>>,
 }
 
-impl EpisodeActor {
-    fn record(&self, step: &'static str, start: SimTime, dur: f64) {
-        self.trace.borrow_mut().push(StepTrace { step, start_s: start.as_secs(), dur_s: dur });
-    }
-}
+impl Scenario for EpisodeActor {
+    type Msg = Ep;
 
-impl crate::sim::engine::Actor<Ep> for EpisodeActor {
-    fn on_msg(&mut self, me: ActorId, msg: Ep, out: &mut Outbox<'_, Ep>) {
-        let now = out.now();
+    fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, Ep>, msg: Ep) {
         match msg {
             // P_PF learns of the prediction; request predictions from the
             // probing processes on all adjacent cores (parallel RTTs).
             Ep::PredictionNotified => {
                 let dur = self.costs.probe_gather_s * self.jitter[0];
-                self.record("gather_predictions", now, dur);
-                out.send_in(SimTime::from_secs(dur), me, Ep::PredictionsGathered);
+                ctx.record("gather_predictions", dur);
+                ctx.send_self_in_s(dur, Ep::PredictionsGathered);
             }
             // Create the replacement process on the chosen adjacent core.
             Ep::PredictionsGathered => {
                 let dur = self.costs.spawn_s * self.jitter[1];
-                self.record("spawn_process", now, dur);
-                out.send_in(SimTime::from_secs(dur), me, Ep::Spawned);
+                ctx.record("spawn_process", dur);
+                ctx.send_self_in_s(dur, Ep::Spawned);
             }
             // Transfer the agent's working state: handle/segment
             // registration scales with log2 of the payload sizes, plus the
@@ -87,8 +79,8 @@ impl crate::sim::engine::Actor<Ep> for EpisodeActor {
                     + self.costs.data_log_coef_s * size_log_factor(self.data_kb)
                     + self.costs.proc_log_coef_s * size_log_factor(self.proc_kb))
                     * self.jitter[2];
-                self.record("transfer_state", now, dur);
-                out.send_in(SimTime::from_secs(dur), me, Ep::StateTransferred);
+                ctx.record("transfer_state", dur);
+                ctx.send_self_in_s(dur, Ep::StateTransferred);
             }
             // Notify dependents and re-establish each dependency. The
             // handshakes pipeline through a window of `dep_window` parallel
@@ -97,8 +89,7 @@ impl crate::sim::engine::Actor<Ep> for EpisodeActor {
             // congestion cost. Completion times follow that schedule.
             Ep::StateTransferred => {
                 if self.z == 0 {
-                    self.finished.borrow_mut().replace(now.as_secs());
-                    out.stop = true;
+                    ctx.finish();
                     return;
                 }
                 let j = self.jitter[3];
@@ -108,16 +99,15 @@ impl crate::sim::engine::Actor<Ep> for EpisodeActor {
                     let mut off = self.costs.dep_handshake_s * (within + self.costs.dep_tail * beyond);
                     let over = (i + 1).saturating_sub(self.costs.congestion_threshold) as f64;
                     off += self.costs.congestion_s * over;
-                    out.send_in(SimTime::from_secs(off * j), me, Ep::DependencyDone { _idx: i });
+                    ctx.send_self_in_s(off * j, Ep::DependencyDone { _idx: i });
                 }
-                self.record("dependency_phase", now, self.costs.dep_phase_s(self.z) * j);
+                ctx.record("dependency_phase", self.costs.dep_phase_s(self.z) * j);
             }
             Ep::DependencyDone { .. } => {
                 self.deps_done += 1;
                 if self.deps_done == self.z {
                     // Old agent process terminated; new process fully wired.
-                    self.finished.borrow_mut().replace(now.as_secs());
-                    out.stop = true;
+                    ctx.finish();
                 }
             }
         }
@@ -140,6 +130,63 @@ pub fn choose_target(adjacent: &[(NodeId, bool)], rng: &mut Rng) -> Option<NodeI
     }
 }
 
+/// One trial's randomness for a migration episode, drawn serially from the
+/// caller's stream so the (deterministic) episode itself can run on any
+/// thread. The draw order — target pick, then per-step jitters — is
+/// bit-compatible with the historical in-episode draws.
+#[derive(Debug, Clone)]
+pub struct EpisodeDraws {
+    pub target: NodeId,
+    pub jitter: Vec<f64>,
+}
+
+/// Sample one episode's draws: the migration target plus `n_jitters`
+/// per-step factors (`noise_sigma <= 0` draws nothing and yields exact 1.0
+/// factors). `None` when every adjacent core is doomed.
+pub fn draw_episode(
+    n_jitters: usize,
+    adjacent: &[(NodeId, bool)],
+    rng: &mut Rng,
+    noise_sigma: f64,
+) -> Option<EpisodeDraws> {
+    let target = choose_target(adjacent, rng)?;
+    let jitter: Vec<f64> = (0..n_jitters)
+        .map(|_| if noise_sigma > 0.0 { rng.jitter(noise_sigma) } else { 1.0 })
+        .collect();
+    Some(EpisodeDraws { target, jitter })
+}
+
+/// Number of jittered steps in the agent episode (Fig. 3).
+pub const AGENT_JITTERS: usize = 4;
+
+/// Run one agent-intelligence migration episode from pre-sampled draws.
+/// Fully deterministic: same draws ⇒ same outcome, on any thread.
+pub fn simulate_agent_migration_drawn(
+    costs: &AgentCosts,
+    z: usize,
+    data_kb: u64,
+    proc_kb: u64,
+    draws: &EpisodeDraws,
+) -> MigrationOutcome {
+    assert!(draws.jitter.len() >= AGENT_JITTERS, "agent episode needs {AGENT_JITTERS} jitters");
+    let mut h = Harness::with_seed(0);
+    let id = h.add(EpisodeActor {
+        costs: *costs,
+        z,
+        data_kb,
+        proc_kb,
+        jitter: draws.jitter.clone(),
+        deps_done: 0,
+    });
+    h.schedule(SimTime::ZERO, id, Ep::PredictionNotified);
+    let fin = h.run();
+    MigrationOutcome {
+        reinstate_s: fin.finished_at.expect("episode did not finish").as_secs(),
+        target: draws.target,
+        steps: fin.trace,
+    }
+}
+
 /// Run one agent-intelligence migration episode.
 ///
 /// * `adjacent` — the agent's vicinity with per-core failure predictions.
@@ -154,29 +201,8 @@ pub fn simulate_agent_migration(
     rng: &mut Rng,
     noise_sigma: f64,
 ) -> Option<MigrationOutcome> {
-    let target = choose_target(adjacent, rng)?;
-    let jitter: Vec<f64> = (0..4)
-        .map(|_| if noise_sigma > 0.0 { rng.jitter(noise_sigma) } else { 1.0 })
-        .collect();
-    let trace = Rc::new(RefCell::new(Vec::new()));
-    let finished = Rc::new(RefCell::new(None));
-    let mut eng: Engine<Ep> = Engine::new();
-    let actor = EpisodeActor {
-        costs: *costs,
-        z,
-        data_kb,
-        proc_kb,
-        jitter,
-        deps_done: 0,
-        trace: trace.clone(),
-        finished: finished.clone(),
-    };
-    let id = eng.add_actor(Box::new(actor));
-    eng.schedule(SimTime::ZERO, id, Ep::PredictionNotified);
-    eng.run();
-    let reinstate_s = finished.borrow().expect("episode did not finish");
-    let steps = trace.borrow().clone();
-    Some(MigrationOutcome { reinstate_s, target, steps })
+    let draws = draw_episode(AGENT_JITTERS, adjacent, rng, noise_sigma)?;
+    Some(simulate_agent_migration_drawn(costs, z, data_kb, proc_kb, &draws))
 }
 
 #[cfg(test)]
@@ -286,5 +312,23 @@ mod tests {
         };
         assert_eq!(run(99), run(99));
         assert_ne!(run(99), run(100));
+    }
+
+    #[test]
+    fn drawn_episode_equals_inline_episode() {
+        // the serial-draw / deterministic-execute split is the same model
+        let costs = preset(ClusterPreset::Glooscap).costs.agent;
+        let inline = {
+            let mut rng = Rng::new(21);
+            simulate_agent_migration(&costs, 9, 1 << 23, 1 << 21, &adj(3), &mut rng, 0.03).unwrap()
+        };
+        let split = {
+            let mut rng = Rng::new(21);
+            let d = draw_episode(AGENT_JITTERS, &adj(3), &mut rng, 0.03).unwrap();
+            simulate_agent_migration_drawn(&costs, 9, 1 << 23, 1 << 21, &d)
+        };
+        assert_eq!(inline.reinstate_s, split.reinstate_s);
+        assert_eq!(inline.target, split.target);
+        assert_eq!(inline.steps, split.steps);
     }
 }

@@ -12,4 +12,7 @@ pub mod agent;
 pub mod migration;
 
 pub use agent::{Agent, AgentState};
-pub use migration::{simulate_agent_migration, MigrationOutcome, StepTrace};
+pub use migration::{
+    draw_episode, simulate_agent_migration, simulate_agent_migration_drawn, EpisodeDraws,
+    MigrationOutcome, StepTrace,
+};

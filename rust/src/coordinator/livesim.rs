@@ -8,6 +8,16 @@
 //! failures, agents migrate (or the checkpoint baseline rolls back), and
 //! the job completes. The two views must agree — that agreement is the
 //! strongest integration test the crate has.
+//!
+//! The system runs as one [`Scenario`] on the [`sim::harness`] runtime, and
+//! is the shared engine behind both the paper's single-failure experiments
+//! ([`run_live`]) and the multi-failure regimes of [`crate::scenario`]
+//! ([`run_live_with`]): concurrent and correlated failures arrive through a
+//! denser [`FailurePlan`], while cascades — a migration target itself
+//! failing mid-reinstate — are injected at migration time via
+//! [`CascadeSpec`].
+//!
+//! [`sim::harness`]: crate::sim::harness
 
 use crate::cluster::spec::FtCosts;
 use crate::coordinator::ftmanager::Strategy;
@@ -15,25 +25,25 @@ use crate::failure::injector::FailurePlan;
 use crate::hybrid::rules::{decide, Mover, RuleInputs};
 use crate::net::message::SubJobId;
 use crate::net::{NodeId, Topology};
-use crate::sim::engine::{ActorId, Engine, Outbox};
-use crate::sim::{Rng, SimTime};
-use std::cell::RefCell;
-use std::rc::Rc;
+use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime};
 
 /// Events of the live simulation.
 #[derive(Debug, Clone)]
 enum Ev {
     /// A core is doomed: the prediction (if the failure is predictable)
-    /// will fire `predict_lead_s` before the failure.
-    Doom { node: NodeId, predictable: bool },
+    /// fires immediately and the hardware fails `fail_in_s` later (the
+    /// prediction lead for planned failures; the cascade lag for follow-on
+    /// dooms). `cascade` marks a follow-on doom injected at migration time.
+    Doom { node: NodeId, predictable: bool, cascade: bool, fail_in_s: f64 },
     /// A prediction fires for a node.
     Prediction { node: NodeId },
     /// The hardware actually fails.
     Failure { node: NodeId },
     /// A migration episode completes; the sub-job resumes on `to`.
     MigrationDone { sub: SubJobId, to: NodeId },
-    /// Checkpoint recovery completes; lost sub-jobs resume.
-    RecoveryDone { _node: NodeId },
+    /// Checkpoint recovery for `node`'s failure completes; the sub-jobs
+    /// lost to *that* failure resume.
+    RecoveryDone { node: NodeId },
     /// A sub-job finishes its compute.
     SubJobDone { sub: SubJobId },
 }
@@ -43,17 +53,20 @@ enum Ev {
 enum LiveState {
     Running { done_at: SimTime },
     Migrating { resume_remaining_s: f64 },
-    Recovering { resume_remaining_s: f64 },
+    /// Lost to `from`'s failure; resumes when that failure's recovery ends.
+    Recovering { resume_remaining_s: f64, from: NodeId },
     Done,
 }
 
 /// Result of a live run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct LiveOutcome {
     pub completed_at_s: f64,
     pub migrations: usize,
     pub rollbacks: usize,
     pub lost_then_recovered: usize,
+    /// Follow-on failures injected on migration targets (cascade regimes).
+    pub cascades: usize,
     /// Virtual-time event trace length (for determinism checks).
     pub events: u64,
 }
@@ -77,14 +90,29 @@ pub struct LiveCfg {
     pub seed: u64,
 }
 
+/// Cascade regime: every migration's target node itself fails with
+/// probability `p_follow`, the hardware failure striking `lag_s` after the
+/// migration *starts* — the "the core we just moved to dies too" scenario
+/// the paper's single-failure model cannot express. A `lag_s` below the
+/// reinstate time kills the migration in flight (the sub-job is lost
+/// mid-reinstate and rolls back); a larger `lag_s` lets the agent land,
+/// learn of the standing prediction, and flee again.
+#[derive(Debug, Clone, Copy)]
+pub struct CascadeSpec {
+    pub p_follow: f64,
+    pub lag_s: f64,
+}
+
 struct System {
     cfg: LiveCfg,
     topo: Topology,
     host: Vec<NodeId>,
     state: Vec<LiveState>,
     doomed: Vec<bool>,
-    rng: Rng,
-    outcome: Rc<RefCell<LiveOutcome>>,
+    /// Nodes with a standing (predictable) failure prediction.
+    predicted: Vec<bool>,
+    cascade: Option<CascadeSpec>,
+    outcome: LiveOutcome,
 }
 
 impl System {
@@ -96,7 +124,7 @@ impl System {
         self.state.iter().all(|s| matches!(s, LiveState::Done))
     }
 
-    fn reinstate_s(&mut self, z: usize) -> f64 {
+    fn reinstate_s(&self, z: usize, ctx: &mut Ctx<'_, '_, Ev>) -> f64 {
         let inp = RuleInputs { z, data_kb: self.cfg.data_kb, proc_kb: self.cfg.proc_kb };
         let base = match self.cfg.strategy {
             Strategy::Agent => self.cfg.costs.agent.reinstate_s(z, inp.data_kb, inp.proc_kb),
@@ -107,10 +135,10 @@ impl System {
             },
             _ => panic!("livesim supports multi-agent strategies + checkpoint recovery"),
         };
-        base * self.rng.jitter(self.cfg.costs.noise_sigma)
+        base * ctx.rng().jitter(self.cfg.costs.noise_sigma)
     }
 
-    fn pick_target(&mut self, from: NodeId) -> Option<NodeId> {
+    fn pick_target(&self, from: NodeId, ctx: &mut Ctx<'_, '_, Ev>) -> Option<NodeId> {
         let healthy: Vec<NodeId> = self
             .topo
             .neighbours(from)
@@ -121,38 +149,71 @@ impl System {
         if healthy.is_empty() {
             None
         } else {
-            Some(*self.rng.pick(&healthy))
+            Some(*ctx.rng().pick(&healthy))
         }
     }
 }
 
-impl crate::sim::engine::Actor<Ev> for System {
-    fn on_msg(&mut self, me: ActorId, ev: Ev, out: &mut Outbox<'_, Ev>) {
-        let now = out.now();
+impl Scenario for System {
+    type Msg = Ev;
+
+    fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, Ev>, ev: Ev) {
+        let now = ctx.now();
+        let me = ctx.me();
         match ev {
-            Ev::Doom { node, predictable } => {
-                self.doomed[node.0] = true;
-                let lead = self.cfg.costs.predict.predict_time_s + 20.0;
-                if predictable {
-                    out.send_in(SimTime::from_secs(0.0), me, Ev::Prediction { node });
+            Ev::Doom { node, predictable, cascade, fail_in_s } => {
+                if self.doomed[node.0] {
+                    // Already doomed (duplicate plan entry or a cascade onto
+                    // a node another cascade reached first): a node fails
+                    // once.
+                    return;
                 }
-                out.send_in(SimTime::from_secs(lead), me, Ev::Failure { node });
+                self.doomed[node.0] = true;
+                if cascade {
+                    // counted here, after the dedup guard, so the tally is
+                    // follow-on failures that actually happened
+                    self.outcome.cascades += 1;
+                }
+                if predictable {
+                    self.predicted[node.0] = true;
+                    ctx.send_in(SimTime::from_secs(0.0), me, Ev::Prediction { node });
+                }
+                ctx.send_in(SimTime::from_secs(fail_in_s), me, Ev::Failure { node });
             }
             Ev::Prediction { node } => {
                 // proactive path: migrate every sub-job on the node
                 for sub in self.subs_on(node) {
                     if let LiveState::Running { done_at } = self.state[sub.0] {
                         let remaining = (done_at.saturating_sub(now)).as_secs();
-                        let dur = self.reinstate_s(self.cfg.z);
-                        if let Some(target) = self.pick_target(node) {
+                        let dur = self.reinstate_s(self.cfg.z, ctx);
+                        if let Some(target) = self.pick_target(node, ctx) {
                             self.state[sub.0] =
                                 LiveState::Migrating { resume_remaining_s: remaining };
                             self.host[sub.0] = target;
-                            out.send_in(
+                            ctx.send_in(
                                 SimTime::from_secs(dur),
                                 me,
                                 Ev::MigrationDone { sub, to: target },
                             );
+                            // Cascade regimes: the chosen target is doomed
+                            // right as the migration starts and fails
+                            // `lag_s` later — possibly mid-reinstate.
+                            if let Some(c) = self.cascade {
+                                if ctx.rng().chance(c.p_follow) {
+                                    let predictable =
+                                        ctx.rng().chance(self.cfg.predictable_frac);
+                                    ctx.send_in(
+                                        SimTime::from_secs(0.0),
+                                        me,
+                                        Ev::Doom {
+                                            node: target,
+                                            predictable,
+                                            cascade: true,
+                                            fail_in_s: c.lag_s,
+                                        },
+                                    );
+                                }
+                            }
                         }
                         // no healthy neighbour: stay put; the failure path
                         // will trigger rollback.
@@ -160,47 +221,91 @@ impl crate::sim::engine::Actor<Ev> for System {
                 }
             }
             Ev::Failure { node } => {
-                // any sub-job still on the failed node is lost → reactive
-                // rollback (the combined design's second line)
-                let lost = self
+                // Any sub-job still on the failed node is lost → reactive
+                // rollback (the combined design's second line). A sub-job
+                // caught *mid-migration onto* the failed node (possible only
+                // in multi-failure regimes) loses its in-flight move too.
+                let lost: Vec<SubJobId> = self
                     .subs_on(node)
                     .into_iter()
-                    .filter(|s| matches!(self.state[s.0], LiveState::Running { .. }))
-                    .collect::<Vec<_>>();
+                    .filter(|s| {
+                        matches!(
+                            self.state[s.0],
+                            LiveState::Running { .. } | LiveState::Migrating { .. }
+                        )
+                    })
+                    .collect();
                 if !lost.is_empty() {
                     for sub in &lost {
-                        if let LiveState::Running { done_at } = self.state[sub.0] {
-                            let remaining = (done_at.saturating_sub(now)).as_secs();
-                            self.state[sub.0] =
-                                LiveState::Recovering { resume_remaining_s: remaining };
-                            // move it off the dead node for the resume
-                            if let Some(t) = self.pick_target(node) {
-                                self.host[sub.0] = t;
+                        match self.state[sub.0] {
+                            LiveState::Running { done_at } => {
+                                let remaining = (done_at.saturating_sub(now)).as_secs();
+                                self.state[sub.0] = LiveState::Recovering {
+                                    resume_remaining_s: remaining,
+                                    from: node,
+                                };
                             }
+                            LiveState::Migrating { resume_remaining_s } => {
+                                // the migration aborts; its MigrationDone
+                                // event will find a non-Migrating state and
+                                // be ignored
+                                self.state[sub.0] = LiveState::Recovering {
+                                    resume_remaining_s,
+                                    from: node,
+                                };
+                            }
+                            _ => unreachable!("lost set is Running|Migrating"),
+                        }
+                        // move it off the dead node for the resume
+                        if let Some(t) = self.pick_target(node, ctx) {
+                            self.host[sub.0] = t;
                         }
                     }
                     let dur = self.cfg.ckpt_reinstate_s + self.cfg.ckpt_overhead_s;
-                    self.outcome.borrow_mut().rollbacks += 1;
-                    self.outcome.borrow_mut().lost_then_recovered += lost.len();
-                    out.send_in(SimTime::from_secs(dur), me, Ev::RecoveryDone { _node: node });
+                    self.outcome.rollbacks += 1;
+                    self.outcome.lost_then_recovered += lost.len();
+                    ctx.send_in(SimTime::from_secs(dur), me, Ev::RecoveryDone { node });
                 }
             }
             Ev::MigrationDone { sub, to } => {
                 if let LiveState::Migrating { resume_remaining_s } = self.state[sub.0] {
                     debug_assert_eq!(self.host[sub.0], to);
-                    debug_assert!(!self.doomed[to.0], "migrated onto a doomed node");
+                    // NB: `to` *can* be doomed here under multi-failure
+                    // regimes — the sub-job lands and its loss is the
+                    // target's pending Failure event's business.
                     let done_at = now + SimTime::from_secs(resume_remaining_s);
                     self.state[sub.0] = LiveState::Running { done_at };
-                    self.outcome.borrow_mut().migrations += 1;
-                    out.send_at(done_at, me, Ev::SubJobDone { sub });
+                    self.outcome.migrations += 1;
+                    ctx.send_at(done_at, me, Ev::SubJobDone { sub });
+                    // The landed agent gathers predictions on arrival
+                    // (Fig. 3 step 1): a standing prediction for this very
+                    // node sends it fleeing again — the proactive escape
+                    // down a cascade's doom chain.
+                    if self.predicted[to.0] {
+                        ctx.send_in(SimTime::from_secs(0.0), me, Ev::Prediction { node: to });
+                    }
                 }
             }
-            Ev::RecoveryDone { .. } => {
+            Ev::RecoveryDone { node } => {
+                // Only this failure's casualties resume; sub-jobs lost to a
+                // later, still-running recovery keep waiting for their own
+                // (multi-failure regimes can have overlapping rollbacks).
                 for i in 0..self.state.len() {
-                    if let LiveState::Recovering { resume_remaining_s } = self.state[i] {
-                        let done_at = now + SimTime::from_secs(resume_remaining_s);
-                        self.state[i] = LiveState::Running { done_at };
-                        out.send_at(done_at, me, Ev::SubJobDone { sub: SubJobId(i) });
+                    if let LiveState::Recovering { resume_remaining_s, from } = self.state[i] {
+                        if from == node {
+                            // the resume host chosen at loss time may itself
+                            // have been doomed while the rollback ran
+                            // (multi-failure regimes): re-home before
+                            // resuming rather than running on a dead node
+                            if self.doomed[self.host[i].0] {
+                                if let Some(t) = self.pick_target(self.host[i], ctx) {
+                                    self.host[i] = t;
+                                }
+                            }
+                            let done_at = now + SimTime::from_secs(resume_remaining_s);
+                            self.state[i] = LiveState::Running { done_at };
+                            ctx.send_at(done_at, me, Ev::SubJobDone { sub: SubJobId(i) });
+                        }
                     }
                 }
             }
@@ -213,25 +318,29 @@ impl crate::sim::engine::Actor<Ev> for System {
                     // ignored because done_at moved.
                 }
                 if self.all_done() {
-                    let mut o = self.outcome.borrow_mut();
-                    o.completed_at_s = now.as_secs();
-                    out.stop = true;
+                    self.outcome.completed_at_s = now.as_secs();
+                    ctx.stop();
                 }
             }
         }
     }
 }
 
-/// Run a live simulation of `cfg` under a failure plan.
+/// Run a live simulation of `cfg` under a failure plan (the paper's
+/// single-failure regimes; no cascades).
 pub fn run_live(cfg: &LiveCfg, topo: &Topology, plan: &FailurePlan) -> LiveOutcome {
+    run_live_with(cfg, topo, plan, None)
+}
+
+/// Run a live simulation with an optional cascade regime layered on top of
+/// the plan. With `cascade = None` this is bit-identical to [`run_live`].
+pub fn run_live_with(
+    cfg: &LiveCfg,
+    topo: &Topology,
+    plan: &FailurePlan,
+    cascade: Option<CascadeSpec>,
+) -> LiveOutcome {
     let mut rng = Rng::new(cfg.seed);
-    let outcome = Rc::new(RefCell::new(LiveOutcome {
-        completed_at_s: 0.0,
-        migrations: 0,
-        rollbacks: 0,
-        lost_then_recovered: 0,
-        events: 0,
-    }));
     let host: Vec<NodeId> = (0..cfg.n_subs).map(|i| NodeId(i % topo.len())).collect();
     let state: Vec<LiveState> = (0..cfg.n_subs)
         .map(|_| LiveState::Running { done_at: SimTime::from_secs(cfg.compute_s) })
@@ -243,24 +352,30 @@ pub fn run_live(cfg: &LiveCfg, topo: &Topology, plan: &FailurePlan) -> LiveOutco
         host,
         state,
         doomed: vec![false; topo.len()],
-        rng: rng.fork(1),
-        outcome: outcome.clone(),
+        predicted: vec![false; topo.len()],
+        cascade,
+        outcome: LiveOutcome::default(),
     };
-    let mut eng: Engine<Ev> = Engine::new();
-    let sys = eng.add_actor(Box::new(system));
+    let mut h = Harness::new(rng.fork(1));
+    let sys = h.add(system);
     for i in 0..cfg.n_subs {
-        eng.schedule(SimTime::from_secs(cfg.compute_s), sys, Ev::SubJobDone { sub: SubJobId(i) });
+        h.schedule(SimTime::from_secs(cfg.compute_s), sys, Ev::SubJobDone { sub: SubJobId(i) });
     }
     let lead = cfg.costs.predict.predict_time_s + 20.0;
     for e in &plan.events {
         let predictable = rng.chance(predictable_frac);
         let doom_at = e.at.saturating_sub(SimTime::from_secs(lead));
-        eng.schedule(doom_at, sys, Ev::Doom { node: e.node, predictable });
+        h.schedule(
+            doom_at,
+            sys,
+            Ev::Doom { node: e.node, predictable, cascade: false, fail_in_s: lead },
+        );
     }
-    eng.run();
-    let mut o = outcome.borrow().clone();
-    o.events = eng.dispatched();
-    o
+    let fin = h.run();
+    let events = fin.events;
+    let mut outcome = fin.into_scenario().outcome;
+    outcome.events = events;
+    outcome
 }
 
 #[cfg(test)]
@@ -360,5 +475,66 @@ mod tests {
         let b = run_live(&cfg(Strategy::Agent, 0.5), &topo(), &plan);
         assert_eq!(a.completed_at_s, b.completed_at_s);
         assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn cascade_none_is_bit_identical_to_run_live() {
+        let mut rng = Rng::new(8);
+        let plan = FailureProcess::RandomUniformK { k: 4 }.plan(1, 3600.0, 8, &mut rng);
+        let c = cfg(Strategy::Hybrid, 0.7);
+        let a = run_live(&c, &topo(), &plan);
+        let b = run_live_with(&c, &topo(), &plan, None);
+        assert_eq!(a.completed_at_s, b.completed_at_s);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.rollbacks, b.rollbacks);
+        assert_eq!(a.cascades, 0);
+    }
+
+    #[test]
+    fn cascades_trigger_followon_failures() {
+        let mut rng = Rng::new(9);
+        let plan = FailureProcess::Periodic { offset_s: 900.0 }.plan(1, 3600.0, 1, &mut rng);
+        let c = cfg(Strategy::Core, 1.0);
+        // lag well above the sub-second reinstate: the agent lands, learns
+        // of the standing prediction, and flees down the doom chain
+        let cascade = CascadeSpec { p_follow: 1.0, lag_s: 5.0 };
+        let o = run_live_with(&c, &topo(), &plan, Some(cascade));
+        // the first migration's target is always doomed in turn
+        assert!(o.cascades >= 1, "{o:?}");
+        // the job still completes (predictable cascade ⇒ chain of migrations)
+        assert!(o.completed_at_s >= 3600.0);
+        assert!(o.migrations >= 2 || o.rollbacks >= 1, "{o:?}");
+    }
+
+    #[test]
+    fn cascade_below_reinstate_kills_migration_in_flight() {
+        let mut rng = Rng::new(11);
+        let plan = FailureProcess::Periodic { offset_s: 900.0 }.plan(1, 3600.0, 1, &mut rng);
+        let c = cfg(Strategy::Core, 1.0);
+        // the target fails 0.1 s after the migration starts — well inside
+        // the ~0.38 s reinstate, so the in-flight move is lost and the
+        // sub-job falls back to checkpoint rollback
+        let cascade = CascadeSpec { p_follow: 1.0, lag_s: 0.1 };
+        let o = run_live_with(&c, &topo(), &plan, Some(cascade));
+        assert!(o.cascades >= 1, "{o:?}");
+        assert!(o.rollbacks >= 1, "mid-reinstate loss must roll back: {o:?}");
+        assert!(o.lost_then_recovered >= 1, "{o:?}");
+        assert!(
+            o.completed_at_s >= 3600.0 + 848.0 + 485.0 - 1.0,
+            "rollback cost must show: {}",
+            o.completed_at_s
+        );
+    }
+
+    #[test]
+    fn cascade_costs_more_than_single_failure() {
+        let mut rng = Rng::new(10);
+        let plan = FailureProcess::Periodic { offset_s: 600.0 }.plan(1, 3600.0, 1, &mut rng);
+        let c = cfg(Strategy::Hybrid, 1.0);
+        let single = run_live(&c, &topo(), &plan);
+        let casc =
+            run_live_with(&c, &topo(), &plan, Some(CascadeSpec { p_follow: 1.0, lag_s: 5.0 }));
+        assert!(casc.completed_at_s >= single.completed_at_s, "{casc:?} vs {single:?}");
     }
 }

@@ -18,14 +18,17 @@
 //! [`crate::checkpoint::cold_restart`].
 
 use super::ftmanager::Strategy;
+use crate::agentft::migration::{draw_episode, EpisodeDraws, AGENT_JITTERS};
+use crate::agentft::simulate_agent_migration_drawn;
 use crate::checkpoint::cold_restart::{mean_cold_restart, ColdRestartParams};
 use crate::checkpoint::{periodicity_factors, CheckpointStrategy};
 use crate::cluster::ClusterSpec;
-use crate::coreft::simulate_core_migration;
+use crate::coreft::migration::CORE_JITTERS;
+use crate::coreft::simulate_core_migration_drawn;
 use crate::hybrid::rules::{decide, Mover, RuleInputs};
 use crate::metrics::Summary;
 use crate::net::NodeId;
-use crate::agentft::simulate_agent_migration;
+use crate::scenario::batch;
 use crate::sim::Rng;
 
 /// Configuration of a window experiment (one Table-1/Table-2 cell group).
@@ -72,58 +75,59 @@ impl ExperimentCfg {
     }
 }
 
+/// Parallelise only when a sweep is large enough to amortise thread spawn.
+const PARALLEL_TRIAL_THRESHOLD: usize = 64;
+
 /// Measure the mean reinstate time of a multi-agent strategy over `trials`
 /// DES episodes with trial noise (the paper's 30-trial means, ΔT_A2/ΔT_C2).
+///
+/// Each trial's randomness is drawn *serially* from `rng` — bit-compatible
+/// with the historical serial trial loop, so Tables 1–2 and Figs. 8–13
+/// reproduce exactly — and the deterministic episodes then execute through
+/// the batch runner, in parallel for large sweeps.
 pub fn measure_reinstate(
     strategy: Strategy,
     cfg: &ExperimentCfg,
     rng: &mut Rng,
 ) -> Summary {
-    let costs = &cfg.cluster.costs;
+    let costs = cfg.cluster.costs;
     let adjacent: Vec<(NodeId, bool)> = (1..=3).map(|i| (NodeId(i), false)).collect();
     let sigma = costs.noise_sigma;
-    let xs: Vec<f64> = (0..cfg.trials.max(1))
-        .map(|_| match strategy {
-            Strategy::Agent => {
-                simulate_agent_migration(
-                    &costs.agent, cfg.z, cfg.data_kb, cfg.proc_kb, &adjacent, rng, sigma,
-                )
-                .expect("healthy adjacent exists")
-                .reinstate_s
-            }
-            Strategy::Core => {
-                simulate_core_migration(
-                    &costs.core, cfg.z, cfg.data_kb, cfg.proc_kb, &adjacent, rng, sigma,
-                )
-                .expect("healthy adjacent exists")
-                .reinstate_s
-            }
-            Strategy::Hybrid => {
-                let inp = RuleInputs { z: cfg.z, data_kb: cfg.data_kb, proc_kb: cfg.proc_kb };
-                const NEGOTIATION_S: f64 = 0.4e-3;
-                NEGOTIATION_S
-                    + match decide(inp).0 {
-                        Mover::Agent => {
-                            simulate_agent_migration(
-                                &costs.agent, cfg.z, cfg.data_kb, cfg.proc_kb, &adjacent, rng,
-                                sigma,
-                            )
-                            .unwrap()
-                            .reinstate_s
-                        }
-                        Mover::Core => {
-                            simulate_core_migration(
-                                &costs.core, cfg.z, cfg.data_kb, cfg.proc_kb, &adjacent, rng,
-                                sigma,
-                            )
-                            .unwrap()
-                            .reinstate_s
-                        }
-                    }
-            }
-            _ => panic!("measure_reinstate is for multi-agent strategies"),
-        })
+    let trials = cfg.trials.max(1);
+    const NEGOTIATION_S: f64 = 0.4e-3;
+    // The hybrid decision is a pure function of the (fixed) trial inputs,
+    // so the per-trial `decide` of the old loop is hoisted here.
+    let (mover, extra_s) = match strategy {
+        Strategy::Agent => (Mover::Agent, 0.0),
+        Strategy::Core => (Mover::Core, 0.0),
+        Strategy::Hybrid => {
+            let inp = RuleInputs { z: cfg.z, data_kb: cfg.data_kb, proc_kb: cfg.proc_kb };
+            (decide(inp).0, NEGOTIATION_S)
+        }
+        _ => panic!("measure_reinstate is for multi-agent strategies"),
+    };
+    let n_jitters = match mover {
+        Mover::Agent => AGENT_JITTERS,
+        Mover::Core => CORE_JITTERS,
+    };
+    let draws: Vec<EpisodeDraws> = (0..trials)
+        .map(|_| draw_episode(n_jitters, &adjacent, rng, sigma).expect("healthy adjacent exists"))
         .collect();
+    let threads = if trials >= PARALLEL_TRIAL_THRESHOLD { 0 } else { 1 };
+    let (z, data_kb, proc_kb) = (cfg.z, cfg.data_kb, cfg.proc_kb);
+    let xs = batch::parallel_map_trials(trials, threads, |i| {
+        extra_s
+            + match mover {
+                Mover::Agent => {
+                    simulate_agent_migration_drawn(&costs.agent, z, data_kb, proc_kb, &draws[i])
+                        .reinstate_s
+                }
+                Mover::Core => {
+                    simulate_core_migration_drawn(&costs.core, z, data_kb, proc_kb, &draws[i])
+                        .reinstate_s
+                }
+            }
+    });
     Summary::of(&xs)
 }
 

@@ -6,14 +6,17 @@
 //! the dependency tables (automatic re-binding — no per-dependency
 //! handshake by the job itself, but the runtime's rebind rounds still cost
 //! time and diverge across clusters beyond the window, Fig. 9).
+//!
+//! Like the agent episode, this runs on the [`sim::harness`] scenario
+//! runtime with its randomness pre-sampled into [`EpisodeDraws`], so trials
+//! draw serially but execute deterministically (and therefore in parallel).
+//!
+//! [`sim::harness`]: crate::sim::harness
 
-use crate::agentft::migration::{choose_target, StepTrace};
+use crate::agentft::migration::{draw_episode, EpisodeDraws, StepTrace};
 use crate::cluster::spec::{size_log_factor, CoreCosts};
 use crate::net::NodeId;
-use crate::sim::engine::{ActorId, Engine, Outbox};
-use crate::sim::{Rng, SimTime};
-use std::cell::RefCell;
-use std::rc::Rc;
+use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime};
 
 /// Result of a core-intelligence migration episode.
 #[derive(Debug, Clone)]
@@ -39,15 +42,9 @@ struct EpisodeActor {
     proc_kb: u64,
     jitter: Vec<f64>,
     rebinds_done: usize,
-    trace: Rc<RefCell<Vec<StepTrace>>>,
-    finished: Rc<RefCell<Option<f64>>>,
 }
 
 impl EpisodeActor {
-    fn record(&self, step: &'static str, start: SimTime, dur: f64) {
-        self.trace.borrow_mut().push(StepTrace { step, start_s: start.as_secs(), dur_s: dur });
-    }
-
     fn data_term_s(&self) -> f64 {
         let u = size_log_factor(self.data_kb);
         let over = (u - self.costs.data_overflow_threshold).max(0.0);
@@ -57,29 +54,29 @@ impl EpisodeActor {
     }
 }
 
-impl crate::sim::engine::Actor<Ep> for EpisodeActor {
-    fn on_msg(&mut self, me: ActorId, msg: Ep, out: &mut Outbox<'_, Ep>) {
-        let now = out.now();
+impl Scenario for EpisodeActor {
+    type Msg = Ep;
+
+    fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, Ep>, msg: Ep) {
         match msg {
             Ep::PredictionNotified => {
                 let dur = self.costs.probe_gather_s * self.jitter[0];
-                self.record("gather_predictions", now, dur);
-                out.send_in(SimTime::from_secs(dur), me, Ep::PredictionsGathered);
+                ctx.record("gather_predictions", dur);
+                ctx.send_self_in_s(dur, Ep::PredictionsGathered);
             }
             // Object migration: serialization machinery setup plus the
             // handle/segment registration for data + process image.
             Ep::PredictionsGathered => {
                 let dur = (self.costs.migrate_setup_s + self.data_term_s()) * self.jitter[1];
-                self.record("migrate_object", now, dur);
-                out.send_in(SimTime::from_secs(dur), me, Ep::ObjectMigrated);
+                ctx.record("migrate_object", dur);
+                ctx.send_self_in_s(dur, Ep::ObjectMigrated);
             }
             // Runtime dependency-table rebind rounds: windowed like the
             // agent handshakes but owned by the runtime, with a
             // cluster-specific overlap tail (Fig. 9 divergence).
             Ep::ObjectMigrated => {
                 if self.z == 0 {
-                    self.finished.borrow_mut().replace(now.as_secs());
-                    out.stop = true;
+                    ctx.finish();
                     return;
                 }
                 let j = self.jitter[2];
@@ -87,18 +84,48 @@ impl crate::sim::engine::Actor<Ep> for EpisodeActor {
                     let within = (i + 1).min(self.costs.rebind_window) as f64;
                     let beyond = (i + 1).saturating_sub(self.costs.rebind_window) as f64;
                     let off = self.costs.rebind_round_s * (within + self.costs.rebind_tail * beyond);
-                    out.send_in(SimTime::from_secs(off * j), me, Ep::RebindDone { _idx: i });
+                    ctx.send_self_in_s(off * j, Ep::RebindDone { _idx: i });
                 }
-                self.record("rebind_phase", now, self.costs.rebind_phase_s(self.z) * j);
+                ctx.record("rebind_phase", self.costs.rebind_phase_s(self.z) * j);
             }
             Ep::RebindDone { .. } => {
                 self.rebinds_done += 1;
                 if self.rebinds_done == self.z {
-                    self.finished.borrow_mut().replace(now.as_secs());
-                    out.stop = true;
+                    ctx.finish();
                 }
             }
         }
+    }
+}
+
+/// Number of jittered steps in the core episode (Fig. 5).
+pub const CORE_JITTERS: usize = 3;
+
+/// Run one core-intelligence migration episode from pre-sampled draws.
+/// Fully deterministic: same draws ⇒ same outcome, on any thread.
+pub fn simulate_core_migration_drawn(
+    costs: &CoreCosts,
+    z: usize,
+    data_kb: u64,
+    proc_kb: u64,
+    draws: &EpisodeDraws,
+) -> CoreMigrationOutcome {
+    assert!(draws.jitter.len() >= CORE_JITTERS, "core episode needs {CORE_JITTERS} jitters");
+    let mut h = Harness::with_seed(0);
+    let id = h.add(EpisodeActor {
+        costs: *costs,
+        z,
+        data_kb,
+        proc_kb,
+        jitter: draws.jitter.clone(),
+        rebinds_done: 0,
+    });
+    h.schedule(SimTime::ZERO, id, Ep::PredictionNotified);
+    let fin = h.run();
+    CoreMigrationOutcome {
+        reinstate_s: fin.finished_at.expect("episode did not finish").as_secs(),
+        target: draws.target,
+        steps: fin.trace,
     }
 }
 
@@ -112,29 +139,8 @@ pub fn simulate_core_migration(
     rng: &mut Rng,
     noise_sigma: f64,
 ) -> Option<CoreMigrationOutcome> {
-    let target = choose_target(adjacent, rng)?;
-    let jitter: Vec<f64> = (0..3)
-        .map(|_| if noise_sigma > 0.0 { rng.jitter(noise_sigma) } else { 1.0 })
-        .collect();
-    let trace = Rc::new(RefCell::new(Vec::new()));
-    let finished = Rc::new(RefCell::new(None));
-    let mut eng: Engine<Ep> = Engine::new();
-    let actor = EpisodeActor {
-        costs: *costs,
-        z,
-        data_kb,
-        proc_kb,
-        jitter,
-        rebinds_done: 0,
-        trace: trace.clone(),
-        finished: finished.clone(),
-    };
-    let id = eng.add_actor(Box::new(actor));
-    eng.schedule(SimTime::ZERO, id, Ep::PredictionNotified);
-    eng.run();
-    let reinstate_s = finished.borrow().expect("episode did not finish");
-    let steps = trace.borrow().clone();
-    Some(CoreMigrationOutcome { reinstate_s, target, steps })
+    let draws = draw_episode(CORE_JITTERS, adjacent, rng, noise_sigma)?;
+    Some(simulate_core_migration_drawn(costs, z, data_kb, proc_kb, &draws))
 }
 
 #[cfg(test)]
@@ -213,5 +219,22 @@ mod tests {
         let out = simulate_core_migration(&costs, 0, 1, 1, &adj(1), &mut rng, 0.0).unwrap();
         assert!(out.reinstate_s > 0.0);
         assert_eq!(out.steps.len(), 2);
+    }
+
+    #[test]
+    fn drawn_episode_equals_inline_episode() {
+        let costs = preset(ClusterPreset::Acet).costs.core;
+        let inline = {
+            let mut rng = Rng::new(31);
+            simulate_core_migration(&costs, 12, 1 << 25, 1 << 20, &adj(4), &mut rng, 0.03).unwrap()
+        };
+        let split = {
+            let mut rng = Rng::new(31);
+            let d = draw_episode(CORE_JITTERS, &adj(4), &mut rng, 0.03).unwrap();
+            simulate_core_migration_drawn(&costs, 12, 1 << 25, 1 << 20, &d)
+        };
+        assert_eq!(inline.reinstate_s, split.reinstate_s);
+        assert_eq!(inline.target, split.target);
+        assert_eq!(inline.steps, split.steps);
     }
 }

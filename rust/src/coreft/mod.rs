@@ -10,5 +10,7 @@
 pub mod migration;
 pub mod vcore;
 
-pub use migration::{simulate_core_migration, CoreMigrationOutcome};
+pub use migration::{
+    simulate_core_migration, simulate_core_migration_drawn, CoreMigrationOutcome,
+};
 pub use vcore::{VCore, VCoreState};

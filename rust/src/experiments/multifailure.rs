@@ -1,0 +1,185 @@
+//! The first beyond-paper experiment family: multi-failure regimes through
+//! [`ScenarioSpec`] and the parallel batch runner (EXPERIMENTS.md
+//! §Multi-failure).
+//!
+//! * `concurrent_k` — added execution time vs the number of concurrent
+//!   node failures, one series per multi-agent strategy;
+//! * `correlated` — added time vs rack-spread probability, one series per
+//!   rack size;
+//! * `cascade` — proactive multi-agent vs reactive checkpoint-only
+//!   recovery as the probability that a migration target itself fails
+//!   mid-reinstate grows.
+
+use crate::coordinator::ftmanager::Strategy;
+use crate::failure::injector::FailureProcess;
+use crate::metrics::Series;
+use crate::scenario::{run_batch, BatchCfg, FailureRegime, ScenarioSpec};
+
+const JOB_S: f64 = 3600.0;
+
+/// The shared fixture at experiment scale: one sub-job per ring node.
+fn spec(strategy: Strategy, predictable_frac: f64, regime: FailureRegime) -> ScenarioSpec {
+    ScenarioSpec::placentia_ring16(strategy, predictable_frac, 16, regime)
+}
+
+fn mean_added_s(spec: &ScenarioSpec, trials: usize, seed: u64) -> f64 {
+    let b = run_batch(spec, &BatchCfg { trials: trials.max(1), base_seed: seed, threads: 0 });
+    b.completed_s.mean - JOB_S
+}
+
+/// Added execution time vs number of concurrent failures (k = 1..=6).
+pub fn concurrent_k(trials: usize, seed: u64) -> Series {
+    let ks: Vec<usize> = (1..=6).collect();
+    let mut s = Series::new(
+        "Multi-failure: added time vs concurrent node failures (k)",
+        "concurrent failures k",
+        "added execution time (s)",
+        ks.iter().map(|&k| k as f64).collect(),
+    );
+    for strategy in [Strategy::Agent, Strategy::Core, Strategy::Hybrid] {
+        let y: Vec<f64> = ks
+            .iter()
+            .map(|&k| {
+                let s = spec(
+                    strategy,
+                    0.9,
+                    FailureRegime::ConcurrentK { k, offset_s: 900.0, spacing_s: 1.0 },
+                );
+                mean_added_s(&s, trials, seed ^ (k as u64))
+            })
+            .collect();
+        s.push(strategy.name(), y);
+    }
+    s
+}
+
+/// Added execution time vs rack-spread probability, per rack size.
+pub fn correlated(trials: usize, seed: u64) -> Series {
+    let ps = [0.0, 0.25, 0.5, 0.75, 1.0];
+    let mut s = Series::new(
+        "Multi-failure: rack-correlated failures (hybrid strategy)",
+        "rack-spread probability",
+        "added execution time (s)",
+        ps.to_vec(),
+    );
+    for rack_size in [2usize, 4, 8] {
+        let y: Vec<f64> = ps
+            .iter()
+            .map(|&p_spread| {
+                let s = spec(
+                    Strategy::Hybrid,
+                    0.9,
+                    FailureRegime::Correlated {
+                        primary: FailureProcess::RandomUniform,
+                        rack_size,
+                        p_spread,
+                        lag_s: 30.0,
+                    },
+                );
+                mean_added_s(&s, trials, seed ^ ((rack_size as u64) << 8))
+            })
+            .collect();
+        s.push(&format!("rack of {rack_size}"), y);
+    }
+    s
+}
+
+/// Proactive multi-agent vs reactive checkpoint-only recovery under
+/// cascades: the migration target itself fails with probability `p_follow`.
+pub fn cascade(trials: usize, seed: u64) -> Series {
+    let ps = [0.0, 0.25, 0.5, 0.75];
+    let mut s = Series::new(
+        "Multi-failure: cascading target failures — agents vs checkpointing",
+        "cascade probability p_follow",
+        "added execution time (s)",
+        ps.to_vec(),
+    );
+    // (label, strategy, predictable_frac): predictable_frac 0 disables the
+    // proactive path entirely, leaving pure reactive checkpoint rollback.
+    let variants: [(&str, Strategy, f64); 2] = [
+        ("multi-agent (proactive)", Strategy::Hybrid, 0.95),
+        ("checkpoint only (reactive)", Strategy::Hybrid, 0.0),
+    ];
+    for (label, strategy, predictable_frac) in variants {
+        let y: Vec<f64> = ps
+            .iter()
+            .enumerate()
+            .map(|(i, &p_follow)| {
+                let s = spec(
+                    strategy,
+                    predictable_frac,
+                    FailureRegime::Cascade {
+                        trigger: FailureProcess::RandomUniform,
+                        p_follow,
+                        lag_s: 5.0,
+                    },
+                );
+                mean_added_s(&s, trials, seed ^ ((i as u64) << 16))
+            })
+            .collect();
+        s.push(label, y);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrent_k_monotone_in_the_large() {
+        let s = concurrent_k(12, 1);
+        assert_eq!(s.series.len(), 3);
+        for (name, y) in &s.series {
+            // more simultaneous failures never helps
+            assert!(
+                y[5] >= y[0] - 1e-9,
+                "{name}: k=6 ({}) should cost at least k=1 ({})",
+                y[5],
+                y[0]
+            );
+            // multi-agent strategies keep even 6 concurrent failures cheap
+            // relative to a rollback (848 + 485 s)
+            assert!(y.iter().all(|&v| v >= 0.0), "{name}: negative added time");
+        }
+    }
+
+    #[test]
+    fn cascade_reactive_dominates_proactive() {
+        let s = cascade(12, 2);
+        assert_eq!(s.series.len(), 2);
+        let proactive = &s.series[0].1;
+        let reactive = &s.series[1].1;
+        // with no prediction every trigger failure rolls back; the
+        // proactive line stays well below it at every cascade level
+        for i in 0..proactive.len() {
+            assert!(
+                proactive[i] < reactive[i],
+                "p={}: proactive {} >= reactive {}",
+                s.x[i],
+                proactive[i],
+                reactive[i]
+            );
+        }
+    }
+
+    #[test]
+    fn correlated_spread_costs_more() {
+        let s = correlated(12, 3);
+        for (name, y) in &s.series {
+            assert!(
+                y[4] >= y[0] - 1e-9,
+                "{name}: certain spread ({}) should cost at least none ({})",
+                y[4],
+                y[0]
+            );
+        }
+    }
+
+    #[test]
+    fn experiments_deterministic() {
+        let a = concurrent_k(6, 9).to_csv();
+        let b = concurrent_k(6, 9).to_csv();
+        assert_eq!(a, b);
+    }
+}

@@ -1,6 +1,6 @@
 //! The experiment registry: id → runner, one per paper table/figure.
 
-use super::{ablations, fig14, figures, md_decisions, prediction, rules_validation, tables};
+use super::{ablations, fig14, figures, md_decisions, multifailure, prediction, rules_validation, tables};
 use crate::coordinator::timeline;
 use crate::sim::Rng;
 
@@ -52,6 +52,9 @@ pub fn list() -> Vec<Experiment> {
         Experiment { id: "ablation-window", what: "ablation: dependency-handshake window", runner: |_, _| Ok(ablations::window_ablation().render()) },
         Experiment { id: "ablation-predictor", what: "ablation: predictor threshold tradeoff", runner: |_, s| Ok(ablations::predictor_ablation(s).render()) },
         Experiment { id: "md", what: "molecular-dynamics decision map (Rules over decompositions)", runner: |_, _| Ok(md_decisions::decision_map().render()) },
+        Experiment { id: "multik", what: "extension: added time vs concurrent node failures", runner: |t, s| Ok(run_series(multifailure::concurrent_k(t, s))) },
+        Experiment { id: "correlated", what: "extension: rack-correlated failure spreading", runner: |t, s| Ok(run_series(multifailure::correlated(t, s))) },
+        Experiment { id: "cascade", what: "extension: cascading target failures, agents vs checkpointing", runner: |t, s| Ok(run_series(multifailure::cascade(t, s))) },
     ]
 }
 
@@ -83,6 +86,14 @@ mod tests {
             "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig16", "fig17",
             "table1", "table2", "rules", "prediction",
         ] {
+            assert!(ids.contains(&id), "{id} missing");
+        }
+    }
+
+    #[test]
+    fn registry_covers_multi_failure_extensions() {
+        let ids: Vec<&str> = list().iter().map(|e| e.id).collect();
+        for id in ["multik", "correlated", "cascade"] {
             assert!(ids.contains(&id), "{id} missing");
         }
     }

@@ -10,7 +10,9 @@
 //!   fault tolerance ([`agentft`]), virtual-core fault tolerance ([`coreft`]),
 //!   the hybrid approach ([`hybrid`]), checkpointing baselines
 //!   ([`checkpoint`]), all running over a deterministic discrete-event
-//!   cluster simulator ([`sim`], [`net`], [`cluster`], [`failure`]).
+//!   cluster simulator ([`sim`], [`net`], [`cluster`], [`failure`]) via the
+//!   generic scenario runtime ([`sim::harness`](sim::harness)) and the
+//!   multi-failure scenario layer + parallel batch runner ([`scenario`]).
 //! * **L2/L1 (python, build-time only)** — the genome-search and parallel
 //!   reduction compute graphs (JAX + Pallas), AOT-lowered to HLO text and
 //!   executed from [`runtime`] via the PJRT CPU client. Python never runs on
@@ -32,6 +34,7 @@ pub mod job;
 pub mod metrics;
 pub mod net;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod testkit;
 pub mod util;

@@ -4,11 +4,13 @@
 //! Interchange is HLO *text* — jax ≥ 0.5 emits protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
-
-use super::artifact::Manifest;
-use std::collections::HashMap;
-use std::path::Path;
-use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+//!
+//! The real implementation needs the `xla` bindings crate, which is only
+//! available as a vendored path dependency; it is compiled behind the
+//! off-by-default `pjrt` cargo feature (see DESIGN.md §Runtime). Without
+//! the feature a stub with the same API surface is compiled instead: every
+//! entry point returns an error, and callers (fig14, the worker pool, the
+//! runtime benches) fall back to the pure-Rust reference paths.
 
 /// Geometry constants frozen by `python/compile/model.py` (checked against
 /// the manifest at load time).
@@ -20,142 +22,208 @@ pub mod geom {
     pub const COLLATE_NODES: usize = 16;
 }
 
-/// A loaded runtime: PJRT client + compiled executables.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: PjRtClient,
-    execs: HashMap<String, PjRtLoadedExecutable>,
-    pub manifest: Manifest,
-}
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::geom;
+    use crate::runtime::artifact::Manifest;
+    use std::collections::HashMap;
+    use std::path::Path;
+    use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
 
-impl Runtime {
-    /// Load every artifact in `dir` and compile it on the CPU PJRT client.
-    pub fn load(dir: &Path) -> anyhow::Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
-        let mut execs = HashMap::new();
-        for art in &manifest.artifacts {
-            let proto = xla::HloModuleProto::from_text_file(&art.hlo_path)
-                .map_err(|e| anyhow::anyhow!("loading {}: {e:?}", art.hlo_path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", art.name))?;
-            execs.insert(art.name.clone(), exe);
+    /// A loaded runtime: PJRT client + compiled executables.
+    pub struct Runtime {
+        #[allow(dead_code)]
+        client: PjRtClient,
+        execs: HashMap<String, PjRtLoadedExecutable>,
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        /// Load every artifact in `dir` and compile it on the CPU PJRT client.
+        pub fn load(dir: &Path) -> anyhow::Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let client =
+                PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+            let mut execs = HashMap::new();
+            for art in &manifest.artifacts {
+                let proto = xla::HloModuleProto::from_text_file(&art.hlo_path)
+                    .map_err(|e| anyhow::anyhow!("loading {}: {e:?}", art.hlo_path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", art.name))?;
+                execs.insert(art.name.clone(), exe);
+            }
+            Ok(Self { client, execs, manifest })
         }
-        Ok(Self { client, execs, manifest })
+
+        /// Load from the default artifact directory.
+        pub fn load_default() -> anyhow::Result<Self> {
+            Self::load(&Manifest::default_dir())
+        }
+
+        fn exec(&self, name: &str) -> anyhow::Result<&PjRtLoadedExecutable> {
+            self.execs.get(name).ok_or_else(|| anyhow::anyhow!("no artifact `{name}`"))
+        }
+
+        /// Run the genome-search executable on one chunk against one
+        /// dictionary block.
+        ///
+        /// * `seq` — int8[CHUNK]; * `patterns` — row-major
+        ///   int8[N_PATTERNS x WIDTH]; * `lengths` — int32[N_PATTERNS].
+        ///
+        /// Returns `(mask, counts)`: mask is row-major
+        /// int8[N_PATTERNS x CHUNK], counts int32[N_PATTERNS].
+        pub fn genome_search(
+            &self,
+            seq: &[i8],
+            patterns: &[i8],
+            lengths: &[i32],
+        ) -> anyhow::Result<(Vec<i8>, Vec<i32>)> {
+            anyhow::ensure!(seq.len() == geom::CHUNK, "seq len {}", seq.len());
+            anyhow::ensure!(patterns.len() == geom::N_PATTERNS * geom::WIDTH);
+            anyhow::ensure!(lengths.len() == geom::N_PATTERNS);
+            let seq_l = lit_i8(seq, &[geom::CHUNK])?;
+            let pat_l = lit_i8(patterns, &[geom::N_PATTERNS, geom::WIDTH])?;
+            let len_l = lit_i32(lengths, &[geom::N_PATTERNS])?;
+            let result = self
+                .exec("genome_search")?
+                .execute::<Literal>(&[seq_l, pat_l, len_l])
+                .map_err(|e| anyhow::anyhow!("genome_search exec: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("genome_search sync: {e:?}"))?;
+            let (mask_l, counts_l) =
+                result.to_tuple2().map_err(|e| anyhow::anyhow!("tuple2: {e:?}"))?;
+            let mask = mask_l.to_vec::<i8>().map_err(|e| anyhow::anyhow!("mask: {e:?}"))?;
+            let counts = counts_l.to_vec::<i32>().map_err(|e| anyhow::anyhow!("counts: {e:?}"))?;
+            Ok((mask, counts))
+        }
+
+        /// Run the parallel-summation sub-job on one block of `REDUCE_N` f32s.
+        pub fn reduce(&self, x: &[f32]) -> anyhow::Result<f32> {
+            anyhow::ensure!(x.len() == geom::REDUCE_N, "reduce len {}", x.len());
+            let xl = Literal::vec1(x)
+                .reshape(&[geom::REDUCE_N as i64])
+                .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+            let result = self
+                .exec("reduce")?
+                .execute::<Literal>(&[xl])
+                .map_err(|e| anyhow::anyhow!("reduce exec: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("reduce sync: {e:?}"))?;
+            let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple1: {e:?}"))?;
+            let v = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+            Ok(v[0])
+        }
+
+        /// Run the combining-node executable: merge per-node count vectors.
+        /// `counts` is row-major int32[COLLATE_NODES x N_PATTERNS].
+        pub fn collate(&self, counts: &[i32]) -> anyhow::Result<Vec<i32>> {
+            anyhow::ensure!(counts.len() == geom::COLLATE_NODES * geom::N_PATTERNS);
+            let cl = lit_i32(counts, &[geom::COLLATE_NODES, geom::N_PATTERNS])?;
+            let result = self
+                .exec("collate")?
+                .execute::<Literal>(&[cl])
+                .map_err(|e| anyhow::anyhow!("collate exec: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("collate sync: {e:?}"))?;
+            let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple1: {e:?}"))?;
+            out.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+        }
     }
 
-    /// Load from the default artifact directory.
-    pub fn load_default() -> anyhow::Result<Self> {
-        Self::load(&Manifest::default_dir())
+    fn lit_i8(data: &[i8], dims: &[usize]) -> anyhow::Result<Literal> {
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+        Literal::create_from_shape_and_untyped_data(ElementType::S8, dims, bytes)
+            .map_err(|e| anyhow::anyhow!("i8 literal: {e:?}"))
     }
 
-    fn exec(&self, name: &str) -> anyhow::Result<&PjRtLoadedExecutable> {
-        self.execs.get(name).ok_or_else(|| anyhow::anyhow!("no artifact `{name}`"))
+    fn lit_i32(data: &[i32], dims: &[usize]) -> anyhow::Result<Literal> {
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)
+            .map_err(|e| anyhow::anyhow!("i32 literal: {e:?}"))
     }
 
-    /// Run the genome-search executable on one chunk against one
-    /// dictionary block.
-    ///
-    /// * `seq` — int8[CHUNK]; * `patterns` — row-major
-    ///   int8[N_PATTERNS x WIDTH]; * `lengths` — int32[N_PATTERNS].
-    ///
-    /// Returns `(mask, counts)`: mask is row-major int8[N_PATTERNS x CHUNK],
-    /// counts int32[N_PATTERNS].
-    pub fn genome_search(
-        &self,
-        seq: &[i8],
-        patterns: &[i8],
-        lengths: &[i32],
-    ) -> anyhow::Result<(Vec<i8>, Vec<i32>)> {
-        anyhow::ensure!(seq.len() == geom::CHUNK, "seq len {}", seq.len());
-        anyhow::ensure!(patterns.len() == geom::N_PATTERNS * geom::WIDTH);
-        anyhow::ensure!(lengths.len() == geom::N_PATTERNS);
-        let seq_l = lit_i8(seq, &[geom::CHUNK])?;
-        let pat_l = lit_i8(patterns, &[geom::N_PATTERNS, geom::WIDTH])?;
-        let len_l = lit_i32(lengths, &[geom::N_PATTERNS])?;
-        let result = self
-            .exec("genome_search")?
-            .execute::<Literal>(&[seq_l, pat_l, len_l])
-            .map_err(|e| anyhow::anyhow!("genome_search exec: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("genome_search sync: {e:?}"))?;
-        let (mask_l, counts_l) =
-            result.to_tuple2().map_err(|e| anyhow::anyhow!("tuple2: {e:?}"))?;
-        let mask = mask_l.to_vec::<i8>().map_err(|e| anyhow::anyhow!("mask: {e:?}"))?;
-        let counts = counts_l.to_vec::<i32>().map_err(|e| anyhow::anyhow!("counts: {e:?}"))?;
-        Ok((mask, counts))
-    }
+    #[cfg(test)]
+    mod tests {
+        // Exercised by `rust/tests/runtime_integration.rs` (requires
+        // artifacts); unit-level literal helpers tested here.
+        use super::*;
 
-    /// Run the parallel-summation sub-job on one block of `REDUCE_N` f32s.
-    pub fn reduce(&self, x: &[f32]) -> anyhow::Result<f32> {
-        anyhow::ensure!(x.len() == geom::REDUCE_N, "reduce len {}", x.len());
-        let xl = Literal::vec1(x).reshape(&[geom::REDUCE_N as i64])
-            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
-        let result = self
-            .exec("reduce")?
-            .execute::<Literal>(&[xl])
-            .map_err(|e| anyhow::anyhow!("reduce exec: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("reduce sync: {e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple1: {e:?}"))?;
-        let v = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
-        Ok(v[0])
-    }
+        #[test]
+        fn i8_literal_roundtrip() {
+            let data: Vec<i8> = vec![-1, 0, 1, 2, 3, 4];
+            let l = lit_i8(&data, &[2, 3]).unwrap();
+            assert_eq!(l.to_vec::<i8>().unwrap(), data);
+        }
 
-    /// Run the combining-node executable: merge per-node count vectors.
-    /// `counts` is row-major int32[COLLATE_NODES x N_PATTERNS].
-    pub fn collate(&self, counts: &[i32]) -> anyhow::Result<Vec<i32>> {
-        anyhow::ensure!(counts.len() == geom::COLLATE_NODES * geom::N_PATTERNS);
-        let cl = lit_i32(counts, &[geom::COLLATE_NODES, geom::N_PATTERNS])?;
-        let result = self
-            .exec("collate")?
-            .execute::<Literal>(&[cl])
-            .map_err(|e| anyhow::anyhow!("collate exec: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("collate sync: {e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple1: {e:?}"))?;
-        out.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+        #[test]
+        fn i32_literal_roundtrip() {
+            let data: Vec<i32> = vec![1, -2, 3, 4];
+            let l = lit_i32(&data, &[4]).unwrap();
+            assert_eq!(l.to_vec::<i32>().unwrap(), data);
+        }
+
+        #[test]
+        fn wrong_byte_count_rejected() {
+            assert!(lit_i32(&[1, 2, 3], &[4]).is_err());
+        }
     }
 }
 
-fn lit_i8(data: &[i8], dims: &[usize]) -> anyhow::Result<Literal> {
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
-    Literal::create_from_shape_and_untyped_data(ElementType::S8, dims, bytes)
-        .map_err(|e| anyhow::anyhow!("i8 literal: {e:?}"))
-}
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::runtime::artifact::Manifest;
+    use std::path::Path;
 
-fn lit_i32(data: &[i32], dims: &[usize]) -> anyhow::Result<Literal> {
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)
-        .map_err(|e| anyhow::anyhow!("i32 literal: {e:?}"))
-}
+    const UNAVAILABLE: &str =
+        "biomaft was built without the `pjrt` feature; the PJRT compute path is unavailable \
+         (pure-Rust fallbacks cover the experiments — see DESIGN.md §Runtime)";
 
-#[cfg(test)]
-mod tests {
-    // Exercised by `rust/tests/runtime_integration.rs` (requires artifacts);
-    // unit-level literal helpers tested here.
-    use super::*;
-
-    #[test]
-    fn i8_literal_roundtrip() {
-        let data: Vec<i8> = vec![-1, 0, 1, 2, 3, 4];
-        let l = lit_i8(&data, &[2, 3]).unwrap();
-        assert_eq!(l.to_vec::<i8>().unwrap(), data);
+    /// Stub runtime with the real API surface; every entry point errors.
+    pub struct Runtime {
+        pub manifest: Manifest,
     }
 
-    #[test]
-    fn i32_literal_roundtrip() {
-        let data: Vec<i32> = vec![1, -2, 3, 4];
-        let l = lit_i32(&data, &[4]).unwrap();
-        assert_eq!(l.to_vec::<i32>().unwrap(), data);
+    impl Runtime {
+        pub fn load(_dir: &Path) -> anyhow::Result<Self> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        pub fn load_default() -> anyhow::Result<Self> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        pub fn genome_search(
+            &self,
+            _seq: &[i8],
+            _patterns: &[i8],
+            _lengths: &[i32],
+        ) -> anyhow::Result<(Vec<i8>, Vec<i32>)> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        pub fn reduce(&self, _x: &[f32]) -> anyhow::Result<f32> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        pub fn collate(&self, _counts: &[i32]) -> anyhow::Result<Vec<i32>> {
+            anyhow::bail!(UNAVAILABLE)
+        }
     }
 
-    #[test]
-    fn wrong_byte_count_rejected() {
-        assert!(lit_i32(&[1, 2, 3], &[4]).is_err());
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn stub_load_reports_missing_feature() {
+            let err = Runtime::load(Path::new("/nonexistent")).unwrap_err().to_string();
+            assert!(err.contains("pjrt"), "{err}");
+        }
     }
 }
+
+pub use imp::Runtime;

@@ -1,0 +1,174 @@
+//! The parallel batch runner: fan thousands of seeded scenario trials
+//! across OS threads and summarise them.
+//!
+//! Every trial owns its engine, RNG and actor state (see
+//! [`ScenarioSpec::run_trial`]), so a batch is embarrassingly parallel.
+//! Trials are keyed by **trial index** — trial `i` always runs seed
+//! `base_seed + i` and its result always lands in slot `i` — so a batch's
+//! output is byte-identical whatever the thread count (including 1). That
+//! invariant is what lets `coordinator::run` and the experiment sweeps use
+//! this runner while still reproducing the paper's tables exactly.
+
+use super::spec::ScenarioSpec;
+use crate::metrics::Summary;
+use std::time::Instant;
+
+/// How to run a batch.
+#[derive(Debug, Clone)]
+pub struct BatchCfg {
+    pub trials: usize,
+    /// Trial `i` runs with seed `base_seed + i`.
+    pub base_seed: u64,
+    /// OS threads to fan across; `0` ⇒ one per available core.
+    pub threads: usize,
+}
+
+/// Aggregate of one batch, ready for tables/figures.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    pub trials: usize,
+    pub threads: usize,
+    /// Summary of per-trial completion times (seconds of virtual time).
+    pub completed_s: Summary,
+    pub migrations: u64,
+    pub rollbacks: u64,
+    pub cascades: u64,
+    pub lost_then_recovered: u64,
+    /// Total dispatched events across the batch.
+    pub events: u64,
+    /// Wall-clock cost of the batch and derived throughput.
+    pub wall_s: f64,
+    pub trials_per_s: f64,
+}
+
+/// One thread per available core (the scheduler's default).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Fan `n` independent trials across `threads` OS threads; trial `i`'s
+/// result lands in slot `i`, so the output is independent of thread count
+/// and scheduling. `threads == 0` uses [`default_threads`].
+pub fn parallel_map_trials<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = if threads == 0 { default_threads() } else { threads };
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    // Static contiguous partition: trials are near-uniform in cost and this
+    // keeps each thread writing one disjoint chunk.
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, slots) in results.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, slot) in slots.iter_mut().enumerate() {
+                    *slot = Some(f(t * chunk + j));
+                }
+            });
+        }
+    });
+    results.into_iter().map(|o| o.expect("every trial completed")).collect()
+}
+
+fn summarize(
+    threads: usize,
+    base: &BatchCfg,
+    outcomes: &[crate::coordinator::livesim::LiveOutcome],
+    wall_s: f64,
+) -> BatchOutcome {
+    let completed: Vec<f64> = outcomes.iter().map(|o| o.completed_at_s).collect();
+    BatchOutcome {
+        trials: base.trials,
+        threads,
+        completed_s: Summary::of(&completed),
+        migrations: outcomes.iter().map(|o| o.migrations as u64).sum(),
+        rollbacks: outcomes.iter().map(|o| o.rollbacks as u64).sum(),
+        cascades: outcomes.iter().map(|o| o.cascades as u64).sum(),
+        lost_then_recovered: outcomes.iter().map(|o| o.lost_then_recovered as u64).sum(),
+        events: outcomes.iter().map(|o| o.events).sum(),
+        wall_s,
+        trials_per_s: if wall_s > 0.0 { base.trials as f64 / wall_s } else { f64::INFINITY },
+    }
+}
+
+/// Run `cfg.trials` seeded trials of `spec` and summarise them.
+pub fn run_batch(spec: &ScenarioSpec, cfg: &BatchCfg) -> BatchOutcome {
+    assert!(cfg.trials > 0, "empty batch");
+    let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+    let t0 = Instant::now();
+    let outcomes = parallel_map_trials(cfg.trials, threads, |i| {
+        spec.run_trial(cfg.base_seed.wrapping_add(i as u64))
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    summarize(threads, cfg, &outcomes, wall_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ftmanager::Strategy;
+    use crate::scenario::spec::FailureRegime;
+
+    fn spec() -> ScenarioSpec {
+        ScenarioSpec::placentia_ring16(
+            Strategy::Hybrid,
+            0.8,
+            8,
+            FailureRegime::ConcurrentK { k: 3, offset_s: 600.0, spacing_s: 60.0 },
+        )
+    }
+
+    #[test]
+    fn parallel_map_preserves_trial_order() {
+        let out = parallel_map_trials(100, 4, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_serial_fallbacks() {
+        assert_eq!(parallel_map_trials(1, 8, |i| i), vec![0]);
+        assert_eq!(parallel_map_trials(3, 1, |i| i + 1), vec![1, 2, 3]);
+        assert!(parallel_map_trials(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn parallel_map_more_threads_than_trials() {
+        let out = parallel_map_trials(3, 16, |i| i);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn batch_output_independent_of_thread_count() {
+        let s = spec();
+        let serial = run_batch(&s, &BatchCfg { trials: 24, base_seed: 9, threads: 1 });
+        let parallel = run_batch(&s, &BatchCfg { trials: 24, base_seed: 9, threads: 4 });
+        assert_eq!(serial.completed_s, parallel.completed_s);
+        assert_eq!(serial.migrations, parallel.migrations);
+        assert_eq!(serial.rollbacks, parallel.rollbacks);
+        assert_eq!(serial.events, parallel.events);
+    }
+
+    #[test]
+    fn batch_feeds_summary() {
+        let s = spec();
+        let b = run_batch(&s, &BatchCfg { trials: 16, base_seed: 1, threads: 0 });
+        assert_eq!(b.completed_s.n, 16);
+        // failures strike: completion can never beat the nominal job time
+        assert!(b.completed_s.min >= 3600.0);
+        assert!(b.trials_per_s > 0.0);
+        assert!(b.events > 0);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

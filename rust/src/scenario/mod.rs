@@ -1,0 +1,28 @@
+//! Scenario layer: composable failure regimes over the live simulation,
+//! plus the parallel batch runner that fans seeded trials across OS
+//! threads.
+//!
+//! The paper evaluates exactly one regime — a single core failing once per
+//! checkpoint window. [`ScenarioSpec`] generalises that to the regimes its
+//! own discussion (and the fault-tolerance survey literature) point at:
+//!
+//! * **single** — the paper's processes ([`FailureProcess`]), unchanged;
+//! * **concurrent-k** — `k` distinct nodes failing (near-)simultaneously;
+//! * **correlated** — rack-adjacency spreading: a primary failure dooms its
+//!   rack-mates with some probability;
+//! * **cascade** — every migration's target can itself fail mid-reinstate
+//!   ([`CascadeSpec`](crate::coordinator::livesim::CascadeSpec)).
+//!
+//! Each trial owns its engine, so batches are embarrassingly parallel:
+//! [`batch`] fans thousands of seeded trials over threads and feeds
+//! [`metrics::Summary`](crate::metrics::Summary). Results are keyed by
+//! trial seed, never by thread, so a batch's output is independent of the
+//! thread count — asserted in tests and in `tests/harness_properties.rs`.
+//!
+//! [`FailureProcess`]: crate::failure::injector::FailureProcess
+
+pub mod batch;
+pub mod spec;
+
+pub use batch::{default_threads, parallel_map_trials, run_batch, BatchCfg, BatchOutcome};
+pub use spec::{FailureRegime, ScenarioSpec};

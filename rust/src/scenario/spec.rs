@@ -1,0 +1,320 @@
+//! [`ScenarioSpec`]: a complete, seedable description of one experiment
+//! scenario — job + strategy configuration, topology, and a composable
+//! multi-failure regime — generalising `failure::injector`'s "one failure
+//! per window on one node" to the regimes beyond the paper.
+
+use crate::cluster::{preset, ClusterPreset};
+use crate::coordinator::ftmanager::Strategy;
+use crate::coordinator::livesim::{run_live_with, CascadeSpec, LiveCfg, LiveOutcome};
+use crate::failure::injector::{FailureEvent, FailurePlan, FailureProcess};
+use crate::net::{NodeId, Topology};
+use crate::sim::{Rng, SimTime};
+
+/// Salt separating a trial's plan stream from its live-run stream.
+const PLAN_SALT: u64 = 0x5EED_F00D_0BAD_CAFE;
+
+/// The failure regime driving a scenario.
+#[derive(Debug, Clone)]
+pub enum FailureRegime {
+    /// One of the paper's single-node processes, unchanged.
+    Single(FailureProcess),
+    /// `k` *distinct* nodes fail per window, the first at `offset_s` and
+    /// each subsequent one `spacing_s` later (spacing 0 ⇒ simultaneous).
+    /// Failed nodes stay dead: later windows strike only survivors, so a
+    /// multi-window plan never re-dooms a node (the live system models a
+    /// node failing exactly once).
+    ConcurrentK { k: usize, offset_s: f64, spacing_s: f64 },
+    /// Rack-correlated spreading: primary failures from `primary`; each
+    /// same-rack neighbour (racks are contiguous blocks of `rack_size`
+    /// nodes) is dragged down with probability `p_spread`, within `lag_s`.
+    Correlated { primary: FailureProcess, rack_size: usize, p_spread: f64, lag_s: f64 },
+    /// Trigger failures from `trigger`; additionally every migration's
+    /// target node itself fails with probability `p_follow`, doomed `lag_s`
+    /// after the migration starts (runtime-driven — these follow-on
+    /// failures cannot be planned ahead because the targets are chosen
+    /// during the run).
+    Cascade { trigger: FailureProcess, p_follow: f64, lag_s: f64 },
+}
+
+/// A complete scenario: what runs, where it runs, and how it fails.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub cfg: LiveCfg,
+    pub topo: Topology,
+    pub regime: FailureRegime,
+    /// Number of consecutive failure windows in one trial.
+    pub windows: usize,
+    /// Window length in seconds.
+    pub window_s: f64,
+}
+
+impl ScenarioSpec {
+    /// The paper's regime: a single-failure process over one window.
+    pub fn single(cfg: LiveCfg, topo: Topology, process: FailureProcess) -> Self {
+        let window_s = cfg.compute_s;
+        Self { cfg, topo, regime: FailureRegime::Single(process), windows: 1, window_s }
+    }
+
+    /// The shared demo fixture (tests, benches and the multi-failure
+    /// experiments all build on this one so the cost model lives in one
+    /// place): Placentia costs, a ring(16, 2) landscape, a one-hour job at
+    /// the Table-1 point (Z = 4, 2^19 KB) and the reactive recovery figures
+    /// of the combined design (848 + 485 s). One window over the job.
+    pub fn placentia_ring16(
+        strategy: Strategy,
+        predictable_frac: f64,
+        n_subs: usize,
+        regime: FailureRegime,
+    ) -> Self {
+        let cfg = LiveCfg {
+            costs: preset(ClusterPreset::Placentia).costs,
+            strategy,
+            n_subs,
+            z: 4,
+            data_kb: 1 << 19,
+            proc_kb: 1 << 19,
+            compute_s: 3600.0,
+            predictable_frac,
+            ckpt_reinstate_s: 848.0,
+            ckpt_overhead_s: 485.0,
+            seed: 0,
+        };
+        Self { cfg, topo: Topology::ring(16, 2), regime, windows: 1, window_s: 3600.0 }
+    }
+
+    /// Build the (plannable part of the) failure plan for one trial.
+    /// Cascade follow-on failures are runtime-driven and not in the plan.
+    pub fn plan(&self, rng: &mut Rng) -> FailurePlan {
+        let n = self.topo.len();
+        match &self.regime {
+            FailureRegime::Single(p) => p.plan(self.windows, self.window_s, n, rng),
+            FailureRegime::Cascade { trigger, .. } => {
+                trigger.plan(self.windows, self.window_s, n, rng)
+            }
+            FailureRegime::ConcurrentK { k, offset_s, spacing_s } => {
+                let mut events = Vec::new();
+                // nodes die once: each window's victims come off this list
+                let mut alive: Vec<usize> = (0..n).collect();
+                for w in 0..self.windows {
+                    let base = w as f64 * self.window_s;
+                    rng.shuffle(&mut alive);
+                    // failure times grow with the victim index, so stop at
+                    // the first one past the window; only nodes actually
+                    // struck leave the alive list (the rest stay eligible
+                    // for later windows)
+                    let mut struck = 0;
+                    for i in 0..(*k).min(alive.len()) {
+                        let at = base + offset_s + i as f64 * spacing_s;
+                        if at > base + self.window_s {
+                            break;
+                        }
+                        events.push(FailureEvent {
+                            at: SimTime::from_secs(at),
+                            node: NodeId(alive[i]),
+                        });
+                        struck += 1;
+                    }
+                    alive.drain(..struck);
+                }
+                events.sort_by_key(|e| e.at);
+                FailurePlan { events }
+            }
+            FailureRegime::Correlated { primary, rack_size, p_spread, lag_s } => {
+                let rack = (*rack_size).max(1);
+                let base = primary.plan(self.windows, self.window_s, n, rng);
+                let mut events = base.events.clone();
+                for e in &base.events {
+                    let rack_start = (e.node.0 / rack) * rack;
+                    for node in rack_start..(rack_start + rack).min(n) {
+                        if node != e.node.0 && rng.chance(*p_spread) {
+                            events.push(FailureEvent {
+                                at: e.at + SimTime::from_secs(rng.uniform(0.0, *lag_s)),
+                                node: NodeId(node),
+                            });
+                        }
+                    }
+                }
+                events.sort_by_key(|e| e.at);
+                FailurePlan { events }
+            }
+        }
+    }
+
+    /// The cascade parameters, when the regime has them.
+    pub fn cascade(&self) -> Option<CascadeSpec> {
+        match &self.regime {
+            FailureRegime::Cascade { p_follow, lag_s, .. } => {
+                Some(CascadeSpec { p_follow: *p_follow, lag_s: *lag_s })
+            }
+            _ => None,
+        }
+    }
+
+    /// Run one seeded trial: build the trial's plan from `seed`'s plan
+    /// stream, then play it out live. Deterministic in `seed`.
+    pub fn run_trial(&self, seed: u64) -> LiveOutcome {
+        let mut cfg = self.cfg.clone();
+        cfg.seed = seed;
+        let mut plan_rng = Rng::new(seed ^ PLAN_SALT);
+        let plan = self.plan(&mut plan_rng);
+        run_live_with(&cfg, &self.topo, &plan, self.cascade())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::livesim::run_live;
+
+    /// The shared fixture at test scale (8 sub-jobs on the 16-node ring).
+    fn demo(strategy: Strategy, regime: FailureRegime) -> ScenarioSpec {
+        ScenarioSpec::placentia_ring16(strategy, 0.9, 8, regime)
+    }
+
+    #[test]
+    fn single_spec_reproduces_run_live() {
+        let base = demo(Strategy::Core, FailureRegime::Single(FailureProcess::RandomUniform));
+        let spec =
+            ScenarioSpec::single(base.cfg, Topology::ring(16, 2), FailureProcess::RandomUniform);
+        for seed in [1u64, 7, 99] {
+            let via_spec = spec.run_trial(seed);
+            let mut cfg = spec.cfg.clone();
+            cfg.seed = seed;
+            let plan = spec.plan(&mut Rng::new(seed ^ PLAN_SALT));
+            let direct = run_live(&cfg, &spec.topo, &plan);
+            assert_eq!(via_spec.completed_at_s, direct.completed_at_s);
+            assert_eq!(via_spec.events, direct.events);
+            assert_eq!(via_spec.migrations, direct.migrations);
+            assert_eq!(via_spec.rollbacks, direct.rollbacks);
+        }
+    }
+
+    #[test]
+    fn concurrent_k_hits_k_distinct_nodes() {
+        let spec = demo(
+            Strategy::Hybrid,
+            FailureRegime::ConcurrentK { k: 5, offset_s: 900.0, spacing_s: 0.0 },
+        );
+        let mut rng = Rng::new(3);
+        let plan = spec.plan(&mut rng);
+        assert_eq!(plan.len(), 5);
+        let mut nodes: Vec<usize> = plan.events.iter().map(|e| e.node.0).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 5, "victims must be distinct");
+        assert!(plan.events.iter().all(|e| e.at == SimTime::from_secs(900.0)));
+    }
+
+    #[test]
+    fn concurrent_k_capped_and_nodes_die_once() {
+        let mut spec = demo(
+            Strategy::Core,
+            FailureRegime::ConcurrentK { k: 10, offset_s: 100.0, spacing_s: 1.0 },
+        );
+        spec.topo = Topology::ring(4, 1);
+        spec.windows = 2;
+        spec.window_s = 1000.0;
+        let plan = spec.plan(&mut Rng::new(4));
+        // window 1 kills the whole 4-node cluster; window 2 has no
+        // survivors left to strike — a node never fails twice
+        assert_eq!(plan.len(), 4);
+        let mut nodes: Vec<usize> = plan.events.iter().map(|e| e.node.0).collect();
+        nodes.sort_unstable();
+        assert_eq!(nodes, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn concurrent_k_multi_window_strikes_survivors() {
+        let mut spec = demo(
+            Strategy::Core,
+            FailureRegime::ConcurrentK { k: 3, offset_s: 100.0, spacing_s: 1.0 },
+        );
+        spec.windows = 3;
+        spec.window_s = 1000.0;
+        let plan = spec.plan(&mut Rng::new(7));
+        assert_eq!(plan.len(), 9);
+        let mut nodes: Vec<usize> = plan.events.iter().map(|e| e.node.0).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes.len(), 9, "victims distinct across windows: {plan:?}");
+    }
+
+    #[test]
+    fn correlated_spreads_within_rack_only() {
+        let spec = demo(
+            Strategy::Core,
+            FailureRegime::Correlated {
+                primary: FailureProcess::Periodic { offset_s: 600.0 },
+                rack_size: 4,
+                p_spread: 1.0,
+                lag_s: 10.0,
+            },
+        );
+        let plan = spec.plan(&mut Rng::new(5));
+        // one primary + its 3 rack-mates
+        assert_eq!(plan.len(), 4);
+        let rack: Vec<usize> = plan.events.iter().map(|e| e.node.0 / 4).collect();
+        assert!(rack.windows(2).all(|w| w[0] == w[1]), "all in one rack: {plan:?}");
+        // sorted by time, spread within the lag
+        let t0 = plan.events[0].at;
+        assert!(plan.events.iter().all(|e| e.at >= t0));
+        assert!(plan
+            .events
+            .iter()
+            .all(|e| e.at <= t0 + SimTime::from_secs(10.0)));
+    }
+
+    #[test]
+    fn correlated_zero_spread_is_primary_only() {
+        let spec = demo(
+            Strategy::Core,
+            FailureRegime::Correlated {
+                primary: FailureProcess::Periodic { offset_s: 600.0 },
+                rack_size: 4,
+                p_spread: 0.0,
+                lag_s: 10.0,
+            },
+        );
+        assert_eq!(spec.plan(&mut Rng::new(6)).len(), 1);
+    }
+
+    #[test]
+    fn cascade_spec_carries_params_and_runs() {
+        // one sub-job per node and a fully predictable trigger, so the
+        // failure always strikes a hosted sub-job, the proactive migration
+        // always runs, and the (p_follow = 1) cascade must fire
+        let spec = ScenarioSpec::placentia_ring16(
+            Strategy::Hybrid,
+            1.0,
+            16,
+            FailureRegime::Cascade {
+                trigger: FailureProcess::Periodic { offset_s: 900.0 },
+                p_follow: 1.0,
+                lag_s: 5.0,
+            },
+        );
+        let c = spec.cascade().expect("cascade params");
+        assert_eq!(c.p_follow, 1.0);
+        let o = spec.run_trial(11);
+        assert!(o.cascades >= 1, "{o:?}");
+        assert!(o.completed_at_s >= 3600.0);
+    }
+
+    #[test]
+    fn trials_deterministic_and_seed_sensitive() {
+        let spec = demo(
+            Strategy::Agent,
+            FailureRegime::ConcurrentK { k: 3, offset_s: 600.0, spacing_s: 30.0 },
+        );
+        let a = spec.run_trial(42);
+        let b = spec.run_trial(42);
+        assert_eq!(a.completed_at_s, b.completed_at_s);
+        assert_eq!(a.events, b.events);
+        // different seeds draw different plans (victim sets and/or jitters)
+        let pa = spec.plan(&mut Rng::new(42 ^ PLAN_SALT));
+        let pb = spec.plan(&mut Rng::new(43 ^ PLAN_SALT));
+        assert_eq!(pa.events, spec.plan(&mut Rng::new(42 ^ PLAN_SALT)).events);
+        assert_eq!(pa.len(), 3);
+        assert_eq!(pb.len(), 3);
+    }
+}

@@ -1,0 +1,322 @@
+//! The generic scenario runtime: actor registration, shared jitter / trace /
+//! RNG plumbing, stop conditions and deterministic seeding on top of the
+//! bare [`Engine`](super::Engine).
+//!
+//! Before this module existed the episode protocols (`agentft::migration`,
+//! `coreft::migration`) and the live full-system simulation
+//! (`coordinator::livesim`) each hand-rolled the same scaffolding: an
+//! `Rc<RefCell<…>>` result slot, a message enum, jitter handling and trace
+//! collection. The harness centralises that plumbing once:
+//!
+//! * a [`Scenario`] is plain owned state plus an `on_msg` handler — no
+//!   shared-ownership cells in protocol code;
+//! * the [`Ctx`] handed to the handler exposes the virtual clock, message
+//!   scheduling, the harness RNG (one deterministic stream per run), step
+//!   tracing and the stop/finish conditions;
+//! * [`Harness::run`] drives the engine and hands the scenario state back
+//!   *by value* together with the collected trace, so results are read off
+//!   plain fields instead of `Rc<RefCell>` slots.
+//!
+//! Determinism contract: a harness seeded with the same RNG, the same
+//! scenario state and the same initial events produces a byte-identical
+//! event trace (property-tested in `tests/harness_properties.rs`).
+
+use super::engine::{ActorId, Engine, EventLog, Outbox};
+use super::{Rng, SimTime};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// One recorded protocol step (name, start, duration). Shared by the
+/// Fig. 3 / Fig. 5 episode protocols and any future scenario that wants a
+/// step-by-step account of itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepTrace {
+    pub step: &'static str,
+    pub start_s: f64,
+    pub dur_s: f64,
+}
+
+/// Scenario behaviour: owned state reacting to messages of its own type.
+///
+/// Implementations hold plain fields (counters, hosts, outcomes); the
+/// harness returns the state by value after the run, which is how results
+/// leave the simulation.
+pub trait Scenario: Sized + 'static {
+    type Msg: 'static;
+
+    fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, Self::Msg>, msg: Self::Msg);
+}
+
+/// The plumbing every actor of a harness shares.
+struct Plumbing {
+    rng: Rng,
+    trace: Vec<StepTrace>,
+    finished_at: Option<SimTime>,
+}
+
+/// Per-dispatch context handed to [`Scenario::on_msg`].
+pub struct Ctx<'a, 'e, M> {
+    me: ActorId,
+    out: &'a mut Outbox<'e, M>,
+    pb: &'a mut Plumbing,
+}
+
+impl<M> Ctx<'_, '_, M> {
+    /// Current virtual time of the dispatch.
+    pub fn now(&self) -> SimTime {
+        self.out.now()
+    }
+
+    /// The actor id the message was delivered to.
+    pub fn me(&self) -> ActorId {
+        self.me
+    }
+
+    /// Deliver `msg` to `target` after `delay` of virtual time.
+    pub fn send_in(&mut self, delay: SimTime, target: ActorId, msg: M) {
+        self.out.send_in(delay, target, msg);
+    }
+
+    /// Deliver at an absolute virtual time (clamped to now, see
+    /// [`Outbox::send_at`]).
+    pub fn send_at(&mut self, at: SimTime, target: ActorId, msg: M) {
+        self.out.send_at(at, target, msg);
+    }
+
+    /// Deliver `msg` back to this actor after `delay_s` seconds of virtual
+    /// time — the common move of the episode state machines.
+    pub fn send_self_in_s(&mut self, delay_s: f64, msg: M) {
+        let me = self.me;
+        self.out.send_in(SimTime::from_secs(delay_s), me, msg);
+    }
+
+    /// The harness RNG: one deterministic stream per run, shared by every
+    /// actor in dispatch order.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.pb.rng
+    }
+
+    /// Multiplicative lognormal trial jitter; `sigma <= 0` draws nothing
+    /// and returns exactly 1.0 (so noiseless runs match closed forms).
+    pub fn jitter(&mut self, sigma: f64) -> f64 {
+        if sigma > 0.0 {
+            self.pb.rng.jitter(sigma)
+        } else {
+            1.0
+        }
+    }
+
+    /// Record a protocol step starting now.
+    pub fn record(&mut self, step: &'static str, dur_s: f64) {
+        let start_s = self.out.now().as_secs();
+        self.pb.trace.push(StepTrace { step, start_s, dur_s });
+    }
+
+    /// Mark the scenario finished at the current virtual time and stop the
+    /// run after this dispatch.
+    pub fn finish(&mut self) {
+        self.pb.finished_at = Some(self.out.now());
+        self.out.stop = true;
+    }
+
+    /// Stop the run after this dispatch without marking a finish time.
+    pub fn stop(&mut self) {
+        self.out.stop = true;
+    }
+}
+
+/// Everything a finished run hands back: the scenario states by value, the
+/// shared step trace, the finish time (if [`Ctx::finish`] was called), the
+/// dispatch count and the final clock.
+pub struct Finished<S: Scenario> {
+    /// Scenario states in registration order.
+    pub scenarios: Vec<S>,
+    pub trace: Vec<StepTrace>,
+    pub finished_at: Option<SimTime>,
+    /// Total dispatched events (determinism fingerprint).
+    pub events: u64,
+    /// Final virtual time.
+    pub end: SimTime,
+    /// Captured event log (empty unless [`Harness::capture_log`] was used).
+    pub log: EventLog,
+}
+
+impl<S: Scenario> Finished<S> {
+    /// Consume a single-actor run, returning its scenario state.
+    pub fn into_scenario(mut self) -> S {
+        assert_eq!(self.scenarios.len(), 1, "into_scenario on a multi-actor harness");
+        self.scenarios.pop().expect("one scenario")
+    }
+}
+
+/// The scenario runtime. Owns the engine, the shared plumbing and the
+/// registered scenario states.
+pub struct Harness<S: Scenario> {
+    eng: Engine<S::Msg>,
+    pb: Rc<RefCell<Plumbing>>,
+    cells: Vec<Rc<RefCell<S>>>,
+}
+
+impl<S: Scenario> Harness<S> {
+    /// Build a harness whose shared RNG is `rng` (deterministic seeding:
+    /// the caller decides exactly which stream the run consumes).
+    pub fn new(rng: Rng) -> Self {
+        Self {
+            eng: Engine::new(),
+            pb: Rc::new(RefCell::new(Plumbing { rng, trace: Vec::new(), finished_at: None })),
+            cells: Vec::new(),
+        }
+    }
+
+    /// Convenience: a harness seeded directly from a `u64`.
+    pub fn with_seed(seed: u64) -> Self {
+        Self::new(Rng::new(seed))
+    }
+
+    /// Register a scenario actor; returns its engine id.
+    pub fn add(&mut self, scenario: S) -> ActorId {
+        let cell = Rc::new(RefCell::new(scenario));
+        let pb = Rc::clone(&self.pb);
+        let c = Rc::clone(&cell);
+        let id = self.eng.add_actor(Box::new(
+            move |me: ActorId, msg: S::Msg, out: &mut Outbox<'_, S::Msg>| {
+                let mut pb = pb.borrow_mut();
+                let mut ctx = Ctx { me, out, pb: &mut *pb };
+                c.borrow_mut().on_msg(&mut ctx, msg);
+            },
+        ));
+        self.cells.push(cell);
+        id
+    }
+
+    /// Schedule an initial event.
+    pub fn schedule(&mut self, at: SimTime, target: ActorId, msg: S::Msg) {
+        self.eng.schedule(at, target, msg);
+    }
+
+    /// Enable event-log capture (determinism checks).
+    pub fn capture_log(&mut self, tagger: fn(&S::Msg) -> u64) {
+        self.eng.capture_log(tagger);
+    }
+
+    /// Run to quiescence or until a stop condition fires.
+    pub fn run(self) -> Finished<S> {
+        self.run_until(SimTime(u64::MAX))
+    }
+
+    /// Run until `horizon`, a stop condition, or quiescence.
+    pub fn run_until(self, horizon: SimTime) -> Finished<S> {
+        let Harness { mut eng, pb, cells } = self;
+        let end = eng.run_until(horizon);
+        let events = eng.dispatched();
+        let log = eng.log().clone();
+        // Dropping the engine drops the adapter closures, releasing their
+        // Rc clones so the states can be unwrapped by value.
+        drop(eng);
+        let pb = Rc::try_unwrap(pb).ok().expect("plumbing still shared").into_inner();
+        let scenarios = cells
+            .into_iter()
+            .map(|c| Rc::try_unwrap(c).ok().expect("scenario still shared").into_inner())
+            .collect();
+        Finished { scenarios, trace: pb.trace, finished_at: pb.finished_at, events, end, log }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A counter that re-arms itself with jittered delays until done.
+    struct Countdown {
+        remaining: u32,
+        sigma: f64,
+        seen: Vec<u32>,
+    }
+
+    impl Scenario for Countdown {
+        type Msg = u32;
+        fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, u32>, msg: u32) {
+            self.seen.push(msg);
+            if self.remaining == 0 {
+                ctx.finish();
+                return;
+            }
+            self.remaining -= 1;
+            ctx.record("tick", 0.001);
+            let j = ctx.jitter(self.sigma);
+            ctx.send_self_in_s(0.001 * j, msg + 1);
+        }
+    }
+
+    #[test]
+    fn state_returned_by_value_with_trace() {
+        let mut h: Harness<Countdown> = Harness::with_seed(1);
+        let id = h.add(Countdown { remaining: 5, sigma: 0.0, seen: Vec::new() });
+        h.schedule(SimTime::ZERO, id, 0);
+        let fin = h.run();
+        let s = fin.scenarios.into_iter().next().unwrap();
+        assert_eq!(s.seen, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(fin.trace.len(), 5);
+        assert!(fin.finished_at.is_some());
+        assert_eq!(fin.events, 6);
+    }
+
+    #[test]
+    fn noiseless_jitter_is_exactly_one() {
+        let mut h: Harness<Countdown> = Harness::with_seed(2);
+        let id = h.add(Countdown { remaining: 3, sigma: 0.0, seen: Vec::new() });
+        h.schedule(SimTime::ZERO, id, 0);
+        let fin = h.run();
+        // three re-arms of exactly 1 ms each
+        assert_eq!(fin.finished_at.unwrap(), SimTime::from_millis(3.0));
+    }
+
+    #[test]
+    fn same_seed_identical_trace() {
+        let run = |seed: u64| {
+            let mut h: Harness<Countdown> = Harness::with_seed(seed);
+            h.capture_log(|m| *m as u64);
+            let id = h.add(Countdown { remaining: 40, sigma: 0.05, seen: Vec::new() });
+            h.schedule(SimTime::ZERO, id, 0);
+            let fin = h.run();
+            (fin.log, fin.finished_at)
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7).1, run(8).1);
+    }
+
+    #[test]
+    fn multi_actor_states_in_registration_order() {
+        struct Echo {
+            tag: u32,
+            got: u32,
+        }
+        impl Scenario for Echo {
+            type Msg = u32;
+            fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, u32>, msg: u32) {
+                self.got = msg + self.tag;
+                ctx.stop();
+            }
+        }
+        let mut h: Harness<Echo> = Harness::with_seed(3);
+        let a = h.add(Echo { tag: 10, got: 0 });
+        let b = h.add(Echo { tag: 20, got: 0 });
+        h.schedule(SimTime::ZERO, a, 1);
+        h.schedule(SimTime::from_secs(1.0), b, 2);
+        // first run stops after actor a's dispatch; re-drive manually: the
+        // stop flag only halts remaining deliveries, so schedule both at the
+        // same time to observe both.
+        let fin = h.run();
+        assert_eq!(fin.scenarios[0].got, 11);
+        assert_eq!(fin.scenarios[1].got, 0); // stopped before b's event
+    }
+
+    #[test]
+    fn into_scenario_unwraps_single_actor() {
+        let mut h: Harness<Countdown> = Harness::with_seed(4);
+        let id = h.add(Countdown { remaining: 1, sigma: 0.0, seen: Vec::new() });
+        h.schedule(SimTime::ZERO, id, 9);
+        let s = h.run().into_scenario();
+        assert_eq!(s.seen, vec![9, 10]);
+    }
+}

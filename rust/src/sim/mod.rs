@@ -4,9 +4,15 @@
 //! reproduce them on a virtual-time engine so five-hour jobs run in
 //! milliseconds of wall clock and every trial is exactly reproducible from
 //! its seed (a property the test suite leans on heavily).
+//!
+//! [`engine`] is the bare event loop; [`harness`] is the scenario runtime
+//! that every protocol simulation (episodes, live runs, multi-failure
+//! scenarios) is built on.
 
 pub mod engine;
+pub mod harness;
 pub mod rng;
 
 pub use engine::{Engine, EventLog, SimTime};
+pub use harness::{Ctx, Finished, Harness, Scenario, StepTrace};
 pub use rng::Rng;

@@ -1,0 +1,142 @@
+//! Property tests over the scenario runtime (`sim::harness`) and the
+//! scenario layer:
+//!
+//! * same seed ⇒ byte-identical event traces through the harness;
+//! * a single-failure `ScenarioSpec` reproduces `run_live` bit-for-bit for
+//!   every multi-agent strategy;
+//! * batch results are independent of the thread count.
+
+use biomaft::cluster::{preset, ClusterPreset};
+use biomaft::coordinator::ftmanager::Strategy;
+use biomaft::coordinator::livesim::run_live;
+use biomaft::failure::injector::FailureProcess;
+use biomaft::scenario::{parallel_map_trials, FailureRegime, ScenarioSpec};
+use biomaft::sim::{Ctx, Harness, Rng, Scenario, SimTime};
+use biomaft::testkit::forall;
+
+/// A randomly re-arming actor: the harness analogue of the engine-level
+/// determinism property, exercising ctx scheduling, rng and jitter.
+struct Chatter {
+    remaining: u32,
+    sigma: f64,
+}
+
+impl Scenario for Chatter {
+    type Msg = u32;
+    fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, u32>, msg: u32) {
+        if self.remaining == 0 {
+            ctx.finish();
+            return;
+        }
+        self.remaining -= 1;
+        ctx.record("hop", 0.0);
+        let delay_us = ctx.rng().uniform(1.0, 50.0);
+        let j = ctx.jitter(self.sigma);
+        ctx.send_self_in_s(delay_us * 1e-6 * j, msg + 1);
+    }
+}
+
+#[test]
+fn prop_harness_same_seed_byte_identical_trace() {
+    forall(60, 201, |g| {
+        let seed = g.u64(0, u64::MAX - 1);
+        let steps = g.usize(1, 200) as u32;
+        let sigma = g.f64(0.0, 0.1);
+        let run = |seed: u64| {
+            let mut h: Harness<Chatter> = Harness::with_seed(seed);
+            h.capture_log(|m| *m as u64);
+            let id = h.add(Chatter { remaining: steps, sigma });
+            h.schedule(SimTime::ZERO, id, 0);
+            let fin = h.run();
+            (format!("{:?}", fin.log), fin.finished_at, fin.events)
+        };
+        let (log_a, fin_a, ev_a) = run(seed);
+        let (log_b, fin_b, ev_b) = run(seed);
+        // byte-identical trace, same finish, same dispatch count
+        assert_eq!(log_a.as_bytes(), log_b.as_bytes());
+        assert_eq!(fin_a, fin_b);
+        assert_eq!(ev_a, ev_b);
+    });
+}
+
+#[test]
+fn prop_single_failure_spec_reproduces_run_live_every_strategy() {
+    // The refactor's contract: wrapping the paper's single-failure regime
+    // in a ScenarioSpec changes nothing, for every multi-agent strategy.
+    forall(40, 202, |g| {
+        let strategy = *g.pick(&[Strategy::Agent, Strategy::Core, Strategy::Hybrid]);
+        let seed = g.u64(0, u64::MAX - 1);
+        let predictable = g.f64(0.0, 1.0);
+        let process = if g.bool() {
+            FailureProcess::Periodic { offset_s: g.f64(60.0, 3000.0) }
+        } else {
+            FailureProcess::RandomUniform
+        };
+        let spec = ScenarioSpec::placentia_ring16(
+            strategy,
+            predictable,
+            8,
+            FailureRegime::Single(process),
+        );
+
+        let via_spec = spec.run_trial(seed);
+
+        // replicate by hand: same plan stream, then the plain live run
+        let mut plan_rng = Rng::new(seed ^ 0x5EED_F00D_0BAD_CAFE);
+        let plan = spec.plan(&mut plan_rng);
+        let mut cfg = spec.cfg.clone();
+        cfg.seed = seed;
+        let direct = run_live(&cfg, &spec.topo, &plan);
+
+        assert_eq!(via_spec.completed_at_s.to_bits(), direct.completed_at_s.to_bits());
+        assert_eq!(via_spec.events, direct.events);
+        assert_eq!(via_spec.migrations, direct.migrations);
+        assert_eq!(via_spec.rollbacks, direct.rollbacks);
+        assert_eq!(via_spec.lost_then_recovered, direct.lost_then_recovered);
+        assert_eq!(via_spec.cascades, 0);
+    });
+}
+
+#[test]
+fn prop_batch_results_independent_of_thread_count() {
+    forall(12, 203, |g| {
+        let seed = g.u64(0, u64::MAX - 1);
+        let trials = g.usize(2, 24);
+        let threads_a = g.usize(1, 5);
+        let threads_b = g.usize(1, 5);
+        let spec = ScenarioSpec::placentia_ring16(
+            Strategy::Hybrid,
+            0.7,
+            8,
+            FailureRegime::Single(FailureProcess::RandomUniform),
+        );
+        let run = |threads: usize| {
+            parallel_map_trials(trials, threads, |i| {
+                spec.run_trial(seed.wrapping_add(i as u64)).completed_at_s.to_bits()
+            })
+        };
+        assert_eq!(run(threads_a), run(threads_b));
+    });
+}
+
+#[test]
+fn prop_measure_reinstate_stable_under_repeat() {
+    // The serial-draw / parallel-execute split in measure_reinstate must be
+    // a pure function of the RNG stream.
+    use biomaft::coordinator::run::{measure_reinstate, ExperimentCfg};
+    forall(20, 204, |g| {
+        let strategy = *g.pick(&[Strategy::Agent, Strategy::Core, Strategy::Hybrid]);
+        let seed = g.u64(0, u64::MAX - 1);
+        let trials = g.usize(1, 80);
+        let cfg = ExperimentCfg {
+            z: g.usize(0, 20),
+            trials,
+            ..ExperimentCfg::table1(preset(ClusterPreset::Placentia))
+        };
+        let a = measure_reinstate(strategy, &cfg, &mut Rng::new(seed));
+        let b = measure_reinstate(strategy, &cfg, &mut Rng::new(seed));
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.std.to_bits(), b.std.to_bits());
+        assert_eq!(a.n, trials.max(1));
+    });
+}

@@ -8,6 +8,10 @@ use biomaft::runtime::{Manifest, Runtime};
 use biomaft::sim::Rng;
 
 fn runtime() -> Option<Runtime> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     let dir = Manifest::default_dir();
     if !dir.join("manifest.txt").exists() {
         eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
@@ -95,7 +99,7 @@ fn collate_merges_counts() {
 #[test]
 fn pool_runs_tasks_across_workers() {
     let dir = Manifest::default_dir();
-    if !dir.join("manifest.txt").exists() {
+    if !cfg!(feature = "pjrt") || !dir.join("manifest.txt").exists() {
         return;
     }
     let mut rng = Rng::new(9);
