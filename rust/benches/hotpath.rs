@@ -9,7 +9,7 @@ use biomaft::coreft::simulate_core_migration;
 use biomaft::failure::predictor::Predictor;
 use biomaft::genome::{self, Strand};
 use biomaft::net::NodeId;
-use biomaft::sim::engine::{ActorId, Engine, Outbox};
+use biomaft::sim::engine::{ActorId, Engine};
 use biomaft::sim::{Rng, SimTime};
 
 fn main() {
@@ -19,13 +19,12 @@ fn main() {
     // DES engine event throughput: self-rescheduling actor, 100k events.
     s.bench_throughput("engine_100k_events", 100_000.0, || {
         let mut eng: Engine<u32> = Engine::new();
-        let a = eng.add_actor(Box::new(|_me: ActorId, msg: u32, out: &mut Outbox<'_, u32>| {
+        eng.schedule(SimTime::ZERO, ActorId(0), 0u32);
+        eng.run(|_me, msg, out| {
             if msg < 100_000 {
                 out.send_in(SimTime(1), ActorId(0), msg + 1);
             }
-        }));
-        eng.schedule(SimTime::ZERO, a, 0u32);
-        eng.run();
+        });
         eng.dispatched()
     });
 

@@ -8,6 +8,11 @@
 //!     cargo bench --bench scenarios
 //! ```
 //!
+//! Before overwriting, the previous baseline at the target path is read
+//! back and compared, so a run prints its serial speedup over the last
+//! committed numbers — and shouts if the committed file is still a
+//! placeholder (`"generated": false`) rather than honest measurements.
+//!
 //! Environment knobs: `BIOMAFT_BENCH_TRIALS` (default 2000),
 //! `BIOMAFT_BENCH_JSON` (path to write; stdout when unset).
 
@@ -21,6 +26,47 @@ fn spec() -> ScenarioSpec {
         16,
         FailureRegime::ConcurrentK { k: 3, offset_s: 600.0, spacing_s: 60.0 },
     )
+}
+
+/// Pull a numeric field out of the baseline JSON without a JSON dep:
+/// finds `"key":` and parses the number that follows.
+fn json_number(src: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{key}\":");
+    let at = src.find(&needle)? + needle.len();
+    let rest = src[at..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == '+' || c == 'e'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Report against the previously committed baseline, if any.
+fn compare_to_baseline(path: &str, serial_trials_per_s: f64) {
+    let Ok(prev) = std::fs::read_to_string(path) else {
+        println!("no previous baseline at {path} — first run on this machine");
+        return;
+    };
+    let generated = prev.contains("\"generated\": true") || prev.contains("\"generated\":true");
+    if !generated {
+        println!();
+        println!("!!! =============================================================== !!!");
+        println!("!!! WARNING: {path} is a PLACEHOLDER baseline (\"generated\": false). !!!");
+        println!("!!! There are no honest pre-change numbers to compare against.      !!!");
+        println!("!!! Committing this run's JSON establishes the first real baseline. !!!");
+        println!("!!! =============================================================== !!!");
+        println!();
+        return;
+    }
+    match json_number(&prev, "serial_trials_per_s") {
+        Some(prev_rate) if prev_rate > 0.0 => {
+            println!(
+                "baseline: {prev_rate:>10.1} serial trials/s -> {serial_trials_per_s:>10.1} \
+                 ({:.2}x)",
+                serial_trials_per_s / prev_rate
+            );
+        }
+        _ => println!("previous baseline at {path} has no parsable serial_trials_per_s"),
+    }
 }
 
 fn main() {
@@ -49,6 +95,11 @@ fn main() {
         "batch results must be independent of thread count"
     );
 
+    let json_path = std::env::var("BIOMAFT_BENCH_JSON").ok();
+    if let Some(path) = &json_path {
+        compare_to_baseline(path, serial.trials_per_s);
+    }
+
     let json = format!(
         "{{\n  \"bench\": \"scenario_batch\",\n  \"generated\": true,\n  \"machine_cores\": {cores},\n  \"trials\": {trials},\n  \"events_per_trial\": {:.1},\n  \"serial_s\": {:.4},\n  \"serial_trials_per_s\": {:.1},\n  \"parallel_s\": {:.4},\n  \"parallel_trials_per_s\": {:.1},\n  \"parallel_threads\": {},\n  \"speedup\": {:.2}\n}}\n",
         serial.events as f64 / trials as f64,
@@ -59,11 +110,11 @@ fn main() {
         parallel.threads,
         speedup,
     );
-    match std::env::var("BIOMAFT_BENCH_JSON") {
-        Ok(path) => {
+    match json_path {
+        Some(path) => {
             std::fs::write(&path, &json).expect("write bench json");
             println!("wrote {path}");
         }
-        Err(_) => println!("{json}"),
+        None => println!("{json}"),
     }
 }

@@ -19,7 +19,7 @@
 
 use crate::cluster::spec::{size_log_factor, AgentCosts};
 use crate::net::NodeId;
-use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime};
+use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime, TrialScratch};
 
 pub use crate::sim::harness::StepTrace;
 
@@ -44,16 +44,17 @@ enum Ep {
     DependencyDone { _idx: usize },
 }
 
-struct EpisodeActor {
+struct EpisodeActor<'a> {
     costs: AgentCosts,
     z: usize,
     data_kb: u64,
     proc_kb: u64,
-    jitter: Vec<f64>,
+    /// Borrowed from the trial's [`EpisodeDraws`] — no per-episode clone.
+    jitter: &'a [f64],
     deps_done: usize,
 }
 
-impl Scenario for EpisodeActor {
+impl Scenario for EpisodeActor<'_> {
     type Msg = Ep;
 
     fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, Ep>, msg: Ep) {
@@ -159,6 +160,22 @@ pub fn draw_episode(
 /// Number of jittered steps in the agent episode (Fig. 3).
 pub const AGENT_JITTERS: usize = 4;
 
+/// Reusable engine allocations for agent episodes; batch workers thread
+/// one through consecutive trials (reuse never changes a result).
+pub struct EpisodeScratch(TrialScratch<Ep>);
+
+impl EpisodeScratch {
+    pub fn new() -> Self {
+        Self(TrialScratch::new())
+    }
+}
+
+impl Default for EpisodeScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Run one agent-intelligence migration episode from pre-sampled draws.
 /// Fully deterministic: same draws ⇒ same outcome, on any thread.
 pub fn simulate_agent_migration_drawn(
@@ -168,18 +185,32 @@ pub fn simulate_agent_migration_drawn(
     proc_kb: u64,
     draws: &EpisodeDraws,
 ) -> MigrationOutcome {
+    let mut scratch = EpisodeScratch::new();
+    simulate_agent_migration_drawn_scratch(costs, z, data_kb, proc_kb, draws, &mut scratch)
+}
+
+/// [`simulate_agent_migration_drawn`] on recycled engine allocations.
+pub fn simulate_agent_migration_drawn_scratch(
+    costs: &AgentCosts,
+    z: usize,
+    data_kb: u64,
+    proc_kb: u64,
+    draws: &EpisodeDraws,
+    scratch: &mut EpisodeScratch,
+) -> MigrationOutcome {
     assert!(draws.jitter.len() >= AGENT_JITTERS, "agent episode needs {AGENT_JITTERS} jitters");
-    let mut h = Harness::with_seed(0);
+    let mut h = Harness::from_scratch(Rng::new(0), std::mem::take(&mut scratch.0));
     let id = h.add(EpisodeActor {
         costs: *costs,
         z,
         data_kb,
         proc_kb,
-        jitter: draws.jitter.clone(),
+        jitter: &draws.jitter,
         deps_done: 0,
     });
     h.schedule(SimTime::ZERO, id, Ep::PredictionNotified);
-    let fin = h.run();
+    let (fin, sim) = h.run_until_reclaim(SimTime(u64::MAX));
+    scratch.0 = sim;
     MigrationOutcome {
         reinstate_s: fin.finished_at.expect("episode did not finish").as_secs(),
         target: draws.target,

@@ -13,6 +13,6 @@ pub mod migration;
 
 pub use agent::{Agent, AgentState};
 pub use migration::{
-    draw_episode, simulate_agent_migration, simulate_agent_migration_drawn, EpisodeDraws,
-    MigrationOutcome, StepTrace,
+    draw_episode, simulate_agent_migration, simulate_agent_migration_drawn,
+    simulate_agent_migration_drawn_scratch, EpisodeDraws, MigrationOutcome, StepTrace,
 };

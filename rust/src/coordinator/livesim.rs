@@ -17,6 +17,18 @@
 //! failing mid-reinstate — are injected at migration time via
 //! [`CascadeSpec`].
 //!
+//! ## Hot path (see DESIGN.md §Hot path)
+//!
+//! The [`System`] scenario *borrows* its `LiveCfg` and `Topology` (no
+//! per-trial clones), victim scans iterate the host table in place instead
+//! of collecting `Vec`s per event, and target picks count-then-select over
+//! the neighbour slice instead of building a filtered `Vec` — the per-event
+//! path performs no allocation. [`LiveScratch`] additionally carries the
+//! engine buffers and the per-sub/per-node state vectors across trials, so
+//! a batch worker's steady-state trials allocate nothing but the failure
+//! plan. The RNG draw order of every replaced loop is unchanged, keeping
+//! traces bit-identical to the pre-redesign code.
+//!
 //! [`sim::harness`]: crate::sim::harness
 
 use crate::cluster::spec::FtCosts;
@@ -25,7 +37,7 @@ use crate::failure::injector::FailurePlan;
 use crate::hybrid::rules::{decide, Mover, RuleInputs};
 use crate::net::message::SubJobId;
 use crate::net::{NodeId, Topology};
-use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime};
+use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime, TrialScratch};
 
 /// Events of the live simulation.
 #[derive(Debug, Clone)]
@@ -103,9 +115,39 @@ pub struct CascadeSpec {
     pub lag_s: f64,
 }
 
-struct System {
-    cfg: LiveCfg,
-    topo: Topology,
+/// Reusable per-trial allocations for live runs: the harness scratch
+/// (engine queue, staging buffer) plus the system's per-sub-job and
+/// per-node state vectors. One scratch per batch worker; reuse never
+/// changes a result (tested in `tests/harness_properties.rs`).
+pub struct LiveScratch {
+    sim: TrialScratch<Ev>,
+    host: Vec<NodeId>,
+    state: Vec<LiveState>,
+    doomed: Vec<bool>,
+    predicted: Vec<bool>,
+}
+
+impl LiveScratch {
+    pub fn new() -> Self {
+        Self {
+            sim: TrialScratch::new(),
+            host: Vec::new(),
+            state: Vec::new(),
+            doomed: Vec::new(),
+            predicted: Vec::new(),
+        }
+    }
+}
+
+impl Default for LiveScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+struct System<'a> {
+    cfg: &'a LiveCfg,
+    topo: &'a Topology,
     host: Vec<NodeId>,
     state: Vec<LiveState>,
     doomed: Vec<bool>,
@@ -115,11 +157,7 @@ struct System {
     outcome: LiveOutcome,
 }
 
-impl System {
-    fn subs_on(&self, node: NodeId) -> Vec<SubJobId> {
-        (0..self.host.len()).filter(|&i| self.host[i] == node).map(SubJobId).collect()
-    }
-
+impl System<'_> {
     fn all_done(&self) -> bool {
         self.state.iter().all(|s| matches!(s, LiveState::Done))
     }
@@ -138,23 +176,22 @@ impl System {
         base * ctx.rng().jitter(self.cfg.costs.noise_sigma)
     }
 
+    /// Pick a healthy neighbour of `from`, uniformly. Count-then-select
+    /// over the adjacency slice: one RNG draw when any healthy neighbour
+    /// exists (exactly like the old collect-then-`pick`, so the stream is
+    /// unchanged) and no allocation.
     fn pick_target(&self, from: NodeId, ctx: &mut Ctx<'_, '_, Ev>) -> Option<NodeId> {
-        let healthy: Vec<NodeId> = self
-            .topo
-            .neighbours(from)
-            .iter()
-            .copied()
-            .filter(|n| !self.doomed[n.0])
-            .collect();
-        if healthy.is_empty() {
-            None
-        } else {
-            Some(*ctx.rng().pick(&healthy))
+        let nbrs = self.topo.neighbours(from);
+        let healthy = nbrs.iter().filter(|n| !self.doomed[n.0]).count();
+        if healthy == 0 {
+            return None;
         }
+        let k = ctx.rng().range_usize(0, healthy);
+        nbrs.iter().filter(|n| !self.doomed[n.0]).nth(k).copied()
     }
 }
 
-impl Scenario for System {
+impl Scenario for System<'_> {
     type Msg = Ev;
 
     fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, Ev>, ev: Ev) {
@@ -181,15 +218,23 @@ impl Scenario for System {
                 ctx.send_in(SimTime::from_secs(fail_in_s), me, Ev::Failure { node });
             }
             Ev::Prediction { node } => {
-                // proactive path: migrate every sub-job on the node
-                for sub in self.subs_on(node) {
-                    if let LiveState::Running { done_at } = self.state[sub.0] {
+                // proactive path: migrate every sub-job on the node. The
+                // in-place scan is victim-equivalent to the old snapshot
+                // Vec: migrations only move subs *off* `node` (targets are
+                // never doomed, and `node` is), so no sub joins the set
+                // mid-scan.
+                for i in 0..self.host.len() {
+                    if self.host[i] != node {
+                        continue;
+                    }
+                    let sub = SubJobId(i);
+                    if let LiveState::Running { done_at } = self.state[i] {
                         let remaining = (done_at.saturating_sub(now)).as_secs();
                         let dur = self.reinstate_s(self.cfg.z, ctx);
                         if let Some(target) = self.pick_target(node, ctx) {
-                            self.state[sub.0] =
+                            self.state[i] =
                                 LiveState::Migrating { resume_remaining_s: remaining };
-                            self.host[sub.0] = target;
+                            self.host[i] = target;
                             ctx.send_in(
                                 SimTime::from_secs(dur),
                                 me,
@@ -225,45 +270,43 @@ impl Scenario for System {
                 // rollback (the combined design's second line). A sub-job
                 // caught *mid-migration onto* the failed node (possible only
                 // in multi-failure regimes) loses its in-flight move too.
-                let lost: Vec<SubJobId> = self
-                    .subs_on(node)
-                    .into_iter()
-                    .filter(|s| {
-                        matches!(
-                            self.state[s.0],
-                            LiveState::Running { .. } | LiveState::Migrating { .. }
-                        )
-                    })
-                    .collect();
-                if !lost.is_empty() {
-                    for sub in &lost {
-                        match self.state[sub.0] {
-                            LiveState::Running { done_at } => {
-                                let remaining = (done_at.saturating_sub(now)).as_secs();
-                                self.state[sub.0] = LiveState::Recovering {
-                                    resume_remaining_s: remaining,
-                                    from: node,
-                                };
-                            }
-                            LiveState::Migrating { resume_remaining_s } => {
-                                // the migration aborts; its MigrationDone
-                                // event will find a non-Migrating state and
-                                // be ignored
-                                self.state[sub.0] = LiveState::Recovering {
-                                    resume_remaining_s,
-                                    from: node,
-                                };
-                            }
-                            _ => unreachable!("lost set is Running|Migrating"),
-                        }
-                        // move it off the dead node for the resume
-                        if let Some(t) = self.pick_target(node, ctx) {
-                            self.host[sub.0] = t;
-                        }
+                // In-place scan; re-homed subs leave `node` (pick_target
+                // never returns the doomed `node`), so the victim set and
+                // draw order match the old snapshot Vec exactly.
+                let mut lost = 0usize;
+                for i in 0..self.state.len() {
+                    if self.host[i] != node {
+                        continue;
                     }
+                    match self.state[i] {
+                        LiveState::Running { done_at } => {
+                            let remaining = (done_at.saturating_sub(now)).as_secs();
+                            self.state[i] = LiveState::Recovering {
+                                resume_remaining_s: remaining,
+                                from: node,
+                            };
+                        }
+                        LiveState::Migrating { resume_remaining_s } => {
+                            // the migration aborts; its MigrationDone
+                            // event will find a non-Migrating state and
+                            // be ignored
+                            self.state[i] = LiveState::Recovering {
+                                resume_remaining_s,
+                                from: node,
+                            };
+                        }
+                        _ => continue,
+                    }
+                    // move it off the dead node for the resume
+                    if let Some(t) = self.pick_target(node, ctx) {
+                        self.host[i] = t;
+                    }
+                    lost += 1;
+                }
+                if lost > 0 {
                     let dur = self.cfg.ckpt_reinstate_s + self.cfg.ckpt_overhead_s;
                     self.outcome.rollbacks += 1;
-                    self.outcome.lost_then_recovered += lost.len();
+                    self.outcome.lost_then_recovered += lost;
                     ctx.send_in(SimTime::from_secs(dur), me, Ev::RecoveryDone { node });
                 }
             }
@@ -340,30 +383,52 @@ pub fn run_live_with(
     plan: &FailurePlan,
     cascade: Option<CascadeSpec>,
 ) -> LiveOutcome {
+    run_live_scratch(cfg, topo, plan, cascade, &mut LiveScratch::new())
+}
+
+/// [`run_live_with`] on recycled trial allocations. Bit-identical results;
+/// a batch worker threads one [`LiveScratch`] through consecutive trials so
+/// steady-state trials allocate nothing but the plan.
+pub fn run_live_scratch(
+    cfg: &LiveCfg,
+    topo: &Topology,
+    plan: &FailurePlan,
+    cascade: Option<CascadeSpec>,
+    scratch: &mut LiveScratch,
+) -> LiveOutcome {
     let mut rng = Rng::new(cfg.seed);
-    let host: Vec<NodeId> = (0..cfg.n_subs).map(|i| NodeId(i % topo.len())).collect();
-    let state: Vec<LiveState> = (0..cfg.n_subs)
-        .map(|_| LiveState::Running { done_at: SimTime::from_secs(cfg.compute_s) })
-        .collect();
-    let predictable_frac = cfg.predictable_frac;
+    let mut host = std::mem::take(&mut scratch.host);
+    host.clear();
+    host.extend((0..cfg.n_subs).map(|i| NodeId(i % topo.len())));
+    let mut state = std::mem::take(&mut scratch.state);
+    state.clear();
+    state.extend(
+        (0..cfg.n_subs).map(|_| LiveState::Running { done_at: SimTime::from_secs(cfg.compute_s) }),
+    );
+    let mut doomed = std::mem::take(&mut scratch.doomed);
+    doomed.clear();
+    doomed.resize(topo.len(), false);
+    let mut predicted = std::mem::take(&mut scratch.predicted);
+    predicted.clear();
+    predicted.resize(topo.len(), false);
     let system = System {
-        cfg: cfg.clone(),
-        topo: topo.clone(),
+        cfg,
+        topo,
         host,
         state,
-        doomed: vec![false; topo.len()],
-        predicted: vec![false; topo.len()],
+        doomed,
+        predicted,
         cascade,
         outcome: LiveOutcome::default(),
     };
-    let mut h = Harness::new(rng.fork(1));
+    let mut h = Harness::from_scratch(rng.fork(1), std::mem::take(&mut scratch.sim));
     let sys = h.add(system);
     for i in 0..cfg.n_subs {
         h.schedule(SimTime::from_secs(cfg.compute_s), sys, Ev::SubJobDone { sub: SubJobId(i) });
     }
     let lead = cfg.costs.predict.predict_time_s + 20.0;
     for e in &plan.events {
-        let predictable = rng.chance(predictable_frac);
+        let predictable = rng.chance(cfg.predictable_frac);
         let doom_at = e.at.saturating_sub(SimTime::from_secs(lead));
         h.schedule(
             doom_at,
@@ -371,10 +436,17 @@ pub fn run_live_with(
             Ev::Doom { node: e.node, predictable, cascade: false, fail_in_s: lead },
         );
     }
-    let fin = h.run();
+    let (fin, sim) = h.run_until_reclaim(SimTime(u64::MAX));
+    scratch.sim = sim;
     let events = fin.events;
-    let mut outcome = fin.into_scenario().outcome;
+    let mut system = fin.into_scenario();
+    let mut outcome = std::mem::take(&mut system.outcome);
     outcome.events = events;
+    // hand the state vectors back for the next trial
+    scratch.host = system.host;
+    scratch.state = system.state;
+    scratch.doomed = system.doomed;
+    scratch.predicted = system.predicted;
     outcome
 }
 
@@ -489,6 +561,24 @@ mod tests {
         assert_eq!(a.migrations, b.migrations);
         assert_eq!(a.rollbacks, b.rollbacks);
         assert_eq!(a.cascades, 0);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        let mut rng = Rng::new(12);
+        let plan = FailureProcess::RandomUniformK { k: 4 }.plan(1, 3600.0, 8, &mut rng);
+        let c = cfg(Strategy::Hybrid, 0.6);
+        let cascade = Some(CascadeSpec { p_follow: 0.5, lag_s: 2.0 });
+        let mut scratch = LiveScratch::new();
+        for _ in 0..4 {
+            let fresh = run_live_with(&c, &topo(), &plan, cascade);
+            let reused = run_live_scratch(&c, &topo(), &plan, cascade, &mut scratch);
+            assert_eq!(fresh.completed_at_s.to_bits(), reused.completed_at_s.to_bits());
+            assert_eq!(fresh.events, reused.events);
+            assert_eq!(fresh.migrations, reused.migrations);
+            assert_eq!(fresh.rollbacks, reused.rollbacks);
+            assert_eq!(fresh.cascades, reused.cascades);
+        }
     }
 
     #[test]

@@ -18,13 +18,15 @@
 //! [`crate::checkpoint::cold_restart`].
 
 use super::ftmanager::Strategy;
-use crate::agentft::migration::{draw_episode, EpisodeDraws, AGENT_JITTERS};
-use crate::agentft::simulate_agent_migration_drawn;
+use crate::agentft::migration::{
+    draw_episode, EpisodeDraws, EpisodeScratch as AgentScratch, AGENT_JITTERS,
+};
+use crate::agentft::simulate_agent_migration_drawn_scratch;
 use crate::checkpoint::cold_restart::{mean_cold_restart, ColdRestartParams};
 use crate::checkpoint::{periodicity_factors, CheckpointStrategy};
 use crate::cluster::ClusterSpec;
-use crate::coreft::migration::CORE_JITTERS;
-use crate::coreft::simulate_core_migration_drawn;
+use crate::coreft::migration::{EpisodeScratch as CoreScratch, CORE_JITTERS};
+use crate::coreft::simulate_core_migration_drawn_scratch;
 use crate::hybrid::rules::{decide, Mover, RuleInputs};
 use crate::metrics::Summary;
 use crate::net::NodeId;
@@ -115,19 +117,39 @@ pub fn measure_reinstate(
         .collect();
     let threads = if trials >= PARALLEL_TRIAL_THRESHOLD { 0 } else { 1 };
     let (z, data_kb, proc_kb) = (cfg.z, cfg.data_kb, cfg.proc_kb);
-    let xs = batch::parallel_map_trials(trials, threads, |i| {
-        extra_s
-            + match mover {
-                Mover::Agent => {
-                    simulate_agent_migration_drawn(&costs.agent, z, data_kb, proc_kb, &draws[i])
-                        .reinstate_s
-                }
-                Mover::Core => {
-                    simulate_core_migration_drawn(&costs.core, z, data_kb, proc_kb, &draws[i])
-                        .reinstate_s
-                }
-            }
-    });
+    // Workers carry an episode scratch across their trials (engine queue /
+    // staging / log allocations), so steady-state episodes only allocate
+    // their step trace.
+    let xs = match mover {
+        Mover::Agent => {
+            batch::parallel_map_trials_scratch(trials, threads, AgentScratch::new, |sc, i| {
+                extra_s
+                    + simulate_agent_migration_drawn_scratch(
+                        &costs.agent,
+                        z,
+                        data_kb,
+                        proc_kb,
+                        &draws[i],
+                        sc,
+                    )
+                    .reinstate_s
+            })
+        }
+        Mover::Core => {
+            batch::parallel_map_trials_scratch(trials, threads, CoreScratch::new, |sc, i| {
+                extra_s
+                    + simulate_core_migration_drawn_scratch(
+                        &costs.core,
+                        z,
+                        data_kb,
+                        proc_kb,
+                        &draws[i],
+                        sc,
+                    )
+                    .reinstate_s
+            })
+        }
+    };
     Summary::of(&xs)
 }
 

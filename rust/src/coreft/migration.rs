@@ -16,7 +16,7 @@
 use crate::agentft::migration::{draw_episode, EpisodeDraws, StepTrace};
 use crate::cluster::spec::{size_log_factor, CoreCosts};
 use crate::net::NodeId;
-use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime};
+use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime, TrialScratch};
 
 /// Result of a core-intelligence migration episode.
 #[derive(Debug, Clone)]
@@ -35,16 +35,17 @@ enum Ep {
     RebindDone { _idx: usize },
 }
 
-struct EpisodeActor {
+struct EpisodeActor<'a> {
     costs: CoreCosts,
     z: usize,
     data_kb: u64,
     proc_kb: u64,
-    jitter: Vec<f64>,
+    /// Borrowed from the trial's [`EpisodeDraws`] — no per-episode clone.
+    jitter: &'a [f64],
     rebinds_done: usize,
 }
 
-impl EpisodeActor {
+impl EpisodeActor<'_> {
     fn data_term_s(&self) -> f64 {
         let u = size_log_factor(self.data_kb);
         let over = (u - self.costs.data_overflow_threshold).max(0.0);
@@ -54,7 +55,7 @@ impl EpisodeActor {
     }
 }
 
-impl Scenario for EpisodeActor {
+impl Scenario for EpisodeActor<'_> {
     type Msg = Ep;
 
     fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, Ep>, msg: Ep) {
@@ -101,6 +102,22 @@ impl Scenario for EpisodeActor {
 /// Number of jittered steps in the core episode (Fig. 5).
 pub const CORE_JITTERS: usize = 3;
 
+/// Reusable engine allocations for core episodes; batch workers thread
+/// one through consecutive trials (reuse never changes a result).
+pub struct EpisodeScratch(TrialScratch<Ep>);
+
+impl EpisodeScratch {
+    pub fn new() -> Self {
+        Self(TrialScratch::new())
+    }
+}
+
+impl Default for EpisodeScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Run one core-intelligence migration episode from pre-sampled draws.
 /// Fully deterministic: same draws ⇒ same outcome, on any thread.
 pub fn simulate_core_migration_drawn(
@@ -110,18 +127,32 @@ pub fn simulate_core_migration_drawn(
     proc_kb: u64,
     draws: &EpisodeDraws,
 ) -> CoreMigrationOutcome {
+    let mut scratch = EpisodeScratch::new();
+    simulate_core_migration_drawn_scratch(costs, z, data_kb, proc_kb, draws, &mut scratch)
+}
+
+/// [`simulate_core_migration_drawn`] on recycled engine allocations.
+pub fn simulate_core_migration_drawn_scratch(
+    costs: &CoreCosts,
+    z: usize,
+    data_kb: u64,
+    proc_kb: u64,
+    draws: &EpisodeDraws,
+    scratch: &mut EpisodeScratch,
+) -> CoreMigrationOutcome {
     assert!(draws.jitter.len() >= CORE_JITTERS, "core episode needs {CORE_JITTERS} jitters");
-    let mut h = Harness::with_seed(0);
+    let mut h = Harness::from_scratch(Rng::new(0), std::mem::take(&mut scratch.0));
     let id = h.add(EpisodeActor {
         costs: *costs,
         z,
         data_kb,
         proc_kb,
-        jitter: draws.jitter.clone(),
+        jitter: &draws.jitter,
         rebinds_done: 0,
     });
     h.schedule(SimTime::ZERO, id, Ep::PredictionNotified);
-    let fin = h.run();
+    let (fin, sim) = h.run_until_reclaim(SimTime(u64::MAX));
+    scratch.0 = sim;
     CoreMigrationOutcome {
         reinstate_s: fin.finished_at.expect("episode did not finish").as_secs(),
         target: draws.target,

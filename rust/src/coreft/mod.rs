@@ -11,6 +11,7 @@ pub mod migration;
 pub mod vcore;
 
 pub use migration::{
-    simulate_core_migration, simulate_core_migration_drawn, CoreMigrationOutcome,
+    simulate_core_migration, simulate_core_migration_drawn,
+    simulate_core_migration_drawn_scratch, CoreMigrationOutcome,
 };
 pub use vcore::{VCore, VCoreState};

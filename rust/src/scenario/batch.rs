@@ -8,9 +8,23 @@
 //! output is byte-identical whatever the thread count (including 1). That
 //! invariant is what lets `coordinator::run` and the experiment sweeps use
 //! this runner while still reproducing the paper's tables exactly.
+//!
+//! ## Scheduling (see DESIGN.md §Hot path)
+//!
+//! Work distribution is an atomic-counter chunk scheduler: workers claim
+//! the next chunk of trial indices with one `fetch_add` and write results
+//! into their disjoint slots. Unlike the old static contiguous partition,
+//! a worker that drew cheap trials steals the next chunk instead of going
+//! idle — which matters for skewed regimes (`Cascade` trials vary widely in
+//! cost) — while results stay keyed by index, so output is still
+//! byte-identical for any thread count. Workers carry a
+//! [`LiveScratch`](crate::coordinator::livesim::LiveScratch) across their
+//! trials, so steady-state trials allocate nothing but the failure plan.
 
 use super::spec::ScenarioSpec;
+use crate::coordinator::livesim::LiveScratch;
 use crate::metrics::Summary;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 /// How to run a batch.
@@ -46,6 +60,19 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Chunk of trial indices claimed per `fetch_add`: small enough that a
+/// skewed tail rebalances, large enough to amortise the atomic and keep
+/// result writes cache-friendly.
+fn steal_chunk(n: usize, threads: usize) -> usize {
+    (n / (threads * 8)).clamp(1, 1024)
+}
+
+/// A raw, `Send`able pointer to the result slots. Workers write only the
+/// indices they claimed from the atomic counter, so all writes are
+/// disjoint.
+struct Slots<T>(*mut Option<T>);
+unsafe impl<T: Send> Send for Slots<T> {}
+
 /// Fan `n` independent trials across `threads` OS threads; trial `i`'s
 /// result lands in slot `i`, so the output is independent of thread count
 /// and scheduling. `threads == 0` uses [`default_threads`].
@@ -54,20 +81,59 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    parallel_map_trials_scratch(n, threads, || (), |_, i| f(i))
+}
+
+/// [`parallel_map_trials`] with per-worker carried state: each worker calls
+/// `init()` once and threads the value through every trial it claims — the
+/// hook by which batch workers reuse a [`LiveScratch`] (or any other
+/// scratch) across trials.
+///
+/// Results are keyed by trial index; they are independent of the thread
+/// count **iff `f(scratch, i)` is a pure function of `i`** — the scratch
+/// must only carry allocations, never state that changes an output. Which
+/// trials share a worker's scratch depends on chunk claiming, so a
+/// result-affecting scratch would silently break the crate's
+/// byte-identical-batch contract (`LiveScratch` reuse is property-tested
+/// for exactly this in `tests/harness_properties.rs`).
+pub fn parallel_map_trials_scratch<T, C, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> C + Sync,
+    F: Fn(&mut C, usize) -> T + Sync,
+{
     let threads = if threads == 0 { default_threads() } else { threads };
     if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
+        let mut scratch = init();
+        return (0..n).map(|i| f(&mut scratch, i)).collect();
     }
     let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    // Static contiguous partition: trials are near-uniform in cost and this
-    // keeps each thread writing one disjoint chunk.
-    let chunk = n.div_ceil(threads);
+    let chunk = steal_chunk(n, threads);
+    let next = AtomicUsize::new(0);
+    let base = results.as_mut_ptr();
     std::thread::scope(|s| {
-        for (t, slots) in results.chunks_mut(chunk).enumerate() {
+        for _ in 0..threads.min(n) {
+            let next = &next;
+            let init = &init;
             let f = &f;
+            let slots = Slots(base);
             s.spawn(move || {
-                for (j, slot) in slots.iter_mut().enumerate() {
-                    *slot = Some(f(t * chunk + j));
+                let mut scratch = init();
+                loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        let v = f(&mut scratch, i);
+                        // SAFETY: `fetch_add` hands out disjoint index
+                        // ranges, so slot `i` is written by exactly one
+                        // worker; the slots vec outlives the scope and
+                        // every slot is initialised (`None`), so the
+                        // replaced value drops correctly.
+                        unsafe { *slots.0.add(i) = Some(v) };
+                    }
                 }
             });
         }
@@ -101,8 +167,8 @@ pub fn run_batch(spec: &ScenarioSpec, cfg: &BatchCfg) -> BatchOutcome {
     assert!(cfg.trials > 0, "empty batch");
     let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
     let t0 = Instant::now();
-    let outcomes = parallel_map_trials(cfg.trials, threads, |i| {
-        spec.run_trial(cfg.base_seed.wrapping_add(i as u64))
+    let outcomes = parallel_map_trials_scratch(cfg.trials, threads, LiveScratch::new, |sc, i| {
+        spec.run_trial_scratch(cfg.base_seed.wrapping_add(i as u64), sc)
     });
     let wall_s = t0.elapsed().as_secs_f64();
     summarize(threads, cfg, &outcomes, wall_s)
@@ -143,6 +209,33 @@ mod tests {
     fn parallel_map_more_threads_than_trials() {
         let out = parallel_map_trials(3, 16, |i| i);
         assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn parallel_map_scratch_carries_per_worker_state() {
+        // every worker's scratch counts the trials it executed; the counts
+        // must partition the index set exactly
+        let executed = AtomicUsize::new(0);
+        let out = parallel_map_trials_scratch(
+            200,
+            4,
+            || 0usize,
+            |count, i| {
+                *count += 1;
+                executed.fetch_add(1, Ordering::Relaxed);
+                i
+            },
+        );
+        assert_eq!(out, (0..200).collect::<Vec<_>>());
+        assert_eq!(executed.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn steal_chunk_bounds() {
+        assert_eq!(steal_chunk(1, 8), 1);
+        assert_eq!(steal_chunk(64, 8), 1);
+        assert_eq!(steal_chunk(2000, 8), 31);
+        assert_eq!(steal_chunk(1_000_000, 2), 1024);
     }
 
     #[test]

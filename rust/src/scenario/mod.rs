@@ -24,5 +24,9 @@
 pub mod batch;
 pub mod spec;
 
-pub use batch::{default_threads, parallel_map_trials, run_batch, BatchCfg, BatchOutcome};
+pub use batch::{
+    default_threads, parallel_map_trials, parallel_map_trials_scratch, run_batch, BatchCfg,
+    BatchOutcome,
+};
+pub use crate::coordinator::livesim::LiveScratch;
 pub use spec::{FailureRegime, ScenarioSpec};

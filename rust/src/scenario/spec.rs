@@ -5,7 +5,9 @@
 
 use crate::cluster::{preset, ClusterPreset};
 use crate::coordinator::ftmanager::Strategy;
-use crate::coordinator::livesim::{run_live_with, CascadeSpec, LiveCfg, LiveOutcome};
+use crate::coordinator::livesim::{
+    run_live_scratch, CascadeSpec, LiveCfg, LiveOutcome, LiveScratch,
+};
 use crate::failure::injector::{FailureEvent, FailurePlan, FailureProcess};
 use crate::net::{NodeId, Topology};
 use crate::sim::{Rng, SimTime};
@@ -153,11 +155,18 @@ impl ScenarioSpec {
     /// Run one seeded trial: build the trial's plan from `seed`'s plan
     /// stream, then play it out live. Deterministic in `seed`.
     pub fn run_trial(&self, seed: u64) -> LiveOutcome {
+        self.run_trial_scratch(seed, &mut LiveScratch::new())
+    }
+
+    /// [`ScenarioSpec::run_trial`] on recycled trial allocations —
+    /// bit-identical results; `scenario::batch` workers thread one
+    /// [`LiveScratch`] through their share of a batch.
+    pub fn run_trial_scratch(&self, seed: u64, scratch: &mut LiveScratch) -> LiveOutcome {
         let mut cfg = self.cfg.clone();
         cfg.seed = seed;
         let mut plan_rng = Rng::new(seed ^ PLAN_SALT);
         let plan = self.plan(&mut plan_rng);
-        run_live_with(&cfg, &self.topo, &plan, self.cascade())
+        run_live_scratch(&cfg, &self.topo, &plan, self.cascade(), scratch)
     }
 }
 

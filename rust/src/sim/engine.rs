@@ -1,10 +1,20 @@
 //! The discrete-event engine: a virtual clock, an ordered event queue, and
-//! actor dispatch.
+//! closure dispatch.
 //!
-//! Determinism contract: two runs with the same actor set, same initial
-//! events and same RNG seeds produce *identical* event traces. Ties in
-//! delivery time are broken by a monotone sequence number, so insertion
+//! Determinism contract: two runs with the same dispatch function, same
+//! initial events and same RNG seeds produce *identical* event traces. Ties
+//! in delivery time are broken by a monotone sequence number, so insertion
 //! order is part of the contract (tested in `testkit` property tests).
+//!
+//! ## Hot-path design (see DESIGN.md §Hot path)
+//!
+//! The engine owns no actors: [`Engine::run_until`] takes a *dispatch
+//! closure* and hands it each due event. Callers (notably
+//! [`crate::sim::harness`]) keep their actor state in a plain `Vec` and
+//! index it with the delivered [`ActorId`] — no `Box<dyn>` virtual call, no
+//! `Rc<RefCell<…>>` borrow, no allocation on the per-event path. The heap
+//! key is packed as `(time, seq)` into one `u128`, so the `BinaryHeap`
+//! sift compares are single integer compares.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -57,23 +67,37 @@ impl std::fmt::Display for SimTime {
     }
 }
 
-/// Identifies an actor registered with the engine.
+/// Identifies an actor; an index into whatever state store the dispatch
+/// closure consults (the harness uses a plain `Vec` of scenario states).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct ActorId(pub usize);
 
-/// A scheduled delivery.
-#[derive(Debug, Clone)]
+/// A scheduled delivery. The heap key packs `(time, seq)` into one `u128`
+/// — `time` in the high 64 bits, `seq` in the low — so ordering is a
+/// single integer compare instead of a lexicographic tuple compare.
 struct Event<M> {
-    at: SimTime,
-    seq: u64,
+    key: u128,
     target: ActorId,
     msg: M,
 }
 
-// Order by (time, seq) — BinaryHeap is a max-heap so we wrap in Reverse.
+#[inline]
+fn pack_key(at: SimTime, seq: u64) -> u128 {
+    ((at.0 as u128) << 64) | seq as u128
+}
+
+impl<M> Event<M> {
+    #[inline]
+    fn at(&self) -> SimTime {
+        SimTime((self.key >> 64) as u64)
+    }
+}
+
+// Order by the packed (time, seq) key — BinaryHeap is a max-heap so the
+// engine wraps events in Reverse.
 impl<M> PartialEq for Event<M> {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+        self.key == other.key
     }
 }
 impl<M> Eq for Event<M> {}
@@ -84,7 +108,7 @@ impl<M> PartialOrd for Event<M> {
 }
 impl<M> Ord for Event<M> {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.at, self.seq).cmp(&(other.at, other.seq))
+        self.key.cmp(&other.key)
     }
 }
 
@@ -122,26 +146,13 @@ impl<M> Outbox<'_, M> {
     }
 }
 
-/// Actor behaviour: react to a delivered message, optionally emitting more.
-pub trait Actor<M> {
-    fn on_msg(&mut self, me: ActorId, msg: M, out: &mut Outbox<'_, M>);
-}
-
-/// Blanket impl so plain closures can be used as actors in tests.
-impl<M, F: FnMut(ActorId, M, &mut Outbox<'_, M>)> Actor<M> for F {
-    fn on_msg(&mut self, me: ActorId, msg: M, out: &mut Outbox<'_, M>) {
-        self(me, msg, out)
-    }
-}
-
 /// A compact trace of dispatches for determinism checks: (time, target, tag).
 pub type EventLog = Vec<(SimTime, usize, u64)>;
 
-/// The engine. Generic over the message type `M`; protocols define their own
-/// message enums and register actors.
+/// The engine. Generic over the message type `M`; protocols define their
+/// own message enums and dispatch to their own state in the run closure.
 pub struct Engine<M> {
     queue: BinaryHeap<Reverse<Event<M>>>,
-    actors: Vec<Box<dyn Actor<M>>>,
     now: SimTime,
     seq: u64,
     dispatched: u64,
@@ -162,7 +173,6 @@ impl<M> Engine<M> {
     pub fn new() -> Self {
         Self {
             queue: BinaryHeap::new(),
-            actors: Vec::new(),
             now: SimTime::ZERO,
             seq: 0,
             dispatched: 0,
@@ -172,10 +182,22 @@ impl<M> Engine<M> {
         }
     }
 
-    /// Register an actor; returns its id.
-    pub fn add_actor(&mut self, actor: Box<dyn Actor<M>>) -> ActorId {
-        self.actors.push(actor);
-        ActorId(self.actors.len() - 1)
+    /// Reset the engine to its initial state while keeping the queue and
+    /// staging allocations — the engine half of
+    /// [`TrialScratch`](crate::sim::harness::TrialScratch) reuse: a
+    /// recycled engine runs a fresh trial without allocating. (The log
+    /// buffer is only retained if the previous run didn't [`take_log`]
+    /// it; log-capturing runs hand their buffer to the caller.)
+    ///
+    /// [`take_log`]: Engine::take_log
+    pub fn recycle(&mut self) {
+        self.queue.clear();
+        self.now = SimTime::ZERO;
+        self.seq = 0;
+        self.dispatched = 0;
+        self.tagger = None;
+        self.log.clear();
+        self.staging.clear();
     }
 
     /// Enable event-log capture; `tagger` maps a message to a stable tag.
@@ -187,9 +209,16 @@ impl<M> Engine<M> {
         &self.log
     }
 
+    /// Take the captured event log out of the engine (no copy), leaving an
+    /// empty log behind. The cheap way to extract the trace when the run is
+    /// over and the engine is headed for recycling or drop.
+    pub fn take_log(&mut self) -> EventLog {
+        std::mem::take(&mut self.log)
+    }
+
     /// Schedule an initial event.
     pub fn schedule(&mut self, at: SimTime, target: ActorId, msg: M) {
-        let ev = Event { at, seq: self.seq, target, msg };
+        let ev = Event { key: pack_key(at, self.seq), target, msg };
         self.seq += 1;
         self.queue.push(Reverse(ev));
     }
@@ -206,33 +235,37 @@ impl<M> Engine<M> {
         self.queue.len()
     }
 
-    /// Run until the queue drains, an actor requests a stop, or virtual time
-    /// would exceed `horizon` (events past the horizon stay undelivered).
+    /// Run until the queue drains, the dispatch closure requests a stop, or
+    /// virtual time would exceed `horizon` (events past the horizon stay
+    /// undelivered). `dispatch` is handed each due event in (time, seq)
+    /// order; it routes the message to the caller's own actor state.
     /// Returns the final virtual time.
-    pub fn run_until(&mut self, horizon: SimTime) -> SimTime {
+    pub fn run_until<F>(&mut self, horizon: SimTime, mut dispatch: F) -> SimTime
+    where
+        F: FnMut(ActorId, M, &mut Outbox<'_, M>),
+    {
         while let Some(Reverse(ev)) = self.queue.pop() {
-            if ev.at > horizon {
+            let at = ev.at();
+            if at > horizon {
                 // Past the horizon: clamp the clock and stop.
                 self.now = horizon;
                 self.queue.push(Reverse(ev));
                 break;
             }
-            debug_assert!(ev.at >= self.now, "time went backwards");
-            self.now = ev.at;
+            debug_assert!(at >= self.now, "time went backwards");
+            self.now = at;
             self.dispatched += 1;
             if let Some(tag) = self.tagger {
-                self.log.push((ev.at, ev.target.0, tag(&ev.msg)));
+                self.log.push((at, ev.target.0, tag(&ev.msg)));
             }
-            let mut staging = std::mem::take(&mut self.staging);
-            let mut out = Outbox { now: self.now, staged: &mut staging, stop: false };
-            self.actors[ev.target.0].on_msg(ev.target, ev.msg, &mut out);
+            let mut out = Outbox { now: at, staged: &mut self.staging, stop: false };
+            dispatch(ev.target, ev.msg, &mut out);
             let stop = out.stop;
-            for (at, target, msg) in staging.drain(..) {
-                let e = Event { at, seq: self.seq, target, msg };
+            for (t, target, msg) in self.staging.drain(..) {
+                let e = Event { key: pack_key(t, self.seq), target, msg };
                 self.seq += 1;
                 self.queue.push(Reverse(e));
             }
-            self.staging = staging;
             if stop {
                 break;
             }
@@ -241,16 +274,17 @@ impl<M> Engine<M> {
     }
 
     /// Run to quiescence (no horizon).
-    pub fn run(&mut self) -> SimTime {
-        self.run_until(SimTime(u64::MAX))
+    pub fn run<F>(&mut self, dispatch: F) -> SimTime
+    where
+        F: FnMut(ActorId, M, &mut Outbox<'_, M>),
+    {
+        self.run_until(SimTime(u64::MAX), dispatch)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::cell::RefCell;
-    use std::rc::Rc;
 
     #[derive(Debug, Clone)]
     enum Msg {
@@ -267,66 +301,66 @@ mod tests {
     }
 
     #[test]
+    fn packed_key_orders_time_then_seq() {
+        assert!(pack_key(SimTime(1), u64::MAX) < pack_key(SimTime(2), 0));
+        assert!(pack_key(SimTime(5), 3) < pack_key(SimTime(5), 4));
+        assert_eq!(
+            Event::<u32> { key: pack_key(SimTime(7), 9), target: ActorId(0), msg: 0 }.at(),
+            SimTime(7)
+        );
+    }
+
+    #[test]
     fn events_dispatch_in_time_order() {
-        let seen: Rc<RefCell<Vec<u32>>> = Rc::default();
-        let s = seen.clone();
+        let mut seen: Vec<u32> = Vec::new();
         let mut eng: Engine<Msg> = Engine::new();
-        let a = eng.add_actor(Box::new(move |_me, msg: Msg, _out: &mut Outbox<'_, Msg>| {
-            if let Msg::Ping(i) = msg {
-                s.borrow_mut().push(i);
-            }
-        }));
+        let a = ActorId(0);
         eng.schedule(SimTime::from_secs(3.0), a, Msg::Ping(3));
         eng.schedule(SimTime::from_secs(1.0), a, Msg::Ping(1));
         eng.schedule(SimTime::from_secs(2.0), a, Msg::Ping(2));
-        eng.run();
-        assert_eq!(*seen.borrow(), vec![1, 2, 3]);
+        eng.run(|_me, msg, _out| {
+            if let Msg::Ping(i) = msg {
+                seen.push(i);
+            }
+        });
+        assert_eq!(seen, vec![1, 2, 3]);
     }
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let seen: Rc<RefCell<Vec<u32>>> = Rc::default();
-        let s = seen.clone();
+        let mut seen: Vec<u32> = Vec::new();
         let mut eng: Engine<Msg> = Engine::new();
-        let a = eng.add_actor(Box::new(move |_me, msg: Msg, _out: &mut Outbox<'_, Msg>| {
-            if let Msg::Ping(i) = msg {
-                s.borrow_mut().push(i);
-            }
-        }));
         for i in 0..10 {
-            eng.schedule(SimTime::from_secs(1.0), a, Msg::Ping(i));
+            eng.schedule(SimTime::from_secs(1.0), ActorId(0), Msg::Ping(i));
         }
-        eng.run();
-        assert_eq!(*seen.borrow(), (0..10).collect::<Vec<_>>());
+        eng.run(|_me, msg, _out| {
+            if let Msg::Ping(i) = msg {
+                seen.push(i);
+            }
+        });
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
     fn ping_pong_terminates_and_advances_clock() {
         // Actor 0 pings actor 1; actor 1 pongs back until a count runs out.
-        struct PingPong {
-            peer: usize,
-            remaining: u32,
-        }
-        impl Actor<Msg> for PingPong {
-            fn on_msg(&mut self, _me: ActorId, msg: Msg, out: &mut Outbox<'_, Msg>) {
-                match msg {
-                    Msg::Ping(i) if self.remaining > 0 => {
-                        self.remaining -= 1;
-                        out.send_in(SimTime::from_millis(10.0), ActorId(self.peer), Msg::Pong(i));
-                    }
-                    Msg::Pong(i) if self.remaining > 0 => {
-                        self.remaining -= 1;
-                        out.send_in(SimTime::from_millis(10.0), ActorId(self.peer), Msg::Ping(i + 1));
-                    }
-                    _ => {}
-                }
-            }
-        }
+        let mut remaining = [5u32, 5u32];
         let mut eng: Engine<Msg> = Engine::new();
-        let a = eng.add_actor(Box::new(PingPong { peer: 1, remaining: 5 }));
-        let _b = eng.add_actor(Box::new(PingPong { peer: 0, remaining: 5 }));
-        eng.schedule(SimTime::ZERO, a, Msg::Ping(0));
-        let end = eng.run();
+        eng.schedule(SimTime::ZERO, ActorId(0), Msg::Ping(0));
+        let end = eng.run(|me, msg, out| {
+            let peer = ActorId(1 - me.0);
+            match msg {
+                Msg::Ping(i) if remaining[me.0] > 0 => {
+                    remaining[me.0] -= 1;
+                    out.send_in(SimTime::from_millis(10.0), peer, Msg::Pong(i));
+                }
+                Msg::Pong(i) if remaining[me.0] > 0 => {
+                    remaining[me.0] -= 1;
+                    out.send_in(SimTime::from_millis(10.0), peer, Msg::Ping(i + 1));
+                }
+                _ => {}
+            }
+        });
         // 10 hops of 10ms each (5+5 remaining), minus the initial dispatch at t=0.
         assert_eq!(end, SimTime::from_millis(100.0));
         assert_eq!(eng.dispatched(), 11); // initial + 10 relayed
@@ -335,13 +369,12 @@ mod tests {
     #[test]
     fn horizon_stops_early() {
         let mut eng: Engine<Msg> = Engine::new();
-        let a = eng.add_actor(Box::new(|_me, _msg: Msg, out: &mut Outbox<'_, Msg>| {
+        eng.schedule(SimTime::ZERO, ActorId(0), Msg::Ping(0));
+        let end = eng.run_until(SimTime::from_secs(10.5), |_me, _msg, out| {
             // re-arm forever
             let t = out.now();
             out.send_at(t + SimTime::from_secs(1.0), ActorId(0), Msg::Ping(0));
-        }));
-        eng.schedule(SimTime::ZERO, a, Msg::Ping(0));
-        let end = eng.run_until(SimTime::from_secs(10.5));
+        });
         assert_eq!(end, SimTime::from_secs(10.5));
         assert_eq!(eng.dispatched(), 11); // t=0..10 inclusive
         assert_eq!(eng.pending(), 1); // the t=11 event remains queued
@@ -350,7 +383,9 @@ mod tests {
     #[test]
     fn stop_flag_halts_dispatch() {
         let mut eng: Engine<Msg> = Engine::new();
-        let a = eng.add_actor(Box::new(|_me, msg: Msg, out: &mut Outbox<'_, Msg>| {
+        eng.schedule(SimTime::ZERO, ActorId(0), Msg::Ping(0));
+        eng.schedule(SimTime::from_secs(100.0), ActorId(0), Msg::Ping(99));
+        eng.run(|_me, msg, out| {
             if let Msg::Ping(i) = msg {
                 if i >= 3 {
                     out.stop = true;
@@ -358,10 +393,7 @@ mod tests {
                     out.send_in(SimTime::from_secs(1.0), ActorId(0), Msg::Ping(i + 1));
                 }
             }
-        }));
-        eng.schedule(SimTime::ZERO, a, Msg::Ping(0));
-        eng.schedule(SimTime::from_secs(100.0), a, Msg::Ping(99));
-        eng.run();
+        });
         assert_eq!(eng.now(), SimTime::from_secs(3.0));
         assert_eq!(eng.pending(), 1);
     }
@@ -370,40 +402,64 @@ mod tests {
     fn send_at_past_clamps_to_now() {
         // The documented contract: an absolute send into the past delivers
         // at the current dispatch time (identically in debug and release).
-        let seen: Rc<RefCell<Vec<(u64, u32)>>> = Rc::default();
-        let s = seen.clone();
+        let mut seen: Vec<(u64, u32)> = Vec::new();
         let mut eng: Engine<Msg> = Engine::new();
-        let a = eng.add_actor(Box::new(move |_me, msg: Msg, out: &mut Outbox<'_, Msg>| {
+        eng.schedule(SimTime::from_secs(1.0), ActorId(0), Msg::Ping(0));
+        eng.run(|_me, msg, out| {
             if let Msg::Ping(i) = msg {
-                s.borrow_mut().push((out.now().0, i));
+                seen.push((out.now().0, i));
                 if i == 0 {
                     // deliberately schedule one second into the past
                     out.send_at(SimTime::ZERO, ActorId(0), Msg::Ping(1));
                 }
             }
-        }));
-        eng.schedule(SimTime::from_secs(1.0), a, Msg::Ping(0));
-        eng.run();
-        let got = seen.borrow().clone();
-        assert_eq!(got.len(), 2);
+        });
+        assert_eq!(seen.len(), 2);
         // the clamped event is delivered at the time of the dispatch that
         // staged it, not at the requested (past) time
-        assert_eq!(got[1], (SimTime::from_secs(1.0).0, 1));
+        assert_eq!(seen[1], (SimTime::from_secs(1.0).0, 1));
     }
 
     #[test]
-    fn log_captures_trace() {
+    fn log_captures_trace_and_take_log_empties_it() {
         let mut eng: Engine<Msg> = Engine::new();
-        let a = eng.add_actor(Box::new(|_me, _msg: Msg, _out: &mut Outbox<'_, Msg>| {}));
         eng.capture_log(|m| match m {
             Msg::Ping(i) => *i as u64,
             Msg::Pong(i) => 1000 + *i as u64,
         });
-        eng.schedule(SimTime::from_secs(1.0), a, Msg::Ping(7));
-        eng.schedule(SimTime::from_secs(2.0), a, Msg::Pong(8));
-        eng.run();
+        eng.schedule(SimTime::from_secs(1.0), ActorId(0), Msg::Ping(7));
+        eng.schedule(SimTime::from_secs(2.0), ActorId(0), Msg::Pong(8));
+        eng.run(|_me, _msg, _out| {});
         assert_eq!(eng.log().len(), 2);
         assert_eq!(eng.log()[0].2, 7);
         assert_eq!(eng.log()[1].2, 1008);
+        let log = eng.take_log();
+        assert_eq!(log.len(), 2);
+        assert!(eng.log().is_empty());
+    }
+
+    #[test]
+    fn recycled_engine_replays_identically() {
+        let run = |eng: &mut Engine<Msg>| {
+            eng.capture_log(|m| match m {
+                Msg::Ping(i) => *i as u64,
+                Msg::Pong(i) => 1000 + *i as u64,
+            });
+            eng.schedule(SimTime::ZERO, ActorId(0), Msg::Ping(0));
+            eng.run(|_me, msg, out| {
+                if let Msg::Ping(i) = msg {
+                    if i < 20 {
+                        out.send_in(SimTime::from_millis(1.0), ActorId(0), Msg::Ping(i + 1));
+                    }
+                }
+            });
+            (eng.take_log(), eng.dispatched(), eng.now())
+        };
+        let mut eng: Engine<Msg> = Engine::new();
+        let first = run(&mut eng);
+        eng.recycle();
+        assert_eq!(eng.pending(), 0);
+        let second = run(&mut eng);
+        assert_eq!(first, second);
     }
 }

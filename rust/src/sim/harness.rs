@@ -17,14 +17,28 @@
 //!   *by value* together with the collected trace, so results are read off
 //!   plain fields instead of `Rc<RefCell>` slots.
 //!
+//! ## Hot-path design (see DESIGN.md §Hot path)
+//!
+//! The harness owns a plain `Vec<S>` of scenario states and dispatches
+//! `&mut scenarios[id.0]` through the engine's run closure — there is no
+//! `Box<dyn Actor>`, no `Rc<RefCell<Plumbing>>` double borrow, and no
+//! `Rc::try_unwrap` unwind at the end of a run; states and plumbing are
+//! plain owned fields moved into [`Finished`]. Because nothing is
+//! type-erased, [`Scenario`] needs no `'static` bound: scenario state may
+//! borrow its configuration (the live simulation borrows its `LiveCfg` and
+//! `Topology` instead of cloning them per trial).
+//!
+//! [`TrialScratch`] carries the engine's queue and staging allocations from
+//! one run to the next: `scenario::batch` threads hold one scratch each, so
+//! steady-state trials allocate nothing on the event path.
+//!
 //! Determinism contract: a harness seeded with the same RNG, the same
 //! scenario state and the same initial events produces a byte-identical
-//! event trace (property-tested in `tests/harness_properties.rs`).
+//! event trace (property-tested in `tests/harness_properties.rs`) — with or
+//! without scratch reuse.
 
 use super::engine::{ActorId, Engine, EventLog, Outbox};
 use super::{Rng, SimTime};
-use std::cell::RefCell;
-use std::rc::Rc;
 
 /// One recorded protocol step (name, start, duration). Shared by the
 /// Fig. 3 / Fig. 5 episode protocols and any future scenario that wants a
@@ -40,9 +54,10 @@ pub struct StepTrace {
 ///
 /// Implementations hold plain fields (counters, hosts, outcomes); the
 /// harness returns the state by value after the run, which is how results
-/// leave the simulation.
-pub trait Scenario: Sized + 'static {
-    type Msg: 'static;
+/// leave the simulation. State may borrow long-lived configuration — no
+/// `'static` bound — since the harness never type-erases it.
+pub trait Scenario: Sized {
+    type Msg;
 
     fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, Self::Msg>, msg: Self::Msg);
 }
@@ -149,23 +164,44 @@ impl<S: Scenario> Finished<S> {
     }
 }
 
+/// Reusable per-trial allocations: the engine's event queue and outbox
+/// staging buffer. A batch worker holds one scratch and threads it through
+/// consecutive trials via [`Harness::from_scratch`] /
+/// [`Harness::run_until_reclaim`]; a recycled scratch behaves exactly like
+/// a fresh one (tested in `tests/harness_properties.rs`), it just skips
+/// the allocations. Note the event log and step trace move *out* with
+/// [`Finished`] (callers own their results), so runs that capture a log or
+/// record steps still allocate those — the hot batch path does neither.
+pub struct TrialScratch<M> {
+    eng: Engine<M>,
+    trace: Vec<StepTrace>,
+}
+
+impl<M> TrialScratch<M> {
+    pub fn new() -> Self {
+        Self { eng: Engine::new(), trace: Vec::new() }
+    }
+}
+
+impl<M> Default for TrialScratch<M> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// The scenario runtime. Owns the engine, the shared plumbing and the
-/// registered scenario states.
+/// registered scenario states — all as plain fields.
 pub struct Harness<S: Scenario> {
     eng: Engine<S::Msg>,
-    pb: Rc<RefCell<Plumbing>>,
-    cells: Vec<Rc<RefCell<S>>>,
+    pb: Plumbing,
+    scenarios: Vec<S>,
 }
 
 impl<S: Scenario> Harness<S> {
     /// Build a harness whose shared RNG is `rng` (deterministic seeding:
     /// the caller decides exactly which stream the run consumes).
     pub fn new(rng: Rng) -> Self {
-        Self {
-            eng: Engine::new(),
-            pb: Rc::new(RefCell::new(Plumbing { rng, trace: Vec::new(), finished_at: None })),
-            cells: Vec::new(),
-        }
+        Self::from_scratch(rng, TrialScratch::new())
     }
 
     /// Convenience: a harness seeded directly from a `u64`.
@@ -173,20 +209,19 @@ impl<S: Scenario> Harness<S> {
         Self::new(Rng::new(seed))
     }
 
+    /// Build a harness on recycled trial allocations. Behaviour is
+    /// identical to [`Harness::new`]; only the allocations differ.
+    pub fn from_scratch(rng: Rng, scratch: TrialScratch<S::Msg>) -> Self {
+        let TrialScratch { mut eng, mut trace } = scratch;
+        eng.recycle();
+        trace.clear();
+        Self { eng, pb: Plumbing { rng, trace, finished_at: None }, scenarios: Vec::new() }
+    }
+
     /// Register a scenario actor; returns its engine id.
     pub fn add(&mut self, scenario: S) -> ActorId {
-        let cell = Rc::new(RefCell::new(scenario));
-        let pb = Rc::clone(&self.pb);
-        let c = Rc::clone(&cell);
-        let id = self.eng.add_actor(Box::new(
-            move |me: ActorId, msg: S::Msg, out: &mut Outbox<'_, S::Msg>| {
-                let mut pb = pb.borrow_mut();
-                let mut ctx = Ctx { me, out, pb: &mut *pb };
-                c.borrow_mut().on_msg(&mut ctx, msg);
-            },
-        ));
-        self.cells.push(cell);
-        id
+        self.scenarios.push(scenario);
+        ActorId(self.scenarios.len() - 1)
     }
 
     /// Schedule an initial event.
@@ -206,19 +241,25 @@ impl<S: Scenario> Harness<S> {
 
     /// Run until `horizon`, a stop condition, or quiescence.
     pub fn run_until(self, horizon: SimTime) -> Finished<S> {
-        let Harness { mut eng, pb, cells } = self;
-        let end = eng.run_until(horizon);
+        self.run_until_reclaim(horizon).0
+    }
+
+    /// Run like [`Harness::run_until`] and additionally hand the trial
+    /// allocations back for reuse. (The step trace moves into [`Finished`]
+    /// — callers own their results — so the returned scratch carries a
+    /// fresh trace buffer; scenarios that record no steps never allocate
+    /// one.)
+    pub fn run_until_reclaim(self, horizon: SimTime) -> (Finished<S>, TrialScratch<S::Msg>) {
+        let Harness { mut eng, mut pb, mut scenarios } = self;
+        let end = eng.run_until(horizon, |me, msg, out| {
+            let mut ctx = Ctx { me, out, pb: &mut pb };
+            scenarios[me.0].on_msg(&mut ctx, msg);
+        });
         let events = eng.dispatched();
-        let log = eng.log().clone();
-        // Dropping the engine drops the adapter closures, releasing their
-        // Rc clones so the states can be unwrapped by value.
-        drop(eng);
-        let pb = Rc::try_unwrap(pb).ok().expect("plumbing still shared").into_inner();
-        let scenarios = cells
-            .into_iter()
-            .map(|c| Rc::try_unwrap(c).ok().expect("scenario still shared").into_inner())
-            .collect();
-        Finished { scenarios, trace: pb.trace, finished_at: pb.finished_at, events, end, log }
+        let log = eng.take_log();
+        let trace = std::mem::take(&mut pb.trace);
+        let fin = Finished { scenarios, trace, finished_at: pb.finished_at, events, end, log };
+        (fin, TrialScratch { eng, trace: Vec::new() })
     }
 }
 
@@ -318,5 +359,47 @@ mod tests {
         h.schedule(SimTime::ZERO, id, 9);
         let s = h.run().into_scenario();
         assert_eq!(s.seen, vec![9, 10]);
+    }
+
+    #[test]
+    fn scenario_state_may_borrow_config() {
+        // the redesign drops the `'static` bound: scenario state can borrow
+        // long-lived configuration instead of cloning it per trial
+        struct Borrowing<'a> {
+            weights: &'a [f64],
+            acc: f64,
+        }
+        impl Scenario for Borrowing<'_> {
+            type Msg = usize;
+            fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, usize>, msg: usize) {
+                self.acc += self.weights[msg];
+                if msg + 1 < self.weights.len() {
+                    ctx.send_self_in_s(0.001, msg + 1);
+                } else {
+                    ctx.finish();
+                }
+            }
+        }
+        let weights = vec![1.0, 2.0, 4.0];
+        let mut h: Harness<Borrowing<'_>> = Harness::with_seed(5);
+        let id = h.add(Borrowing { weights: &weights, acc: 0.0 });
+        h.schedule(SimTime::ZERO, id, 0);
+        let s = h.run().into_scenario();
+        assert_eq!(s.acc, 7.0);
+    }
+
+    #[test]
+    fn scratch_reuse_replays_identically() {
+        let run = |scratch: TrialScratch<u32>| {
+            let mut h: Harness<Countdown> = Harness::from_scratch(Rng::new(11), scratch);
+            h.capture_log(|m| *m as u64);
+            let id = h.add(Countdown { remaining: 30, sigma: 0.05, seen: Vec::new() });
+            h.schedule(SimTime::ZERO, id, 0);
+            let (fin, scratch) = h.run_until_reclaim(SimTime(u64::MAX));
+            ((fin.log, fin.finished_at, fin.events, fin.trace.len()), scratch)
+        };
+        let (first, scratch) = run(TrialScratch::new());
+        let (second, _) = run(scratch);
+        assert_eq!(first, second);
     }
 }

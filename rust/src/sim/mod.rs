@@ -14,5 +14,5 @@ pub mod harness;
 pub mod rng;
 
 pub use engine::{Engine, EventLog, SimTime};
-pub use harness::{Ctx, Finished, Harness, Scenario, StepTrace};
+pub use harness::{Ctx, Finished, Harness, Scenario, StepTrace, TrialScratch};
 pub use rng::Rng;

@@ -4,13 +4,18 @@
 //! * same seed ⇒ byte-identical event traces through the harness;
 //! * a single-failure `ScenarioSpec` reproduces `run_live` bit-for-bit for
 //!   every multi-agent strategy;
-//! * batch results are independent of the thread count.
+//! * batch results are independent of the thread count — including under
+//!   the work-stealing chunk scheduler with skewed (`Cascade`) trial costs;
+//! * `TrialScratch`/`LiveScratch` reuse never changes a result.
 
 use biomaft::cluster::{preset, ClusterPreset};
 use biomaft::coordinator::ftmanager::Strategy;
 use biomaft::coordinator::livesim::run_live;
 use biomaft::failure::injector::FailureProcess;
-use biomaft::scenario::{parallel_map_trials, FailureRegime, ScenarioSpec};
+use biomaft::scenario::{
+    parallel_map_trials, parallel_map_trials_scratch, run_batch, BatchCfg, FailureRegime,
+    LiveScratch, ScenarioSpec,
+};
 use biomaft::sim::{Ctx, Harness, Rng, Scenario, SimTime};
 use biomaft::testkit::forall;
 
@@ -117,6 +122,108 @@ fn prop_batch_results_independent_of_thread_count() {
         };
         assert_eq!(run(threads_a), run(threads_b));
     });
+}
+
+/// The skewed-cost fixture: cascade trials vary widely in cost, which is
+/// exactly the regime the work-stealing chunk scheduler exists for.
+fn cascade_spec() -> ScenarioSpec {
+    ScenarioSpec::placentia_ring16(
+        Strategy::Hybrid,
+        0.8,
+        16,
+        FailureRegime::Cascade {
+            trigger: FailureProcess::RandomUniformK { k: 2 },
+            p_follow: 0.7,
+            lag_s: 3.0,
+        },
+    )
+}
+
+#[test]
+fn prop_workstealing_batch_byte_identical_to_serial_under_cascade() {
+    // The scheduler's contract: dynamic chunk claiming changes which worker
+    // runs a trial, never the trial itself — byte-identical to threads=1
+    // even when trial costs are skewed.
+    let spec = cascade_spec();
+    forall(8, 205, |g| {
+        let seed = g.u64(0, u64::MAX - 1);
+        let trials = g.usize(2, 48);
+        let threads = g.usize(2, 8);
+        let run = |threads: usize| {
+            parallel_map_trials(trials, threads, |i| {
+                let o = spec.run_trial(seed.wrapping_add(i as u64));
+                (o.completed_at_s.to_bits(), o.events, o.migrations, o.rollbacks, o.cascades)
+            })
+        };
+        assert_eq!(run(1), run(threads));
+    });
+}
+
+#[test]
+fn run_batch_thread_count_invariant_under_cascade() {
+    let spec = cascade_spec();
+    let serial = run_batch(&spec, &BatchCfg { trials: 32, base_seed: 77, threads: 1 });
+    let stolen = run_batch(&spec, &BatchCfg { trials: 32, base_seed: 77, threads: 5 });
+    assert_eq!(serial.completed_s, stolen.completed_s);
+    assert_eq!(serial.migrations, stolen.migrations);
+    assert_eq!(serial.rollbacks, stolen.rollbacks);
+    assert_eq!(serial.cascades, stolen.cascades);
+    assert_eq!(serial.events, stolen.events);
+}
+
+#[test]
+fn prop_trial_scratch_reuse_leaks_no_state() {
+    // A worker's scratch is threaded through many trials; every reused
+    // trial must be bit-identical to a fresh-allocation trial — across
+    // regimes, so a cheap trial recycled into an expensive one (and vice
+    // versa) cannot inherit stale queue/log/state.
+    let specs = [
+        cascade_spec(),
+        ScenarioSpec::placentia_ring16(
+            Strategy::Agent,
+            0.6,
+            8,
+            FailureRegime::ConcurrentK { k: 4, offset_s: 600.0, spacing_s: 30.0 },
+        ),
+        ScenarioSpec::placentia_ring16(
+            Strategy::Core,
+            0.9,
+            8,
+            FailureRegime::Single(FailureProcess::RandomUniform),
+        ),
+    ];
+    forall(6, 206, |g| {
+        let seed = g.u64(0, u64::MAX - 1);
+        let mut scratch = LiveScratch::new();
+        for round in 0..3 {
+            for (si, spec) in specs.iter().enumerate() {
+                let s = seed.wrapping_add((round * specs.len() + si) as u64);
+                let fresh = spec.run_trial(s);
+                let reused = spec.run_trial_scratch(s, &mut scratch);
+                assert_eq!(fresh.completed_at_s.to_bits(), reused.completed_at_s.to_bits());
+                assert_eq!(fresh.events, reused.events);
+                assert_eq!(fresh.migrations, reused.migrations);
+                assert_eq!(fresh.rollbacks, reused.rollbacks);
+                assert_eq!(fresh.cascades, reused.cascades);
+                assert_eq!(fresh.lost_then_recovered, reused.lost_then_recovered);
+            }
+        }
+    });
+}
+
+#[test]
+fn scratch_workers_match_stateless_workers() {
+    // parallel_map_trials_scratch with a real LiveScratch ≡ the stateless
+    // mapping, at every thread count.
+    let spec = cascade_spec();
+    let stateless: Vec<u64> =
+        parallel_map_trials(24, 1, |i| spec.run_trial(1000 + i as u64).events);
+    for threads in [1usize, 3, 8] {
+        let with_scratch = parallel_map_trials_scratch(24, threads, LiveScratch::new, |sc, i| {
+            spec.run_trial_scratch(1000 + i as u64, sc).events
+        });
+        assert_eq!(stateless, with_scratch, "threads={threads}");
+    }
 }
 
 #[test]

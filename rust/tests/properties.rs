@@ -9,7 +9,7 @@ use biomaft::hybrid::rules::{decide, RuleInputs};
 use biomaft::job::DepGraph;
 use biomaft::net::message::SubJobId;
 use biomaft::net::{NodeId, Topology};
-use biomaft::sim::engine::{ActorId, Engine, Outbox};
+use biomaft::sim::engine::{ActorId, Engine};
 use biomaft::sim::{Rng, SimTime};
 use biomaft::testkit::{forall, Gen};
 
@@ -58,23 +58,22 @@ fn prop_des_episode_equals_closed_form() {
 
 #[test]
 fn prop_engine_deterministic_trace() {
-    // same seed + same actor program => identical event trace
+    // same seed + same dispatch program => identical event trace
     forall(60, 103, |g| {
         let seed = g.u64(0, u64::MAX - 1);
         let steps = g.usize(1, 200) as u32;
         let run = |seed: u64| {
             let mut eng: Engine<u32> = Engine::new();
             let mut rng = Rng::new(seed);
-            let a = eng.add_actor(Box::new(move |_me: ActorId, msg: u32, out: &mut Outbox<'_, u32>| {
+            eng.capture_log(|m| *m as u64);
+            eng.schedule(SimTime::ZERO, ActorId(0), 0);
+            eng.run(|_me, msg, out| {
                 if msg < steps {
                     let delay = SimTime::from_micros(rng.uniform(1.0, 50.0));
                     out.send_in(delay, ActorId(0), msg + 1);
                 }
-            }));
-            eng.capture_log(|m| *m as u64);
-            eng.schedule(SimTime::ZERO, a, 0);
-            eng.run();
-            eng.log().clone()
+            });
+            eng.take_log()
         };
         assert_eq!(run(seed), run(seed));
     });
@@ -86,14 +85,13 @@ fn prop_engine_time_monotone() {
         let seed = g.u64(0, u64::MAX - 1);
         let mut eng: Engine<u32> = Engine::new();
         let mut rng = Rng::new(seed);
-        let a = eng.add_actor(Box::new(move |_me: ActorId, msg: u32, out: &mut Outbox<'_, u32>| {
+        eng.capture_log(|m| *m as u64);
+        eng.schedule(SimTime::ZERO, ActorId(0), 0);
+        eng.run(|_me, msg, out| {
             if msg < 100 {
                 out.send_in(SimTime::from_micros(rng.uniform(0.0, 10.0)), ActorId(0), msg + 1);
             }
-        }));
-        eng.capture_log(|m| *m as u64);
-        eng.schedule(SimTime::ZERO, a, 0);
-        eng.run();
+        });
         let log = eng.log();
         for w in log.windows(2) {
             assert!(w[0].0 <= w[1].0, "virtual time went backwards");
