@@ -1,0 +1,116 @@
+//! Genome search benchmark: naive oracle vs the packed multi-pattern
+//! engine, serial and parallel, at the paper's dictionary scale (5000
+//! patterns of 15-25 nt; Results §Genome Searching).
+//!
+//! Emits a JSON baseline (BENCH_genome.json schema) so the search-path
+//! perf trajectory can be tracked across PRs:
+//!
+//! ```text
+//! cd rust && BIOMAFT_BENCH_JSON=../BENCH_genome.json \
+//!     cargo bench --bench genome
+//! ```
+//!
+//! Before overwriting, the previous baseline at the target path is read
+//! back and compared — and the bench shouts if the committed file is still
+//! a placeholder (`"generated": false`) rather than honest measurements.
+//!
+//! The run also *asserts* the engine's oracle contract — engine hits ==
+//! naive hits byte for byte, and thread-count independence — which is what
+//! the CI genome bench-smoke step relies on.
+//!
+//! Environment knobs: `BIOMAFT_BENCH_BASES` (default 2_000_000),
+//! `BIOMAFT_BENCH_PATTERNS` (default 5000), `BIOMAFT_BENCH_JSON` (path to
+//! write; stdout when unset).
+
+use std::time::Instant;
+
+use biomaft::bench::compare_to_baseline;
+use biomaft::genome::{self, Strand};
+use biomaft::scenario::default_threads;
+use biomaft::sim::Rng;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let bases = env_usize("BIOMAFT_BENCH_BASES", 2_000_000);
+    let n_patterns = env_usize("BIOMAFT_BENCH_PATTERNS", 5000);
+    let seed = 2014u64;
+    let cores = default_threads();
+    println!(
+        "=== bench suite: genome (multi-pattern search, {bases} bases x {n_patterns} patterns \
+         x 2 strands, {cores} cores) ==="
+    );
+
+    let g = genome::synthesize_genome(bases, seed);
+    let mut rng = Rng::new(seed ^ 0xf19);
+    let spec = genome::PatternSpec { n_patterns, ..Default::default() };
+    let dict = genome::PatternDict::build(&spec, &g, &mut rng);
+    let total_bases: usize = g.iter().map(|c| c.seq.len()).sum();
+    // Work unit: candidate (base, pattern) windows per full two-strand
+    // search — what the naive scan actually visits.
+    let work = total_bases as f64 * n_patterns as f64 * 2.0;
+
+    let t0 = Instant::now();
+    let mut naive = genome::search_naive(&g, &dict, Strand::Forward);
+    naive.extend(genome::search_naive(&g, &dict, Strand::Reverse));
+    genome::hits::dedup_hits(&mut naive);
+    let naive_s = t0.elapsed().as_secs_f64();
+    println!(
+        "naive:        {naive_s:>10.3} s  ({:>12.3e} base·patterns/s, {} hits)",
+        work / naive_s,
+        naive.len()
+    );
+
+    let t0 = Instant::now();
+    let engine1 = genome::search_engine_both(&g, &dict, 1);
+    let engine1_s = t0.elapsed().as_secs_f64();
+    println!(
+        "engine x1:    {engine1_s:>10.3} s  ({:>12.3e} base·patterns/s)",
+        work / engine1_s
+    );
+
+    let t0 = Instant::now();
+    let engine_par = genome::search_engine_both(&g, &dict, 0);
+    let engine_par_s = t0.elapsed().as_secs_f64();
+    println!(
+        "engine x{cores:<4} {engine_par_s:>10.3} s  ({:>12.3e} base·patterns/s)",
+        work / engine_par_s
+    );
+
+    assert_eq!(
+        engine1, engine_par,
+        "engine output must be independent of thread count"
+    );
+    assert_eq!(engine1, naive, "engine must equal the naive oracle hit-for-hit");
+
+    let speedup1 = naive_s / engine1_s.max(1e-12);
+    let speedup_par = naive_s / engine_par_s.max(1e-12);
+    println!("speedup: {speedup1:>8.2}x serial, {speedup_par:>8.2}x on {cores} cores");
+
+    let json_path = std::env::var("BIOMAFT_BENCH_JSON").ok();
+    if let Some(path) = &json_path {
+        compare_to_baseline(
+            path,
+            "engine_par_bp_per_s",
+            "base·patterns/s (parallel engine)",
+            work / engine_par_s,
+        );
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"genome_search\",\n  \"generated\": true,\n  \"machine_cores\": {cores},\n  \"bases\": {total_bases},\n  \"patterns\": {n_patterns},\n  \"strands\": 2,\n  \"hits\": {},\n  \"naive_s\": {naive_s:.4},\n  \"naive_bp_per_s\": {:.1},\n  \"engine1_s\": {engine1_s:.4},\n  \"engine1_bp_per_s\": {:.1},\n  \"engine_par_s\": {engine_par_s:.4},\n  \"engine_par_bp_per_s\": {:.1},\n  \"engine_par_threads\": {cores},\n  \"speedup_engine1_vs_naive\": {speedup1:.2},\n  \"speedup_par_vs_naive\": {speedup_par:.2}\n}}\n",
+        naive.len(),
+        work / naive_s,
+        work / engine1_s,
+        work / engine_par_s,
+    );
+    match json_path {
+        Some(path) => {
+            std::fs::write(&path, &json).expect("write bench json");
+            println!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
+}

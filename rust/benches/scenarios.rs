@@ -16,6 +16,7 @@
 //! Environment knobs: `BIOMAFT_BENCH_TRIALS` (default 2000),
 //! `BIOMAFT_BENCH_JSON` (path to write; stdout when unset).
 
+use biomaft::bench::compare_to_baseline;
 use biomaft::coordinator::ftmanager::Strategy;
 use biomaft::scenario::{default_threads, run_batch, BatchCfg, FailureRegime, ScenarioSpec};
 
@@ -26,47 +27,6 @@ fn spec() -> ScenarioSpec {
         16,
         FailureRegime::ConcurrentK { k: 3, offset_s: 600.0, spacing_s: 60.0 },
     )
-}
-
-/// Pull a numeric field out of the baseline JSON without a JSON dep:
-/// finds `"key":` and parses the number that follows.
-fn json_number(src: &str, key: &str) -> Option<f64> {
-    let needle = format!("\"{key}\":");
-    let at = src.find(&needle)? + needle.len();
-    let rest = src[at..].trim_start();
-    let end = rest
-        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == '+' || c == 'e'))
-        .unwrap_or(rest.len());
-    rest[..end].parse().ok()
-}
-
-/// Report against the previously committed baseline, if any.
-fn compare_to_baseline(path: &str, serial_trials_per_s: f64) {
-    let Ok(prev) = std::fs::read_to_string(path) else {
-        println!("no previous baseline at {path} — first run on this machine");
-        return;
-    };
-    let generated = prev.contains("\"generated\": true") || prev.contains("\"generated\":true");
-    if !generated {
-        println!();
-        println!("!!! =============================================================== !!!");
-        println!("!!! WARNING: {path} is a PLACEHOLDER baseline (\"generated\": false). !!!");
-        println!("!!! There are no honest pre-change numbers to compare against.      !!!");
-        println!("!!! Committing this run's JSON establishes the first real baseline. !!!");
-        println!("!!! =============================================================== !!!");
-        println!();
-        return;
-    }
-    match json_number(&prev, "serial_trials_per_s") {
-        Some(prev_rate) if prev_rate > 0.0 => {
-            println!(
-                "baseline: {prev_rate:>10.1} serial trials/s -> {serial_trials_per_s:>10.1} \
-                 ({:.2}x)",
-                serial_trials_per_s / prev_rate
-            );
-        }
-        _ => println!("previous baseline at {path} has no parsable serial_trials_per_s"),
-    }
 }
 
 fn main() {
@@ -97,7 +57,7 @@ fn main() {
 
     let json_path = std::env::var("BIOMAFT_BENCH_JSON").ok();
     if let Some(path) = &json_path {
-        compare_to_baseline(path, serial.trials_per_s);
+        compare_to_baseline(path, "serial_trials_per_s", "serial trials/s", serial.trials_per_s);
     }
 
     let json = format!(

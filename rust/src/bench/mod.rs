@@ -113,6 +113,50 @@ impl Suite {
     }
 }
 
+/// Pull a numeric field out of a baseline JSON blob without a JSON dep:
+/// finds `"key":` and parses the number that follows. Shared by the
+/// baseline-emitting benches (`scenarios`, `genome`).
+pub fn json_number(src: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{key}\":");
+    let at = src.find(&needle)? + needle.len();
+    let rest = src[at..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == '+' || c == 'e'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Report a bench's `current` figure (the number under `key`, labelled
+/// `label`) against the previously committed baseline file at `path` —
+/// and shout if that file is still a `"generated": false` placeholder
+/// rather than honest measurements.
+pub fn compare_to_baseline(path: &str, key: &str, label: &str, current: f64) {
+    let Ok(prev) = std::fs::read_to_string(path) else {
+        println!("no previous baseline at {path} — first run on this machine");
+        return;
+    };
+    let generated = prev.contains("\"generated\": true") || prev.contains("\"generated\":true");
+    if !generated {
+        println!();
+        println!("!!! =============================================================== !!!");
+        println!("!!! WARNING: {path} is a PLACEHOLDER baseline (\"generated\": false). !!!");
+        println!("!!! There are no honest pre-change numbers to compare against.      !!!");
+        println!("!!! Committing this run's JSON establishes the first real baseline. !!!");
+        println!("!!! =============================================================== !!!");
+        println!();
+        return;
+    }
+    match json_number(&prev, key) {
+        Some(prev_rate) if prev_rate > 0.0 => {
+            println!(
+                "baseline: {prev_rate:>12.4e} {label} -> {current:>12.4e} ({:.2}x)",
+                current / prev_rate
+            );
+        }
+        _ => println!("previous baseline at {path} has no parsable {key}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,5 +183,14 @@ mod tests {
         assert!(fmt_t(2e-6).contains("µs"));
         assert!(fmt_t(2e-3).contains("ms"));
         assert!(fmt_t(2.0).contains(" s"));
+    }
+
+    #[test]
+    fn json_number_parses_fields() {
+        let src = "{\n  \"a\": 12.5,\n  \"b\":3e4,\n  \"neg\": -2\n}";
+        assert_eq!(json_number(src, "a"), Some(12.5));
+        assert_eq!(json_number(src, "b"), Some(30_000.0));
+        assert_eq!(json_number(src, "neg"), Some(-2.0));
+        assert_eq!(json_number(src, "missing"), None);
     }
 }

@@ -1,8 +1,11 @@
 //! Fig. 14 — sample genome-search output, produced by actually running the
 //! AOT-compiled search over a synthetic genome via PJRT.
 //!
-//! Falls back to the pure-Rust reference search when artifacts are absent
-//! (flagged in the output) so the harness is usable before `make artifacts`.
+//! Falls back to the pure-Rust packed engine when artifacts are absent
+//! (flagged in the output) so the harness is usable before `make
+//! artifacts` — one [`search_engine_both`](crate::genome::search_engine_both)
+//! invocation covers both strands over a single packed genome, instead of
+//! the old per-strand naive double scan.
 
 use crate::genome::{self, encode::PAD, Strand};
 use crate::runtime::client::geom;
@@ -37,9 +40,9 @@ pub fn run(total_bases: usize, n_patterns: usize, seed: u64) -> anyhow::Result<F
         None
     };
 
-    let mut hits = Vec::new();
-    match &rt {
+    let mut hits = match &rt {
         Some(rt) => {
+            let mut hits = Vec::new();
             for strand in [Strand::Forward, Strand::Reverse] {
                 let effective = match strand {
                     Strand::Forward => dict.clone(),
@@ -70,12 +73,12 @@ pub fn run(total_bases: usize, n_patterns: usize, seed: u64) -> anyhow::Result<F
                     }
                 }
             }
+            hits
         }
-        None => {
-            hits.extend(genome::search_naive(&g, &dict, Strand::Forward));
-            hits.extend(genome::search_naive(&g, &dict, Strand::Reverse));
-        }
-    }
+        // Both strands through one engine invocation over one packed
+        // genome; `search_naive` stays the oracle in tests.
+        None => genome::search_engine_both(&g, &dict, 0),
+    };
     genome::hits::dedup_hits(&mut hits);
     Ok(Fig14 { used_pjrt: rt.is_some(), hits, chrom_names, n_patterns: dict.n })
 }
@@ -107,6 +110,24 @@ mod tests {
         let r = render(&f, 8);
         assert!(r.contains("seqname"));
         assert!(r.contains("pattern"));
+    }
+
+    #[test]
+    fn fallback_engine_matches_naive_oracle() {
+        // only meaningful on the fallback path (no pjrt, or no artifacts)
+        if cfg!(feature = "pjrt") && Manifest::default_dir().join("manifest.txt").exists() {
+            return;
+        }
+        let f = run(40_000, 48, 11).unwrap();
+        assert!(!f.used_pjrt);
+        let g = genome::synthesize_genome(40_000, 11);
+        let mut rng = Rng::new(11 ^ 0xf19);
+        let spec = genome::PatternSpec { n_patterns: 48, ..Default::default() };
+        let dict = genome::PatternDict::build(&spec, &g, &mut rng);
+        let mut want = genome::search_naive(&g, &dict, Strand::Forward);
+        want.extend(genome::search_naive(&g, &dict, Strand::Reverse));
+        genome::hits::dedup_hits(&mut want);
+        assert_eq!(f.hits, want, "engine fallback must equal the two-pass naive scan");
     }
 
     #[test]

@@ -1,0 +1,586 @@
+//! The packed multi-pattern search engine — single-pass, chunk-parallel.
+//!
+//! [`search_naive`](super::search::search_naive) rescans every chromosome
+//! once **per pattern**, serially; at the paper's job size (a dictionary of
+//! 5000 patterns of 15-25 nt over chromosome-scale sequences) that is
+//! thousands of passes over hundreds of megabases. This engine makes the
+//! paper-scale search tractable in pure Rust:
+//!
+//! * the genome packs to 2-bit codes with an N-run side index
+//!   ([`PackedSeq`]) — 4x less memory traffic than the `i8` sequence —
+//!   and each chunk decodes once into a per-worker scratch buffer that
+//!   every bank then scans;
+//! * the dictionary is grouped by length and compiled into **shift-and
+//!   (bitap) banks**: ⌊64/m⌋ patterns of length `m` share one `u64`, so a
+//!   single shift-or-and per text base advances every pattern in the bank
+//!   simultaneously (see [`Bank`] for why packed bit-fields cannot
+//!   interfere). Patterns longer than [`BANK_MAX_LEN`] bases take a
+//!   rare-symbol-prefilter literal scan instead;
+//! * work fans out as (chromosome-chunk × bank-shard) tasks through the
+//!   work-stealing
+//!   [`parallel_map_trials_scratch`](crate::scenario::batch::parallel_map_trials_scratch)
+//!   scheduler. Each task owns the match *starts* in `[owned_start,
+//!   owned_end)` and scans `max_len - 1` bases past its end, so a hit
+//!   spanning a chunk boundary is found by exactly one task — no overlap
+//!   dedup is needed — and task results merge by a total (chromosome,
+//!   pattern, position) sort into output **byte-identical to the naive
+//!   oracle at any thread count** (property-tested in
+//!   `tests/genome_engine.rs`).
+//!
+//! Match semantics are literal symbol equality, exactly as the Pallas
+//! kernel and the oracle define them: `N` matches `N`, the `PAD` sentinel
+//! matches only itself (real pattern rows never contain it inside their
+//! true length, and chromosomes never contain it at all). Sequences are
+//! expected in `encode_seq` output space (`{PAD, A, C, G, T, N}`).
+
+use super::data::Chromosome;
+use super::encode::{PackedSeq, PAD};
+use super::hits::{Hit, Strand};
+use super::patterns::PatternDict;
+use crate::scenario::batch::{default_threads, parallel_map_trials_scratch};
+
+/// Longest pattern the bit-parallel banks handle (one `u64` bit-field).
+pub const BANK_MAX_LEN: usize = 64;
+
+/// Match starts owned by one chunk task. Tasks scan `max_len - 1` bases
+/// beyond their owned range, so the effective chunk overlap is the classic
+/// `width - 1` and every boundary-spanning hit belongs to exactly one task.
+pub const CHUNK_OWNED: usize = 1 << 16;
+
+/// Symbol space of the bank tables: `A,C,G,T,N → 0..=4`, `PAD → 5`, and a
+/// never-matching slot 6 for anything outside the encoding.
+const SYMBOLS: usize = 7;
+
+#[inline]
+fn sym(c: i8) -> u8 {
+    match c {
+        0..=4 => c as u8,
+        PAD => 5,
+        _ => 6,
+    }
+}
+
+/// One shift-and bank: `k = ⌊64/m⌋` patterns of length `m` share a `u64`.
+///
+/// Pattern slot `j` occupies bits `[j·m, (j+1)·m)`; `table[s]` has bit
+/// `j·m + i` set iff slot `j`'s position `i` is symbol `s`. The per-base
+/// update is `d = ((d << 1) | init) & table[s]`: bit `j·m + i` of `d` is
+/// live iff the last `i + 1` bases match slot `j`'s prefix, so a set bit
+/// under `hit` (bit `j·m + m - 1`) is a full match ending at the current
+/// base. The shift's carry out of field `j` lands exactly on field
+/// `j + 1`'s start bit — which `init` sets unconditionally anyway (a match
+/// may start at every base) — so packed fields never interfere and no
+/// spacer bits are spent.
+#[derive(Debug, Clone)]
+struct Bank {
+    m: usize,
+    table: [u64; SYMBOLS],
+    init: u64,
+    hit: u64,
+    /// Dictionary ids of the packed patterns, slot order.
+    ids: Vec<u32>,
+}
+
+/// A pattern too long for a `u64` bank: literal compare behind a prefilter
+/// probing the pattern's rarest symbol (fewest windows survive the probe).
+#[derive(Debug, Clone)]
+struct LongPat {
+    id: u32,
+    /// Pattern in symbol space (see [`sym`]).
+    syms: Vec<u8>,
+    /// Probe offset for the prefilter.
+    probe: usize,
+}
+
+/// A dictionary compiled for one strand: banks for the bit-parallel
+/// lengths, literal scans for the long tail.
+#[derive(Debug, Clone)]
+pub struct SearchEngine {
+    banks: Vec<Bank>,
+    long: Vec<LongPat>,
+    /// Longest real pattern — the chunk-overlap width.
+    max_len: usize,
+    /// Rows the engine was compiled from (mask rows of [`Self::run_block`]).
+    n_rows: usize,
+    /// Zero-length rows: skipped by the chromosome search (the oracle
+    /// skips empty patterns) but — matching the kernel's degenerate
+    /// equality compare, where no column constrains the window — matching
+    /// *every* position in [`Self::run_block`].
+    empty_rows: Vec<u32>,
+}
+
+impl SearchEngine {
+    /// Compile a dictionary (its rows as-is; callers pass
+    /// [`PatternDict::revcomp`] for the reverse strand).
+    pub fn from_dict(dict: &PatternDict) -> Self {
+        Self::from_rows(&dict.matrix, &dict.lengths, dict.width)
+    }
+
+    /// Compile from a raw row-major `[n × width]` matrix + lengths — the
+    /// kernel block layout, so the worker-pool CPU fallback compiles
+    /// dictionary blocks directly.
+    pub fn from_rows(matrix: &[i8], lengths: &[i32], width: usize) -> Self {
+        let n = lengths.len();
+        assert_eq!(matrix.len(), n * width, "matrix must be row-major [n x width]");
+        let mut by_len: Vec<Vec<u32>> = vec![Vec::new(); BANK_MAX_LEN + 1];
+        let mut long = Vec::new();
+        let mut empty_rows = Vec::new();
+        let mut max_len = 0usize;
+        for p in 0..n {
+            let m = lengths[p];
+            assert!(m >= 0 && m as usize <= width, "pattern {p} length {m} out of [0, {width}]");
+            let m = m as usize;
+            if m == 0 {
+                empty_rows.push(p as u32);
+                continue;
+            }
+            max_len = max_len.max(m);
+            if m <= BANK_MAX_LEN {
+                by_len[m].push(p as u32);
+            } else {
+                let row = &matrix[p * width..p * width + m];
+                let syms: Vec<u8> = row.iter().map(|&c| sym(c)).collect();
+                let probe = rare_probe(&syms);
+                long.push(LongPat { id: p as u32, syms, probe });
+            }
+        }
+        let mut banks = Vec::new();
+        for (m, ids) in by_len.iter().enumerate().skip(1) {
+            for group in ids.chunks(BANK_MAX_LEN / m) {
+                let mut bank =
+                    Bank { m, table: [0; SYMBOLS], init: 0, hit: 0, ids: group.to_vec() };
+                for (j, &id) in group.iter().enumerate() {
+                    let base = j * m;
+                    bank.init |= 1u64 << base;
+                    bank.hit |= 1u64 << (base + m - 1);
+                    let row = &matrix[id as usize * width..id as usize * width + m];
+                    for (i, &c) in row.iter().enumerate() {
+                        let s = sym(c) as usize;
+                        if s < 6 {
+                            bank.table[s] |= 1u64 << (base + i);
+                        }
+                    }
+                }
+                banks.push(bank);
+            }
+        }
+        Self { banks, long, max_len, n_rows: n, empty_rows }
+    }
+
+    /// Schedulable units: banks plus long-tail patterns.
+    fn units(&self) -> usize {
+        self.banks.len() + self.long.len()
+    }
+
+    /// Run the compiled dictionary block over one chunk — the kernel's
+    /// `(mask, counts)` contract (see [`search_block`] for the semantics).
+    /// Compiling once and calling this per chunk is how the worker-pool
+    /// fallback keeps dictionary compilation out of its task loop.
+    pub fn run_block(&self, seq: &[i8]) -> (Vec<i8>, Vec<i32>) {
+        let n = self.n_rows;
+        let chunk = seq.len();
+        let mut mask = vec![0i8; n * chunk];
+        let mut counts = vec![0i32; n];
+        if chunk == 0 {
+            return (mask, counts);
+        }
+        let codes: Vec<u8> = seq.iter().map(|&c| sym(c)).collect();
+        for bank in &self.banks {
+            scan_bank(bank, &codes, |slot, i| {
+                let p = bank.ids[slot] as usize;
+                mask[p * chunk + (i + 1 - bank.m)] = 1;
+                counts[p] += 1;
+            });
+        }
+        for lp in &self.long {
+            scan_long(lp, &codes, chunk, |i| {
+                let p = lp.id as usize;
+                mask[p * chunk + i] = 1;
+                counts[p] += 1;
+            });
+        }
+        // Zero-length rows: no column constrains the kernel's equality
+        // compare, so every position "matches" — reproduced exactly.
+        for &p in &self.empty_rows {
+            let p = p as usize;
+            mask[p * chunk..(p + 1) * chunk].fill(1);
+            counts[p] = chunk as i32;
+        }
+        (mask, counts)
+    }
+}
+
+/// Prefilter probe for a long pattern: the first offset holding the
+/// pattern's rarest symbol.
+fn rare_probe(syms: &[u8]) -> usize {
+    let mut freq = [0u32; SYMBOLS];
+    for &s in syms {
+        freq[s as usize] += 1;
+    }
+    let rare = (0..SYMBOLS)
+        .filter(|&s| freq[s] > 0)
+        .min_by_key(|&s| freq[s])
+        .unwrap_or(0) as u8;
+    syms.iter().position(|&s| s == rare).unwrap_or(0)
+}
+
+/// Run one bank over decoded symbols, calling `on_end(slot, i)` for every
+/// match ending at `codes[i]`.
+#[inline]
+fn scan_bank(bank: &Bank, codes: &[u8], mut on_end: impl FnMut(usize, usize)) {
+    let mut d = 0u64;
+    for (i, &c) in codes.iter().enumerate() {
+        d = ((d << 1) | bank.init) & bank.table[c as usize];
+        let mut h = d & bank.hit;
+        while h != 0 {
+            on_end(h.trailing_zeros() as usize / bank.m, i);
+            h &= h - 1;
+        }
+    }
+}
+
+/// Scan one long pattern over decoded symbols, calling `on_start(i)` for
+/// every match starting at `codes[i]` with `i < start_limit`.
+#[inline]
+fn scan_long(lp: &LongPat, codes: &[u8], start_limit: usize, mut on_start: impl FnMut(usize)) {
+    let m = lp.syms.len();
+    if codes.len() < m || start_limit == 0 {
+        return;
+    }
+    let probe_sym = lp.syms[lp.probe];
+    let last = (codes.len() - m).min(start_limit - 1);
+    for i in 0..=last {
+        if codes[i + lp.probe] == probe_sym && codes[i..i + m] == lp.syms[..] {
+            on_start(i);
+        }
+    }
+}
+
+/// One schedulable unit of search work: a bank-shard of one strand's
+/// engine over one chunk's owned match-start range.
+#[derive(Debug, Clone, Copy)]
+struct Task {
+    chrom: usize,
+    owned_start: usize,
+    owned_end: usize,
+    /// Index into the `(strand, engine)` slice.
+    slot: usize,
+    unit_lo: usize,
+    unit_hi: usize,
+}
+
+fn run_task(
+    engines: &[(Strand, &SearchEngine)],
+    packed: &[PackedSeq],
+    t: &Task,
+    buf: &mut Vec<u8>,
+) -> Vec<Hit> {
+    let (strand, eng) = engines[t.slot];
+    let seq = &packed[t.chrom];
+    let owned_len = t.owned_end - t.owned_start;
+    let scan_end = (t.owned_end + eng.max_len - 1).min(seq.len());
+    seq.decode_range(t.owned_start, scan_end, buf);
+    let mut hits = Vec::new();
+    for u in t.unit_lo..t.unit_hi {
+        if let Some(bank) = eng.banks.get(u) {
+            let m = bank.m;
+            // A match ending at codes[i] starts at i + 1 - m; keep starts
+            // inside the owned range: i < owned_len + m - 1.
+            let window = &buf[..buf.len().min(owned_len + m - 1)];
+            scan_bank(bank, window, |slot, i| {
+                let start0 = t.owned_start + i + 1 - m;
+                hits.push(Hit {
+                    chrom_idx: t.chrom,
+                    start: start0 + 1,
+                    end: start0 + m,
+                    pattern_id: bank.ids[slot] as usize,
+                    strand,
+                });
+            });
+        } else {
+            let lp = &eng.long[u - eng.banks.len()];
+            let m = lp.syms.len();
+            scan_long(lp, buf, owned_len, |i| {
+                let start0 = t.owned_start + i;
+                hits.push(Hit {
+                    chrom_idx: t.chrom,
+                    start: start0 + 1,
+                    end: start0 + m,
+                    pattern_id: lp.id as usize,
+                    strand,
+                });
+            });
+        }
+    }
+    hits
+}
+
+/// Fan (chunk × bank-shard) tasks over the work-stealing scheduler and
+/// collect every task's hits (unordered; callers sort).
+fn run_tasks(
+    packed: &[PackedSeq],
+    engines: &[(Strand, &SearchEngine)],
+    threads: usize,
+) -> Vec<Hit> {
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let n_chunks: usize = packed.iter().map(|p| p.len().div_ceil(CHUNK_OWNED)).sum();
+    let mut tasks = Vec::new();
+    for (slot, (_, eng)) in engines.iter().enumerate() {
+        let units = eng.units();
+        if units == 0 || n_chunks == 0 {
+            continue;
+        }
+        // Shard the unit list so small genomes (few chunks) still spread
+        // across workers; chromosome-scale genomes get their parallelism
+        // from chunks and run one shard. The decomposition never affects
+        // the output — the final sort is a total order.
+        let shards = (4 * threads).div_ceil(n_chunks * engines.len()).clamp(1, units);
+        for (ci, p) in packed.iter().enumerate() {
+            let mut s = 0;
+            while s < p.len() {
+                let e = (s + CHUNK_OWNED).min(p.len());
+                for sh in 0..shards {
+                    let (lo, hi) = (sh * units / shards, (sh + 1) * units / shards);
+                    if lo < hi {
+                        tasks.push(Task {
+                            chrom: ci,
+                            owned_start: s,
+                            owned_end: e,
+                            slot,
+                            unit_lo: lo,
+                            unit_hi: hi,
+                        });
+                    }
+                }
+                s = e;
+            }
+        }
+    }
+    let per_task = parallel_map_trials_scratch(
+        tasks.len(),
+        threads,
+        // one decoded chunk + the longest possible bank overlap
+        || Vec::with_capacity(CHUNK_OWNED + BANK_MAX_LEN),
+        |buf, i| run_task(engines, packed, &tasks[i], buf),
+    );
+    per_task.into_iter().flatten().collect()
+}
+
+/// Single-strand engine search. Byte-identical to
+/// [`search_naive`](super::search::search_naive) — same hits in the same
+/// (chromosome, pattern, position) order — at any thread count
+/// (`threads == 0` ⇒ one per core).
+pub fn search_engine(
+    genome: &[Chromosome],
+    dict: &PatternDict,
+    strand: Strand,
+    threads: usize,
+) -> Vec<Hit> {
+    let eng = match strand {
+        Strand::Forward => SearchEngine::from_dict(dict),
+        Strand::Reverse => SearchEngine::from_dict(&dict.revcomp()),
+    };
+    let packed: Vec<PackedSeq> = genome.iter().map(|c| PackedSeq::pack(&c.seq)).collect();
+    let mut hits = run_tasks(&packed, &[(strand, &eng)], threads);
+    hits.sort_unstable_by_key(|h| (h.chrom_idx, h.pattern_id, h.start));
+    hits
+}
+
+/// Both strands in one invocation: the genome packs **once** and both
+/// strand dictionaries scan the same packed chunks (fig14's fallback used
+/// to re-scan — and re-revcomp the dictionary for — each strand
+/// separately). Output order is exactly what
+/// [`dedup_hits`](super::hits::dedup_hits) produces from the two-pass
+/// naive scan, so `naive(F) ++ naive(R) |> dedup_hits` callers get
+/// byte-identical results.
+pub fn search_engine_both(genome: &[Chromosome], dict: &PatternDict, threads: usize) -> Vec<Hit> {
+    let fwd = SearchEngine::from_dict(dict);
+    let rev = SearchEngine::from_dict(&dict.revcomp());
+    let packed: Vec<PackedSeq> = genome.iter().map(|c| PackedSeq::pack(&c.seq)).collect();
+    let mut hits =
+        run_tasks(&packed, &[(Strand::Forward, &fwd), (Strand::Reverse, &rev)], threads);
+    hits.sort_unstable_by_key(|h| (h.chrom_idx, h.pattern_id, h.start, h.strand.symbol() as u8));
+    hits
+}
+
+/// Pure-Rust drop-in for the AOT `genome_search` executable: one chunk
+/// against one kernel-layout dictionary block, same semantics bit for bit.
+/// `mask[p * chunk + i] = 1` iff pattern `p` matches the window starting at
+/// `i` (literal symbol equality — the all-`PAD` padding rows of short
+/// blocks match only inside the chunk's `PAD` tail, exactly as the
+/// kernel's equality compare does); `counts[p]` is the row popcount, as
+/// `model.py` derives it.
+pub fn search_block(seq: &[i8], patterns: &[i8], lengths: &[i32]) -> (Vec<i8>, Vec<i32>) {
+    let n = lengths.len();
+    let width = if n == 0 { 0 } else { patterns.len() / n };
+    SearchEngine::from_rows(patterns, lengths, width).run_block(seq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::data::synthesize_genome;
+    use crate::genome::encode::encode_seq;
+    use crate::genome::patterns::PatternSpec;
+    use crate::genome::search::search_naive;
+    use crate::sim::Rng;
+
+    fn row_dict(rows: &[&str], width: usize) -> PatternDict {
+        let mut matrix = vec![PAD; rows.len() * width];
+        let mut lengths = vec![0i32; rows.len()];
+        for (p, r) in rows.iter().enumerate() {
+            let e = encode_seq(r);
+            matrix[p * width..p * width + e.len()].copy_from_slice(&e);
+            lengths[p] = e.len() as i32;
+        }
+        PatternDict { matrix, lengths, width, n: rows.len() }
+    }
+
+    #[test]
+    fn bank_packing_group_sizes() {
+        // six length-15 patterns at ⌊64/15⌋ = 4 per bank → banks of 4 + 2
+        let rows: Vec<String> = (0..6)
+            .map(|p| (0..15).map(|i| "ACGT".as_bytes()[(p + i) % 4] as char).collect())
+            .collect();
+        let refs: Vec<&str> = rows.iter().map(|s| s.as_str()).collect();
+        let d = row_dict(&refs, 15);
+        let eng = SearchEngine::from_dict(&d);
+        assert_eq!(eng.banks.len(), 2);
+        assert_eq!(eng.banks[0].ids, vec![0, 1, 2, 3]);
+        assert_eq!(eng.banks[1].ids, vec![4, 5]);
+        assert_eq!(eng.max_len, 15);
+        assert!(eng.long.is_empty());
+    }
+
+    #[test]
+    fn packed_fields_do_not_interfere() {
+        // two length-2 patterns in one bank; "AA" must not leak a partial
+        // match into "AC"'s field across the shared shift
+        let d = row_dict(&["AA", "AC"], 4);
+        let g = vec![Chromosome { name: "t", seq: encode_seq("AAACAA") }];
+        for threads in [1, 4] {
+            let hits = search_engine(&g, &d, Strand::Forward, threads);
+            let want = search_naive(&g, &d, Strand::Forward);
+            assert_eq!(hits, want);
+        }
+    }
+
+    #[test]
+    fn engine_equals_naive_on_synthetic_genome() {
+        let g = synthesize_genome(40_000, 3);
+        let mut rng = Rng::new(12);
+        let spec = PatternSpec { n_patterns: 32, ..Default::default() };
+        let d = PatternDict::build(&spec, &g, &mut rng);
+        for strand in [Strand::Forward, Strand::Reverse] {
+            let want = search_naive(&g, &d, strand);
+            for threads in [1, 4] {
+                assert_eq!(search_engine(&g, &d, strand, threads), want, "{strand:?} x{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn pattern_with_n_matches_text_n() {
+        // literal equality: pattern N matches sequence N, same as the oracle
+        let d = row_dict(&["GNN"], 4);
+        let g = vec![Chromosome { name: "t", seq: encode_seq("ACGNNGT") }];
+        let hits = search_engine(&g, &d, Strand::Forward, 1);
+        assert_eq!(hits, search_naive(&g, &d, Strand::Forward));
+        assert_eq!(hits.len(), 1);
+        assert_eq!((hits[0].start, hits[0].end), (3, 5));
+    }
+
+    #[test]
+    fn long_tail_patterns_use_literal_scan() {
+        // width 80 ⇒ lengths above BANK_MAX_LEN go through LongPat
+        let mut rng = Rng::new(77);
+        let seq: Vec<i8> = (0..300).map(|_| rng.range_u64(0, 4) as i8).collect();
+        let planted: String =
+            seq[100..170].iter().map(|&c| "ACGT".as_bytes()[c as usize] as char).collect();
+        let other: String = (0..66).map(|i| "ACGT".as_bytes()[i % 4] as char).collect();
+        let d = row_dict(&[planted.as_str(), other.as_str()], 80);
+        let g = vec![Chromosome { name: "t", seq }];
+        let eng = SearchEngine::from_dict(&d);
+        assert!(eng.banks.is_empty());
+        assert_eq!(eng.long.len(), 2);
+        for threads in [1, 4] {
+            let hits = search_engine(&g, &d, Strand::Forward, threads);
+            assert_eq!(hits, search_naive(&g, &d, Strand::Forward));
+            assert!(hits.iter().any(|h| h.pattern_id == 0 && h.start == 101));
+        }
+    }
+
+    #[test]
+    fn empty_dict_and_empty_genome() {
+        let d = PatternDict { matrix: vec![], lengths: vec![], width: 25, n: 0 };
+        let g = synthesize_genome(1_000, 1);
+        assert!(search_engine(&g, &d, Strand::Forward, 2).is_empty());
+        let d2 = row_dict(&["ACGT"], 8);
+        assert!(search_engine(&[], &d2, Strand::Forward, 2).is_empty());
+        let empty_chrom = vec![Chromosome { name: "z", seq: vec![] }];
+        assert!(search_engine(&empty_chrom, &d2, Strand::Forward, 2).is_empty());
+    }
+
+    #[test]
+    fn search_block_matches_literal_equality_reference() {
+        // padded chunk + padded block: the mask must reproduce the kernel's
+        // literal-equality semantics for every row, padding rows included
+        let g = synthesize_genome(9_000, 6);
+        let chr = &g[0];
+        let mut rng = Rng::new(2);
+        let spec = PatternSpec { n_patterns: 6, ..Default::default() };
+        let d = PatternDict::build(&spec, std::slice::from_ref(chr), &mut rng);
+        let (patterns, lengths) = d.block(0, 8); // 6 real + 2 all-PAD rows
+        let chunk = chr.seq.len() + 40;
+        let mut seq = chr.seq.clone();
+        seq.resize(chunk, PAD);
+
+        let (mask, counts) = search_block(&seq, &patterns, &lengths);
+        assert_eq!(mask.len(), 8 * chunk);
+        for p in 0..8 {
+            let m = lengths[p] as usize;
+            let pat = &patterns[p * d.width..p * d.width + m];
+            let mut want_count = 0;
+            for i in 0..chunk {
+                let want = i + m <= chunk && &seq[i..i + m] == pat;
+                assert_eq!(mask[p * chunk + i] != 0, want, "row {p} pos {i}");
+                want_count += want as i32;
+            }
+            assert_eq!(counts[p], want_count, "row {p}");
+        }
+        // the all-PAD padding rows match only the PAD tail
+        assert!(counts[6] > 0 && counts[7] > 0);
+        assert!(mask[6 * chunk..6 * chunk + chr.seq.len()].iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn run_block_zero_length_rows_match_everywhere() {
+        // kernel semantics: lens = 0 leaves no active column, so every
+        // window position is a hit; the chromosome search skips such rows,
+        // exactly like the oracle
+        let matrix = vec![PAD; 2 * 4];
+        let lengths = vec![0i32, 0];
+        let (mask, counts) = search_block(&[0, 1, 2, 3, 0], &matrix, &lengths);
+        assert!(mask.iter().all(|&b| b == 1));
+        assert_eq!(counts, vec![5, 5]);
+        let d = PatternDict { matrix, lengths, width: 4, n: 2 };
+        let g = vec![Chromosome { name: "t", seq: encode_seq("ACGT") }];
+        assert!(search_engine(&g, &d, Strand::Forward, 1).is_empty());
+        assert!(search_naive(&g, &d, Strand::Forward).is_empty());
+    }
+
+    #[test]
+    fn search_block_empty_inputs() {
+        let (mask, counts) = search_block(&[], &[], &[]);
+        assert!(mask.is_empty() && counts.is_empty());
+        let (mask, counts) = search_block(&[0, 1, 2, 3], &[], &[]);
+        assert!(mask.is_empty() && counts.is_empty());
+    }
+
+    #[test]
+    fn rare_probe_picks_scarce_symbol() {
+        // A appears once at offset 2; everything else is T
+        let syms: Vec<u8> = vec![3, 3, 0, 3, 3];
+        assert_eq!(rare_probe(&syms), 2);
+    }
+}

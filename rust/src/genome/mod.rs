@@ -1,6 +1,9 @@
 //! Genome-searching workload: synthetic *C. elegans*-scale chromosomes,
-//! pattern dictionaries, hit records (Fig. 14) and a pure-Rust reference
-//! search used as the oracle for the PJRT compute path.
+//! pattern dictionaries, hit records (Fig. 14), the packed chunk-parallel
+//! search engine ([`engine`]) that makes paper-scale dictionaries (5000
+//! patterns of 15-25 nt) tractable in pure Rust, and the naive reference
+//! search kept as the oracle both the engine and the PJRT compute path are
+//! verified against.
 //!
 //! Substitution note (DESIGN.md): the paper uses Bioconductor BSgenome
 //! ce2/ce6/ce10 data. Without network access we synthesise seeded
@@ -10,12 +13,14 @@
 
 pub mod data;
 pub mod encode;
+pub mod engine;
 pub mod hits;
 pub mod patterns;
 pub mod search;
 
 pub use data::{synthesize_genome, Chromosome};
-pub use encode::{decode_seq, encode_base, encode_seq, revcomp, BASE_N, PAD};
+pub use encode::{decode_seq, encode_base, encode_seq, revcomp, PackedSeq, BASE_N, PAD};
+pub use engine::{search_block, search_engine, search_engine_both, SearchEngine};
 pub use hits::{collate_hits, format_hits, Hit, Strand};
 pub use patterns::{PatternDict, PatternSpec};
 pub use search::search_naive;

@@ -1,6 +1,8 @@
-//! Pure-Rust naive search — the oracle the PJRT compute path is verified
-//! against in integration tests (a third implementation, independent of
-//! both the Pallas kernel and the jnp reference).
+//! Pure-Rust naive search — the oracle both the packed engine
+//! ([`engine`](super::engine), property-tested byte-identical in
+//! `tests/genome_engine.rs`) and the PJRT compute path are verified
+//! against (an implementation independent of the banks, the Pallas kernel
+//! and the jnp reference).
 
 use super::data::Chromosome;
 use super::hits::{Hit, Strand};

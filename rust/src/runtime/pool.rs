@@ -5,6 +5,14 @@
 //! builds its *own* `Runtime` (own CPU client + compiled executables) —
 //! exactly the process-per-node shape of the real cluster. Work and results
 //! flow over channels; the coordinator thread plays the combining node.
+//!
+//! When a worker cannot load the PJRT runtime (the crate was built without
+//! the `pjrt` feature, or no artifacts are staged) it falls back to the
+//! pure-Rust packed engine
+//! ([`genome::search_block`](crate::genome::search_block)), which
+//! reproduces the kernel's `(mask, counts)` semantics bit for bit — so the
+//! pool is usable, and testable, on any machine; `SearchResult::via_pjrt`
+//! records which path computed each result.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -12,6 +20,14 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use super::client::Runtime;
+use crate::genome::SearchEngine;
+
+/// The compute path one worker resolved at spawn time.
+enum Backend {
+    Pjrt(Runtime),
+    /// Pure-Rust packed engine (no runtime loadable at the artifact dir).
+    Cpu,
+}
 
 /// One unit of search work: a chromosome chunk against a dictionary block.
 #[derive(Debug, Clone)]
@@ -39,6 +55,9 @@ pub struct SearchResult {
     pub task: SearchTask,
     pub mask: Vec<i8>,
     pub counts: Vec<i32>,
+    /// Which compute path produced this result: the AOT PJRT executable or
+    /// the pure-Rust engine fallback.
+    pub via_pjrt: bool,
 }
 
 /// A pool of search-node workers.
@@ -51,7 +70,8 @@ pub struct SearchPool {
 
 impl SearchPool {
     /// Spawn `n_workers` threads, each loading its own runtime from
-    /// `artifact_dir`.
+    /// `artifact_dir` — or resolving to the pure-Rust engine fallback when
+    /// no runtime is loadable there.
     pub fn spawn(n_workers: usize, artifact_dir: PathBuf) -> Self {
         assert!(n_workers > 0);
         let (task_tx, task_rx) = channel::<SearchTask>();
@@ -63,13 +83,25 @@ impl SearchPool {
             let tx = res_tx.clone();
             let dir = artifact_dir.clone();
             handles.push(std::thread::spawn(move || {
-                let rt = match Runtime::load(&dir) {
-                    Ok(rt) => rt,
+                let backend = match Runtime::load(&dir) {
+                    Ok(rt) => Backend::Pjrt(rt),
                     Err(e) => {
-                        let _ = tx.send(Err(anyhow::anyhow!("worker {w}: {e}")));
-                        return;
+                        // Expected when nothing is staged (or no `pjrt`
+                        // feature); loud when artifacts ARE staged but
+                        // broken, so a degraded run is never silent.
+                        if dir.join("manifest.txt").exists() {
+                            eprintln!(
+                                "worker {w}: staged artifacts failed to load ({e}); \
+                                 falling back to the pure-Rust engine"
+                            );
+                        }
+                        Backend::Cpu
                     }
                 };
+                // CPU path: the compiled dictionary block is cached across
+                // tasks (runs share one block), so the task loop only scans
+                // — mirroring the PJRT path's compile-once-at-spawn shape.
+                let mut cached: Option<(Vec<i8>, Vec<i32>, SearchEngine)> = None;
                 loop {
                     let task = {
                         let guard = rx.lock().expect("task queue poisoned");
@@ -78,15 +110,39 @@ impl SearchPool {
                             Err(_) => break, // pool dropped
                         }
                     };
-                    let res = rt
-                        .genome_search(&task.seq, &task.patterns, &task.lengths)
-                        .map(|(mask, counts)| SearchResult {
-                            task_id: task.task_id,
-                            worker: w,
-                            task,
-                            mask,
-                            counts,
-                        });
+                    let computed = match &backend {
+                        Backend::Pjrt(rt) => rt
+                            .genome_search(&task.seq, &task.patterns, &task.lengths)
+                            .map(|mc| (mc, true)),
+                        Backend::Cpu => {
+                            let fresh = matches!(&cached, Some((p, l, _))
+                                if *p == task.patterns && *l == task.lengths);
+                            if !fresh {
+                                let width = if task.lengths.is_empty() {
+                                    0
+                                } else {
+                                    task.patterns.len() / task.lengths.len()
+                                };
+                                let eng = SearchEngine::from_rows(
+                                    &task.patterns,
+                                    &task.lengths,
+                                    width,
+                                );
+                                cached =
+                                    Some((task.patterns.clone(), task.lengths.clone(), eng));
+                            }
+                            let (_, _, eng) = cached.as_ref().expect("block just compiled");
+                            Ok((eng.run_block(&task.seq), false))
+                        }
+                    };
+                    let res = computed.map(|((mask, counts), via_pjrt)| SearchResult {
+                        task_id: task.task_id,
+                        worker: w,
+                        task,
+                        mask,
+                        counts,
+                        via_pjrt,
+                    });
                     if tx.send(res).is_err() {
                         break;
                     }
@@ -123,4 +179,109 @@ impl SearchPool {
     }
 }
 
-// Integration-tested in rust/tests/runtime_integration.rs (needs artifacts).
+// The PJRT path is integration-tested in rust/tests/runtime_integration.rs
+// (needs artifacts); the CPU fallback path is tested right here.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::{self, Strand};
+    use crate::sim::Rng;
+
+    /// Loading from a directory with no artifacts resolves every worker to
+    /// the engine fallback; the collated result must equal the naive
+    /// oracle, and identical tasks must produce identical bytes.
+    #[test]
+    fn cpu_fallback_matches_naive_oracle() {
+        let g = genome::synthesize_genome(6_000, 8);
+        let chr = &g[0];
+        let mut rng = Rng::new(4);
+        let spec = genome::PatternSpec { n_patterns: 12, ..Default::default() };
+        let dict = genome::PatternDict::build(&spec, std::slice::from_ref(chr), &mut rng);
+        let (patterns, lengths) = dict.block(0, 16); // 12 real + 4 padding rows
+        let chunk = chr.seq.len() + 64;
+        let mut seq = chr.seq.clone();
+        seq.resize(chunk, genome::PAD);
+
+        let mut pool = SearchPool::spawn(2, PathBuf::from("/nonexistent-artifacts"));
+        for t in 0..3 {
+            pool.submit(SearchTask {
+                task_id: t,
+                chrom_idx: 0,
+                chunk_start: 0,
+                chrom_len: chr.seq.len(),
+                seq: seq.clone(),
+                patterns: patterns.clone(),
+                lengths: lengths.clone(),
+                pattern_base: 0,
+                n_real: dict.n,
+                reverse: false,
+            })
+            .unwrap();
+        }
+        let mut results = Vec::new();
+        for _ in 0..3 {
+            results.push(pool.recv().unwrap());
+        }
+        pool.shutdown();
+        assert!(results.iter().all(|r| !r.via_pjrt));
+
+        let r = &results[0];
+        let mut hits = Vec::new();
+        genome::collate_hits(
+            &r.mask,
+            16,
+            chunk,
+            0,
+            chr.seq.len(),
+            0,
+            &lengths,
+            dict.n,
+            0,
+            Strand::Forward,
+            &mut hits,
+        );
+        genome::hits::dedup_hits(&mut hits);
+        let mut want = genome::search_naive(std::slice::from_ref(chr), &dict, Strand::Forward);
+        genome::hits::dedup_hits(&mut want);
+        assert_eq!(hits, want, "pool CPU fallback vs naive oracle");
+        assert!(!hits.is_empty(), "planted patterns should hit");
+        for r in &results[1..] {
+            assert_eq!(r.mask, results[0].mask);
+            assert_eq!(r.counts, results[0].counts);
+        }
+    }
+
+    /// The fallback is geometry-free: any chunk / block shape works, not
+    /// just the AOT `geom` constants.
+    #[test]
+    fn cpu_fallback_accepts_arbitrary_geometry() {
+        let seq = genome::encode_seq("ACGTACGTTTACGT");
+        let dict = {
+            let width = 6;
+            let mut matrix = vec![genome::PAD; 2 * width];
+            matrix[..4].copy_from_slice(&genome::encode_seq("CGTA"));
+            matrix[width..width + 3].copy_from_slice(&genome::encode_seq("TTT"));
+            genome::PatternDict { matrix, lengths: vec![4, 3], width, n: 2 }
+        };
+        let mut pool = SearchPool::spawn(1, PathBuf::from("/nonexistent-artifacts"));
+        pool.submit(SearchTask {
+            task_id: 0,
+            chrom_idx: 0,
+            chunk_start: 0,
+            chrom_len: seq.len(),
+            seq: seq.clone(),
+            patterns: dict.matrix.clone(),
+            lengths: dict.lengths.clone(),
+            pattern_base: 0,
+            n_real: 2,
+            reverse: false,
+        })
+        .unwrap();
+        let r = pool.recv().unwrap();
+        pool.shutdown();
+        assert_eq!(r.counts, vec![1, 1]); // CGTA at 0-based 1, TTT at 0-based 7
+        assert_eq!(r.mask[1], 1);
+        assert_eq!(r.mask[seq.len() + 7], 1);
+    }
+}

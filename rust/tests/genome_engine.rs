@@ -1,0 +1,180 @@
+//! Property tests for the packed multi-pattern search engine: the engine's
+//! contract is **byte-identical output to `search_naive`** — same hits in
+//! the same (chromosome, pattern, position) order — for any input and any
+//! thread count. Covers genomes with N-runs, pattern lengths from 1 up to
+//! the matrix width (including the > 64-base long tail), both strands,
+//! chunk-boundary-spanning hits and chromosomes shorter than a chunk.
+
+use biomaft::genome::engine::CHUNK_OWNED;
+use biomaft::genome::{
+    encode_seq, hits::dedup_hits, search_block, search_engine, search_engine_both, search_naive,
+    synthesize_genome, Chromosome, PatternDict, PatternSpec, Strand, BASE_N, PAD,
+};
+use biomaft::sim::Rng;
+use biomaft::testkit::{forall, Gen};
+
+/// A random chromosome with occasional multi-base N runs (denser than the
+/// synthesizer's 0.1 % so the run index is genuinely exercised).
+fn random_chrom(g: &mut Gen, name: &'static str, max_len: usize) -> Chromosome {
+    let len = g.usize(0, max_len);
+    let mut seq = Vec::with_capacity(len);
+    while seq.len() < len {
+        if g.usize(0, 12) == 0 {
+            let run = g.usize(1, 6).min(len - seq.len());
+            seq.extend(std::iter::repeat(BASE_N).take(run));
+        } else {
+            seq.push(g.usize(0, 4) as i8);
+        }
+    }
+    Chromosome { name, seq }
+}
+
+/// A random dictionary with lengths 1..=width; about half the patterns are
+/// planted genome windows (which may contain N — the engine must treat
+/// pattern N == sequence N exactly as the oracle's literal compare does).
+fn random_dict(g: &mut Gen, genome: &[Chromosome], n: usize, width: usize) -> PatternDict {
+    let mut matrix = vec![PAD; n * width];
+    let mut lengths = vec![0i32; n];
+    for p in 0..n {
+        let len = g.usize(1, width + 1);
+        lengths[p] = len as i32;
+        let row = &mut matrix[p * width..p * width + len];
+        let plantable: Vec<usize> =
+            (0..genome.len()).filter(|&c| genome[c].seq.len() >= len).collect();
+        if g.bool() && !plantable.is_empty() {
+            let c = &genome[plantable[g.usize(0, plantable.len())]];
+            let s = g.usize(0, c.seq.len() - len + 1);
+            row.copy_from_slice(&c.seq[s..s + len]);
+        } else {
+            for slot in row.iter_mut() {
+                // 0..=4: random patterns occasionally contain N too
+                *slot = g.usize(0, 5) as i8;
+            }
+        }
+    }
+    PatternDict { matrix, lengths, width, n }
+}
+
+#[test]
+fn engine_matches_naive_hit_for_hit() {
+    forall(25, 0x9e01, |g| {
+        let width = *g.pick(&[4usize, 25, 70]); // 70 exercises the >64 long tail
+        let genome = vec![
+            random_chrom(g, "tA", 2500),
+            random_chrom(g, "tB", 600),
+            random_chrom(g, "tC", 40), // often shorter than the patterns
+        ];
+        let n = g.usize(1, 24);
+        let dict = random_dict(g, &genome, n, width);
+        for strand in [Strand::Forward, Strand::Reverse] {
+            let want = search_naive(&genome, &dict, strand);
+            for threads in [1usize, 8] {
+                let got = search_engine(&genome, &dict, strand, threads);
+                assert_eq!(got, want, "strand {strand:?} threads {threads} width {width}");
+            }
+        }
+    });
+}
+
+#[test]
+fn hits_spanning_chunk_boundaries_found_exactly_once() {
+    // One chromosome two chunks long; plant one pattern at every straddle
+    // phase of the boundary, so each is owned by exactly one task and its
+    // scan must read into the neighbouring chunk.
+    let mut rng = Rng::new(99);
+    let len = CHUNK_OWNED + 400;
+    let seq: Vec<i8> = (0..len).map(|_| rng.range_u64(0, 4) as i8).collect();
+    let m = 20;
+    let width = 25;
+    let starts: Vec<usize> = (CHUNK_OWNED - m + 1..=CHUNK_OWNED).collect();
+    let n = starts.len();
+    let mut matrix = vec![PAD; n * width];
+    let mut lengths = vec![0i32; n];
+    for (p, &s) in starts.iter().enumerate() {
+        matrix[p * width..p * width + m].copy_from_slice(&seq[s..s + m]);
+        lengths[p] = m as i32;
+    }
+    let dict = PatternDict { matrix, lengths, width, n };
+    let genome = vec![Chromosome { name: "tchunk", seq }];
+
+    let want = search_naive(&genome, &dict, Strand::Forward);
+    for threads in [1usize, 8] {
+        assert_eq!(search_engine(&genome, &dict, Strand::Forward, threads), want, "x{threads}");
+    }
+    // every planted pattern is found at its planted position, exactly once
+    for (p, &s) in starts.iter().enumerate() {
+        let at: Vec<_> =
+            want.iter().filter(|h| h.pattern_id == p && h.start == s + 1).collect();
+        assert_eq!(at.len(), 1, "pattern {p} planted at {s}");
+    }
+}
+
+#[test]
+fn chromosomes_shorter_than_chunk_and_pattern() {
+    let genome = vec![
+        Chromosome { name: "s1", seq: encode_seq("ACGTACG") },
+        Chromosome { name: "s0", seq: vec![] },
+        Chromosome { name: "s2", seq: encode_seq("TT") },
+    ];
+    // full-chromosome match, longer-than-chromosome pattern, 1-base pattern
+    let width = 8;
+    let rows = [encode_seq("ACGTACG"), encode_seq("ACGTACGT"), encode_seq("T")];
+    let mut matrix = vec![PAD; 3 * width];
+    let mut lengths = vec![0i32; 3];
+    for (p, r) in rows.iter().enumerate() {
+        matrix[p * width..p * width + r.len()].copy_from_slice(r);
+        lengths[p] = r.len() as i32;
+    }
+    let dict = PatternDict { matrix, lengths, width, n: 3 };
+    for strand in [Strand::Forward, Strand::Reverse] {
+        let want = search_naive(&genome, &dict, strand);
+        for threads in [1usize, 8] {
+            assert_eq!(search_engine(&genome, &dict, strand, threads), want);
+        }
+    }
+    let fwd = search_engine(&genome, &dict, Strand::Forward, 1);
+    assert!(fwd.iter().any(|h| h.pattern_id == 0 && h.start == 1 && h.end == 7));
+    assert!(fwd.iter().all(|h| h.pattern_id != 1)); // longer than every chromosome
+}
+
+#[test]
+fn both_strands_single_invocation_matches_two_naive_scans() {
+    let g = synthesize_genome(30_000, 21);
+    let mut rng = Rng::new(5);
+    let spec = PatternSpec { n_patterns: 48, ..Default::default() };
+    let dict = PatternDict::build(&spec, &g, &mut rng);
+    let mut want = search_naive(&g, &dict, Strand::Forward);
+    want.extend(search_naive(&g, &dict, Strand::Reverse));
+    dedup_hits(&mut want);
+    for threads in [1usize, 8] {
+        assert_eq!(search_engine_both(&g, &dict, threads), want, "x{threads}");
+    }
+}
+
+#[test]
+fn search_block_property_matches_literal_reference() {
+    forall(20, 0x51ab, |g| {
+        let width = *g.pick(&[6usize, 25]);
+        let n_real = g.usize(0, 6);
+        let n_rows = n_real + g.usize(0, 3); // trailing all-PAD padding rows
+        let chunk = g.usize(1, 400);
+        let text = random_chrom(g, "blk", chunk + 1);
+        let mut seq = text.seq;
+        seq.resize(chunk, PAD);
+        let dict = random_dict(g, &[Chromosome { name: "blk", seq: seq.clone() }], n_real, width);
+        let (patterns, lengths) = dict.block(0, n_rows);
+        let (mask, counts) = search_block(&seq, &patterns, &lengths);
+        assert_eq!(mask.len(), n_rows * chunk);
+        for p in 0..n_rows {
+            let m = lengths[p] as usize;
+            let pat = &patterns[p * width..p * width + m];
+            let mut want_count = 0;
+            for i in 0..chunk {
+                let want = i + m <= chunk && &seq[i..i + m] == pat;
+                assert_eq!(mask[p * chunk + i] != 0, want, "row {p} pos {i}");
+                want_count += want as i32;
+            }
+            assert_eq!(counts[p], want_count, "row {p}");
+        }
+    });
+}

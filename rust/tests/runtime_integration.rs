@@ -133,6 +133,12 @@ fn pool_runs_tasks_across_workers() {
     }
     pool.shutdown();
     assert_eq!(results.len(), 4);
+    // staged artifacts must actually run via PJRT — a load failure would
+    // silently resolve the workers to the CPU engine fallback instead
+    assert!(
+        results.iter().all(|r| r.via_pjrt),
+        "staged artifacts fell back to the CPU path; check the worker load errors"
+    );
     // identical tasks → identical counts
     for r in &results[1..] {
         assert_eq!(r.counts, results[0].counts);
