@@ -1,0 +1,140 @@
+//! Fused grid-sweep benchmark: the historical per-point experiment loop vs
+//! the fused `scenario::sweep` executor, on the fig8 grid.
+//!
+//! Emits a JSON baseline (BENCH_sweep.json schema):
+//!
+//! ```text
+//! cd rust && BIOMAFT_BENCH_JSON=../BENCH_sweep.json \
+//!     cargo bench --bench sweep
+//! ```
+//!
+//! Two scales:
+//!
+//! * **paper scale** — the full fig8 grid (15 Z-points × 4 presets) at 30
+//!   trials/cell: the motivating case where the old per-point loop never
+//!   crossed the serial threshold and ran the whole figure on one core;
+//! * **big cells** — a 2-preset × 4-point slice at
+//!   `BIOMAFT_BENCH_TRIALS` trials/cell (default 100 000): the streaming-
+//!   accumulator scale, where a per-cell `Vec<f64>` would be megabytes.
+//!
+//! Every fused run is asserted cell-for-cell equal to the per-point loop
+//! (paper scale, exact mode) and thread-count independent — the bench
+//! doubles as the CI smoke for the sweep's determinism contract.
+
+use biomaft::bench::compare_to_baseline;
+use biomaft::cluster::{preset, ClusterPreset};
+use biomaft::coordinator::ftmanager::Strategy;
+use biomaft::coordinator::run::{measure_reinstate, ExperimentCfg};
+use biomaft::experiments::figures::z_values;
+use biomaft::metrics::Summary;
+use biomaft::scenario::{default_threads, run_sweep, CellSpec, SweepSpec};
+use biomaft::sim::Rng;
+use std::time::Instant;
+
+const SEED: u64 = 2014;
+
+fn cell(strategy: Strategy, p: ClusterPreset, z: usize) -> CellSpec {
+    let cfg = ExperimentCfg {
+        z,
+        data_kb: 1 << 24,
+        proc_kb: 1 << 24,
+        ..ExperimentCfg::table1(preset(p))
+    };
+    CellSpec::reinstate(strategy, cfg, SEED ^ z as u64)
+}
+
+/// The fig8 grid: every preset × every Z point, agent intelligence.
+fn fig8_grid(presets: &[ClusterPreset], zs: &[usize]) -> Vec<CellSpec> {
+    presets
+        .iter()
+        .flat_map(|&p| zs.iter().map(move |&z| cell(Strategy::Agent, p, z)))
+        .collect()
+}
+
+/// The historical per-point loop: one `measure_reinstate` per cell, each
+/// with its own thread decision (30-trial cells stay serial) and a barrier
+/// between points.
+fn per_point(cells: &[CellSpec], trials: usize, threads: usize) -> Vec<Summary> {
+    cells
+        .iter()
+        .map(|c| {
+            let biomaft::scenario::CellKind::Reinstate { strategy, cfg } = &c.kind else {
+                unreachable!()
+            };
+            let cfg = ExperimentCfg { trials, threads: Some(threads), ..cfg.clone() };
+            measure_reinstate(*strategy, &cfg, &mut Rng::new(c.seed))
+        })
+        .collect()
+}
+
+fn fused(cells: &[CellSpec], trials: usize, threads: usize) -> Vec<Summary> {
+    run_sweep(&SweepSpec { threads: Some(threads), ..SweepSpec::new(cells.to_vec(), trials) })
+}
+
+fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let cores = default_threads();
+    let big_trials: usize = std::env::var("BIOMAFT_BENCH_TRIALS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+
+    // --- paper scale: the full fig8 grid at 30 trials/cell ---
+    let zs = z_values();
+    let grid = fig8_grid(&ClusterPreset::all(), &zs);
+    let trials = 30;
+    println!(
+        "=== bench suite: sweep (fig8 grid, {} cells x {trials} trials, {cores} cores) ===",
+        grid.len()
+    );
+    let (pp, per_point_s) = time(|| per_point(&grid, trials, 1));
+    println!("per-point serial: {per_point_s:>10.4} s");
+    let (f1, fused1_s) = time(|| fused(&grid, trials, 1));
+    println!("fused x1:         {fused1_s:>10.4} s");
+    let (fp, fusedp_s) = time(|| fused(&grid, trials, cores));
+    println!("fused x{cores}:         {fusedp_s:>10.4} s");
+    assert_eq!(pp, f1, "fused sweep must equal the per-point loop cell-for-cell");
+    assert_eq!(f1, fp, "fused sweep must be thread-count independent");
+    let speedup = per_point_s / fusedp_s.max(1e-12);
+    println!("speedup (fused x{cores} vs per-point serial): {speedup:.2}x");
+
+    // --- big cells: streaming-accumulator scale ---
+    let big_grid = fig8_grid(
+        &[ClusterPreset::Placentia, ClusterPreset::Acet],
+        &[3usize, 10, 25, 63],
+    );
+    println!(
+        "--- big cells: {} cells x {big_trials} trials (O(chunk) memory/worker) ---",
+        big_grid.len()
+    );
+    let (b1, big1_s) = time(|| fused(&big_grid, big_trials, 1));
+    println!("fused x1:         {big1_s:>10.4} s");
+    let (bp, bigp_s) = time(|| fused(&big_grid, big_trials, cores));
+    println!("fused x{cores}:         {bigp_s:>10.4} s");
+    assert_eq!(b1, bp, "big-cell sweep must be thread-count independent");
+    let big_speedup = big1_s / bigp_s.max(1e-12);
+    let big_trials_per_s = (big_grid.len() * big_trials) as f64 / bigp_s.max(1e-12);
+    println!("speedup x{cores}: {big_speedup:.2}x  ({big_trials_per_s:.0} trials/s)");
+
+    let json_path = std::env::var("BIOMAFT_BENCH_JSON").ok();
+    if let Some(path) = &json_path {
+        compare_to_baseline(path, "fused_par_s", "fused parallel s (fig8 grid)", fusedp_s);
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"grid_sweep\",\n  \"generated\": true,\n  \"machine_cores\": {cores},\n  \"paper_cells\": {},\n  \"paper_trials_per_cell\": {trials},\n  \"per_point_serial_s\": {per_point_s:.4},\n  \"fused_serial_s\": {fused1_s:.4},\n  \"fused_par_s\": {fusedp_s:.4},\n  \"fused_par_threads\": {cores},\n  \"speedup_fused_par_vs_per_point\": {speedup:.2},\n  \"big_cells\": {},\n  \"big_trials_per_cell\": {big_trials},\n  \"big_fused_serial_s\": {big1_s:.4},\n  \"big_fused_par_s\": {bigp_s:.4},\n  \"big_speedup\": {big_speedup:.2},\n  \"big_trials_per_s\": {big_trials_per_s:.0}\n}}\n",
+        grid.len(),
+        big_grid.len(),
+    );
+    match json_path {
+        Some(path) => {
+            std::fs::write(&path, &json).expect("write bench json");
+            println!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
+}

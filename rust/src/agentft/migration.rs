@@ -157,6 +157,45 @@ pub fn draw_episode(
     Some(EpisodeDraws { target, jitter })
 }
 
+/// [`draw_episode`] into a caller-owned [`EpisodeDraws`], reusing its
+/// jitter buffer — the sweep executor's chunk loop draws one trial at a
+/// time without a per-trial allocation. Same RNG consumption, same values.
+pub fn draw_episode_into(
+    n_jitters: usize,
+    adjacent: &[(NodeId, bool)],
+    rng: &mut Rng,
+    noise_sigma: f64,
+    out: &mut EpisodeDraws,
+) -> bool {
+    let Some(target) = choose_target(adjacent, rng) else {
+        return false;
+    };
+    out.target = target;
+    out.jitter.clear();
+    out.jitter
+        .extend((0..n_jitters).map(|_| if noise_sigma > 0.0 { rng.jitter(noise_sigma) } else { 1.0 }));
+    true
+}
+
+/// Advance `rng` past exactly one episode's draws without materialising
+/// them. The consumption is bit-identical to [`draw_episode`] — one target
+/// pick (when any adjacent core is healthy) plus `n_jitters` jitters — so
+/// a sweep chunk can fast-forward a cell's serial stream to its own trial
+/// range and stay bit-compatible with the historical serial loop
+/// (property-tested in `tests/sweep_properties.rs`).
+pub fn skip_episode(
+    n_jitters: usize,
+    adjacent: &[(NodeId, bool)],
+    rng: &mut Rng,
+    noise_sigma: f64,
+) {
+    if choose_target(adjacent, rng).is_some() && noise_sigma > 0.0 {
+        for _ in 0..n_jitters {
+            rng.jitter(noise_sigma);
+        }
+    }
+}
+
 /// Number of jittered steps in the agent episode (Fig. 3).
 pub const AGENT_JITTERS: usize = 4;
 

@@ -12,13 +12,14 @@
 //! periodic_offset_min = 15.0
 //! trials = 30
 //! seed = 2014
+//! threads = 0             # optional: worker threads (0 = one per core)
 //! ```
 
 use super::ftmanager::Strategy;
 use super::run::ExperimentCfg;
 use crate::checkpoint::CheckpointStrategy;
 use crate::cluster::{preset, ClusterPreset};
-use crate::util::conf::Conf;
+use crate::util::conf::{Conf, Value};
 
 /// Parse a strategy name (CLI + config share this).
 pub fn parse_strategy(s: &str) -> anyhow::Result<Strategy> {
@@ -60,6 +61,15 @@ impl RunConfig {
             periodic_offset_min: c.float_or("periodic_offset_min", base.periodic_offset_min),
             trials: c.int_or("trials", base.trials as i64) as usize,
             seed: c.int_or("seed", base.seed as i64) as u64,
+            // `threads = 0` in a config file means one per core; absent
+            // defers to the BIOMAFT_THREADS / trial-count policy.
+            threads: match c.get("threads").and_then(Value::as_int) {
+                Some(t) => {
+                    anyhow::ensure!(t >= 0, "threads must be >= 0, got {t}");
+                    Some(t as usize)
+                }
+                None => None,
+            },
             cluster: base.cluster,
         };
         anyhow::ensure!(cfg.job_h > 0.0 && cfg.period_h > 0.0, "durations must be positive");

@@ -24,7 +24,7 @@ use crate::agentft::migration::{
 use crate::agentft::simulate_agent_migration_drawn_scratch;
 use crate::checkpoint::cold_restart::{mean_cold_restart, ColdRestartParams};
 use crate::checkpoint::{periodicity_factors, CheckpointStrategy};
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, FtCosts};
 use crate::coreft::migration::{EpisodeScratch as CoreScratch, CORE_JITTERS};
 use crate::coreft::simulate_core_migration_drawn_scratch;
 use crate::hybrid::rules::{decide, Mover, RuleInputs};
@@ -52,6 +52,11 @@ pub struct ExperimentCfg {
     pub periodic_offset_min: f64,
     pub trials: usize,
     pub seed: u64,
+    /// Worker threads for trial sweeps: `Some(n)` forces `n` (`Some(0)` ⇒
+    /// one per core); `None` defers to the `BIOMAFT_THREADS` env var and
+    /// then the trial-count default — see [`batch::thread_policy`] and
+    /// EXPERIMENTS.md §Perf.
+    pub threads: Option<usize>,
 }
 
 impl ExperimentCfg {
@@ -68,6 +73,7 @@ impl ExperimentCfg {
             periodic_offset_min: 15.0,
             trials: 30,
             seed: 2014,
+            threads: None,
         }
     }
 
@@ -77,8 +83,107 @@ impl ExperimentCfg {
     }
 }
 
-/// Parallelise only when a sweep is large enough to amortise thread spawn.
-const PARALLEL_TRIAL_THRESHOLD: usize = 64;
+/// The paper's reinstate scenario: three healthy adjacent cores.
+pub fn adjacent3() -> Vec<(NodeId, bool)> {
+    (1..=3).map(|i| (NodeId(i), false)).collect()
+}
+
+/// A fully resolved reinstate measurement point: the hybrid decision
+/// hoisted, costs and sizes fixed — everything one trial needs except its
+/// [`EpisodeDraws`]. Shared by [`measure_reinstate`] (one point at a time)
+/// and the fused sweep executor
+/// ([`scenario::sweep`](crate::scenario::sweep), which runs whole grids of
+/// these as one task list).
+#[derive(Debug, Clone)]
+pub struct ReinstatePoint {
+    pub costs: FtCosts,
+    pub mover: Mover,
+    /// Fixed per-trial addition (the hybrid negotiation exchange).
+    pub extra_s: f64,
+    /// Jitter draws per trial for this mover.
+    pub n_jitters: usize,
+    pub z: usize,
+    pub data_kb: u64,
+    pub proc_kb: u64,
+}
+
+impl ReinstatePoint {
+    /// Resolve a (strategy, configuration) pair. The hybrid decision is a
+    /// pure function of the (fixed) trial inputs, so the per-trial
+    /// `decide` of the historical loop is hoisted here. Panics on
+    /// non-multi-agent strategies, like `measure_reinstate` always has.
+    pub fn new(strategy: Strategy, cfg: &ExperimentCfg) -> Self {
+        const NEGOTIATION_S: f64 = 0.4e-3;
+        let (mover, extra_s) = match strategy {
+            Strategy::Agent => (Mover::Agent, 0.0),
+            Strategy::Core => (Mover::Core, 0.0),
+            Strategy::Hybrid => {
+                let inp = RuleInputs { z: cfg.z, data_kb: cfg.data_kb, proc_kb: cfg.proc_kb };
+                (decide(inp).0, NEGOTIATION_S)
+            }
+            _ => panic!("measure_reinstate is for multi-agent strategies"),
+        };
+        let n_jitters = match mover {
+            Mover::Agent => AGENT_JITTERS,
+            Mover::Core => CORE_JITTERS,
+        };
+        Self {
+            costs: cfg.cluster.costs,
+            mover,
+            extra_s,
+            n_jitters,
+            z: cfg.z,
+            data_kb: cfg.data_kb,
+            proc_kb: cfg.proc_kb,
+        }
+    }
+
+    /// Run one deterministic episode from its pre-sampled draws and return
+    /// the trial's measurement (`extra_s` + reinstate time).
+    pub fn run_episode(&self, draws: &EpisodeDraws, sc: &mut ReinstateScratch) -> f64 {
+        self.extra_s
+            + match self.mover {
+                Mover::Agent => simulate_agent_migration_drawn_scratch(
+                    &self.costs.agent,
+                    self.z,
+                    self.data_kb,
+                    self.proc_kb,
+                    draws,
+                    &mut sc.agent,
+                )
+                .reinstate_s,
+                Mover::Core => simulate_core_migration_drawn_scratch(
+                    &self.costs.core,
+                    self.z,
+                    self.data_kb,
+                    self.proc_kb,
+                    draws,
+                    &mut sc.core,
+                )
+                .reinstate_s,
+            }
+    }
+}
+
+/// Per-worker episode allocations for either mover (the cells of one sweep
+/// mix agent and core points, so workers carry both — each is a handful of
+/// reusable `Vec`s).
+pub struct ReinstateScratch {
+    agent: AgentScratch,
+    core: CoreScratch,
+}
+
+impl ReinstateScratch {
+    pub fn new() -> Self {
+        Self { agent: AgentScratch::new(), core: CoreScratch::new() }
+    }
+}
+
+impl Default for ReinstateScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// Measure the mean reinstate time of a multi-agent strategy over `trials`
 /// DES episodes with trial noise (the paper's 30-trial means, ΔT_A2/ΔT_C2).
@@ -86,70 +191,32 @@ const PARALLEL_TRIAL_THRESHOLD: usize = 64;
 /// Each trial's randomness is drawn *serially* from `rng` — bit-compatible
 /// with the historical serial trial loop, so Tables 1–2 and Figs. 8–13
 /// reproduce exactly — and the deterministic episodes then execute through
-/// the batch runner, in parallel for large sweeps.
+/// the batch runner. The thread count follows [`batch::thread_policy`]:
+/// `cfg.threads`, then `BIOMAFT_THREADS`, then serial below the small-sweep
+/// threshold. (Grid experiments no longer loop over this — they flatten
+/// into [`scenario::sweep`](crate::scenario::sweep) so even 30-trial cells
+/// run in parallel across the grid.)
 pub fn measure_reinstate(
     strategy: Strategy,
     cfg: &ExperimentCfg,
     rng: &mut Rng,
 ) -> Summary {
-    let costs = cfg.cluster.costs;
-    let adjacent: Vec<(NodeId, bool)> = (1..=3).map(|i| (NodeId(i), false)).collect();
-    let sigma = costs.noise_sigma;
+    let point = ReinstatePoint::new(strategy, cfg);
+    let adjacent = adjacent3();
+    let sigma = point.costs.noise_sigma;
     let trials = cfg.trials.max(1);
-    const NEGOTIATION_S: f64 = 0.4e-3;
-    // The hybrid decision is a pure function of the (fixed) trial inputs,
-    // so the per-trial `decide` of the old loop is hoisted here.
-    let (mover, extra_s) = match strategy {
-        Strategy::Agent => (Mover::Agent, 0.0),
-        Strategy::Core => (Mover::Core, 0.0),
-        Strategy::Hybrid => {
-            let inp = RuleInputs { z: cfg.z, data_kb: cfg.data_kb, proc_kb: cfg.proc_kb };
-            (decide(inp).0, NEGOTIATION_S)
-        }
-        _ => panic!("measure_reinstate is for multi-agent strategies"),
-    };
-    let n_jitters = match mover {
-        Mover::Agent => AGENT_JITTERS,
-        Mover::Core => CORE_JITTERS,
-    };
     let draws: Vec<EpisodeDraws> = (0..trials)
-        .map(|_| draw_episode(n_jitters, &adjacent, rng, sigma).expect("healthy adjacent exists"))
+        .map(|_| {
+            draw_episode(point.n_jitters, &adjacent, rng, sigma).expect("healthy adjacent exists")
+        })
         .collect();
-    let threads = if trials >= PARALLEL_TRIAL_THRESHOLD { 0 } else { 1 };
-    let (z, data_kb, proc_kb) = (cfg.z, cfg.data_kb, cfg.proc_kb);
+    let threads = batch::thread_policy(cfg.threads, trials);
     // Workers carry an episode scratch across their trials (engine queue /
     // staging / log allocations), so steady-state episodes only allocate
     // their step trace.
-    let xs = match mover {
-        Mover::Agent => {
-            batch::parallel_map_trials_scratch(trials, threads, AgentScratch::new, |sc, i| {
-                extra_s
-                    + simulate_agent_migration_drawn_scratch(
-                        &costs.agent,
-                        z,
-                        data_kb,
-                        proc_kb,
-                        &draws[i],
-                        sc,
-                    )
-                    .reinstate_s
-            })
-        }
-        Mover::Core => {
-            batch::parallel_map_trials_scratch(trials, threads, CoreScratch::new, |sc, i| {
-                extra_s
-                    + simulate_core_migration_drawn_scratch(
-                        &costs.core,
-                        z,
-                        data_kb,
-                        proc_kb,
-                        &draws[i],
-                        sc,
-                    )
-                    .reinstate_s
-            })
-        }
-    };
+    let xs = batch::parallel_map_trials_scratch(trials, threads, ReinstateScratch::new, |sc, i| {
+        point.run_episode(&draws[i], sc)
+    });
     Summary::of(&xs)
 }
 

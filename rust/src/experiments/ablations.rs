@@ -8,6 +8,7 @@ use crate::coordinator::ftmanager::Strategy;
 use crate::coordinator::run::{window_row, ExperimentCfg};
 use crate::experiments::prediction::PredictionCfg;
 use crate::metrics::Table;
+use crate::scenario::{parallel_map_trials, thread_policy};
 use crate::sim::Rng;
 use crate::util::fmt::hms;
 
@@ -41,7 +42,8 @@ pub fn combined_table() -> Table {
 
 /// Ablation: the agent's dependency-handshake window — the knob behind the
 /// Fig. 8 knee at Z = 10. The window bounds how many handshakes pay full
-/// cost before overlapping kicks in, so the knee moves with it.
+/// cost before overlapping kicks in, so the knee moves with it. (Pure
+/// closed-form arithmetic — nothing here is worth scheduling.)
 pub fn window_ablation() -> Table {
     let mut t = Table::new(
         "Ablation: agent dependency-handshake window vs reinstate time (placentia, S=2^24)",
@@ -66,16 +68,23 @@ pub fn window_ablation() -> Table {
 }
 
 /// Ablation: predictor threshold → coverage/precision trade-off (the knob
-/// the paper's future work wants to push).
+/// the paper's future work wants to push). Every row runs the same 2000
+/// windows from its own `Rng::new(seed)` stream, so rows are independent
+/// and sweep in parallel with output identical to the serial loop.
 pub fn predictor_ablation(seed: u64) -> Table {
+    let thresholds = [0.40, 0.48, 0.55, 0.62, 0.70];
+    // 5 rows × 2000 windows is real work: the policy goes wide by default
+    let threads = thread_policy(None, thresholds.len() * 2000);
+    let rows = parallel_map_trials(thresholds.len(), threads, |i| {
+        let mut rng = Rng::new(seed);
+        let cfg = PredictionCfg { windows: 2000, ..Default::default() };
+        run_with_threshold(&cfg, thresholds[i], &mut rng)
+    });
     let mut t = Table::new(
         "Ablation: predictor threshold vs coverage/precision (2000 windows)",
         &["threshold", "coverage", "precision", "false alarms"],
     );
-    for thr in [0.40, 0.48, 0.55, 0.62, 0.70] {
-        let mut rng = Rng::new(seed);
-        let cfg = PredictionCfg { windows: 2000, ..Default::default() };
-        let stats = run_with_threshold(&cfg, thr, &mut rng);
+    for (thr, stats) in thresholds.iter().zip(rows) {
         t.row(&[
             format!("{thr:.2}"),
             format!("{:.1}%", 100.0 * stats.0),

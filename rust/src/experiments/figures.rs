@@ -1,11 +1,18 @@
 //! Figs. 8-13: reinstate time vs dependencies / data size / process size,
 //! one series per cluster, mean of 30 DES trials per point.
+//!
+//! Every figure's grid — all (preset × parameter point) cells — runs as
+//! **one** fused [`run_sweep`] task list, so the whole figure parallelises
+//! even though each cell is only 30 trials (the per-point loop never
+//! crossed the serial threshold). Cell seeds and draw streams are exactly
+//! the historical per-point loop's, so outputs are byte-identical to it at
+//! any thread count (`tests/sweep_properties.rs`).
 
 use crate::cluster::{preset, ClusterPreset};
 use crate::coordinator::ftmanager::Strategy;
-use crate::coordinator::run::{measure_reinstate, ExperimentCfg};
-use crate::metrics::Series;
-use crate::sim::Rng;
+use crate::coordinator::run::ExperimentCfg;
+use crate::metrics::{Series, Summary};
+use crate::scenario::{run_sweep, CellSpec, SweepSpec};
 
 /// The paper's dependency sweep: Z from 3 to 63.
 pub fn z_values() -> Vec<usize> {
@@ -29,64 +36,68 @@ fn kb_of(n: f64) -> u64 {
     2f64.powf(n).round() as u64
 }
 
-fn measure(
+/// One grid cell: the same `ExperimentCfg` + seed the historical
+/// per-point `measure` built, as a sweep cell.
+fn cell(
     strategy: Strategy,
     p: ClusterPreset,
     z: usize,
     data_kb: u64,
     proc_kb: u64,
-    trials: usize,
     seed: u64,
-) -> f64 {
-    let cfg = ExperimentCfg {
-        z,
-        data_kb,
-        proc_kb,
-        trials,
-        ..ExperimentCfg::table1(preset(p))
-    };
-    let mut rng = Rng::new(seed);
-    measure_reinstate(strategy, &cfg, &mut rng).mean
+) -> CellSpec {
+    let cfg = ExperimentCfg { z, data_kb, proc_kb, ..ExperimentCfg::table1(preset(p)) };
+    CellSpec::reinstate(strategy, cfg, seed)
+}
+
+/// Run a preset-major grid as one fused sweep and fold the per-cell means
+/// back into one series column per preset.
+fn grid_series(
+    title: &str,
+    x_label: &str,
+    x: Vec<f64>,
+    cells: Vec<CellSpec>,
+    trials: usize,
+) -> Series {
+    let points = x.len();
+    let sums: Vec<Summary> = run_sweep(&SweepSpec::new(cells, trials.max(1)));
+    let mut s = Series::new(title, x_label, "reinstate time (s)", x);
+    for (pi, p) in ClusterPreset::all().into_iter().enumerate() {
+        let y: Vec<f64> = sums[pi * points..(pi + 1) * points].iter().map(|c| c.mean).collect();
+        s.push(p.name(), y);
+    }
+    s
 }
 
 fn sweep_z(strategy: Strategy, title: &str, trials: usize, seed: u64) -> Series {
     let zs = z_values();
-    let mut s = Series::new(
-        title,
-        "dependencies Z",
-        "reinstate time (s)",
-        zs.iter().map(|&z| z as f64).collect(),
-    );
-    for p in ClusterPreset::all() {
-        let y: Vec<f64> = zs
-            .iter()
-            .map(|&z| measure(strategy, p, z, 1 << 24, 1 << 24, trials, seed ^ z as u64))
-            .collect();
-        s.push(p.name(), y);
-    }
-    s
+    let cells: Vec<CellSpec> = ClusterPreset::all()
+        .into_iter()
+        .flat_map(|p| {
+            zs.iter()
+                .map(move |&z| cell(strategy, p, z, 1 << 24, 1 << 24, seed ^ z as u64))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let x = zs.iter().map(|&z| z as f64).collect();
+    grid_series(title, "dependencies Z", x, cells, trials)
 }
 
 fn sweep_size(strategy: Strategy, title: &str, vary_data: bool, trials: usize, seed: u64) -> Series {
     let ns = size_exponents();
-    let mut s = Series::new(
-        title,
-        "size 2^n KB (n)",
-        "reinstate time (s)",
-        ns.clone(),
-    );
-    for p in ClusterPreset::all() {
-        let y: Vec<f64> = ns
-            .iter()
-            .map(|&n| {
-                let kb = kb_of(n);
-                let (d, pr) = if vary_data { (kb, 1 << 19) } else { (1 << 19, kb) };
-                measure(strategy, p, 10, d, pr, trials, seed ^ n.to_bits())
-            })
-            .collect();
-        s.push(p.name(), y);
-    }
-    s
+    let cells: Vec<CellSpec> = ClusterPreset::all()
+        .into_iter()
+        .flat_map(|p| {
+            ns.iter()
+                .map(move |&n| {
+                    let kb = kb_of(n);
+                    let (d, pr) = if vary_data { (kb, 1 << 19) } else { (1 << 19, kb) };
+                    cell(strategy, p, 10, d, pr, seed ^ n.to_bits())
+                })
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    grid_series(title, "size 2^n KB (n)", ns, cells, trials)
 }
 
 /// Fig. 8 — Z vs reinstate, agent intelligence (S_d = 2^24 KB).

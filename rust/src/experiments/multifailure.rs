@@ -13,7 +13,7 @@
 use crate::coordinator::ftmanager::Strategy;
 use crate::failure::injector::FailureProcess;
 use crate::metrics::Series;
-use crate::scenario::{run_batch, BatchCfg, FailureRegime, ScenarioSpec};
+use crate::scenario::{run_sweep, CellSpec, FailureRegime, ScenarioSpec, SweepSpec};
 
 const JOB_S: f64 = 3600.0;
 
@@ -22,33 +22,45 @@ fn spec(strategy: Strategy, predictable_frac: f64, regime: FailureRegime) -> Sce
     ScenarioSpec::placentia_ring16(strategy, predictable_frac, 16, regime)
 }
 
-fn mean_added_s(spec: &ScenarioSpec, trials: usize, seed: u64) -> f64 {
-    let b = run_batch(spec, &BatchCfg { trials: trials.max(1), base_seed: seed, threads: 0 });
-    b.completed_s.mean - JOB_S
+/// Run the series' whole grid as one fused sweep (a slow `Cascade` cell no
+/// longer serialises behind fast cells) and return each cell's added time
+/// over the nominal job — the per-trial value is `completed_at_s`, exactly
+/// what `run_batch` summarised, so the means match the old per-point loop.
+fn added_s(cells: Vec<CellSpec>, trials: usize) -> Vec<f64> {
+    run_sweep(&SweepSpec::new(cells, trials.max(1)))
+        .iter()
+        .map(|s| s.mean - JOB_S)
+        .collect()
 }
 
 /// Added execution time vs number of concurrent failures (k = 1..=6).
 pub fn concurrent_k(trials: usize, seed: u64) -> Series {
     let ks: Vec<usize> = (1..=6).collect();
+    let strategies = [Strategy::Agent, Strategy::Core, Strategy::Hybrid];
+    let cells: Vec<CellSpec> = strategies
+        .iter()
+        .flat_map(|&strategy| {
+            ks.iter().map(move |&k| {
+                CellSpec::scenario(
+                    spec(
+                        strategy,
+                        0.9,
+                        FailureRegime::ConcurrentK { k, offset_s: 900.0, spacing_s: 1.0 },
+                    ),
+                    seed ^ (k as u64),
+                )
+            })
+        })
+        .collect();
+    let y = added_s(cells, trials);
     let mut s = Series::new(
         "Multi-failure: added time vs concurrent node failures (k)",
         "concurrent failures k",
         "added execution time (s)",
         ks.iter().map(|&k| k as f64).collect(),
     );
-    for strategy in [Strategy::Agent, Strategy::Core, Strategy::Hybrid] {
-        let y: Vec<f64> = ks
-            .iter()
-            .map(|&k| {
-                let s = spec(
-                    strategy,
-                    0.9,
-                    FailureRegime::ConcurrentK { k, offset_s: 900.0, spacing_s: 1.0 },
-                );
-                mean_added_s(&s, trials, seed ^ (k as u64))
-            })
-            .collect();
-        s.push(strategy.name(), y);
+    for (si, strategy) in strategies.iter().enumerate() {
+        s.push(strategy.name(), y[si * ks.len()..(si + 1) * ks.len()].to_vec());
     }
     s
 }
@@ -56,30 +68,36 @@ pub fn concurrent_k(trials: usize, seed: u64) -> Series {
 /// Added execution time vs rack-spread probability, per rack size.
 pub fn correlated(trials: usize, seed: u64) -> Series {
     let ps = [0.0, 0.25, 0.5, 0.75, 1.0];
+    let racks = [2usize, 4, 8];
+    let cells: Vec<CellSpec> = racks
+        .iter()
+        .flat_map(|&rack_size| {
+            ps.iter().map(move |&p_spread| {
+                CellSpec::scenario(
+                    spec(
+                        Strategy::Hybrid,
+                        0.9,
+                        FailureRegime::Correlated {
+                            primary: FailureProcess::RandomUniform,
+                            rack_size,
+                            p_spread,
+                            lag_s: 30.0,
+                        },
+                    ),
+                    seed ^ ((rack_size as u64) << 8),
+                )
+            })
+        })
+        .collect();
+    let y = added_s(cells, trials);
     let mut s = Series::new(
         "Multi-failure: rack-correlated failures (hybrid strategy)",
         "rack-spread probability",
         "added execution time (s)",
         ps.to_vec(),
     );
-    for rack_size in [2usize, 4, 8] {
-        let y: Vec<f64> = ps
-            .iter()
-            .map(|&p_spread| {
-                let s = spec(
-                    Strategy::Hybrid,
-                    0.9,
-                    FailureRegime::Correlated {
-                        primary: FailureProcess::RandomUniform,
-                        rack_size,
-                        p_spread,
-                        lag_s: 30.0,
-                    },
-                );
-                mean_added_s(&s, trials, seed ^ ((rack_size as u64) << 8))
-            })
-            .collect();
-        s.push(&format!("rack of {rack_size}"), y);
+    for (ri, rack_size) in racks.iter().enumerate() {
+        s.push(&format!("rack of {rack_size}"), y[ri * ps.len()..(ri + 1) * ps.len()].to_vec());
     }
     s
 }
@@ -88,36 +106,40 @@ pub fn correlated(trials: usize, seed: u64) -> Series {
 /// cascades: the migration target itself fails with probability `p_follow`.
 pub fn cascade(trials: usize, seed: u64) -> Series {
     let ps = [0.0, 0.25, 0.5, 0.75];
-    let mut s = Series::new(
-        "Multi-failure: cascading target failures — agents vs checkpointing",
-        "cascade probability p_follow",
-        "added execution time (s)",
-        ps.to_vec(),
-    );
     // (label, strategy, predictable_frac): predictable_frac 0 disables the
     // proactive path entirely, leaving pure reactive checkpoint rollback.
     let variants: [(&str, Strategy, f64); 2] = [
         ("multi-agent (proactive)", Strategy::Hybrid, 0.95),
         ("checkpoint only (reactive)", Strategy::Hybrid, 0.0),
     ];
-    for (label, strategy, predictable_frac) in variants {
-        let y: Vec<f64> = ps
-            .iter()
-            .enumerate()
-            .map(|(i, &p_follow)| {
-                let s = spec(
-                    strategy,
-                    predictable_frac,
-                    FailureRegime::Cascade {
-                        trigger: FailureProcess::RandomUniform,
-                        p_follow,
-                        lag_s: 5.0,
-                    },
-                );
-                mean_added_s(&s, trials, seed ^ ((i as u64) << 16))
+    let cells: Vec<CellSpec> = variants
+        .iter()
+        .flat_map(|&(_, strategy, predictable_frac)| {
+            ps.iter().enumerate().map(move |(i, &p_follow)| {
+                CellSpec::scenario(
+                    spec(
+                        strategy,
+                        predictable_frac,
+                        FailureRegime::Cascade {
+                            trigger: FailureProcess::RandomUniform,
+                            p_follow,
+                            lag_s: 5.0,
+                        },
+                    ),
+                    seed ^ ((i as u64) << 16),
+                )
             })
-            .collect();
-        s.push(label, y);
+        })
+        .collect();
+    let y = added_s(cells, trials);
+    let mut s = Series::new(
+        "Multi-failure: cascading target failures — agents vs checkpointing",
+        "cascade probability p_follow",
+        "added execution time (s)",
+        ps.to_vec(),
+    );
+    for (vi, (label, _, _)) in variants.iter().enumerate() {
+        s.push(label, y[vi * ps.len()..(vi + 1) * ps.len()].to_vec());
     }
     s
 }

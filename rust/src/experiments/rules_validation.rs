@@ -9,9 +9,9 @@
 
 use crate::cluster::{preset, ClusterPreset};
 use crate::coordinator::ftmanager::Strategy;
-use crate::coordinator::run::{measure_reinstate, ExperimentCfg};
+use crate::coordinator::run::ExperimentCfg;
 use crate::metrics::Table;
-use crate::sim::Rng;
+use crate::scenario::{run_sweep, CellSpec, SweepSpec};
 use crate::util::fmt::hms_ms;
 
 /// One validation scenario and its measurements.
@@ -42,23 +42,10 @@ impl RuleCheck {
     }
 }
 
-fn measure(z: usize, data_kb: u64, proc_kb: u64, seed: u64) -> (f64, f64) {
-    let cfg = ExperimentCfg {
-        z,
-        data_kb,
-        proc_kb,
-        trials: 30,
-        ..ExperimentCfg::table1(preset(ClusterPreset::Placentia))
-    };
-    let mut ra = Rng::new(seed);
-    let mut rc = Rng::new(seed ^ 0xc0fe);
-    (
-        measure_reinstate(Strategy::Agent, &cfg, &mut ra).mean,
-        measure_reinstate(Strategy::Core, &cfg, &mut rc).mean,
-    )
-}
-
-/// Run all the genome-job validation scenarios.
+/// Run all the genome-job validation scenarios — every (scenario ×
+/// approach) pair is one cell of a single fused sweep, with the same
+/// seeds (`seed ^ i<<8` for agent, `… ^ 0xc0fe` for core) the historical
+/// per-scenario loop used.
 pub fn run(seed: u64) -> Vec<RuleCheck> {
     let kb19 = 1u64 << 19;
     let kb25 = 1u64 << 25;
@@ -73,12 +60,36 @@ pub fn run(seed: u64) -> Vec<RuleCheck> {
         ("genome search, Z=12, S_p=2^19 (small proc)".into(), 12, kb19, kb19, "Rule 3", 1),
         ("genome search, Z=12, S_p=2^25 (large proc)".into(), 12, kb19, kb25, "Rule 3", 0),
     ];
+    let cells: Vec<CellSpec> = scenarios
+        .iter()
+        .enumerate()
+        .flat_map(|(i, &(_, z, d, p, _, _))| {
+            let cfg = ExperimentCfg {
+                z,
+                data_kb: d,
+                proc_kb: p,
+                ..ExperimentCfg::table1(preset(ClusterPreset::Placentia))
+            };
+            let s = seed ^ ((i as u64) << 8);
+            [
+                CellSpec::reinstate(Strategy::Agent, cfg.clone(), s),
+                CellSpec::reinstate(Strategy::Core, cfg, s ^ 0xc0fe),
+            ]
+        })
+        .collect();
+    let sums = run_sweep(&SweepSpec::new(cells, 30));
     scenarios
         .into_iter()
         .enumerate()
-        .map(|(i, (label, z, d, p, rule, expected))| {
-            let (agent_s, core_s) = measure(z, d, p, seed ^ (i as u64) << 8);
-            RuleCheck { label, z, data_kb: d, proc_kb: p, agent_s, core_s, rule, expected }
+        .map(|(i, (label, z, d, p, rule, expected))| RuleCheck {
+            label,
+            z,
+            data_kb: d,
+            proc_kb: p,
+            agent_s: sums[2 * i].mean,
+            core_s: sums[2 * i + 1].mean,
+            rule,
+            expected,
         })
         .collect()
 }

@@ -22,6 +22,22 @@ fn main() {
     }
 }
 
+/// `--threads` feeds the sweep thread policy
+/// ([`biomaft::scenario::thread_policy`]) by setting `BIOMAFT_THREADS`:
+/// `auto` leaves the trial-count default (serial below 64 trials per
+/// point — the fused sweeps parallelise regardless), `N` forces N worker
+/// threads everywhere, `0` forces one per core.
+fn set_thread_policy(threads: &str) -> anyhow::Result<()> {
+    if threads == "auto" {
+        return Ok(());
+    }
+    let n: usize = threads
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--threads takes `auto` or a number, got `{threads}`"))?;
+    std::env::set_var("BIOMAFT_THREADS", n.to_string());
+    Ok(())
+}
+
 fn usage() -> String {
     let mut s = String::from(
         "biomaft — multi-agent fault tolerance for HPC computational biology jobs\n\n\
@@ -38,7 +54,8 @@ fn commands() -> Vec<Command> {
         Command::new("list", "list all experiments (paper tables/figures)"),
         Command::new("experiment", "regenerate a paper table/figure: experiment <id>")
             .opt("trials", "30", "trials per measured point")
-            .opt("seed", "2014", "experiment seed"),
+            .opt("seed", "2014", "experiment seed")
+            .opt("threads", "auto", "worker threads: auto | N | 0 = one per core"),
         Command::new("genome-search", "run the real AOT genome search (PJRT)")
             .opt("bases", "200000", "synthetic genome size in bases")
             .opt("patterns", "128", "dictionary size")
@@ -51,7 +68,8 @@ fn commands() -> Vec<Command> {
             .opt("data-kb", "524288", "S_d in KB")
             .opt("proc-kb", "524288", "S_p in KB")
             .opt("trials", "30", "trials")
-            .opt("seed", "1", "seed"),
+            .opt("seed", "1", "seed")
+            .opt("threads", "auto", "worker threads: auto | N | 0 = one per core"),
         Command::new("clusters", "print the cluster presets"),
         Command::new("run", "run a config-file experiment: run --config <file>")
             .opt_req("config", "path to a TOML-subset config (see configs/)"),
@@ -83,6 +101,7 @@ fn run() -> anyhow::Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("usage: biomaft experiment <id>"))?;
             let trials: usize = p.req("trials")?;
             let seed: u64 = p.req("seed")?;
+            set_thread_policy(&p.req::<String>("threads")?)?;
             println!("{}", experiments::run_by_id(id, trials, seed)?);
         }
         "genome-search" => {
@@ -100,6 +119,7 @@ fn run() -> anyhow::Result<()> {
                 "hybrid" => Strategy::Hybrid,
                 other => anyhow::bail!("unknown approach `{other}`"),
             };
+            set_thread_policy(&p.req::<String>("threads")?)?;
             let cfg = ExperimentCfg {
                 z: p.req("z")?,
                 data_kb: p.req("data-kb")?,

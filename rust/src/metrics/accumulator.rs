@@ -1,0 +1,459 @@
+//! [`Accumulator`]: a mergeable streaming reducer over trial outcomes —
+//! the O(1)-memory replacement for materialising a `Vec<f64>` per sweep
+//! cell (DESIGN.md §Sweep executor).
+//!
+//! Three layers, all updated per push:
+//!
+//! * **Welford moments** — count, running mean and M2 (sum of squared
+//!   deviations), merged across accumulators with Chan's parallel update.
+//!   Used for `mean`/`std` only once the quantile buffer has degraded.
+//! * **min / max** — exact at any scale (NaN values never become the
+//!   min/max; they do poison the mean, see [`Summary::of`]).
+//! * **quantile buffer** — up to `cap` values are kept *exactly, in push
+//!   order*; while the buffer is exact, [`Accumulator::summary`] computes
+//!   the whole [`Summary`] by delegating to [`Summary::of`] on the buffer,
+//!   so a small cell's summary is **byte-identical** to the historical
+//!   `Vec<f64>` path. The first push (or in-order merge) that would exceed
+//!   `cap` degrades the buffer to a fixed-width histogram
+//!   ([`HIST_BINS`] bins over the min/max seen at that moment; later
+//!   values clamp into the edge bins), after which `median`/`p95` are
+//!   bin-interpolated approximations and `mean`/`std` come from the
+//!   Welford state.
+//!
+//! ## Determinism
+//!
+//! Every operation is a deterministic function of the *sequence* of
+//! `push`/`merge` calls. The sweep executor therefore merges per-chunk
+//! accumulators **in chunk-index order** — the chunk layout depends only
+//! on the cell's trial count, never on the thread count, so a cell's
+//! summary is identical on 1 thread and on 64 (property-tested in
+//! `tests/sweep_properties.rs`).
+
+use super::stats::Summary;
+
+/// Default exact-quantile buffer capacity. Cells at or below this many
+/// trials report summaries byte-identical to `Summary::of` on the full
+/// sample; larger cells degrade to the histogram.
+pub const DEFAULT_QUANTILE_CAP: usize = 4096;
+
+/// Bins of the degraded fixed-width histogram.
+pub const HIST_BINS: usize = 512;
+
+/// Quantile state: exact buffer (push order preserved) until `cap` is
+/// exceeded, then a fixed-width histogram.
+#[derive(Debug, Clone)]
+enum Quantiles {
+    Exact { xs: Vec<f64>, cap: usize },
+    Hist(Histogram),
+}
+
+/// Fixed-width histogram over `[lo, hi]`; out-of-range values clamp into
+/// the edge bins (exact min/max are tracked by the accumulator itself).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+}
+
+impl Histogram {
+    fn new(lo: f64, hi: f64) -> Self {
+        Self { lo, hi, counts: vec![0; HIST_BINS] }
+    }
+
+    fn bin_of(&self, x: f64) -> usize {
+        if self.hi <= self.lo {
+            return 0;
+        }
+        let frac = (x - self.lo) / (self.hi - self.lo);
+        // NaN casts to 0; +inf saturates — both land in an edge bin.
+        ((frac * HIST_BINS as f64) as usize).min(HIST_BINS - 1)
+    }
+
+    fn insert(&mut self, x: f64) {
+        self.counts[self.bin_of(x)] += 1;
+    }
+
+    /// Approximate percentile: find the bin holding the target rank (the
+    /// same `p/100 · (n−1)` rank convention as
+    /// [`percentile_sorted`](super::stats::percentile_sorted)) and
+    /// interpolate linearly inside it; the result clamps to `[min, max]`.
+    fn percentile(&self, p: f64, n: u64, min: f64, max: f64) -> f64 {
+        let rank = p / 100.0 * (n - 1) as f64;
+        let mut before = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 && rank < (before + c) as f64 {
+                let within = (rank - before as f64) / c as f64;
+                let width = (self.hi - self.lo) / HIST_BINS as f64;
+                let v = self.lo + (i as f64 + within) * width;
+                return v.clamp(min, max);
+            }
+            before += c;
+        }
+        max
+    }
+}
+
+/// Mergeable streaming statistics over one cell's trial outcomes.
+#[derive(Debug, Clone)]
+pub struct Accumulator {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    quant: Quantiles,
+}
+
+impl Default for Accumulator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Accumulator {
+    /// An empty accumulator with the default quantile cap.
+    pub fn new() -> Self {
+        Self::with_cap(DEFAULT_QUANTILE_CAP)
+    }
+
+    /// An empty accumulator whose exact-quantile buffer degrades to a
+    /// histogram beyond `cap` values (`cap == 0` degrades on first push).
+    pub fn with_cap(cap: usize) -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            quant: Quantiles::Exact { xs: Vec::new(), cap },
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Is the quantile buffer still exact (summary byte-identical to
+    /// `Summary::of` on the pushed sequence)?
+    pub fn is_exact(&self) -> bool {
+        matches!(self.quant, Quantiles::Exact { .. })
+    }
+
+    /// Fold one observation in.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        let needs_degrade = match &mut self.quant {
+            Quantiles::Exact { xs, cap } => {
+                xs.push(x);
+                xs.len() > *cap
+            }
+            Quantiles::Hist(h) => {
+                h.insert(x);
+                false
+            }
+        };
+        if needs_degrade {
+            self.degrade();
+        }
+    }
+
+    /// Convert the exact buffer into a histogram over the value range seen
+    /// so far (the documented degradation rule: bounds freeze here; later
+    /// out-of-range values clamp into the edge bins).
+    fn degrade(&mut self) {
+        if let Quantiles::Exact { xs, .. } = &self.quant {
+            let mut h = Histogram::new(self.min, self.max);
+            for &x in xs {
+                h.insert(x);
+            }
+            self.quant = Quantiles::Hist(h);
+        }
+    }
+
+    /// Merge `other` into `self`. The combined state is exactly what a
+    /// single accumulator would hold after `self`'s pushes followed by
+    /// `other`'s — bit-for-bit while both buffers are exact and the
+    /// combined count fits the cap — so merging per-chunk accumulators in
+    /// chunk-index order reproduces the serial fold.
+    pub fn merge(&mut self, other: Accumulator) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            // adopt other's state, but keep our own cap
+            let keep_cap = match &self.quant {
+                Quantiles::Exact { cap, .. } => Some(*cap),
+                Quantiles::Hist(_) => None,
+            };
+            *self = other;
+            let mut needs_degrade = false;
+            if let (Some(cap_a), Quantiles::Exact { cap, xs }) = (keep_cap, &mut self.quant) {
+                *cap = cap_a;
+                needs_degrade = xs.len() > cap_a;
+            }
+            if needs_degrade {
+                self.degrade();
+            }
+            return;
+        }
+        // Chan et al. parallel moment update.
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let delta = other.mean - self.mean;
+        let n = na + nb;
+        self.mean += delta * (nb / n);
+        self.m2 += other.m2 + delta * delta * (na * nb / n);
+        self.n += other.n;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+        match other.quant {
+            Quantiles::Exact { xs: bxs, .. } => {
+                let needs_degrade = match &mut self.quant {
+                    Quantiles::Exact { xs, cap } => {
+                        xs.extend_from_slice(&bxs);
+                        xs.len() > *cap
+                    }
+                    Quantiles::Hist(h) => {
+                        for &x in &bxs {
+                            h.insert(x);
+                        }
+                        false
+                    }
+                };
+                if needs_degrade {
+                    self.degrade();
+                }
+            }
+            // With the default cap (≥ the sweep's chunk size) chunk
+            // accumulators stay exact and this arm is unreachable from the
+            // sweep; a smaller cap degrades chunks individually, landing
+            // here — lossier (midpoint re-binning) but still a
+            // deterministic function of the merge sequence.
+            Quantiles::Hist(bh) => {
+                self.degrade();
+                let Quantiles::Hist(h) = &mut self.quant else { unreachable!() };
+                merge_hist(h, &bh);
+            }
+        }
+    }
+
+    /// The cell's [`Summary`]. Exact mode delegates to [`Summary::of`] on
+    /// the buffered sequence (byte-identical to the historical `Vec<f64>`
+    /// path); degraded mode reports Welford mean/std and histogram
+    /// quantiles. Panics on an empty accumulator, like `Summary::of`.
+    pub fn summary(&self) -> Summary {
+        assert!(self.n > 0, "empty sample");
+        match &self.quant {
+            Quantiles::Exact { xs, .. } => Summary::of(xs),
+            Quantiles::Hist(h) => Summary {
+                n: self.n as usize,
+                mean: self.mean,
+                std: (self.m2 / self.n as f64).sqrt(),
+                min: self.min,
+                max: self.max,
+                median: h.percentile(50.0, self.n, self.min, self.max),
+                p95: h.percentile(95.0, self.n, self.min, self.max),
+            },
+        }
+    }
+}
+
+/// Fold histogram `b` into `a`: matching bounds add counts directly;
+/// mismatched bounds re-bin `b`'s mass at each source bin's midpoint
+/// (documented lossy fallback — not reachable from the sweep executor).
+fn merge_hist(a: &mut Histogram, b: &Histogram) {
+    if a.lo == b.lo && a.hi == b.hi {
+        for (ca, cb) in a.counts.iter_mut().zip(&b.counts) {
+            *ca += cb;
+        }
+        return;
+    }
+    let width = (b.hi - b.lo) / HIST_BINS as f64;
+    for (i, &c) in b.counts.iter().enumerate() {
+        if c > 0 {
+            let mid = b.lo + (i as f64 + 0.5) * width;
+            a.counts[a.bin_of(mid)] += c;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize) -> Vec<f64> {
+        // deterministic non-monotone sample with spread
+        (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 10.0).collect()
+    }
+
+    #[test]
+    fn exact_mode_matches_summary_of_bytewise() {
+        let xs = seq(100);
+        let mut acc = Accumulator::new();
+        for &x in &xs {
+            acc.push(x);
+        }
+        assert!(acc.is_exact());
+        let a = acc.summary();
+        let b = Summary::of(&xs);
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.std.to_bits(), b.std.to_bits());
+        assert_eq!(a.median.to_bits(), b.median.to_bits());
+        assert_eq!(a.p95.to_bits(), b.p95.to_bits());
+        assert_eq!(a.min.to_bits(), b.min.to_bits());
+        assert_eq!(a.max.to_bits(), b.max.to_bits());
+    }
+
+    #[test]
+    fn chunked_in_order_merge_equals_serial_fold() {
+        let xs = seq(500);
+        let mut serial = Accumulator::new();
+        for &x in &xs {
+            serial.push(x);
+        }
+        for chunk in [7usize, 64, 200] {
+            let mut merged = Accumulator::new();
+            for c in xs.chunks(chunk) {
+                let mut part = Accumulator::new();
+                for &x in c {
+                    part.push(x);
+                }
+                merged.merge(part);
+            }
+            assert!(merged.is_exact());
+            assert_eq!(merged.summary(), serial.summary(), "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn degrades_past_cap_and_stays_close() {
+        let xs = seq(3000);
+        let mut acc = Accumulator::with_cap(256);
+        for &x in &xs {
+            acc.push(x);
+        }
+        assert!(!acc.is_exact());
+        let approx = acc.summary();
+        let exact = Summary::of(&xs);
+        assert_eq!(approx.n, exact.n);
+        assert_eq!(approx.min, exact.min);
+        assert_eq!(approx.max, exact.max);
+        // Welford mean/std agree with the two-pass formula to fp noise
+        assert!((approx.mean - exact.mean).abs() <= 1e-9 * exact.mean.abs().max(1.0));
+        assert!((approx.std - exact.std).abs() <= 1e-9 * exact.std.abs().max(1.0));
+        // histogram quantiles land within a few bin widths (bounds froze
+        // at degradation time, so bins may be slightly offset)
+        let bin = (exact.max - exact.min) / HIST_BINS as f64;
+        assert!((approx.median - exact.median).abs() <= 4.0 * bin + 1e-9);
+        assert!((approx.p95 - exact.p95).abs() <= 4.0 * bin + 1e-9);
+    }
+
+    #[test]
+    fn degraded_merge_is_deterministic() {
+        let xs = seq(2000);
+        let run = || {
+            let mut cell = Accumulator::with_cap(128);
+            for c in xs.chunks(100) {
+                let mut part = Accumulator::with_cap(128);
+                for &x in c {
+                    part.push(x);
+                }
+                cell.merge(part);
+            }
+            cell.summary()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.std.to_bits(), b.std.to_bits());
+        assert_eq!(a.median.to_bits(), b.median.to_bits());
+        assert_eq!(a.p95.to_bits(), b.p95.to_bits());
+    }
+
+    #[test]
+    fn merge_into_empty_adopts_and_respects_cap() {
+        let mut part = Accumulator::with_cap(8);
+        for x in [3.0, 1.0, 2.0] {
+            part.push(x);
+        }
+        let mut cell = Accumulator::with_cap(2); // tighter than the chunk's
+        cell.merge(part);
+        assert!(!cell.is_exact(), "adopted buffer must respect the cell cap");
+        assert_eq!(cell.count(), 3);
+        assert_eq!(cell.summary().min, 1.0);
+        let mut roomy = Accumulator::with_cap(64);
+        let mut p2 = Accumulator::with_cap(8);
+        p2.push(5.0);
+        roomy.merge(p2);
+        assert!(roomy.is_exact());
+        assert_eq!(roomy.summary().mean, 5.0);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = Accumulator::new();
+        a.push(4.0);
+        let before = a.summary();
+        a.merge(Accumulator::new());
+        assert_eq!(a.summary(), before);
+    }
+
+    #[test]
+    fn constant_sample_degraded() {
+        let mut acc = Accumulator::with_cap(4);
+        for _ in 0..100 {
+            acc.push(7.0);
+        }
+        let s = acc.summary();
+        assert_eq!(s.min, 7.0);
+        assert_eq!(s.max, 7.0);
+        assert_eq!(s.median, 7.0);
+        assert!((s.mean - 7.0).abs() < 1e-12);
+        assert!(s.std.abs() < 1e-9);
+    }
+
+    #[test]
+    fn hist_hist_merge_total() {
+        // not reachable from the sweep, but merge must stay total
+        let mut a = Accumulator::with_cap(4);
+        let mut b = Accumulator::with_cap(4);
+        for i in 0..50 {
+            a.push(i as f64);
+            b.push(100.0 + i as f64);
+        }
+        a.merge(b);
+        let s = a.summary();
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 149.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_summary_panics() {
+        Accumulator::new().summary();
+    }
+
+    #[test]
+    fn nan_poisons_mean_not_minmax() {
+        let mut acc = Accumulator::new();
+        acc.push(1.0);
+        acc.push(f64::NAN);
+        acc.push(3.0);
+        assert_eq!(acc.min, 1.0);
+        assert_eq!(acc.max, 3.0);
+        assert!(acc.summary().mean.is_nan());
+    }
+}

@@ -1,10 +1,12 @@
 //! Measurement utilities: summary statistics, ASCII tables and CSV series
 //! emitters used by the experiment harness.
 
+pub mod accumulator;
 pub mod figure;
 pub mod stats;
 pub mod table;
 
+pub use accumulator::{Accumulator, DEFAULT_QUANTILE_CAP};
 pub use figure::Series;
 pub use stats::Summary;
 pub use table::Table;

@@ -21,7 +21,9 @@ impl Summary {
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN trial must propagate into the summary (it sorts
+        // to an end and poisons mean/std), never panic the whole sweep.
+        sorted.sort_by(f64::total_cmp);
         Self {
             n,
             mean,
@@ -95,6 +97,19 @@ mod tests {
     #[should_panic]
     fn empty_panics() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn nan_propagates_instead_of_panicking() {
+        // a single NaN trial used to panic the whole run via
+        // partial_cmp().unwrap(); now it flows through the summary
+        let s = Summary::of(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(s.n, 3);
+        assert!(s.mean.is_nan());
+        assert!(s.std.is_nan());
+        // positive NaN sorts after +inf under total_cmp
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
     }
 
     #[test]

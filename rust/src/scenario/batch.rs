@@ -60,6 +60,40 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Below this many trials an *unconfigured* sweep stays serial (thread
+/// spawn would cost more than it buys). Both overrides beat it — this is a
+/// default, not the silent hard floor the old `PARALLEL_TRIAL_THRESHOLD`
+/// constant was.
+pub const SERIAL_TRIAL_THRESHOLD: usize = 64;
+
+/// Resolve the worker-thread count for a sweep of `trials` trials
+/// (EXPERIMENTS.md §Perf):
+///
+/// 1. an explicit request wins (`Some(0)` ⇒ one per core);
+/// 2. else the `BIOMAFT_THREADS` env var, when set and parsable
+///    (`0` ⇒ one per core) — the CLI's `--threads` sets this;
+/// 3. else serial below [`SERIAL_TRIAL_THRESHOLD`] trials, one thread per
+///    core at or above it.
+///
+/// Thread count never changes any result (the batch contract), only wall
+/// time, so the policy is free to be heuristic.
+pub fn thread_policy(requested: Option<usize>, trials: usize) -> usize {
+    let resolve = |t: usize| if t == 0 { default_threads() } else { t };
+    if let Some(t) = requested {
+        return resolve(t);
+    }
+    if let Some(t) =
+        std::env::var("BIOMAFT_THREADS").ok().and_then(|v| v.trim().parse::<usize>().ok())
+    {
+        return resolve(t);
+    }
+    if trials >= SERIAL_TRIAL_THRESHOLD {
+        default_threads()
+    } else {
+        1
+    }
+}
+
 /// Chunk of trial indices claimed per `fetch_add`: small enough that a
 /// skewed tail rebalances, large enough to amortise the atomic and keep
 /// result writes cache-friendly.
@@ -263,5 +297,22 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn thread_policy_explicit_beats_everything() {
+        assert_eq!(thread_policy(Some(3), 1), 3);
+        assert_eq!(thread_policy(Some(0), 1), default_threads());
+    }
+
+    #[test]
+    fn thread_policy_trial_default() {
+        // no explicit request: serial below the threshold, parallel at it
+        // (assumes BIOMAFT_THREADS is unset in the test environment; the
+        // env arm itself is covered by the explicit-request equivalence)
+        if std::env::var("BIOMAFT_THREADS").is_err() {
+            assert_eq!(thread_policy(None, SERIAL_TRIAL_THRESHOLD - 1), 1);
+            assert_eq!(thread_policy(None, SERIAL_TRIAL_THRESHOLD), default_threads());
+        }
     }
 }

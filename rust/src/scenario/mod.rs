@@ -19,14 +19,23 @@
 //! trial seed, never by thread, so a batch's output is independent of the
 //! thread count — asserted in tests and in `tests/harness_properties.rs`.
 //!
+//! [`sweep`] fuses a whole experiment *grid* — every (strategy × preset ×
+//! parameter point) cell — into one (cell × trial-chunk) task list over
+//! the same scheduler, with streaming per-cell statistics
+//! ([`metrics::Accumulator`](crate::metrics::Accumulator)) instead of a
+//! `Vec<f64>` per cell; the grid experiments (fig8–fig13, `multik`,
+//! `correlated`, `cascade`, `rules`) all run through it.
+//!
 //! [`FailureProcess`]: crate::failure::injector::FailureProcess
 
 pub mod batch;
 pub mod spec;
+pub mod sweep;
 
 pub use batch::{
-    default_threads, parallel_map_trials, parallel_map_trials_scratch, run_batch, BatchCfg,
-    BatchOutcome,
+    default_threads, parallel_map_trials, parallel_map_trials_scratch, run_batch, thread_policy,
+    BatchCfg, BatchOutcome,
 };
 pub use crate::coordinator::livesim::LiveScratch;
 pub use spec::{FailureRegime, ScenarioSpec};
+pub use sweep::{run_sweep, CellKind, CellSpec, SweepSpec};

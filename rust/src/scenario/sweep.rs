@@ -1,0 +1,368 @@
+//! The fused grid-sweep executor (DESIGN.md §Sweep executor).
+//!
+//! Every grid experiment used to walk its grid serially — one
+//! `measure_reinstate` / `run_batch` call per point — so a figure of
+//! 15 × 4 × 30-trial cells never crossed the parallel-trial threshold and
+//! ran on one core, with a hard barrier between points. [`run_sweep`]
+//! flattens the whole grid into one global (cell × trial-chunk) task list
+//! dispatched through the existing work-stealing
+//! [`parallel_map_trials_scratch`](super::batch::parallel_map_trials_scratch)
+//! scheduler: the grid is one unit of parallel work, a slow cell no longer
+//! serialises behind fast ones, and per-cell memory is bounded by the
+//! streaming [`Accumulator`] instead of a `Vec<f64>` of trial outcomes.
+//!
+//! ## Determinism contract
+//!
+//! * A cell's chunk layout depends only on `trials_per_cell` (fixed
+//!   [`SWEEP_CHUNK`]-trial chunks), never on the thread count.
+//! * Chunk accumulators merge **in chunk-index order** (out-of-order
+//!   finishers park until their turn; claims come off a monotone atomic
+//!   counter, so at most ~`threads` chunks can ever be parked per cell).
+//! * Reinstate cells re-derive their serial RNG stream per chunk: a chunk
+//!   fast-forwards `Rng::new(cell.seed)` with
+//!   [`skip_episode`](crate::agentft::migration::skip_episode) — bit-
+//!   identical consumption to [`draw_episode`] — then draws its own trial
+//!   range. The values every trial sees are exactly the historical serial
+//!   loop's, so Figs. 8–13 / Tables 1–2 reproduce byte-for-byte.
+//! * Scenario cells are trial-seeded (`seed + i`) like
+//!   [`run_batch`](super::batch::run_batch); no stream to fast-forward.
+//!
+//! Cells at or below the quantile cap therefore report summaries
+//! byte-identical to the historical per-point loop at **any** thread
+//! count; larger cells degrade to histogram quantiles (exact mean-to-
+//! Welford-tolerance, exact min/max) with O(chunk) memory per worker —
+//! property-tested in `tests/sweep_properties.rs`.
+
+use super::batch::{parallel_map_trials_scratch, thread_policy};
+use super::spec::ScenarioSpec;
+use crate::agentft::migration::{draw_episode_into, skip_episode, EpisodeDraws};
+use crate::coordinator::ftmanager::Strategy;
+use crate::coordinator::livesim::LiveScratch;
+use crate::coordinator::run::{adjacent3, ExperimentCfg, ReinstatePoint, ReinstateScratch};
+use crate::metrics::{Accumulator, Summary, DEFAULT_QUANTILE_CAP};
+use crate::net::NodeId;
+use crate::sim::Rng;
+use std::sync::Mutex;
+
+/// Trials per chunk task. Small enough that a handful of big cells still
+/// spread across every core, large enough to amortise the per-chunk RNG
+/// fast-forward and the reduction lock.
+pub const SWEEP_CHUNK: usize = 2048;
+
+/// What one cell measures.
+#[derive(Debug, Clone)]
+pub enum CellKind {
+    /// A `measure_reinstate`-compatible episode cell: trial randomness is
+    /// one serial stream from `Rng::new(seed)`, episodes are deterministic.
+    /// The measured value is `extra_s + reinstate_s`.
+    Reinstate { strategy: Strategy, cfg: ExperimentCfg },
+    /// A `run_batch`-compatible scenario cell: trial `i` runs
+    /// `spec.run_trial(seed + i)`; the measured value is `completed_at_s`.
+    Scenario { spec: ScenarioSpec },
+}
+
+/// One grid point: a kind plus its per-cell seed (the `Rng::new` seed for
+/// reinstate cells, the base trial seed for scenario cells).
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    pub seed: u64,
+    pub kind: CellKind,
+}
+
+impl CellSpec {
+    pub fn reinstate(strategy: Strategy, cfg: ExperimentCfg, seed: u64) -> Self {
+        Self { seed, kind: CellKind::Reinstate { strategy, cfg } }
+    }
+
+    pub fn scenario(spec: ScenarioSpec, base_seed: u64) -> Self {
+        Self { seed: base_seed, kind: CellKind::Scenario { spec } }
+    }
+}
+
+/// A whole experiment grid as one parallel unit of work.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub cells: Vec<CellSpec>,
+    /// Trials per cell (clamped to ≥ 1, like `measure_reinstate`).
+    pub trials_per_cell: usize,
+    /// Worker threads: `Some(n)` forces `n` (`Some(0)` ⇒ one per core,
+    /// like every other threads knob in the crate); `None` defers to
+    /// [`thread_policy`](super::batch::thread_policy) over the grid's
+    /// *total* trial count — the whole point of fusing: 60 cells of 30
+    /// trials are 1800 trials of parallel work, not 60 serial sweeps.
+    pub threads: Option<usize>,
+    /// Per-cell exact-quantile cap (see
+    /// [`Accumulator`](crate::metrics::Accumulator)); cells at or below it
+    /// report byte-identical summaries to the historical `Vec<f64>` path.
+    pub quantile_cap: usize,
+}
+
+impl SweepSpec {
+    pub fn new(cells: Vec<CellSpec>, trials_per_cell: usize) -> Self {
+        Self { cells, trials_per_cell, threads: None, quantile_cap: DEFAULT_QUANTILE_CAP }
+    }
+}
+
+/// Per-worker reusable state: episode + live-sim scratch, and one
+/// [`EpisodeDraws`] the chunk loop draws each trial into (no per-trial
+/// allocation on the sweep path).
+struct SweepScratch {
+    reinstate: ReinstateScratch,
+    live: LiveScratch,
+    draws: EpisodeDraws,
+    adjacent: Vec<(NodeId, bool)>,
+}
+
+impl SweepScratch {
+    fn new() -> Self {
+        Self {
+            reinstate: ReinstateScratch::new(),
+            live: LiveScratch::new(),
+            draws: EpisodeDraws { target: NodeId(0), jitter: Vec::new() },
+            adjacent: adjacent3(),
+        }
+    }
+}
+
+/// Per-cell ordered reducer: chunk accumulators merge strictly in
+/// chunk-index order; early finishers park. Claims off the scheduler's
+/// atomic counter are monotone, so `parked` holds at most the in-flight
+/// window (≈ threads × claim size) — each entry O(chunk) — never the cell.
+struct CellReduce {
+    next: usize,
+    acc: Accumulator,
+    parked: Vec<(usize, Accumulator)>,
+}
+
+impl CellReduce {
+    fn offer(&mut self, chunk: usize, acc: Accumulator) {
+        if chunk != self.next {
+            self.parked.push((chunk, acc));
+            return;
+        }
+        self.acc.merge(acc);
+        self.next += 1;
+        while let Some(i) = self.parked.iter().position(|(c, _)| *c == self.next) {
+            let (_, a) = self.parked.swap_remove(i);
+            self.acc.merge(a);
+            self.next += 1;
+        }
+    }
+}
+
+/// Run one chunk of a cell's trials into a fresh accumulator.
+fn run_chunk(
+    cell: &CellSpec,
+    trials: usize,
+    chunk: usize,
+    cap: usize,
+    sc: &mut SweepScratch,
+) -> Accumulator {
+    let start = chunk * SWEEP_CHUNK;
+    let end = (start + SWEEP_CHUNK).min(trials);
+    let mut acc = Accumulator::with_cap(cap);
+    match &cell.kind {
+        CellKind::Reinstate { strategy, cfg } => {
+            let point = ReinstatePoint::new(*strategy, cfg);
+            let sigma = point.costs.noise_sigma;
+            let mut rng = Rng::new(cell.seed);
+            for _ in 0..start {
+                skip_episode(point.n_jitters, &sc.adjacent, &mut rng, sigma);
+            }
+            for _ in start..end {
+                let ok = draw_episode_into(
+                    point.n_jitters,
+                    &sc.adjacent,
+                    &mut rng,
+                    sigma,
+                    &mut sc.draws,
+                );
+                assert!(ok, "healthy adjacent exists");
+                acc.push(point.run_episode(&sc.draws, &mut sc.reinstate));
+            }
+        }
+        CellKind::Scenario { spec } => {
+            for i in start..end {
+                let o = spec.run_trial_scratch(cell.seed.wrapping_add(i as u64), &mut sc.live);
+                acc.push(o.completed_at_s);
+            }
+        }
+    }
+    acc
+}
+
+/// Execute the whole grid as one fused task list and return one
+/// [`Summary`] per cell, in cell order.
+pub fn run_sweep(spec: &SweepSpec) -> Vec<Summary> {
+    if spec.cells.is_empty() {
+        return Vec::new();
+    }
+    let trials = spec.trials_per_cell.max(1);
+    let chunks_per_cell = trials.div_ceil(SWEEP_CHUNK);
+    let n_tasks = spec.cells.len() * chunks_per_cell;
+    let total_trials = spec.cells.len().saturating_mul(trials);
+    let threads = thread_policy(spec.threads, total_trials);
+    let reducers: Vec<Mutex<CellReduce>> = spec
+        .cells
+        .iter()
+        .map(|_| {
+            Mutex::new(CellReduce {
+                next: 0,
+                acc: Accumulator::with_cap(spec.quantile_cap),
+                parked: Vec::new(),
+            })
+        })
+        .collect();
+    parallel_map_trials_scratch(n_tasks, threads, SweepScratch::new, |sc, task| {
+        let (cell, chunk) = (task / chunks_per_cell, task % chunks_per_cell);
+        let acc = run_chunk(&spec.cells[cell], trials, chunk, spec.quantile_cap, sc);
+        reducers[cell].lock().expect("sweep reducer poisoned").offer(chunk, acc);
+    });
+    reducers
+        .into_iter()
+        .map(|m| {
+            let r = m.into_inner().expect("sweep reducer poisoned");
+            debug_assert!(r.parked.is_empty() && r.next == chunks_per_cell);
+            r.acc.summary()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{preset, ClusterPreset};
+    use crate::coordinator::run::measure_reinstate;
+    use crate::failure::injector::FailureProcess;
+    use crate::scenario::spec::FailureRegime;
+    use crate::scenario::{run_batch, BatchCfg};
+
+    fn cfg_at(p: ClusterPreset, z: usize) -> ExperimentCfg {
+        ExperimentCfg { z, ..ExperimentCfg::table1(preset(p)) }
+    }
+
+    fn small_grid() -> Vec<CellSpec> {
+        let mut cells = Vec::new();
+        for p in [ClusterPreset::Placentia, ClusterPreset::Acet] {
+            for z in [3usize, 10, 25] {
+                for strategy in [Strategy::Agent, Strategy::Core, Strategy::Hybrid] {
+                    cells.push(CellSpec::reinstate(strategy, cfg_at(p, z), 99 ^ z as u64));
+                }
+            }
+        }
+        cells
+    }
+
+    #[test]
+    fn fused_equals_per_point_loop() {
+        let cells = small_grid();
+        let trials = 12;
+        let fused = run_sweep(&SweepSpec { threads: Some(4), ..SweepSpec::new(cells.clone(), trials) });
+        for (cell, got) in cells.iter().zip(&fused) {
+            let CellKind::Reinstate { strategy, cfg } = &cell.kind else { unreachable!() };
+            let cfg = ExperimentCfg { trials, ..cfg.clone() };
+            let want = measure_reinstate(*strategy, &cfg, &mut Rng::new(cell.seed));
+            assert_eq!(*got, want);
+        }
+    }
+
+    #[test]
+    fn fused_thread_count_independent() {
+        let cells = small_grid();
+        let one = run_sweep(&SweepSpec { threads: Some(1), ..SweepSpec::new(cells.clone(), 9) });
+        let eight = run_sweep(&SweepSpec { threads: Some(8), ..SweepSpec::new(cells, 9) });
+        assert_eq!(one, eight);
+    }
+
+    #[test]
+    fn scenario_cells_equal_run_batch() {
+        let spec = ScenarioSpec::placentia_ring16(
+            Strategy::Hybrid,
+            0.9,
+            8,
+            FailureRegime::ConcurrentK { k: 2, offset_s: 600.0, spacing_s: 30.0 },
+        );
+        let cells = vec![CellSpec::scenario(spec.clone(), 41)];
+        let got = run_sweep(&SweepSpec { threads: Some(3), ..SweepSpec::new(cells, 16) });
+        let want = run_batch(&spec, &BatchCfg { trials: 16, base_seed: 41, threads: 1 });
+        assert_eq!(got[0], want.completed_s);
+    }
+
+    #[test]
+    fn mixed_kind_grid_runs() {
+        let live = ScenarioSpec::placentia_ring16(
+            Strategy::Core,
+            0.9,
+            8,
+            FailureRegime::Single(FailureProcess::RandomUniform),
+        );
+        let cells = vec![
+            CellSpec::reinstate(Strategy::Agent, cfg_at(ClusterPreset::Placentia, 4), 7),
+            CellSpec::scenario(live, 7),
+        ];
+        let out = run_sweep(&SweepSpec::new(cells, 5));
+        assert_eq!(out.len(), 2);
+        assert!(out[0].mean < 2.0, "sub-second reinstate, got {}", out[0].mean);
+        assert!(out[1].mean >= 3600.0, "full job time, got {}", out[1].mean);
+    }
+
+    #[test]
+    fn multi_chunk_cells_stay_exact_below_cap() {
+        // trials spanning several chunks but under the cap: Exact buffers
+        // concatenate in chunk order, so the summary still equals the
+        // historical single-Vec path byte-for-byte
+        let cells =
+            vec![CellSpec::reinstate(Strategy::Core, cfg_at(ClusterPreset::Placentia, 6), 5)];
+        let trials = SWEEP_CHUNK + 100;
+        let fused = run_sweep(&SweepSpec { threads: Some(4), ..SweepSpec::new(cells, trials) });
+        let cfg = ExperimentCfg { trials, ..cfg_at(ClusterPreset::Placentia, 6) };
+        let want = measure_reinstate(Strategy::Core, &cfg, &mut Rng::new(5));
+        assert_eq!(fused[0], want);
+    }
+
+    #[test]
+    fn degraded_cells_deterministic_and_close() {
+        let cells =
+            vec![CellSpec::reinstate(Strategy::Agent, cfg_at(ClusterPreset::Placentia, 8), 3)];
+        let trials = 600;
+        let small_cap = SweepSpec {
+            threads: Some(4),
+            quantile_cap: 64,
+            ..SweepSpec::new(cells.clone(), trials)
+        };
+        let a = run_sweep(&small_cap);
+        let b = run_sweep(&SweepSpec { threads: Some(1), ..small_cap.clone() });
+        assert_eq!(a, b, "degraded summaries still thread-independent");
+        let exact = run_sweep(&SweepSpec { threads: Some(2), ..SweepSpec::new(cells, trials) });
+        assert_eq!(a[0].n, exact[0].n);
+        assert_eq!(a[0].min, exact[0].min);
+        assert_eq!(a[0].max, exact[0].max);
+        let rel = (a[0].mean - exact[0].mean).abs() / exact[0].mean;
+        assert!(rel < 1e-9, "welford vs naive mean drift {rel}");
+    }
+
+    #[test]
+    fn empty_sweep_is_empty() {
+        assert!(run_sweep(&SweepSpec::new(Vec::new(), 10)).is_empty());
+    }
+
+    #[test]
+    fn cell_reduce_parks_out_of_order() {
+        let mut r = CellReduce { next: 0, acc: Accumulator::new(), parked: Vec::new() };
+        let mk = |x: f64| {
+            let mut a = Accumulator::new();
+            a.push(x);
+            a
+        };
+        r.offer(2, mk(30.0));
+        r.offer(0, mk(10.0));
+        assert_eq!(r.next, 1);
+        assert_eq!(r.parked.len(), 1);
+        r.offer(1, mk(20.0));
+        assert_eq!(r.next, 3);
+        assert!(r.parked.is_empty());
+        let s = r.acc.summary();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.median, 20.0);
+    }
+}

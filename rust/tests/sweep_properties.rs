@@ -1,0 +1,222 @@
+//! Property tests over the fused grid-sweep executor and the streaming
+//! accumulator (DESIGN.md §Sweep executor):
+//!
+//! * the fused sweep equals the historical per-point loop **cell for
+//!   cell, byte for byte** — fig8-, multik- and cascade-shaped grids, at
+//!   1 and 8 threads;
+//! * per-chunk RNG fast-forwarding (`skip_episode`) consumes the cell's
+//!   serial stream bit-identically to `draw_episode`;
+//! * `Accumulator` in-order chunk merges reproduce the serial fold, and
+//!   its Welford moments agree with the naive two-pass formulas to
+//!   ulp-scale tolerance at any size;
+//! * degraded (above-cap) cells stay thread-count independent.
+
+use biomaft::agentft::migration::{draw_episode, skip_episode};
+use biomaft::cluster::{preset, ClusterPreset};
+use biomaft::coordinator::ftmanager::Strategy;
+use biomaft::coordinator::run::{adjacent3, measure_reinstate, ExperimentCfg};
+use biomaft::failure::injector::FailureProcess;
+use biomaft::metrics::{Accumulator, Summary};
+use biomaft::scenario::{
+    run_batch, run_sweep, BatchCfg, CellKind, CellSpec, FailureRegime, ScenarioSpec, SweepSpec,
+};
+use biomaft::sim::Rng;
+use biomaft::testkit::forall;
+
+fn reinstate_cells(seed: u64) -> Vec<CellSpec> {
+    let mut cells = Vec::new();
+    for p in [ClusterPreset::Placentia, ClusterPreset::Glooscap] {
+        for z in [3usize, 10, 63] {
+            for strategy in [Strategy::Agent, Strategy::Core, Strategy::Hybrid] {
+                let cfg = ExperimentCfg {
+                    z,
+                    data_kb: 1 << 24,
+                    proc_kb: 1 << 24,
+                    ..ExperimentCfg::table1(preset(p))
+                };
+                cells.push(CellSpec::reinstate(strategy, cfg, seed ^ z as u64));
+            }
+        }
+    }
+    cells
+}
+
+fn scenario_cells(seed: u64) -> Vec<CellSpec> {
+    let mut cells = Vec::new();
+    for k in [1usize, 3, 6] {
+        cells.push(CellSpec::scenario(
+            ScenarioSpec::placentia_ring16(
+                Strategy::Hybrid,
+                0.9,
+                16,
+                FailureRegime::ConcurrentK { k, offset_s: 900.0, spacing_s: 1.0 },
+            ),
+            seed ^ k as u64,
+        ));
+    }
+    for p_follow in [0.0, 0.5] {
+        cells.push(CellSpec::scenario(
+            ScenarioSpec::placentia_ring16(
+                Strategy::Hybrid,
+                0.95,
+                16,
+                FailureRegime::Cascade {
+                    trigger: FailureProcess::RandomUniform,
+                    p_follow,
+                    lag_s: 5.0,
+                },
+            ),
+            seed,
+        ));
+    }
+    cells
+}
+
+/// What the historical code did for one cell, bit for bit.
+fn per_point(cell: &CellSpec, trials: usize) -> Summary {
+    match &cell.kind {
+        CellKind::Reinstate { strategy, cfg } => {
+            let cfg = ExperimentCfg { trials, threads: Some(1), ..cfg.clone() };
+            measure_reinstate(*strategy, &cfg, &mut Rng::new(cell.seed))
+        }
+        CellKind::Scenario { spec } => {
+            run_batch(spec, &BatchCfg { trials, base_seed: cell.seed, threads: 1 }).completed_s
+        }
+    }
+}
+
+#[test]
+fn prop_fused_sweep_equals_per_point_loop() {
+    forall(6, 4001, |g| {
+        let seed = g.u64(0, u64::MAX - 1);
+        let trials = g.usize(1, 40);
+        let threads = *g.pick(&[1usize, 8]);
+        let mut cells = reinstate_cells(seed);
+        cells.extend(scenario_cells(seed));
+        let fused =
+            run_sweep(&SweepSpec { threads: Some(threads), ..SweepSpec::new(cells.clone(), trials) });
+        for (cell, got) in cells.iter().zip(&fused) {
+            let want = per_point(cell, trials);
+            assert_eq!(got.mean.to_bits(), want.mean.to_bits());
+            assert_eq!(got.std.to_bits(), want.std.to_bits());
+            assert_eq!(got.median.to_bits(), want.median.to_bits());
+            assert_eq!(got.p95.to_bits(), want.p95.to_bits());
+            assert_eq!(got.min.to_bits(), want.min.to_bits());
+            assert_eq!(got.max.to_bits(), want.max.to_bits());
+            assert_eq!(got.n, want.n);
+        }
+    });
+}
+
+#[test]
+fn prop_skip_episode_matches_draw_episode_stream() {
+    forall(40, 4002, |g| {
+        let seed = g.u64(0, u64::MAX - 1);
+        let n_jitters = g.usize(1, 5);
+        let sigma = *g.pick(&[0.0, 0.03, 0.1]);
+        let skips = g.usize(0, 20);
+        let adjacent = adjacent3();
+        // stream A: draw (and discard) `skips` episodes the historical way
+        let mut a = Rng::new(seed);
+        for _ in 0..skips {
+            draw_episode(n_jitters, &adjacent, &mut a, sigma);
+        }
+        // stream B: fast-forward with skip_episode
+        let mut b = Rng::new(seed);
+        for _ in 0..skips {
+            skip_episode(n_jitters, &adjacent, &mut b, sigma);
+        }
+        let da = draw_episode(n_jitters, &adjacent, &mut a, sigma).unwrap();
+        let db = draw_episode(n_jitters, &adjacent, &mut b, sigma).unwrap();
+        assert_eq!(da.target, db.target);
+        let ja: Vec<u64> = da.jitter.iter().map(|j| j.to_bits()).collect();
+        let jb: Vec<u64> = db.jitter.iter().map(|j| j.to_bits()).collect();
+        assert_eq!(ja, jb);
+        // and the raw streams stay in lockstep afterwards
+        assert_eq!(a.next_u64(), b.next_u64());
+    });
+}
+
+#[test]
+fn prop_accumulator_in_order_merge_equals_serial_fold() {
+    forall(30, 4003, |g| {
+        let n = g.usize(1, 400);
+        let chunk = g.usize(1, 64);
+        let xs: Vec<f64> = {
+            let mut r = Rng::new(g.u64(0, u64::MAX - 1));
+            (0..n).map(|_| r.uniform(-50.0, 150.0)).collect()
+        };
+        let mut serial = Accumulator::new();
+        for &x in &xs {
+            serial.push(x);
+        }
+        let mut merged = Accumulator::new();
+        for c in xs.chunks(chunk) {
+            let mut part = Accumulator::new();
+            for &x in c {
+                part.push(x);
+            }
+            merged.merge(part);
+        }
+        let (a, b) = (merged.summary(), serial.summary());
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.std.to_bits(), b.std.to_bits());
+        assert_eq!(a.median.to_bits(), b.median.to_bits());
+        // exact mode ⇒ also byte-identical to the historical Vec path
+        let c = Summary::of(&xs);
+        assert_eq!(a.mean.to_bits(), c.mean.to_bits());
+        assert_eq!(a.p95.to_bits(), c.p95.to_bits());
+    });
+}
+
+#[test]
+fn prop_welford_agrees_with_naive_moments() {
+    forall(20, 4004, |g| {
+        let n = g.usize(2, 5000);
+        let scale = *g.pick(&[1.0, 1e4, 1e-4]);
+        let xs: Vec<f64> = {
+            let mut r = Rng::new(g.u64(0, u64::MAX - 1));
+            (0..n).map(|_| r.uniform(1.0, 2.0) * scale).collect()
+        };
+        // force the streaming (degraded) path with a tiny cap
+        let mut acc = Accumulator::with_cap(16);
+        for c in xs.chunks(97) {
+            let mut part = Accumulator::with_cap(16);
+            for &x in c {
+                part.push(x);
+            }
+            acc.merge(part);
+        }
+        let approx = acc.summary();
+        let exact = Summary::of(&xs);
+        let mean_rel = (approx.mean - exact.mean).abs() / exact.mean.abs();
+        assert!(mean_rel < 1e-12, "mean drift {mean_rel}");
+        let std_tol = 1e-9 * exact.std.abs().max(1e-12 * exact.mean.abs());
+        assert!(
+            (approx.std - exact.std).abs() <= std_tol.max(1e-12 * scale),
+            "std {} vs {}",
+            approx.std,
+            exact.std
+        );
+        assert_eq!(approx.min, exact.min);
+        assert_eq!(approx.max, exact.max);
+    });
+}
+
+#[test]
+fn degraded_sweep_thread_independent_and_vec_free_scale() {
+    // a cell well above the quantile cap: the sweep path must stay
+    // deterministic across thread counts on the histogram branch too
+    let cells = vec![CellSpec::reinstate(
+        Strategy::Core,
+        ExperimentCfg { z: 8, ..ExperimentCfg::table1(preset(ClusterPreset::Placentia)) },
+        77,
+    )];
+    let spec = SweepSpec { quantile_cap: 128, ..SweepSpec::new(cells, 900) };
+    let one = run_sweep(&SweepSpec { threads: Some(1), ..spec.clone() });
+    let eight = run_sweep(&SweepSpec { threads: Some(8), ..spec });
+    assert_eq!(one, eight);
+    assert_eq!(one[0].n, 900);
+    // the degraded summary still brackets the exact one
+    assert!(one[0].min <= one[0].median && one[0].median <= one[0].max);
+}
