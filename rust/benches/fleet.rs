@@ -1,0 +1,98 @@
+//! Fleet benchmark: continuous multi-job cluster lifetimes through the
+//! fused sweep executor, serial vs one thread per core.
+//!
+//! Emits a JSON baseline (BENCH_fleet.json schema):
+//!
+//! ```text
+//! cd rust && BIOMAFT_BENCH_JSON=../BENCH_fleet.json \
+//!     cargo bench --bench fleet
+//! ```
+//!
+//! The grid is the `fleet` figure's shape — (strategy × arrival rate)
+//! cells on a 48-node ring under churn — at `BIOMAFT_BENCH_TRIALS`
+//! cluster-lifetime trials per cell (default 64). Every run is asserted
+//! byte-identical between 1 thread and one per core, so the bench doubles
+//! as the CI smoke for the fleet determinism contract.
+
+use biomaft::bench::compare_to_baseline;
+use biomaft::checkpoint::CheckpointStrategy;
+use biomaft::coordinator::ftmanager::Strategy;
+use biomaft::metrics::Summary;
+use biomaft::scenario::{
+    default_threads, run_sweep, CellSpec, FleetMetric, FleetSpec, SweepSpec,
+};
+use std::time::Instant;
+
+const SEED: u64 = 2014;
+
+fn grid() -> Vec<CellSpec> {
+    let mut cells = Vec::new();
+    let strategies = [
+        Strategy::Hybrid,
+        Strategy::Agent,
+        Strategy::Checkpoint(CheckpointStrategy::CentralSingle),
+    ];
+    for (si, &strategy) in strategies.iter().enumerate() {
+        for (ai, arrival) in [4.0, 8.0, 16.0].into_iter().enumerate() {
+            let mut spec = FleetSpec::placentia_fleet(strategy, 48, arrival, 0.5);
+            if !strategy.is_multi_agent() {
+                spec.job.predictable_frac = 0.0;
+            }
+            // goodput is defined (0) even for a lifetime that completes no
+            // job, so the serial≡parallel assert below is NaN-free
+            cells.push(CellSpec::fleet(
+                spec,
+                FleetMetric::Goodput,
+                SEED ^ ((si as u64) << 40) ^ ((ai as u64) << 32),
+            ));
+        }
+    }
+    cells
+}
+
+fn fused(cells: &[CellSpec], trials: usize, threads: usize) -> Vec<Summary> {
+    run_sweep(&SweepSpec { threads: Some(threads), ..SweepSpec::new(cells.to_vec(), trials) })
+}
+
+fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let cores = default_threads();
+    let trials: usize = std::env::var("BIOMAFT_BENCH_TRIALS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let cells = grid();
+    println!(
+        "=== bench suite: fleet ({} cells x {trials} cluster lifetimes, {cores} cores) ===",
+        cells.len()
+    );
+    let (serial, serial_s) = time(|| fused(&cells, trials, 1));
+    println!("fleet x1:       {serial_s:>10.4} s");
+    let (par, par_s) = time(|| fused(&cells, trials, cores));
+    println!("fleet x{cores}:       {par_s:>10.4} s");
+    assert_eq!(serial, par, "fleet sweep must be thread-count independent");
+    let speedup = serial_s / par_s.max(1e-12);
+    let lifetimes_per_s = (cells.len() * trials) as f64 / par_s.max(1e-12);
+    println!("speedup x{cores}: {speedup:.2}x  ({lifetimes_per_s:.1} cluster lifetimes/s)");
+
+    let json_path = std::env::var("BIOMAFT_BENCH_JSON").ok();
+    if let Some(path) = &json_path {
+        compare_to_baseline(path, "fleet_par_s", "fleet parallel s", par_s);
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"fleet\",\n  \"generated\": true,\n  \"machine_cores\": {cores},\n  \"cells\": {},\n  \"trials_per_cell\": {trials},\n  \"fleet_serial_s\": {serial_s:.4},\n  \"fleet_par_s\": {par_s:.4},\n  \"fleet_par_threads\": {cores},\n  \"speedup\": {speedup:.2},\n  \"lifetimes_per_s\": {lifetimes_per_s:.1}\n}}\n",
+        cells.len(),
+    );
+    match json_path {
+        Some(path) => {
+            std::fs::write(&path, &json).expect("write bench json");
+            println!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
+}

@@ -1,0 +1,211 @@
+//! The fleet experiment family: continuous multi-job cluster lifetimes
+//! through [`scenario::fleet`] and the fused sweep executor (EXPERIMENTS.md
+//! §Fleet).
+//!
+//! * `fleet` — mean job slowdown vs arrival rate, one series per
+//!   fault-tolerance strategy: the headline 90 %-vs-10 % separation
+//!   re-emerges at fleet scale and widens as the cluster fills;
+//! * `fleet_contention` — slowdown vs churn as checkpoint recoveries
+//!   contend for the shared checkpoint server (1 stream vs 8 streams vs
+//!   the hybrid strategy, which never queues on the server);
+//! * `fleet_churn` — goodput vs per-node churn rate under fail → repair →
+//!   rejoin, one series per strategy.
+//!
+//! Every grid runs chunk-parallel through [`run_sweep`]; cells are
+//! trial-seeded, so each figure is byte-identical at any thread count.
+//!
+//! [`scenario::fleet`]: crate::scenario::fleet
+
+use crate::checkpoint::CheckpointStrategy;
+use crate::coordinator::ftmanager::Strategy;
+use crate::metrics::Series;
+use crate::scenario::{run_sweep, CellSpec, FleetMetric, FleetSpec, SweepSpec};
+
+/// Cluster size shared by the fleet figures (ring of 48 nodes × 2 slots).
+const NODES: usize = 48;
+
+/// One line of a fleet figure: a label plus the spec builder for an
+/// x-axis value.
+type Variant<'a> = (&'a str, Box<dyn Fn(f64) -> FleetSpec>);
+
+/// The checkpoint baseline of the fleet figures: central single-server
+/// checkpointing is reactive only (no prediction-driven migration), so its
+/// `predictable_frac` is forced to zero.
+fn checkpoint_fleet(arrival_per_h: f64, churn_per_node_h: f64, streams: usize) -> FleetSpec {
+    let mut spec = FleetSpec::placentia_fleet(
+        Strategy::Checkpoint(CheckpointStrategy::CentralSingle),
+        NODES,
+        arrival_per_h,
+        churn_per_node_h,
+    );
+    spec.job.predictable_frac = 0.0;
+    spec.ckpt_streams = streams;
+    spec
+}
+
+/// The shared scaffold of every fleet figure: one sweep cell per
+/// (variant × x-point), all run as one fused grid, one series per
+/// variant. Per-point seeds are spaced 2³² apart — far beyond any
+/// realistic trial count, so neighbouring x-points never share trial
+/// seeds — while variants share seeds deliberately (common random
+/// numbers: every strategy faces the same arrival/churn stories).
+fn fleet_series(
+    title: &str,
+    x_label: &str,
+    y_label: &str,
+    xs: &[f64],
+    variants: &[Variant<'_>],
+    metric: FleetMetric,
+    trials: usize,
+    seed: u64,
+) -> Series {
+    let cells: Vec<CellSpec> = variants
+        .iter()
+        .flat_map(|(_, mk)| {
+            xs.iter().enumerate().map(move |(i, &x)| {
+                CellSpec::fleet(mk(x), metric, seed ^ ((i as u64) << 32))
+            })
+        })
+        .collect();
+    let y: Vec<f64> = run_sweep(&SweepSpec::new(cells, trials.max(1)))
+        .iter()
+        .map(|s| s.mean)
+        .collect();
+    let mut s = Series::new(title, x_label, y_label, xs.to_vec());
+    for (vi, (label, _)) in variants.iter().enumerate() {
+        s.push(label, y[vi * xs.len()..(vi + 1) * xs.len()].to_vec());
+    }
+    s
+}
+
+/// Mean job slowdown vs arrival rate, per strategy.
+pub fn fleet(trials: usize, seed: u64) -> Series {
+    let churn = 0.5;
+    let variants: Vec<Variant<'_>> = vec![
+        (
+            "hybrid intelligence",
+            Box::new(move |r| FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, r, churn)),
+        ),
+        (
+            "agent intelligence",
+            Box::new(move |r| FleetSpec::placentia_fleet(Strategy::Agent, NODES, r, churn)),
+        ),
+        (
+            "checkpoint (central, 2 streams)",
+            Box::new(move |r| checkpoint_fleet(r, churn, 2)),
+        ),
+    ];
+    fleet_series(
+        "Fleet: mean job slowdown vs arrival rate (48 nodes, churn 0.5/node/h)",
+        "job arrivals per hour",
+        "mean slowdown (completion / nominal)",
+        &[2.0, 4.0, 8.0, 16.0],
+        &variants,
+        FleetMetric::MeanSlowdown,
+        trials,
+        seed,
+    )
+}
+
+/// Mean job slowdown vs churn rate as checkpoint recoveries contend for
+/// the shared checkpoint server.
+pub fn fleet_contention(trials: usize, seed: u64) -> Series {
+    let arrival = 6.0;
+    let variants: Vec<Variant<'_>> = vec![
+        (
+            "checkpoint, 1 server stream",
+            Box::new(move |c| checkpoint_fleet(arrival, c, 1)),
+        ),
+        (
+            "checkpoint, 8 server streams",
+            Box::new(move |c| checkpoint_fleet(arrival, c, 8)),
+        ),
+        (
+            "hybrid intelligence (no server queueing)",
+            Box::new(move |c| FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, arrival, c)),
+        ),
+    ];
+    fleet_series(
+        "Fleet: checkpoint-server contention (48 nodes, 6 jobs/h)",
+        "node failures per node-hour",
+        "mean slowdown (completion / nominal)",
+        &[0.25, 0.5, 1.0, 2.0],
+        &variants,
+        FleetMetric::MeanSlowdown,
+        trials,
+        seed,
+    )
+}
+
+/// Goodput vs per-node churn rate under fail → repair → rejoin.
+pub fn fleet_churn(trials: usize, seed: u64) -> Series {
+    let arrival = 8.0;
+    let variants: Vec<Variant<'_>> = vec![
+        (
+            "hybrid intelligence",
+            Box::new(move |c| FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, arrival, c)),
+        ),
+        (
+            "core intelligence",
+            Box::new(move |c| FleetSpec::placentia_fleet(Strategy::Core, NODES, arrival, c)),
+        ),
+        (
+            "checkpoint (central, 2 streams)",
+            Box::new(move |c| checkpoint_fleet(arrival, c, 2)),
+        ),
+    ];
+    fleet_series(
+        "Fleet: goodput under node churn with repair (48 nodes, 8 jobs/h)",
+        "node failures per node-hour",
+        "goodput (completed compute / cluster slot-seconds)",
+        &[0.0, 0.5, 1.0, 2.0, 4.0],
+        &variants,
+        FleetMetric::Goodput,
+        trials,
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_series_shape_and_determinism() {
+        let a = fleet(2, 9);
+        assert_eq!(a.series.len(), 3);
+        assert_eq!(a.x.len(), 4);
+        for (name, y) in &a.series {
+            assert_eq!(y.len(), 4, "{name}");
+        }
+        let b = fleet(2, 9);
+        assert_eq!(a.to_csv(), b.to_csv());
+    }
+
+    #[test]
+    fn contention_starved_server_is_never_cheaper_in_aggregate() {
+        let s = fleet_contention(3, 5);
+        let one = &s.series[0].1;
+        let eight = &s.series[1].1;
+        let sum1: f64 = one.iter().filter(|v| v.is_finite()).sum();
+        let sum8: f64 = eight.iter().filter(|v| v.is_finite()).sum();
+        assert!(
+            sum1 >= sum8 - 1e-9,
+            "1-stream slowdowns {sum1} must not beat 8-stream {sum8}"
+        );
+    }
+
+    #[test]
+    fn churn_goodput_declines_for_every_strategy() {
+        let s = fleet_churn(3, 4);
+        for (name, y) in &s.series {
+            assert!(y.iter().all(|v| v.is_finite()), "{name}: goodput is never NaN");
+            assert!(
+                y[0] >= *y.last().unwrap() - 1e-9,
+                "{name}: churn-free goodput {} should be at least the heavy-churn one {}",
+                y[0],
+                y.last().unwrap()
+            );
+        }
+    }
+}

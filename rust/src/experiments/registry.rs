@@ -1,6 +1,6 @@
 //! The experiment registry: id → runner, one per paper table/figure.
 
-use super::{ablations, fig14, figures, md_decisions, multifailure, prediction, rules_validation, tables};
+use super::{ablations, fig14, figures, fleet, md_decisions, multifailure, prediction, rules_validation, tables};
 use crate::coordinator::timeline;
 use crate::sim::Rng;
 
@@ -55,6 +55,9 @@ pub fn list() -> Vec<Experiment> {
         Experiment { id: "multik", what: "extension: added time vs concurrent node failures", runner: |t, s| Ok(run_series(multifailure::concurrent_k(t, s))) },
         Experiment { id: "correlated", what: "extension: rack-correlated failure spreading", runner: |t, s| Ok(run_series(multifailure::correlated(t, s))) },
         Experiment { id: "cascade", what: "extension: cascading target failures, agents vs checkpointing", runner: |t, s| Ok(run_series(multifailure::cascade(t, s))) },
+        Experiment { id: "fleet", what: "fleet: mean job slowdown vs arrival rate, per strategy", runner: |t, s| Ok(run_series(fleet::fleet(t, s))) },
+        Experiment { id: "fleet-contention", what: "fleet: checkpoint-server bandwidth contention under churn", runner: |t, s| Ok(run_series(fleet::fleet_contention(t, s))) },
+        Experiment { id: "fleet-churn", what: "fleet: goodput under node churn (fail/repair/rejoin)", runner: |t, s| Ok(run_series(fleet::fleet_churn(t, s))) },
     ]
 }
 
@@ -94,6 +97,14 @@ mod tests {
     fn registry_covers_multi_failure_extensions() {
         let ids: Vec<&str> = list().iter().map(|e| e.id).collect();
         for id in ["multik", "correlated", "cascade"] {
+            assert!(ids.contains(&id), "{id} missing");
+        }
+    }
+
+    #[test]
+    fn registry_covers_fleet_family() {
+        let ids: Vec<&str> = list().iter().map(|e| e.id).collect();
+        for id in ["fleet", "fleet-contention", "fleet-churn"] {
             assert!(ids.contains(&id), "{id} missing");
         }
     }

@@ -18,7 +18,38 @@
 //!   executed from [`runtime`] via the PJRT CPU client. Python never runs on
 //!   the request path.
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index.
+//! # Module map
+//!
+//! Each module's rustdoc carries the detail; the corresponding DESIGN.md
+//! section holds the design rationale.
+//!
+//! | Module | What it is | DESIGN.md |
+//! |---|---|---|
+//! | [`sim`] | DES engine, RNG, generic scenario runtime | §Simulation core, §Hot path |
+//! | [`agentft`] / [`coreft`] / [`hybrid`] | the paper's three approaches (Figs. 3, 5, 6) | §Protocols |
+//! | [`checkpoint`] | checkpointing baselines + cold restart | §Protocols |
+//! | [`failure`] | probing, prediction, hardware states, injector | §Protocols |
+//! | [`net`] / [`cluster`] / [`job`] | landscape, presets + calibrated costs, workloads | §Protocols |
+//! | [`coordinator`] | accounting runs, live full-system simulation, configs | §Scenario layer, §Coordination & experiments |
+//! | [`scenario`] | multi-failure regimes, batch runner, fused sweep executor, **fleet simulator** | §Scenario layer, §Sweep executor, §Fleet simulator |
+//! | [`metrics`] | summaries, streaming accumulator (incl. time-weighted mode), tables, series | §Sweep executor |
+//! | [`experiments`] | the registry: one runner per table/figure/extension | §Coordination & experiments |
+//! | [`genome`] | synthetic genomes + packed multi-pattern search engine | §Genome search engine |
+//! | [`runtime`] | PJRT client, artifact manifest, worker pool (pure-Rust fallback) | §Runtime |
+//! | [`bench`] / [`testkit`] / [`util`] | in-crate bench harness, test helpers, CLI/conf/fmt | — |
+//!
+//! # Determinism
+//!
+//! Every stochastic draw flows through [`sim::rng::Rng`], every simulated
+//! story through the DES — a seed fully determines an experiment, batches
+//! and sweeps are byte-identical at any thread count, and a fleet trial is
+//! a pure function of `(spec, seed)`. The full guarantee table lives in
+//! DESIGN.md §Determinism inventory.
+//!
+//! See `README.md` for the quickstart, `DESIGN.md` for the system
+//! inventory, `EXPERIMENTS.md` for the experiment index (kept in lock-step
+//! with [`experiments::registry`] by `tests/doc_sync.rs`) and `ROADMAP.md`
+//! for direction.
 
 pub mod agentft;
 pub mod bench;

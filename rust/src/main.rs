@@ -5,12 +5,15 @@
 //! * `experiment <id>` — regenerate a table/figure;
 //! * `genome-search` — run the real AOT genome search end-to-end;
 //! * `reinstate` — one-off reinstate measurement (cluster, approach, Z, sizes);
+//! * `fleet` — one continuous multi-job fleet trial (arrivals, churn, contention);
 //! * `clusters` — show the cluster presets.
 
+use biomaft::checkpoint::CheckpointStrategy;
 use biomaft::cluster::{preset, ClusterPreset};
 use biomaft::coordinator::ftmanager::Strategy;
 use biomaft::coordinator::run::{measure_reinstate, ExperimentCfg};
 use biomaft::experiments;
+use biomaft::scenario::{run_fleet, ChurnSpec, FleetSpec};
 use biomaft::sim::Rng;
 use biomaft::util::cli::Command;
 use biomaft::util::fmt::{hms_ms, kb_pow2};
@@ -70,6 +73,16 @@ fn commands() -> Vec<Command> {
             .opt("trials", "30", "trials")
             .opt("seed", "1", "seed")
             .opt("threads", "auto", "worker threads: auto | N | 0 = one per core"),
+        Command::new("fleet", "run one continuous multi-job fleet trial")
+            .opt("strategy", "hybrid", "agent|core|hybrid|checkpoint")
+            .opt("nodes", "128", "cluster size (ring-of-2 neighbourhood)")
+            .opt("capacity", "2", "concurrent sub-job slots per node")
+            .opt("arrival-per-h", "8", "Poisson job arrivals per hour")
+            .opt("churn-per-h", "0.5", "expected failures per node per hour")
+            .opt("repair-s", "900", "node repair time in seconds")
+            .opt("streams", "2", "checkpoint-server parallel recovery streams")
+            .opt("horizon-h", "4", "virtual-time horizon in hours")
+            .opt("seed", "2014", "trial seed"),
         Command::new("clusters", "print the cluster presets"),
         Command::new("run", "run a config-file experiment: run --config <file>")
             .opt_req("config", "path to a TOML-subset config (see configs/)"),
@@ -145,6 +158,59 @@ fn run() -> anyhow::Result<()> {
                 hms_ms(s.min),
                 hms_ms(s.max)
             );
+        }
+        "fleet" => {
+            let p = find("fleet").parse(rest)?;
+            let strategy = match p.req::<String>("strategy")?.as_str() {
+                "agent" => Strategy::Agent,
+                "core" => Strategy::Core,
+                "hybrid" => Strategy::Hybrid,
+                "checkpoint" => Strategy::Checkpoint(CheckpointStrategy::CentralSingle),
+                other => anyhow::bail!("unknown strategy `{other}`"),
+            };
+            let mut spec = FleetSpec::placentia_fleet(
+                strategy,
+                p.req("nodes")?,
+                p.req("arrival-per-h")?,
+                p.req("churn-per-h")?,
+            );
+            spec.capacity = p.req("capacity")?;
+            spec.ckpt_streams = p.req("streams")?;
+            spec.horizon_s = p.req::<f64>("horizon-h")? * 3600.0;
+            if let ChurnSpec::PerNode { repair_s, .. } = &mut spec.churn {
+                *repair_s = p.req("repair-s")?;
+            }
+            if !strategy.is_multi_agent() {
+                // checkpoint baselines are reactive only
+                spec.job.predictable_frac = 0.0;
+            }
+            let o = run_fleet(&spec, p.req("seed")?);
+            println!(
+                "fleet: {} on {} nodes × {} slots, {} jobs/h, churn {}/node/h, horizon {} h",
+                strategy.name(),
+                spec.topo.len(),
+                spec.capacity,
+                p.req::<f64>("arrival-per-h")?,
+                p.req::<f64>("churn-per-h")?,
+                spec.horizon_s / 3600.0
+            );
+            println!(
+                "  jobs: {} arrived, {} completed, {} still queued",
+                o.jobs_arrived, o.jobs_completed, o.jobs_waiting
+            );
+            println!(
+                "  slowdown: mean {:.3}, p95 {:.3}   goodput {:.3}   utilization {:.3}",
+                o.mean_slowdown, o.p95_slowdown, o.goodput_ratio, o.utilization
+            );
+            println!(
+                "  migrations {} (peak {} in flight)   rollbacks {} (peak {} concurrent), {} sub-jobs lost",
+                o.migrations,
+                o.peak_concurrent_migrations,
+                o.rollbacks,
+                o.peak_concurrent_recoveries,
+                o.subs_lost
+            );
+            println!("  events {}   last completion {}", o.events, hms_ms(o.last_completion_s));
         }
         "clusters" => {
             for p in ClusterPreset::all() {

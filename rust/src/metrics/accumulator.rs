@@ -20,6 +20,20 @@
 //!   bin-interpolated approximations and `mean`/`std` come from the
 //!   Welford state.
 //!
+//! A fourth, independent layer is the **time-weighted mode**
+//! ([`Accumulator::push_weighted`]): weighted Welford moments (West's
+//! update) for duration-weighted observations — the fleet simulator's
+//! time-weighted node utilization ([`scenario::fleet`]) integrates
+//! `utilization × interval` samples through it. Zero-duration samples
+//! (`w ≤ 0`, or a NaN weight) are ignored — they carry no mass — and an
+//! accumulator that never saw positive weight reports
+//! [`weighted_mean`](Accumulator::weighted_mean)` = NaN` instead of
+//! dividing by zero, matching the `total_cmp` NaN-propagation contract of
+//! [`Summary::of`]. The weighted state shares nothing with the unweighted
+//! push path, whose arithmetic stays byte-identical.
+//!
+//! [`scenario::fleet`]: crate::scenario::fleet
+//!
 //! ## Determinism
 //!
 //! Every operation is a deterministic function of the *sequence* of
@@ -103,6 +117,11 @@ pub struct Accumulator {
     min: f64,
     max: f64,
     quant: Quantiles,
+    /// Time-weighted mode (independent of the fields above): total weight,
+    /// weighted mean and weighted M2 of `push_weighted` observations.
+    wsum: f64,
+    wmean: f64,
+    wm2: f64,
 }
 
 impl Default for Accumulator {
@@ -127,6 +146,9 @@ impl Accumulator {
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
             quant: Quantiles::Exact { xs: Vec::new(), cap },
+            wsum: 0.0,
+            wmean: 0.0,
+            wm2: 0.0,
         }
     }
 
@@ -167,6 +189,51 @@ impl Accumulator {
         }
     }
 
+    /// Time-weighted mode: fold in observation `x` carrying weight `w`
+    /// (e.g. a utilization level held for `w` seconds of virtual time).
+    /// Weighted moments use West's incremental update; they share no state
+    /// with the unweighted [`push`](Accumulator::push) path.
+    ///
+    /// Edge contract (unit-tested): a zero-duration sample (`w == 0`), a
+    /// negative weight or a NaN weight carries no mass and is ignored — no
+    /// division by zero ever happens here. A NaN *value* with positive
+    /// weight poisons the weighted mean, exactly like a NaN trial poisons
+    /// [`Summary::of`].
+    pub fn push_weighted(&mut self, x: f64, w: f64) {
+        if !(w > 0.0) {
+            return;
+        }
+        self.wsum += w;
+        let delta = x - self.wmean;
+        self.wmean += delta * (w / self.wsum);
+        self.wm2 += w * delta * (x - self.wmean);
+    }
+
+    /// Total weight folded in by [`push_weighted`](Accumulator::push_weighted).
+    pub fn weighted_total(&self) -> f64 {
+        self.wsum
+    }
+
+    /// Weighted mean of the time-weighted mode; NaN when no positive-weight
+    /// sample has been pushed (the documented empty-fleet contract — NaN
+    /// propagates, nothing divides by zero or panics).
+    pub fn weighted_mean(&self) -> f64 {
+        if self.wsum > 0.0 {
+            self.wmean
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Weighted population standard deviation; NaN when empty.
+    pub fn weighted_std(&self) -> f64 {
+        if self.wsum > 0.0 {
+            (self.wm2 / self.wsum).sqrt()
+        } else {
+            f64::NAN
+        }
+    }
+
     /// Convert the exact buffer into a histogram over the value range seen
     /// so far (the documented degradation rule: bounds freeze here; later
     /// out-of-range values clamp into the edge bins).
@@ -184,8 +251,36 @@ impl Accumulator {
     /// single accumulator would hold after `self`'s pushes followed by
     /// `other`'s — bit-for-bit while both buffers are exact and the
     /// combined count fits the cap — so merging per-chunk accumulators in
-    /// chunk-index order reproduces the serial fold.
+    /// chunk-index order reproduces the serial fold. The time-weighted
+    /// state merges the same way (weighted Chan update), independently of
+    /// the unweighted fields.
     pub fn merge(&mut self, other: Accumulator) {
+        // Weighted state first: it must survive the empty-count adoption
+        // below (other.n == 0 does not imply other.wsum == 0).
+        if other.wsum > 0.0 {
+            if self.wsum > 0.0 {
+                let w = self.wsum + other.wsum;
+                let delta = other.wmean - self.wmean;
+                self.wmean += delta * (other.wsum / w);
+                self.wm2 += other.wm2 + delta * delta * (self.wsum * other.wsum / w);
+                self.wsum = w;
+            } else {
+                self.wsum = other.wsum;
+                self.wmean = other.wmean;
+                self.wm2 = other.wm2;
+            }
+        }
+        let (wsum, wmean, wm2) = (self.wsum, self.wmean, self.wm2);
+        self.merge_counts(other);
+        self.wsum = wsum;
+        self.wmean = wmean;
+        self.wm2 = wm2;
+    }
+
+    /// The unweighted half of [`merge`](Accumulator::merge) (count-keyed
+    /// moments, min/max, quantile state). May overwrite `self` wholesale on
+    /// the empty-adoption path; the caller restores the weighted fields.
+    fn merge_counts(&mut self, other: Accumulator) {
         if other.n == 0 {
             return;
         }
@@ -444,6 +539,100 @@ mod tests {
     #[should_panic]
     fn empty_summary_panics() {
         Accumulator::new().summary();
+    }
+
+    #[test]
+    fn weighted_mean_matches_closed_form() {
+        // 0.5 held for 10 s, 1.0 for 30 s ⇒ (5 + 30) / 40 = 0.875
+        let mut acc = Accumulator::new();
+        acc.push_weighted(0.5, 10.0);
+        acc.push_weighted(1.0, 30.0);
+        assert!((acc.weighted_mean() - 0.875).abs() < 1e-12);
+        assert_eq!(acc.weighted_total(), 40.0);
+        // population std of the weighted sample: values 0.5/1.0 with
+        // weights 10/30 ⇒ var = .25·(.375²·1 + .125²·3)… compute directly
+        let mean = 0.875;
+        let var = (10.0 * (0.5f64 - mean).powi(2) + 30.0 * (1.0f64 - mean).powi(2)) / 40.0;
+        assert!((acc.weighted_std() - var.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_zero_duration_and_bad_weights_ignored() {
+        let mut acc = Accumulator::new();
+        acc.push_weighted(123.0, 0.0); // zero-duration interval: no mass
+        acc.push_weighted(456.0, -1.0); // negative weight: ignored
+        acc.push_weighted(789.0, f64::NAN); // NaN weight: ignored
+        assert_eq!(acc.weighted_total(), 0.0);
+        assert!(acc.weighted_mean().is_nan(), "empty weighted mode is NaN, never ÷0");
+        assert!(acc.weighted_std().is_nan());
+        acc.push_weighted(2.0, 5.0);
+        assert_eq!(acc.weighted_mean(), 2.0);
+        assert_eq!(acc.weighted_std(), 0.0);
+    }
+
+    #[test]
+    fn weighted_empty_fleet_is_nan_not_panic() {
+        // the empty-fleet contract: no samples at all ⇒ NaN out, no panic
+        let acc = Accumulator::new();
+        assert!(acc.weighted_mean().is_nan());
+        assert!(acc.weighted_std().is_nan());
+        assert_eq!(acc.weighted_total(), 0.0);
+    }
+
+    #[test]
+    fn weighted_nan_value_poisons_like_summary() {
+        let mut acc = Accumulator::new();
+        acc.push_weighted(1.0, 1.0);
+        acc.push_weighted(f64::NAN, 1.0);
+        assert!(acc.weighted_mean().is_nan());
+    }
+
+    #[test]
+    fn weighted_merge_equals_serial_fold() {
+        let xs: Vec<(f64, f64)> =
+            (0..100).map(|i| ((i % 7) as f64, 0.5 + (i % 3) as f64)).collect();
+        let mut serial = Accumulator::new();
+        for &(x, w) in &xs {
+            serial.push_weighted(x, w);
+        }
+        let mut merged = Accumulator::new();
+        for c in xs.chunks(13) {
+            let mut part = Accumulator::new();
+            for &(x, w) in c {
+                part.push_weighted(x, w);
+            }
+            merged.merge(part);
+        }
+        assert!((merged.weighted_mean() - serial.weighted_mean()).abs() < 1e-12);
+        assert!((merged.weighted_std() - serial.weighted_std()).abs() < 1e-12);
+        assert!((merged.weighted_total() - serial.weighted_total()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_survives_empty_count_adoption() {
+        // self has weighted mass but zero count; other has counts. The
+        // adoption path (*self = other) must not clobber the weighted state.
+        let mut acc = Accumulator::new();
+        acc.push_weighted(3.0, 2.0);
+        let mut part = Accumulator::new();
+        part.push(10.0);
+        part.push_weighted(5.0, 2.0);
+        acc.merge(part);
+        assert_eq!(acc.count(), 1);
+        assert_eq!(acc.summary().mean, 10.0);
+        assert!((acc.weighted_mean() - 4.0).abs() < 1e-12);
+        assert_eq!(acc.weighted_total(), 4.0);
+    }
+
+    #[test]
+    fn weighted_and_unweighted_modes_are_independent() {
+        let mut acc = Accumulator::new();
+        acc.push(100.0);
+        acc.push_weighted(0.25, 8.0);
+        acc.push(200.0);
+        assert_eq!(acc.count(), 2);
+        assert_eq!(acc.summary().mean, 150.0);
+        assert_eq!(acc.weighted_mean(), 0.25);
     }
 
     #[test]

@@ -24,11 +24,20 @@
 //! the same scheduler, with streaming per-cell statistics
 //! ([`metrics::Accumulator`](crate::metrics::Accumulator)) instead of a
 //! `Vec<f64>` per cell; the grid experiments (fig8–fig13, `multik`,
-//! `correlated`, `cascade`, `rules`) all run through it.
+//! `correlated`, `cascade`, `rules`, and the `fleet` family) all run
+//! through it.
+//!
+//! [`fleet`] lifts the whole layer from one job per trial to a *cluster
+//! lifetime* per trial: a continuous multi-job simulation with Poisson/
+//! trace arrivals, online placement, per-strategy fault tolerance with
+//! checkpoint-server contention, and node churn with repair — the
+//! production regime the paper's discussion points at (DESIGN.md §Fleet
+//! simulator).
 //!
 //! [`FailureProcess`]: crate::failure::injector::FailureProcess
 
 pub mod batch;
+pub mod fleet;
 pub mod spec;
 pub mod sweep;
 
@@ -37,5 +46,6 @@ pub use batch::{
     BatchCfg, BatchOutcome,
 };
 pub use crate::coordinator::livesim::LiveScratch;
+pub use fleet::{run_fleet, ArrivalSpec, ChurnSpec, FleetMetric, FleetOutcome, FleetSpec};
 pub use spec::{FailureRegime, ScenarioSpec};
 pub use sweep::{run_sweep, CellKind, CellSpec, SweepSpec};

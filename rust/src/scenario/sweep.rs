@@ -26,6 +26,10 @@
 //!   loop's, so Figs. 8–13 / Tables 1–2 reproduce byte-for-byte.
 //! * Scenario cells are trial-seeded (`seed + i`) like
 //!   [`run_batch`](super::batch::run_batch); no stream to fast-forward.
+//! * Fleet cells ([`scenario::fleet`](super::fleet)) are trial-seeded the
+//!   same way — each trial is one whole cluster lifetime, so `fleet` grids
+//!   (arrival rate × strategy × churn × cluster size) inherit the identical
+//!   determinism contract.
 //!
 //! Cells at or below the quantile cap therefore report summaries
 //! byte-identical to the historical per-point loop at **any** thread
@@ -34,6 +38,7 @@
 //! property-tested in `tests/sweep_properties.rs`.
 
 use super::batch::{parallel_map_trials_scratch, thread_policy};
+use super::fleet::{run_fleet_scratch, FleetMetric, FleetScratch, FleetSpec};
 use super::spec::ScenarioSpec;
 use crate::agentft::migration::{draw_episode_into, skip_episode, EpisodeDraws};
 use crate::coordinator::ftmanager::Strategy;
@@ -59,6 +64,12 @@ pub enum CellKind {
     /// A `run_batch`-compatible scenario cell: trial `i` runs
     /// `spec.run_trial(seed + i)`; the measured value is `completed_at_s`.
     Scenario { spec: ScenarioSpec },
+    /// A fleet cell: trial `i` runs one whole cluster lifetime
+    /// (`run_fleet(spec, seed + i)`); the measured value is
+    /// `metric.measure(..)` — NaN trials (e.g. no completed jobs under
+    /// `MeanSlowdown`) propagate through the cell summary per the
+    /// [`Summary`] NaN contract.
+    Fleet { spec: FleetSpec, metric: FleetMetric },
 }
 
 /// One grid point: a kind plus its per-cell seed (the `Rng::new` seed for
@@ -76,6 +87,10 @@ impl CellSpec {
 
     pub fn scenario(spec: ScenarioSpec, base_seed: u64) -> Self {
         Self { seed: base_seed, kind: CellKind::Scenario { spec } }
+    }
+
+    pub fn fleet(spec: FleetSpec, metric: FleetMetric, base_seed: u64) -> Self {
+        Self { seed: base_seed, kind: CellKind::Fleet { spec, metric } }
     }
 }
 
@@ -109,6 +124,7 @@ impl SweepSpec {
 struct SweepScratch {
     reinstate: ReinstateScratch,
     live: LiveScratch,
+    fleet: FleetScratch,
     draws: EpisodeDraws,
     adjacent: Vec<(NodeId, bool)>,
 }
@@ -118,6 +134,7 @@ impl SweepScratch {
         Self {
             reinstate: ReinstateScratch::new(),
             live: LiveScratch::new(),
+            fleet: FleetScratch::new(),
             draws: EpisodeDraws { target: NodeId(0), jitter: Vec::new() },
             adjacent: adjacent3(),
         }
@@ -185,6 +202,12 @@ fn run_chunk(
             for i in start..end {
                 let o = spec.run_trial_scratch(cell.seed.wrapping_add(i as u64), &mut sc.live);
                 acc.push(o.completed_at_s);
+            }
+        }
+        CellKind::Fleet { spec, metric } => {
+            for i in start..end {
+                let o = run_fleet_scratch(spec, cell.seed.wrapping_add(i as u64), &mut sc.fleet);
+                acc.push(metric.measure(&o));
             }
         }
     }
@@ -286,6 +309,35 @@ mod tests {
         let got = run_sweep(&SweepSpec { threads: Some(3), ..SweepSpec::new(cells, 16) });
         let want = run_batch(&spec, &BatchCfg { trials: 16, base_seed: 41, threads: 1 });
         assert_eq!(got[0], want.completed_s);
+    }
+
+    #[test]
+    fn fleet_cells_equal_direct_loop_and_threads() {
+        use crate::scenario::fleet::{run_fleet, FleetMetric, FleetSpec};
+        let spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 24, 6.0, 0.5);
+        let cells = vec![
+            CellSpec::fleet(spec.clone(), FleetMetric::MeanSlowdown, 31),
+            CellSpec::fleet(spec.clone(), FleetMetric::Goodput, 31),
+        ];
+        let trials = 6;
+        let one = run_sweep(&SweepSpec { threads: Some(1), ..SweepSpec::new(cells.clone(), trials) });
+        let four =
+            run_sweep(&SweepSpec { threads: Some(4), ..SweepSpec::new(cells, trials) });
+        // bitwise: summaries may legitimately carry NaN (a lifetime with no
+        // completed job), which PartialEq would treat as unequal
+        for (a, b) in one.iter().zip(&four) {
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+            assert_eq!(a.p95.to_bits(), b.p95.to_bits());
+            assert_eq!(a.min.to_bits(), b.min.to_bits());
+            assert_eq!(a.max.to_bits(), b.max.to_bits());
+        }
+        // cell 0 equals the direct trial loop
+        let direct: Vec<f64> =
+            (0..trials).map(|i| run_fleet(&spec, 31 + i as u64).mean_slowdown).collect();
+        let want = crate::metrics::Summary::of(&direct);
+        assert_eq!(one[0].mean.to_bits(), want.mean.to_bits());
+        assert_eq!(one[0].p95.to_bits(), want.p95.to_bits());
+        assert_eq!(one[0].n, want.n);
     }
 
     #[test]

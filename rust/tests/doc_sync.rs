@@ -1,0 +1,65 @@
+//! Doc-sync: the experiment registry and the written documentation can
+//! never drift apart.
+//!
+//! * Every `experiments::registry` id must appear as a row of
+//!   EXPERIMENTS.md's index tables — a new experiment family (like
+//!   `fleet`) cannot ship undocumented.
+//! * Every id-looking row of those tables must be a registered experiment
+//!   — stale documentation fails too.
+//! * README.md must exist and point users at the registry.
+
+use std::collections::BTreeSet;
+
+const EXPERIMENTS_MD: &str = include_str!("../../EXPERIMENTS.md");
+const README_MD: &str = include_str!("../../README.md");
+
+/// Ids of EXPERIMENTS.md's index tables: rows shaped `| `id` | … |`.
+fn md_index_ids() -> BTreeSet<String> {
+    EXPERIMENTS_MD
+        .lines()
+        .filter_map(|l| {
+            let body = l.trim().strip_prefix("| `")?;
+            let (id, _) = body.split_once('`')?;
+            Some(id.to_string())
+        })
+        .collect()
+}
+
+#[test]
+fn registry_and_experiments_md_agree() {
+    let registry: BTreeSet<String> =
+        biomaft::experiments::list().iter().map(|e| e.id.to_string()).collect();
+    let documented = md_index_ids();
+    assert!(!documented.is_empty(), "EXPERIMENTS.md index tables not found");
+    let undocumented: Vec<&String> = registry.difference(&documented).collect();
+    let stale: Vec<&String> = documented.difference(&registry).collect();
+    assert!(
+        undocumented.is_empty(),
+        "registered but missing from EXPERIMENTS.md's index tables: {undocumented:?}"
+    );
+    assert!(
+        stale.is_empty(),
+        "documented in EXPERIMENTS.md but not registered: {stale:?}"
+    );
+}
+
+#[test]
+fn fleet_family_is_documented() {
+    let documented = md_index_ids();
+    for id in ["fleet", "fleet-contention", "fleet-churn"] {
+        assert!(documented.contains(id), "{id} missing from EXPERIMENTS.md index");
+    }
+}
+
+#[test]
+fn readme_exists_and_points_at_the_registry() {
+    assert!(README_MD.contains("biomaft"), "README must name the binary");
+    assert!(README_MD.contains("biomaft list"), "README must show the registry entry point");
+    assert!(
+        README_MD.contains("cargo build --release") && README_MD.contains("cargo test"),
+        "README must carry the tier-1 quickstart"
+    );
+    for doc in ["DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md"] {
+        assert!(README_MD.contains(doc), "README must link {doc}");
+    }
+}

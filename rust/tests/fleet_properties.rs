@@ -1,0 +1,169 @@
+//! Fleet-layer property tests (DESIGN.md §Fleet simulator, §Determinism
+//! inventory):
+//!
+//! * a fleet trial is a pure function of `(spec, seed)`;
+//! * fleet sweep cells are byte-identical at thread counts 1 and 8;
+//! * the degenerate fleet — one traced job at t = 0, an explicit churn
+//!   plan, no binding capacity — reduces to `run_live` exactly (completion
+//!   time, migrations, rollbacks, lost sub-jobs);
+//! * scratch reuse through the sweep path changes nothing.
+
+use biomaft::cluster::{preset, ClusterPreset};
+use biomaft::coordinator::ftmanager::Strategy;
+use biomaft::coordinator::livesim::{run_live, LiveCfg};
+use biomaft::failure::injector::{FailurePlan, FailureProcess};
+use biomaft::net::Topology;
+use biomaft::scenario::{
+    run_fleet, run_sweep, ArrivalSpec, CellSpec, ChurnSpec, FleetMetric, FleetSpec, SweepSpec,
+};
+use biomaft::sim::Rng;
+
+fn live_cfg(strategy: Strategy, n_subs: usize, seed: u64) -> LiveCfg {
+    LiveCfg {
+        costs: preset(ClusterPreset::Placentia).costs,
+        strategy,
+        n_subs,
+        z: 4,
+        data_kb: 1 << 19,
+        proc_kb: 1 << 19,
+        compute_s: 3600.0,
+        predictable_frac: 0.9,
+        ckpt_reinstate_s: 848.0,
+        ckpt_overhead_s: 485.0,
+        seed,
+    }
+}
+
+/// The degenerate fleet around one `run_live` trial: a single traced job
+/// at t = 0, the trial's explicit failure plan as churn, and capacity far
+/// beyond anything the job can pile onto one node.
+fn degenerate(cfg: LiveCfg, topo: Topology, plan: FailurePlan) -> FleetSpec {
+    FleetSpec {
+        job: cfg,
+        topo,
+        capacity: 1 << 20,
+        arrivals: ArrivalSpec::Trace { at_s: vec![0.0] },
+        churn: ChurnSpec::Plan(plan),
+        ckpt_streams: 1 << 20,
+        horizon_s: 200_000.0,
+    }
+}
+
+#[test]
+fn fleet_trial_is_pure_function_of_spec_and_seed() {
+    let spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 40, 8.0, 1.0);
+    for seed in [0u64, 5, 91] {
+        let a = run_fleet(&spec, seed);
+        let b = run_fleet(&spec, seed);
+        assert_eq!(a.events, b.events, "seed {seed}");
+        assert_eq!(a.jobs_arrived, b.jobs_arrived);
+        assert_eq!(a.jobs_completed, b.jobs_completed);
+        assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits());
+        assert_eq!(a.p95_slowdown.to_bits(), b.p95_slowdown.to_bits());
+        assert_eq!(a.goodput_ratio.to_bits(), b.goodput_ratio.to_bits());
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        assert_eq!(a.last_completion_s.to_bits(), b.last_completion_s.to_bits());
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.rollbacks, b.rollbacks);
+        assert_eq!(a.subs_lost, b.subs_lost);
+        assert_eq!(a.peak_concurrent_migrations, b.peak_concurrent_migrations);
+        assert_eq!(a.peak_concurrent_recoveries, b.peak_concurrent_recoveries);
+    }
+}
+
+#[test]
+fn fleet_sweep_byte_identical_at_thread_counts_1_and_8() {
+    let mut cells = Vec::new();
+    for (i, strategy) in [Strategy::Hybrid, Strategy::Agent].into_iter().enumerate() {
+        for (k, arrival) in [4.0, 10.0].into_iter().enumerate() {
+            let spec = FleetSpec::placentia_fleet(strategy, 32, arrival, 0.5);
+            cells.push(CellSpec::fleet(
+                spec,
+                FleetMetric::MeanSlowdown,
+                7 ^ ((i as u64) << 8) ^ k as u64,
+            ));
+        }
+    }
+    // utilization cells exercise the time-weighted accumulator path too
+    cells.push(CellSpec::fleet(
+        FleetSpec::placentia_fleet(Strategy::Core, 32, 6.0, 1.0),
+        FleetMetric::Utilization,
+        99,
+    ));
+    let trials = 5;
+    let one = run_sweep(&SweepSpec { threads: Some(1), ..SweepSpec::new(cells.clone(), trials) });
+    let eight = run_sweep(&SweepSpec { threads: Some(8), ..SweepSpec::new(cells, trials) });
+    assert_eq!(one.len(), eight.len());
+    for (a, b) in one.iter().zip(&eight) {
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.std.to_bits(), b.std.to_bits());
+        assert_eq!(a.median.to_bits(), b.median.to_bits());
+        assert_eq!(a.p95.to_bits(), b.p95.to_bits());
+        assert_eq!(a.min.to_bits(), b.min.to_bits());
+        assert_eq!(a.max.to_bits(), b.max.to_bits());
+    }
+}
+
+#[test]
+fn degenerate_fleet_reduces_to_run_live() {
+    let topo = Topology::ring(16, 2);
+    for strategy in [Strategy::Agent, Strategy::Core, Strategy::Hybrid] {
+        for seed in [3u64, 17, 202] {
+            let mut plan_rng = Rng::new(seed ^ 0xBEEF);
+            let plan =
+                FailureProcess::RandomUniformK { k: 3 }.plan(1, 3600.0, 16, &mut plan_rng);
+            let cfg = live_cfg(strategy, 16, seed);
+            let direct = run_live(&cfg, &topo, &plan);
+            let fleet = degenerate(cfg, topo.clone(), plan);
+            let o = run_fleet(&fleet, seed);
+            assert_eq!(o.jobs_arrived, 1);
+            assert_eq!(o.jobs_completed, 1, "{strategy:?} seed {seed}: {o:?}");
+            assert_eq!(
+                o.last_completion_s.to_bits(),
+                direct.completed_at_s.to_bits(),
+                "{strategy:?} seed {seed}: fleet {} vs live {}",
+                o.last_completion_s,
+                direct.completed_at_s
+            );
+            assert_eq!(o.migrations, direct.migrations, "{strategy:?} seed {seed}");
+            assert_eq!(o.rollbacks, direct.rollbacks, "{strategy:?} seed {seed}");
+            assert_eq!(o.subs_lost, direct.lost_then_recovered, "{strategy:?} seed {seed}");
+            // the single job's slowdown is its completion over the nominal
+            assert_eq!(o.mean_slowdown.to_bits(), (direct.completed_at_s / 3600.0).to_bits());
+        }
+    }
+}
+
+#[test]
+fn degenerate_fleet_with_unpredicted_failures_still_matches() {
+    // predictable_frac 0 forces the reactive rollback path in both sims
+    let topo = Topology::ring(8, 2);
+    let mut plan_rng = Rng::new(40);
+    let plan = FailureProcess::Periodic { offset_s: 600.0 }.plan(1, 3600.0, 8, &mut plan_rng);
+    let mut cfg = live_cfg(Strategy::Hybrid, 8, 11);
+    cfg.predictable_frac = 0.0;
+    let direct = run_live(&cfg, &topo, &plan);
+    assert!(direct.rollbacks >= 1, "fixture must roll back");
+    let o = run_fleet(&degenerate(cfg, topo, plan), 11);
+    assert_eq!(o.last_completion_s.to_bits(), direct.completed_at_s.to_bits());
+    assert_eq!(o.rollbacks, direct.rollbacks);
+    assert_eq!(o.subs_lost, direct.lost_then_recovered);
+}
+
+#[test]
+fn fleet_sweep_scratch_reuse_matches_fresh_trials() {
+    // one cell, many trials through the sweep (workers reuse FleetScratch)
+    // vs the same trials run fresh
+    let spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 24, 6.0, 1.0);
+    let trials = 12;
+    let cells = vec![CellSpec::fleet(spec.clone(), FleetMetric::MeanSlowdown, 55)];
+    let swept = run_sweep(&SweepSpec { threads: Some(3), ..SweepSpec::new(cells, trials) });
+    let fresh: Vec<f64> =
+        (0..trials).map(|i| run_fleet(&spec, 55 + i as u64).mean_slowdown).collect();
+    let want = biomaft::metrics::Summary::of(&fresh);
+    assert_eq!(swept[0].n, want.n);
+    assert_eq!(swept[0].mean.to_bits(), want.mean.to_bits());
+    assert_eq!(swept[0].std.to_bits(), want.std.to_bits());
+    assert_eq!(swept[0].median.to_bits(), want.median.to_bits());
+    assert_eq!(swept[0].p95.to_bits(), want.p95.to_bits());
+}

@@ -18,7 +18,8 @@ use biomaft::coordinator::run::{adjacent3, measure_reinstate, ExperimentCfg};
 use biomaft::failure::injector::FailureProcess;
 use biomaft::metrics::{Accumulator, Summary};
 use biomaft::scenario::{
-    run_batch, run_sweep, BatchCfg, CellKind, CellSpec, FailureRegime, ScenarioSpec, SweepSpec,
+    run_batch, run_fleet, run_sweep, BatchCfg, CellKind, CellSpec, FailureRegime, ScenarioSpec,
+    SweepSpec,
 };
 use biomaft::sim::Rng;
 use biomaft::testkit::forall;
@@ -81,6 +82,12 @@ fn per_point(cell: &CellSpec, trials: usize) -> Summary {
         }
         CellKind::Scenario { spec } => {
             run_batch(spec, &BatchCfg { trials, base_seed: cell.seed, threads: 1 }).completed_s
+        }
+        CellKind::Fleet { spec, metric } => {
+            let xs: Vec<f64> = (0..trials)
+                .map(|i| metric.measure(&run_fleet(spec, cell.seed.wrapping_add(i as u64))))
+                .collect();
+            Summary::of(&xs)
         }
     }
 }
