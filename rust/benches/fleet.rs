@@ -13,13 +13,20 @@
 //! cluster-lifetime trials per cell (default 64). Every run is asserted
 //! byte-identical between 1 thread and one per core, so the bench doubles
 //! as the CI smoke for the fleet determinism contract.
+//!
+//! The second half is the ROADMAP scale target: **one** 10k-node,
+//! 1M-arrival lifetime (`FleetSpec::scale_fleet` sizing, ~90 % load)
+//! timed end to end through the timer-wheel queue, placement index and
+//! job slab. `BIOMAFT_BENCH_FLEET_NODES` / `BIOMAFT_BENCH_FLEET_ARRIVALS`
+//! shrink it (CI smokes at 1k nodes × 50k arrivals); at smoke sizes
+//! (≤ 200k arrivals) the lifetime is run twice and asserted bit-identical.
 
 use biomaft::bench::compare_to_baseline;
 use biomaft::checkpoint::CheckpointStrategy;
 use biomaft::coordinator::ftmanager::Strategy;
 use biomaft::metrics::Summary;
 use biomaft::scenario::{
-    default_threads, run_sweep, CellSpec, FleetMetric, FleetSpec, SweepSpec,
+    default_threads, run_fleet, run_sweep, CellSpec, FleetMetric, FleetSpec, SweepSpec,
 };
 use std::time::Instant;
 
@@ -60,12 +67,13 @@ fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (v, t0.elapsed().as_secs_f64())
 }
 
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
 fn main() {
     let cores = default_threads();
-    let trials: usize = std::env::var("BIOMAFT_BENCH_TRIALS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(64);
+    let trials: usize = env_usize("BIOMAFT_BENCH_TRIALS", 64);
     let cells = grid();
     println!(
         "=== bench suite: fleet ({} cells x {trials} cluster lifetimes, {cores} cores) ===",
@@ -80,13 +88,43 @@ fn main() {
     let lifetimes_per_s = (cells.len() * trials) as f64 / par_s.max(1e-12);
     println!("speedup x{cores}: {speedup:.2}x  ({lifetimes_per_s:.1} cluster lifetimes/s)");
 
+    // --- scale target: one lifetime at 10k nodes / 1M arrivals ---------
+    let scale_nodes = env_usize("BIOMAFT_BENCH_FLEET_NODES", 10_000);
+    let scale_arrivals = env_usize("BIOMAFT_BENCH_FLEET_ARRIVALS", 1_000_000);
+    let scale_spec = FleetSpec::scale_fleet(Strategy::Hybrid, scale_nodes, scale_arrivals, 0.1);
+    println!(
+        "=== bench: fleet-scale (one lifetime: {scale_nodes} nodes, ~{scale_arrivals} arrivals, \
+         horizon {:.1} h) ===",
+        scale_spec.horizon_s / 3600.0
+    );
+    let (scale, scale_s) = time(|| run_fleet(&scale_spec, SEED));
+    let scale_events_per_s = scale.events as f64 / scale_s.max(1e-12);
+    println!(
+        "fleet-scale:    {scale_s:>10.4} s  ({scale_events_per_s:.0} events/s; {} arrived, \
+         {} completed, peak {} live jobs)",
+        scale.jobs_arrived, scale.jobs_completed, scale.peak_live_jobs
+    );
+    // The full-size lifetime is single-pass (it is the wall-clock
+    // headline); at smoke sizes the run doubles as a determinism check.
+    if scale_arrivals <= 200_000 {
+        let (again, _) = time(|| run_fleet(&scale_spec, SEED));
+        assert_eq!(scale.events, again.events, "fleet-scale lifetime must be deterministic");
+        assert_eq!(scale.jobs_arrived, again.jobs_arrived);
+        assert_eq!(scale.jobs_completed, again.jobs_completed);
+        assert_eq!(scale.mean_slowdown.to_bits(), again.mean_slowdown.to_bits());
+        assert_eq!(scale.goodput_ratio.to_bits(), again.goodput_ratio.to_bits());
+        println!("fleet-scale determinism re-run: identical");
+    }
+
     let json_path = std::env::var("BIOMAFT_BENCH_JSON").ok();
     if let Some(path) = &json_path {
         compare_to_baseline(path, "fleet_par_s", "fleet parallel s", par_s);
+        compare_to_baseline(path, "fleet_scale_s", "fleet-scale lifetime s", scale_s);
     }
     let json = format!(
-        "{{\n  \"bench\": \"fleet\",\n  \"generated\": true,\n  \"machine_cores\": {cores},\n  \"cells\": {},\n  \"trials_per_cell\": {trials},\n  \"fleet_serial_s\": {serial_s:.4},\n  \"fleet_par_s\": {par_s:.4},\n  \"fleet_par_threads\": {cores},\n  \"speedup\": {speedup:.2},\n  \"lifetimes_per_s\": {lifetimes_per_s:.1}\n}}\n",
+        "{{\n  \"bench\": \"fleet\",\n  \"generated\": true,\n  \"machine_cores\": {cores},\n  \"cells\": {},\n  \"trials_per_cell\": {trials},\n  \"fleet_serial_s\": {serial_s:.4},\n  \"fleet_par_s\": {par_s:.4},\n  \"fleet_par_threads\": {cores},\n  \"speedup\": {speedup:.2},\n  \"lifetimes_per_s\": {lifetimes_per_s:.1},\n  \"fleet_scale_nodes\": {scale_nodes},\n  \"fleet_scale_arrivals\": {scale_arrivals},\n  \"fleet_scale_s\": {scale_s:.4},\n  \"fleet_scale_events\": {},\n  \"fleet_scale_events_per_s\": {scale_events_per_s:.0}\n}}\n",
         cells.len(),
+        scale.events,
     );
     match json_path {
         Some(path) => {

@@ -9,7 +9,12 @@
 //!   contend for the shared checkpoint server (1 stream vs 8 streams vs
 //!   the hybrid strategy, which never queues on the server);
 //! * `fleet_churn` — goodput vs per-node churn rate under fail → repair →
-//!   rejoin, one series per strategy.
+//!   rejoin, one series per strategy;
+//! * `fleet_scale` — goodput vs cluster size at a fixed ~90 % offered
+//!   load ([`FleetSpec::scale_fleet`] sizing): the scale ladder that the
+//!   timer-wheel event queue, indexed placement and arena job storage
+//!   exist for, and the small sibling of the 10k-node / 1M-arrival bench
+//!   target in `benches/fleet.rs`.
 //!
 //! Every grid runs chunk-parallel through [`run_sweep`]; cells are
 //! trial-seeded, so each figure is byte-identical at any thread count.
@@ -166,6 +171,55 @@ pub fn fleet_churn(trials: usize, seed: u64) -> Series {
     )
 }
 
+/// Goodput vs cluster size at a fixed ~90 % offered load. Every x-point
+/// is a [`FleetSpec::scale_fleet`] lifetime — the arrival count grows
+/// with the ring (6 jobs per node), so the horizon stays ~13 h while the
+/// event volume scales linearly with the cluster. The paper's headline
+/// separation must survive scale: the hybrid line holds its goodput as
+/// the ring grows, while the checkpoint line keeps paying rollbacks into
+/// the shared server.
+pub fn fleet_scale(trials: usize, seed: u64) -> Series {
+    let churn = 0.25;
+    let arrivals_per_node = 6;
+    let variants: Vec<Variant<'_>> = vec![
+        (
+            "hybrid intelligence",
+            Box::new(move |n| {
+                FleetSpec::scale_fleet(
+                    Strategy::Hybrid,
+                    n as usize,
+                    arrivals_per_node * n as usize,
+                    churn,
+                )
+            }),
+        ),
+        (
+            "checkpoint (central, 2 streams)",
+            Box::new(move |n| {
+                let mut spec = FleetSpec::scale_fleet(
+                    Strategy::Checkpoint(CheckpointStrategy::CentralSingle),
+                    n as usize,
+                    arrivals_per_node * n as usize,
+                    churn,
+                );
+                spec.job.predictable_frac = 0.0;
+                spec.ckpt_streams = 2;
+                spec
+            }),
+        ),
+    ];
+    fleet_series(
+        "Fleet scale: goodput vs cluster size (~90% load, churn 0.25/node/h)",
+        "cluster nodes (ring of 2, 2 slots/node)",
+        "goodput (completed compute / cluster slot-seconds)",
+        &[64.0, 128.0, 256.0],
+        &variants,
+        FleetMetric::Goodput,
+        trials,
+        seed,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +234,18 @@ mod tests {
         }
         let b = fleet(2, 9);
         assert_eq!(a.to_csv(), b.to_csv());
+    }
+
+    #[test]
+    fn fleet_scale_shape_and_finite_goodput() {
+        let s = fleet_scale(1, 12);
+        assert_eq!(s.series.len(), 2);
+        assert_eq!(s.x, vec![64.0, 128.0, 256.0]);
+        for (name, y) in &s.series {
+            assert_eq!(y.len(), 3, "{name}");
+            // goodput is defined (0) even for empty lifetimes, never NaN
+            assert!(y.iter().all(|v| v.is_finite()), "{name}: {y:?}");
+        }
     }
 
     #[test]

@@ -58,6 +58,7 @@ pub fn list() -> Vec<Experiment> {
         Experiment { id: "fleet", what: "fleet: mean job slowdown vs arrival rate, per strategy", runner: |t, s| Ok(run_series(fleet::fleet(t, s))) },
         Experiment { id: "fleet-contention", what: "fleet: checkpoint-server bandwidth contention under churn", runner: |t, s| Ok(run_series(fleet::fleet_contention(t, s))) },
         Experiment { id: "fleet-churn", what: "fleet: goodput under node churn (fail/repair/rejoin)", runner: |t, s| Ok(run_series(fleet::fleet_churn(t, s))) },
+        Experiment { id: "fleet-scale", what: "fleet: goodput vs cluster size at ~90% load (scale ladder)", runner: |t, s| Ok(run_series(fleet::fleet_scale(t, s))) },
     ]
 }
 
@@ -104,7 +105,7 @@ mod tests {
     #[test]
     fn registry_covers_fleet_family() {
         let ids: Vec<&str> = list().iter().map(|e| e.id).collect();
-        for id in ["fleet", "fleet-contention", "fleet-churn"] {
+        for id in ["fleet", "fleet-contention", "fleet-churn", "fleet-scale"] {
             assert!(ids.contains(&id), "{id} missing");
         }
     }

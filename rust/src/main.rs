@@ -75,13 +75,21 @@ fn commands() -> Vec<Command> {
             .opt("threads", "auto", "worker threads: auto | N | 0 = one per core"),
         Command::new("fleet", "run one continuous multi-job fleet trial")
             .opt("strategy", "hybrid", "agent|core|hybrid|checkpoint")
-            .opt("nodes", "128", "cluster size (ring-of-2 neighbourhood)")
-            .opt("capacity", "2", "concurrent sub-job slots per node")
+            .opt("nodes", "128", "cluster size >= 1 (ring-of-2 neighbourhood)")
+            .opt("capacity", "2", "concurrent sub-job slots per node (>= 1)")
             .opt("arrival-per-h", "8", "Poisson job arrivals per hour")
             .opt("churn-per-h", "0.5", "expected failures per node per hour")
             .opt("repair-s", "900", "node repair time in seconds")
-            .opt("streams", "2", "checkpoint-server parallel recovery streams")
-            .opt("horizon-h", "4", "virtual-time horizon in hours")
+            .opt("streams", "2", "checkpoint-server parallel recovery streams (>= 1)")
+            .opt("horizon-h", "4", "virtual-time horizon in hours (> 0)")
+            .opt(
+                "arrivals",
+                "0",
+                "scale sizing: target this many arrivals at ~90% load \
+                 (sets arrival rate to 0.9*nodes/2 jobs/h and stretches the \
+                 horizon to fit, overriding arrival-per-h and horizon-h; \
+                 0 = off)",
+            )
             .opt("seed", "2014", "trial seed"),
         Command::new("clusters", "print the cluster presets"),
         Command::new("run", "run a config-file experiment: run --config <file>")
@@ -168,15 +176,43 @@ fn run() -> anyhow::Result<()> {
                 "checkpoint" => Strategy::Checkpoint(CheckpointStrategy::CentralSingle),
                 other => anyhow::bail!("unknown strategy `{other}`"),
             };
-            let mut spec = FleetSpec::placentia_fleet(
-                strategy,
-                p.req("nodes")?,
-                p.req("arrival-per-h")?,
-                p.req("churn-per-h")?,
-            );
-            spec.capacity = p.req("capacity")?;
-            spec.ckpt_streams = p.req("streams")?;
-            spec.horizon_s = p.req::<f64>("horizon-h")? * 3600.0;
+            let nodes: usize = p.req("nodes")?;
+            let arrivals: usize = p.req("arrivals")?;
+            let arrival_per_h: f64 = p.req("arrival-per-h")?;
+            let churn_per_h: f64 = p.req("churn-per-h")?;
+            let horizon_h: f64 = p.req("horizon-h")?;
+            let capacity: usize = p.req("capacity")?;
+            let streams: usize = p.req("streams")?;
+            if nodes == 0 {
+                anyhow::bail!("--nodes must be at least 1");
+            }
+            if capacity == 0 {
+                anyhow::bail!("--capacity must be at least 1");
+            }
+            if streams == 0 {
+                anyhow::bail!("--streams must be at least 1");
+            }
+            if !horizon_h.is_finite() || horizon_h <= 0.0 {
+                anyhow::bail!("--horizon-h must be a finite number > 0, got {horizon_h}");
+            }
+            if !arrival_per_h.is_finite() || arrival_per_h < 0.0 {
+                anyhow::bail!("--arrival-per-h must be a finite number >= 0, got {arrival_per_h}");
+            }
+            if !churn_per_h.is_finite() || churn_per_h < 0.0 {
+                anyhow::bail!("--churn-per-h must be a finite number >= 0, got {churn_per_h}");
+            }
+            // --arrivals N switches to scale sizing: rate 0.9*nodes/2
+            // jobs/h (~90% load on 2-slot nodes) with the horizon
+            // stretched until the expected arrival count reaches N.
+            let mut spec = if arrivals > 0 {
+                FleetSpec::scale_fleet(strategy, nodes, arrivals, churn_per_h)
+            } else {
+                let mut s = FleetSpec::placentia_fleet(strategy, nodes, arrival_per_h, churn_per_h);
+                s.horizon_s = horizon_h * 3600.0;
+                s
+            };
+            spec.capacity = capacity;
+            spec.ckpt_streams = streams;
             if let ChurnSpec::PerNode { repair_s, .. } = &mut spec.churn {
                 *repair_s = p.req("repair-s")?;
             }
@@ -185,18 +221,29 @@ fn run() -> anyhow::Result<()> {
                 spec.job.predictable_frac = 0.0;
             }
             let o = run_fleet(&spec, p.req("seed")?);
+            let rate_per_h = match &spec.arrivals {
+                biomaft::scenario::ArrivalSpec::Poisson { rate_per_h } => *rate_per_h,
+                biomaft::scenario::ArrivalSpec::Trace { at_s } => {
+                    at_s.len() as f64 / (spec.horizon_s / 3600.0)
+                }
+            };
             println!(
-                "fleet: {} on {} nodes × {} slots, {} jobs/h, churn {}/node/h, horizon {} h",
+                "fleet: {} on {} nodes × {} slots, {:.2} jobs/h{}, churn {}/node/h, horizon {:.2} h",
                 strategy.name(),
                 spec.topo.len(),
                 spec.capacity,
-                p.req::<f64>("arrival-per-h")?,
-                p.req::<f64>("churn-per-h")?,
+                rate_per_h,
+                if arrivals > 0 {
+                    format!(" (scale-sized for {arrivals} arrivals at ~90% load)")
+                } else {
+                    String::new()
+                },
+                churn_per_h,
                 spec.horizon_s / 3600.0
             );
             println!(
-                "  jobs: {} arrived, {} completed, {} still queued",
-                o.jobs_arrived, o.jobs_completed, o.jobs_waiting
+                "  jobs: {} arrived, {} completed, {} still queued, {} peak live",
+                o.jobs_arrived, o.jobs_completed, o.jobs_waiting, o.peak_live_jobs
             );
             println!(
                 "  slowdown: mean {:.3}, p95 {:.3}   goodput {:.3}   utilization {:.3}",

@@ -8,7 +8,7 @@
 //! the same [`sim::harness`](crate::sim::harness) DES:
 //!
 //! * **jobs arrive** by a Poisson process or an explicit trace
-//!   ([`ArrivalSpec`]) and are placed by an online least-loaded loop over
+//!   ([`ArrivalSpec`]) and are placed by an online least-loaded policy over
 //!   the healthy nodes (all-or-wait: a job that does not fit queues FIFO
 //!   and is retried whenever a job completes or a node rejoins);
 //! * **nodes churn** ([`ChurnSpec`]): each node draws its own
@@ -31,6 +31,26 @@
 //!   [`metrics::Accumulator`](crate::metrics::Accumulator)), and
 //!   rollback/migration storm peaks.
 //!
+//! ## Scale (DESIGN.md §Fleet simulator, §Event queue)
+//!
+//! The implementation is sized for 10k-node / 1M-arrival lifetimes
+//! (`benches/fleet.rs`):
+//!
+//! * placement reads the cheapest node from a [`PlacementIndex`] — a
+//!   `BTreeSet<(load, node)>` over healthy, non-full nodes maintained
+//!   incrementally on place/complete/fail/repair — O(log n) per sub-job
+//!   instead of the old O(n) full scan, with the *same* tie-break (lowest
+//!   load, then lowest node index);
+//! * jobs live in a generation-checked slab ([`JobSlab`]): a completed
+//!   job's slot (and its per-sub vectors) is recycled for a later arrival,
+//!   so a lifetime allocates O(peak live jobs), not O(total arrivals), and
+//!   any stale in-flight event (an aborted migration's `MigrationDone`)
+//!   misses on its generation instead of touching the new tenant;
+//! * each node keeps the ordered set of non-done sub-jobs it hosts, so the
+//!   prediction/failure handlers scan O(subs on the node) instead of the
+//!   whole job table — in exactly the old scan order (jobs by arrival
+//!   index, subs by index), which keeps the RNG draw sequence identical.
+//!
 //! ## Determinism
 //!
 //! A fleet trial is a **pure function of `(spec, seed)`**: arrivals draw
@@ -44,7 +64,10 @@
 //! and rollbacks **exactly** (property-tested in
 //! `tests/fleet_properties.rs`). Fleet sweep cells are trial-seeded like
 //! scenario cells, so `fleet` grids inherit the executor's
-//! byte-identical-at-any-thread-count contract.
+//! byte-identical-at-any-thread-count contract. The placement index, the
+//! slab and the per-node lists are pure lookup structures: they change no
+//! draw and no event, and a mid-size trial is property-tested byte-
+//! identical through them at thread counts 1 and 8.
 
 use crate::cluster::{preset, ClusterPreset};
 use crate::coordinator::ftmanager::Strategy;
@@ -54,7 +77,7 @@ use crate::hybrid::rules::{decide, Mover, RuleInputs};
 use crate::metrics::Accumulator;
 use crate::net::{NodeId, Topology};
 use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime, TrialScratch};
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 
 /// Salt separating the arrival stream from the dynamics stream.
 const ARRIVAL_SALT: u64 = 0xA11_1FEE7_0F_A17A;
@@ -175,6 +198,26 @@ impl FleetSpec {
             horizon_s: 4.0 * 3600.0,
         }
     }
+
+    /// A large-fleet lifetime sized so the cluster runs ~90% loaded: each
+    /// 8-sub, 1800 s job consumes 4 slot-hours, a ring(`nodes`, 2) cluster
+    /// at 2 slots/node clears `nodes / 2` jobs per hour, so the Poisson
+    /// rate is `0.9 × nodes / 2` and the horizon is stretched until the
+    /// expected arrival count reaches `arrivals`. This is the shape of the
+    /// `fleet-scale` experiment and the 10k-node / 1M-arrival bench target
+    /// (ROADMAP "Scale the fleet sim").
+    pub fn scale_fleet(
+        strategy: Strategy,
+        nodes: usize,
+        arrivals: usize,
+        churn_per_node_h: f64,
+    ) -> Self {
+        let rate_per_h = 0.9 * nodes as f64 / 2.0;
+        let horizon_s = arrivals as f64 / rate_per_h * 3600.0;
+        let mut spec = Self::placentia_fleet(strategy, nodes, rate_per_h, churn_per_node_h);
+        spec.horizon_s = horizon_s;
+        spec
+    }
 }
 
 /// Aggregate of one fleet trial.
@@ -211,8 +254,191 @@ pub struct FleetOutcome {
     /// Peak concurrent rollback recoveries (rollback storms / checkpoint-
     /// server queueing).
     pub peak_concurrent_recoveries: usize,
+    /// Peak simultaneously-live jobs — the slab's actual footprint, which
+    /// is what a lifetime allocates for (versus `jobs_arrived` it merely
+    /// counts through).
+    pub peak_live_jobs: usize,
     /// Dispatched DES events (determinism fingerprint).
     pub events: u64,
+}
+
+/// Generation-checked handle into the [`JobSlab`]. A slot's generation
+/// bumps when its job retires, so an event that outlives its job (an
+/// aborted migration's `MigrationDone`) misses instead of touching the
+/// slot's next tenant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct JobId {
+    slot: u32,
+    gen: u32,
+}
+
+/// One job of the fleet (a slab slot).
+#[derive(Debug, Default)]
+struct JobRec {
+    gen: u32,
+    live: bool,
+    /// Arrival-order index: the per-node scans iterate `(arrival, sub)`
+    /// ascending, reproducing the old full-table scan order exactly.
+    arrival: u32,
+    arrived_at: SimTime,
+    /// Host per sub-job; empty until placed.
+    host: Vec<NodeId>,
+    state: Vec<SubState>,
+    /// Sub-jobs not yet done (completion counter; scans stay draw-free).
+    remaining: usize,
+}
+
+/// Arena of live jobs. Retired slots (and their per-sub vectors) are
+/// reused for later arrivals, so a million-arrival lifetime allocates
+/// O(peak live jobs) — the slab never grows past the cluster's actual
+/// concurrency.
+#[derive(Debug, Default)]
+struct JobSlab {
+    slots: Vec<JobRec>,
+    free_slots: Vec<u32>,
+    live: usize,
+    peak_live: usize,
+}
+
+impl JobSlab {
+    /// Start a fresh trial on recycled slot storage.
+    fn reset(&mut self) {
+        for r in &mut self.slots {
+            r.live = false;
+            r.gen = 0;
+        }
+        self.free_slots.clear();
+        self.free_slots.extend((0..self.slots.len() as u32).rev());
+        self.live = 0;
+        self.peak_live = 0;
+    }
+
+    fn alloc(&mut self, arrival: u32, arrived_at: SimTime) -> JobId {
+        let slot = match self.free_slots.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(JobRec::default());
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let r = &mut self.slots[slot as usize];
+        r.live = true;
+        r.arrival = arrival;
+        r.arrived_at = arrived_at;
+        r.host.clear();
+        r.state.clear();
+        r.remaining = 0;
+        self.live += 1;
+        self.peak_live = self.peak_live.max(self.live);
+        JobId { slot, gen: r.gen }
+    }
+
+    /// The job behind `id`, or None when the handle is stale (the job
+    /// retired and the slot moved on).
+    fn get(&self, id: JobId) -> Option<&JobRec> {
+        let r = self.slots.get(id.slot as usize)?;
+        (r.live && r.gen == id.gen).then_some(r)
+    }
+
+    /// Mutable access for a handle already validated by [`get`](Self::get).
+    fn rec_mut(&mut self, id: JobId) -> &mut JobRec {
+        let r = &mut self.slots[id.slot as usize];
+        debug_assert!(r.live && r.gen == id.gen, "stale JobId past validation");
+        r
+    }
+
+    /// Retire a completed job: bump the generation (stale handles miss),
+    /// keep the sub-job vectors' capacity for the slot's next tenant.
+    fn retire(&mut self, id: JobId) {
+        let r = &mut self.slots[id.slot as usize];
+        debug_assert!(r.live && r.gen == id.gen, "double retire");
+        r.live = false;
+        r.gen = r.gen.wrapping_add(1);
+        self.live -= 1;
+        self.free_slots.push(id.slot);
+    }
+}
+
+/// The O(log n) placement index: per-node load and health plus a
+/// `BTreeSet<(load, node)>` of every healthy node with a spare slot.
+/// `best()` is the set's minimum — least loaded, ties to the lowest node
+/// index — the *same* choice the old O(n) full scan made. Maintained
+/// incrementally on every occupancy and health transition.
+#[derive(Debug, Default)]
+struct PlacementIndex {
+    occupancy: Vec<usize>,
+    doomed: Vec<bool>,
+    capacity: usize,
+    avail: BTreeSet<(usize, usize)>,
+}
+
+impl PlacementIndex {
+    fn reset(&mut self, n: usize, capacity: usize) {
+        self.occupancy.clear();
+        self.occupancy.resize(n, 0);
+        self.doomed.clear();
+        self.doomed.resize(n, false);
+        self.capacity = capacity;
+        self.avail.clear();
+        self.avail.extend((0..n).map(|i| (0, i)));
+    }
+
+    /// The least-loaded healthy node with a spare slot (ties to the
+    /// lowest node index), or None when the cluster is saturated.
+    fn best(&self) -> Option<NodeId> {
+        self.avail.iter().next().map(|&(_, n)| NodeId(n))
+    }
+
+    fn inc(&mut self, node: NodeId) {
+        let o = self.occupancy[node.0];
+        if !self.doomed[node.0] {
+            if o < self.capacity {
+                self.avail.remove(&(o, node.0));
+            }
+            if o + 1 < self.capacity {
+                self.avail.insert((o + 1, node.0));
+            }
+        }
+        self.occupancy[node.0] = o + 1;
+    }
+
+    fn dec(&mut self, node: NodeId) {
+        let o = self.occupancy[node.0];
+        debug_assert!(o > 0, "occupancy underflow on node {}", node.0);
+        if !self.doomed[node.0] {
+            if o < self.capacity {
+                self.avail.remove(&(o, node.0));
+            }
+            if o - 1 < self.capacity {
+                self.avail.insert((o - 1, node.0));
+            }
+        }
+        self.occupancy[node.0] = o - 1;
+    }
+
+    /// Take the node out of the placement pool (load bookkeeping
+    /// continues while it is down).
+    fn doom(&mut self, node: NodeId) {
+        debug_assert!(!self.doomed[node.0], "double doom");
+        self.doomed[node.0] = true;
+        self.avail.remove(&(self.occupancy[node.0], node.0));
+    }
+
+    fn repair(&mut self, node: NodeId) {
+        self.doomed[node.0] = false;
+        if self.occupancy[node.0] < self.capacity {
+            self.avail.insert((self.occupancy[node.0], node.0));
+        }
+    }
+
+    fn is_doomed(&self, node: NodeId) -> bool {
+        self.doomed[node.0]
+    }
+
+    /// Migration-candidate predicate: healthy with a spare slot.
+    fn has_slot(&self, node: NodeId) -> bool {
+        !self.doomed[node.0] && self.occupancy[node.0] < self.capacity
+    }
 }
 
 /// Events of the fleet simulation. The failure-path events mirror
@@ -230,10 +456,10 @@ enum Ev {
     Failure { node: NodeId },
     /// A failed node finishes repair and rejoins the pool.
     Repair { node: NodeId },
-    MigrationDone { job: usize, sub: usize, to: NodeId },
+    MigrationDone { job: JobId, sub: usize, to: NodeId },
     /// Recovery `rec` (one per job per failure) completes.
-    RecoveryDone { job: usize, rec: usize },
-    SubDone { job: usize, sub: usize },
+    RecoveryDone { job: JobId, rec: usize },
+    SubDone { job: JobId, sub: usize },
 }
 
 /// Per-sub-job state (mirrors livesim's `LiveState`, with recoveries keyed
@@ -246,29 +472,21 @@ enum SubState {
     Done,
 }
 
-/// One job of the fleet.
-#[derive(Debug, Clone, Default)]
-struct Job {
-    arrived_at: SimTime,
-    /// Host per sub-job; empty until placed.
-    host: Vec<NodeId>,
-    state: Vec<SubState>,
-    /// Sub-jobs not yet done (completion counter; scans stay draw-free).
-    remaining: usize,
-    completed_at: Option<SimTime>,
-}
+/// A per-node sub-job list entry: `(arrival index, sub index, slab slot)`.
+/// Ordered by `(arrival, sub)` — `(arrival, sub)` is unique within a set,
+/// the slot rides along as the lookup payload.
+type NodeSub = (u32, u32, u32);
 
 /// Reusable per-trial allocations: the harness scratch plus the fleet's
-/// node vectors, placement queue and job table. Reuse never changes a
-/// result (tested); the per-job inner vectors are reallocated per trial —
-/// fleet trials are whole cluster lifetimes, so the engine queue is the
-/// reuse that matters.
+/// slab, placement index, per-node lists and scan buffer. Reuse never
+/// changes a result (tested).
 pub struct FleetScratch {
     sim: TrialScratch<Ev>,
-    jobs: Vec<Job>,
-    queue: VecDeque<usize>,
-    occupancy: Vec<usize>,
-    doomed: Vec<bool>,
+    jobs: JobSlab,
+    queue: VecDeque<JobId>,
+    placement: PlacementIndex,
+    node_subs: Vec<BTreeSet<NodeSub>>,
+    scan: Vec<NodeSub>,
     predicted: Vec<bool>,
 }
 
@@ -276,10 +494,11 @@ impl FleetScratch {
     pub fn new() -> Self {
         Self {
             sim: TrialScratch::new(),
-            jobs: Vec::new(),
+            jobs: JobSlab::default(),
             queue: VecDeque::new(),
-            occupancy: Vec::new(),
-            doomed: Vec::new(),
+            placement: PlacementIndex::default(),
+            node_subs: Vec::new(),
+            scan: Vec::new(),
             predicted: Vec::new(),
         }
     }
@@ -293,15 +512,22 @@ impl Default for FleetScratch {
 
 struct System<'a> {
     spec: &'a FleetSpec,
-    jobs: Vec<Job>,
+    jobs: JobSlab,
     /// FIFO of jobs awaiting placement (head-of-line blocking by design:
     /// placement order is part of the determinism contract).
-    queue: VecDeque<usize>,
-    /// Non-done sub-jobs assigned per node (placement + migration bound).
-    occupancy: Vec<usize>,
-    doomed: Vec<bool>,
+    queue: VecDeque<JobId>,
+    /// Load/health state and the least-loaded placement index.
+    placement: PlacementIndex,
+    /// Per node: the non-done sub-jobs it hosts, `(arrival, sub)` ordered
+    /// — the prediction/failure scan domain.
+    node_subs: Vec<BTreeSet<NodeSub>>,
+    /// Reused snapshot buffer for the per-node scans (the handlers mutate
+    /// the sets they walk).
+    scan: Vec<NodeSub>,
     predicted: Vec<bool>,
     repair_s: Option<f64>,
+    /// Jobs whose Arrival has dispatched.
+    arrived: usize,
     /// Recovery generation counter (one id per job per failure).
     next_rec: usize,
     /// In-flight rollback recoveries (contention + storm peak).
@@ -363,13 +589,12 @@ impl System<'_> {
     /// which is the "migrate under neighbour-capacity pressure" regime.
     fn pick_target(&self, from: NodeId, ctx: &mut Ctx<'_, '_, Ev>) -> Option<NodeId> {
         let nbrs = self.spec.topo.neighbours(from);
-        let ok = |n: &NodeId| !self.doomed[n.0] && self.occupancy[n.0] < self.spec.capacity;
-        let healthy = nbrs.iter().filter(|n| ok(n)).count();
+        let healthy = nbrs.iter().filter(|n| self.placement.has_slot(**n)).count();
         if healthy == 0 {
             return None;
         }
         let k = ctx.rng().range_usize(0, healthy);
-        nbrs.iter().filter(|n| ok(n)).nth(k).copied()
+        nbrs.iter().filter(|n| self.placement.has_slot(**n)).nth(k).copied()
     }
 
     /// The reactive recovery duration for one (job, failure) rollback.
@@ -390,34 +615,24 @@ impl System<'_> {
         }
     }
 
-    /// Least-loaded all-or-wait placement over healthy nodes with spare
-    /// slots (a predicted node is always already doomed, so `doomed` is
-    /// the full health check; ties break to the lowest node index, so an
-    /// empty cluster places sub `i` on node `i % nodes` — the degenerate
-    /// layout of `run_live`). Returns false (and rolls occupancy back)
-    /// when the job does not fit. Draw-free.
-    fn try_place(&mut self, j: usize, ctx: &mut Ctx<'_, '_, Ev>) -> bool {
+    /// Least-loaded all-or-wait placement via the [`PlacementIndex`] (a
+    /// predicted node is always already doomed, so the index's health
+    /// filter is the full health check; ties break to the lowest node
+    /// index, so an empty cluster places sub `i` on node `i % nodes` — the
+    /// degenerate layout of `run_live`). Returns false (and rolls
+    /// occupancy back) when the job does not fit. Draw-free.
+    fn try_place(&mut self, id: JobId, ctx: &mut Ctx<'_, '_, Ev>) -> bool {
         let n_subs = self.spec.job.n_subs;
         for _ in 0..n_subs {
-            let mut best: Option<NodeId> = None;
-            for node in self.spec.topo.nodes() {
-                if self.doomed[node.0] || self.occupancy[node.0] >= self.spec.capacity {
-                    continue;
-                }
-                best = match best {
-                    Some(b) if self.occupancy[node.0] < self.occupancy[b.0] => Some(node),
-                    None => Some(node),
-                    keep => keep,
-                };
-            }
-            match best {
+            match self.placement.best() {
                 Some(b) => {
-                    self.occupancy[b.0] += 1;
-                    self.jobs[j].host.push(b);
+                    self.placement.inc(b);
+                    self.jobs.rec_mut(id).host.push(b);
                 }
                 None => {
-                    for h in self.jobs[j].host.drain(..) {
-                        self.occupancy[h.0] -= 1;
+                    let rec = self.jobs.rec_mut(id);
+                    for h in rec.host.drain(..) {
+                        self.placement.dec(h);
                     }
                     return false;
                 }
@@ -426,13 +641,16 @@ impl System<'_> {
         let now = ctx.now();
         let me = ctx.me();
         let done_at = now + SimTime::from_secs(self.spec.job.compute_s);
-        let job = &mut self.jobs[j];
-        job.state.clear();
-        job.state.extend((0..n_subs).map(|_| SubState::Running { done_at }));
-        job.remaining = n_subs;
+        let rec = self.jobs.rec_mut(id);
+        rec.state.clear();
+        rec.state.extend((0..n_subs).map(|_| SubState::Running { done_at }));
+        rec.remaining = n_subs;
+        let arrival = rec.arrival;
         self.running += n_subs;
         for sub in 0..n_subs {
-            ctx.send_at(done_at, me, Ev::SubDone { job: j, sub });
+            let host = self.jobs.rec_mut(id).host[sub];
+            self.node_subs[host.0].insert((arrival, sub as u32, id.slot));
+            ctx.send_at(done_at, me, Ev::SubDone { job: id, sub });
         }
         true
     }
@@ -441,8 +659,8 @@ impl System<'_> {
     /// that still does not fit (head-of-line blocking keeps the order a
     /// pure function of the event sequence).
     fn drain_queue(&mut self, ctx: &mut Ctx<'_, '_, Ev>) {
-        while let Some(&j) = self.queue.front() {
-            if !self.try_place(j, ctx) {
+        while let Some(&id) = self.queue.front() {
+            if !self.try_place(id, ctx) {
                 break;
             }
             self.queue.pop_front();
@@ -459,20 +677,21 @@ impl Scenario for System<'_> {
         let me = ctx.me();
         match ev {
             Ev::Arrival { job } => {
-                self.jobs[job].arrived_at = now;
-                if !self.try_place(job, ctx) {
-                    self.queue.push_back(job);
+                let id = self.jobs.alloc(job as u32, now);
+                self.arrived += 1;
+                if !self.try_place(id, ctx) {
+                    self.queue.push_back(id);
                 }
             }
             Ev::Doom { node, predictable, fail_in_s } => {
-                if self.doomed[node.0] {
+                if self.placement.is_doomed(node) {
                     // still down from an earlier failure: the strike is
                     // absorbed (a node is doomed at most once per
                     // up-period), exactly like livesim's dedup guard
                     self.absorbed_failures += 1;
                     return;
                 }
-                self.doomed[node.0] = true;
+                self.placement.doom(node);
                 if predictable {
                     self.predicted[node.0] = true;
                     ctx.send_in(SimTime::from_secs(0.0), me, Ev::Prediction { node });
@@ -483,81 +702,91 @@ impl Scenario for System<'_> {
                 // proactive path (multi-agent strategies only): migrate
                 // every running sub-job off the node, jobs in arrival
                 // order, subs in index order — livesim's scan and draw
-                // order verbatim for each job
+                // order verbatim for each job. The node's sub-job set *is*
+                // that order; snapshot it because migrations edit it.
                 if !self.spec.job.strategy.is_multi_agent() {
                     return;
                 }
-                for j in 0..self.jobs.len() {
-                    if self.jobs[j].remaining == 0 {
-                        // completed (or not yet placed): nothing to move,
-                        // and skipping consumes no draws
-                        continue;
-                    }
-                    for i in 0..self.jobs[j].host.len() {
-                        if self.jobs[j].host[i] != node {
-                            continue;
+                self.scan.clear();
+                self.scan.extend(self.node_subs[node.0].iter().copied());
+                for k in 0..self.scan.len() {
+                    let (arrival, sub, slot) = self.scan[k];
+                    let i = sub as usize;
+                    let rec = &self.jobs.slots[slot as usize];
+                    debug_assert!(rec.live && rec.arrival == arrival, "dead entry in node set");
+                    debug_assert_eq!(rec.host[i], node, "entry strayed off its node");
+                    if let SubState::Running { done_at } = rec.state[i] {
+                        let remaining = (done_at.saturating_sub(now)).as_secs();
+                        let gen = rec.gen;
+                        let dur = self.reinstate_s(ctx);
+                        if let Some(target) = self.pick_target(node, ctx) {
+                            let rec = &mut self.jobs.slots[slot as usize];
+                            rec.state[i] =
+                                SubState::Migrating { resume_remaining_s: remaining };
+                            rec.host[i] = target;
+                            self.placement.dec(node);
+                            self.placement.inc(target);
+                            self.node_subs[node.0].remove(&(arrival, sub, slot));
+                            self.node_subs[target.0].insert((arrival, sub, slot));
+                            self.running -= 1;
+                            self.migr_inflight += 1;
+                            self.peak_migr = self.peak_migr.max(self.migr_inflight);
+                            ctx.send_in(
+                                SimTime::from_secs(dur),
+                                me,
+                                Ev::MigrationDone { job: JobId { slot, gen }, sub: i, to: target },
+                            );
                         }
-                        if let SubState::Running { done_at } = self.jobs[j].state[i] {
-                            let remaining = (done_at.saturating_sub(now)).as_secs();
-                            let dur = self.reinstate_s(ctx);
-                            if let Some(target) = self.pick_target(node, ctx) {
-                                self.jobs[j].state[i] =
-                                    SubState::Migrating { resume_remaining_s: remaining };
-                                self.jobs[j].host[i] = target;
-                                self.occupancy[node.0] -= 1;
-                                self.occupancy[target.0] += 1;
-                                self.running -= 1;
-                                self.migr_inflight += 1;
-                                self.peak_migr = self.peak_migr.max(self.migr_inflight);
-                                ctx.send_in(
-                                    SimTime::from_secs(dur),
-                                    me,
-                                    Ev::MigrationDone { job: j, sub: i, to: target },
-                                );
-                            }
-                            // no healthy neighbour with a spare slot: stay
-                            // put; the failure path will roll back
-                        }
+                        // no healthy neighbour with a spare slot: stay
+                        // put; the failure path will roll back
                     }
                 }
             }
             Ev::Failure { node } => {
                 // every sub-job still on the failed node is lost → reactive
                 // rollback, one recovery per affected job (each its own
-                // checkpoint-server stream)
-                for j in 0..self.jobs.len() {
-                    if self.jobs[j].remaining == 0 {
-                        // completed (or not yet placed): no sub to lose
-                        continue;
-                    }
+                // checkpoint-server stream). The node's set is already
+                // (arrival, sub) ordered, so walking contiguous same-
+                // arrival groups replays the old per-job loop exactly.
+                self.scan.clear();
+                self.scan.extend(self.node_subs[node.0].iter().copied());
+                let mut k = 0;
+                while k < self.scan.len() {
+                    let (arrival, _, slot) = self.scan[k];
+                    let rec_id = self.next_rec;
                     let mut lost = 0usize;
-                    let rec = self.next_rec;
-                    for i in 0..self.jobs[j].host.len() {
-                        if self.jobs[j].host[i] != node {
-                            continue;
-                        }
-                        match self.jobs[j].state[i] {
+                    while k < self.scan.len() && self.scan[k].0 == arrival {
+                        let (_, sub, _) = self.scan[k];
+                        k += 1;
+                        let i = sub as usize;
+                        match self.jobs.slots[slot as usize].state[i] {
                             SubState::Running { done_at } => {
                                 let remaining = (done_at.saturating_sub(now)).as_secs();
-                                self.jobs[j].state[i] =
-                                    SubState::Recovering { resume_remaining_s: remaining, rec };
+                                self.jobs.slots[slot as usize].state[i] = SubState::Recovering {
+                                    resume_remaining_s: remaining,
+                                    rec: rec_id,
+                                };
                                 self.running -= 1;
                             }
                             SubState::Migrating { resume_remaining_s } => {
-                                // the in-flight move aborts; its
-                                // MigrationDone will find a non-Migrating
-                                // state and be ignored
-                                self.jobs[j].state[i] =
-                                    SubState::Recovering { resume_remaining_s, rec };
+                                // the in-flight move (targeting this node)
+                                // aborts; its MigrationDone will find a
+                                // non-Migrating state and be ignored
+                                self.jobs.slots[slot as usize].state[i] = SubState::Recovering {
+                                    resume_remaining_s,
+                                    rec: rec_id,
+                                };
                                 self.migr_inflight -= 1;
                             }
                             _ => continue,
                         }
                         // move it off the dead node for the resume
                         if let Some(t) = self.pick_target(node, ctx) {
-                            self.jobs[j].host[i] = t;
-                            self.occupancy[node.0] -= 1;
-                            self.occupancy[t.0] += 1;
+                            self.jobs.slots[slot as usize].host[i] = t;
+                            self.placement.dec(node);
+                            self.placement.inc(t);
+                            self.node_subs[node.0].remove(&(arrival, sub, slot));
+                            self.node_subs[t.0].insert((arrival, sub, slot));
                         }
                         lost += 1;
                     }
@@ -568,7 +797,12 @@ impl Scenario for System<'_> {
                         let dur = self.recovery_s();
                         self.rollbacks += 1;
                         self.subs_lost += lost;
-                        ctx.send_in(SimTime::from_secs(dur), me, Ev::RecoveryDone { job: j, rec });
+                        let gen = self.jobs.slots[slot as usize].gen;
+                        ctx.send_in(
+                            SimTime::from_secs(dur),
+                            me,
+                            Ev::RecoveryDone { job: JobId { slot, gen }, rec: rec_id },
+                        );
                     }
                 }
                 if let Some(repair_s) = self.repair_s {
@@ -576,15 +810,19 @@ impl Scenario for System<'_> {
                 }
             }
             Ev::Repair { node } => {
-                self.doomed[node.0] = false;
+                self.placement.repair(node);
                 self.predicted[node.0] = false;
                 self.drain_queue(ctx);
             }
             Ev::MigrationDone { job, sub, to } => {
-                if let SubState::Migrating { resume_remaining_s } = self.jobs[job].state[sub] {
-                    debug_assert_eq!(self.jobs[job].host[sub], to);
+                // a stale handle means the move aborted long ago and the
+                // job has since completed (slot retired): nothing to do —
+                // same net effect as the old table's non-Migrating check
+                let Some(rec) = self.jobs.get(job) else { return };
+                if let SubState::Migrating { resume_remaining_s } = rec.state[sub] {
+                    debug_assert_eq!(rec.host[sub], to);
                     let done_at = now + SimTime::from_secs(resume_remaining_s);
-                    self.jobs[job].state[sub] = SubState::Running { done_at };
+                    self.jobs.rec_mut(job).state[sub] = SubState::Running { done_at };
                     self.running += 1;
                     self.migr_inflight -= 1;
                     self.migrations += 1;
@@ -599,9 +837,16 @@ impl Scenario for System<'_> {
             }
             Ev::RecoveryDone { job, rec } => {
                 self.rec_inflight -= 1;
-                for i in 0..self.jobs[job].state.len() {
+                // a job with an in-flight recovery holds Recovering subs,
+                // so it cannot retire before this arrives; the guard is
+                // belt-and-braces for the handle discipline
+                debug_assert!(self.jobs.get(job).is_some(), "recovery outlived its job");
+                let Some(rec0) = self.jobs.get(job) else { return };
+                let n_state = rec0.state.len();
+                let arrival = rec0.arrival;
+                for i in 0..n_state {
                     if let SubState::Recovering { resume_remaining_s, rec: r } =
-                        self.jobs[job].state[i]
+                        self.jobs.slots[job.slot as usize].state[i]
                     {
                         if r == rec {
                             // the resume host chosen at loss time may have
@@ -613,16 +858,23 @@ impl Scenario for System<'_> {
                             // must replay run_live bit for bit; such
                             // compute does count into goodput/utilization
                             // (documented in DESIGN.md §Fleet simulator).
-                            if self.doomed[self.jobs[job].host[i].0] {
-                                if let Some(t) = self.pick_target(self.jobs[job].host[i], ctx) {
-                                    let old = self.jobs[job].host[i];
-                                    self.jobs[job].host[i] = t;
-                                    self.occupancy[old.0] -= 1;
-                                    self.occupancy[t.0] += 1;
+                            let old = self.jobs.slots[job.slot as usize].host[i];
+                            if self.placement.is_doomed(old) {
+                                if let Some(t) = self.pick_target(old, ctx) {
+                                    self.jobs.slots[job.slot as usize].host[i] = t;
+                                    self.placement.dec(old);
+                                    self.placement.inc(t);
+                                    self.node_subs[old.0].remove(&(
+                                        arrival,
+                                        i as u32,
+                                        job.slot,
+                                    ));
+                                    self.node_subs[t.0].insert((arrival, i as u32, job.slot));
                                 }
                             }
                             let done_at = now + SimTime::from_secs(resume_remaining_s);
-                            self.jobs[job].state[i] = SubState::Running { done_at };
+                            self.jobs.slots[job.slot as usize].state[i] =
+                                SubState::Running { done_at };
                             self.running += 1;
                             ctx.send_at(done_at, me, Ev::SubDone { job, sub: i });
                         }
@@ -630,22 +882,30 @@ impl Scenario for System<'_> {
                 }
             }
             Ev::SubDone { job, sub } => {
-                if let SubState::Running { done_at } = self.jobs[job].state[sub] {
+                // a sub's live completion precedes any retirement of its
+                // job, so a miss here can only be a stale (superseded)
+                // completion — ignored either way
+                let Some(rec) = self.jobs.get(job) else { return };
+                if let SubState::Running { done_at } = rec.state[sub] {
                     if done_at == now {
-                        self.jobs[job].state[sub] = SubState::Done;
+                        let host = rec.host[sub];
+                        let arrival = rec.arrival;
+                        let rec = self.jobs.rec_mut(job);
+                        rec.state[sub] = SubState::Done;
+                        rec.remaining -= 1;
+                        let remaining = rec.remaining;
+                        let arrived_at = rec.arrived_at;
                         self.running -= 1;
-                        let host = self.jobs[job].host[sub];
-                        self.occupancy[host.0] -= 1;
-                        self.jobs[job].remaining -= 1;
-                        if self.jobs[job].remaining == 0 && self.jobs[job].completed_at.is_none()
-                        {
-                            self.jobs[job].completed_at = Some(now);
+                        self.placement.dec(host);
+                        self.node_subs[host.0].remove(&(arrival, sub as u32, job.slot));
+                        if remaining == 0 {
                             self.completed += 1;
                             let cfg = &self.spec.job;
                             self.completed_compute_s += cfg.n_subs as f64 * cfg.compute_s;
-                            let elapsed = now.saturating_sub(self.jobs[job].arrived_at).as_secs();
+                            let elapsed = now.saturating_sub(arrived_at).as_secs();
                             self.slowdowns.push(elapsed / cfg.compute_s);
                             self.last_completion = now;
+                            self.jobs.retire(job);
                             self.drain_queue(ctx);
                         }
                     }
@@ -713,16 +973,18 @@ pub fn run_fleet_scratch(spec: &FleetSpec, seed: u64, scratch: &mut FleetScratch
     };
 
     let mut jobs = std::mem::take(&mut scratch.jobs);
-    jobs.clear();
-    jobs.extend(at_s.iter().map(|_| Job::default()));
+    jobs.reset();
     let mut queue = std::mem::take(&mut scratch.queue);
     queue.clear();
-    let mut occupancy = std::mem::take(&mut scratch.occupancy);
-    occupancy.clear();
-    occupancy.resize(n, 0);
-    let mut doomed = std::mem::take(&mut scratch.doomed);
-    doomed.clear();
-    doomed.resize(n, false);
+    let mut placement = std::mem::take(&mut scratch.placement);
+    placement.reset(n, spec.capacity);
+    let mut node_subs = std::mem::take(&mut scratch.node_subs);
+    for s in &mut node_subs {
+        s.clear();
+    }
+    node_subs.resize_with(n, BTreeSet::new);
+    let mut scan = std::mem::take(&mut scratch.scan);
+    scan.clear();
     let mut predicted = std::mem::take(&mut scratch.predicted);
     predicted.clear();
     predicted.resize(n, false);
@@ -730,10 +992,12 @@ pub fn run_fleet_scratch(spec: &FleetSpec, seed: u64, scratch: &mut FleetScratch
         spec,
         jobs,
         queue,
-        occupancy,
-        doomed,
+        placement,
+        node_subs,
+        scan,
         predicted,
         repair_s,
+        arrived: 0,
         next_rec: 0,
         rec_inflight: 0,
         migr_inflight: 0,
@@ -778,7 +1042,7 @@ pub fn run_fleet_scratch(spec: &FleetSpec, seed: u64, scratch: &mut FleetScratch
         (f64::NAN, f64::NAN)
     };
     let outcome = FleetOutcome {
-        jobs_arrived: system.jobs.len(),
+        jobs_arrived: system.arrived,
         jobs_completed: system.completed,
         jobs_waiting: system.queue.len(),
         goodput_ratio: if slot_s > 0.0 { system.completed_compute_s / slot_s } else { f64::NAN },
@@ -792,13 +1056,15 @@ pub fn run_fleet_scratch(spec: &FleetSpec, seed: u64, scratch: &mut FleetScratch
         absorbed_failures: system.absorbed_failures,
         peak_concurrent_migrations: system.peak_migr,
         peak_concurrent_recoveries: system.peak_rec,
+        peak_live_jobs: system.jobs.peak_live,
         events,
     };
     // hand the allocations back for the next trial
     scratch.jobs = system.jobs;
     scratch.queue = system.queue;
-    scratch.occupancy = system.occupancy;
-    scratch.doomed = system.doomed;
+    scratch.placement = system.placement;
+    scratch.node_subs = system.node_subs;
+    scratch.scan = system.scan;
     scratch.predicted = system.predicted;
     outcome
 }
@@ -827,6 +1093,7 @@ mod tests {
         assert_eq!(o.mean_slowdown, 1.0);
         assert_eq!(o.migrations, 0);
         assert_eq!(o.rollbacks, 0);
+        assert_eq!(o.peak_live_jobs, 1);
         // 8 subs × 1800 s over 16 nodes × 2 slots × 4 h
         let want = 8.0 * 1800.0 / (16.0 * 2.0 * 14400.0);
         assert!((o.goodput_ratio - want).abs() < 1e-12);
@@ -843,6 +1110,7 @@ mod tests {
         let o = run_fleet(&spec, 3);
         assert_eq!(o.jobs_arrived, 0);
         assert_eq!(o.jobs_completed, 0);
+        assert_eq!(o.peak_live_jobs, 0);
         assert!(o.mean_slowdown.is_nan(), "no completions ⇒ NaN slowdown");
         assert_eq!(o.utilization, 0.0, "idle horizon integrates to zero");
         assert_eq!(o.goodput_ratio, 0.0);
@@ -878,6 +1146,7 @@ mod tests {
             assert_eq!(fresh.goodput_ratio.to_bits(), reused.goodput_ratio.to_bits());
             assert_eq!(fresh.migrations, reused.migrations);
             assert_eq!(fresh.rollbacks, reused.rollbacks);
+            assert_eq!(fresh.peak_live_jobs, reused.peak_live_jobs);
         }
     }
 
@@ -899,6 +1168,23 @@ mod tests {
     }
 
     #[test]
+    fn slab_peaks_at_concurrency_not_arrivals() {
+        // 40 non-overlapping jobs: each finishes (1800 s) before the next
+        // arrives (every 2000 s), so the slab never holds more than one
+        // live job — the arena allocates O(live), not O(arrivals)
+        let at_s: Vec<f64> = (0..40).map(|i| i as f64 * 2000.0).collect();
+        let spec = FleetSpec {
+            arrivals: ArrivalSpec::Trace { at_s },
+            horizon_s: 90_000.0,
+            ..quiet(Strategy::Hybrid)
+        };
+        let o = run_fleet(&spec, 9);
+        assert_eq!(o.jobs_arrived, 40);
+        assert_eq!(o.jobs_completed, 40);
+        assert_eq!(o.peak_live_jobs, 1, "{o:?}");
+    }
+
+    #[test]
     fn churn_with_repair_keeps_completing_jobs() {
         let spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 32, 6.0, 0.5);
         let o = run_fleet(&spec, 7);
@@ -907,6 +1193,7 @@ mod tests {
         assert!(o.goodput_ratio > 0.0);
         assert!(o.utilization > 0.0 && o.utilization <= 1.0 + 1e-9, "{o:?}");
         assert!(o.mean_slowdown >= 1.0 - 1e-9, "{o:?}");
+        assert!(o.peak_live_jobs >= 1 && o.peak_live_jobs <= o.jobs_arrived, "{o:?}");
     }
 
     #[test]
@@ -981,6 +1268,68 @@ mod tests {
         // unpredicted fraction forces some rollbacks at this churn rate
         assert!(o.rollbacks > 0, "{o:?}");
         assert!(o.peak_concurrent_recoveries >= 1, "{o:?}");
+    }
+
+    #[test]
+    fn scale_fleet_spec_targets_ninety_percent_load() {
+        let spec = FleetSpec::scale_fleet(Strategy::Hybrid, 1000, 10_000, 0.05);
+        let ArrivalSpec::Poisson { rate_per_h } = spec.arrivals else {
+            panic!("scale fleet must be Poisson");
+        };
+        assert!((rate_per_h - 450.0).abs() < 1e-9);
+        // expected arrivals over the horizon = the requested count
+        assert!((spec.horizon_s / 3600.0 * rate_per_h - 10_000.0).abs() < 1e-6);
+        assert_eq!(spec.topo.len(), 1000);
+    }
+
+    #[test]
+    fn placement_index_matches_linear_scan() {
+        // the index's best() must equal the old full scan on random
+        // load/health states, including saturation
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let n = 1 + rng.range_usize(0, 40);
+            let cap = 1 + rng.range_usize(0, 3);
+            let mut idx = PlacementIndex::default();
+            idx.reset(n, cap);
+            let mut doomed = vec![false; n];
+            let mut occ = vec![0usize; n];
+            // random walk of the same transitions the fleet performs
+            for _ in 0..120 {
+                let node = NodeId(rng.range_usize(0, n));
+                match rng.range_usize(0, 4) {
+                    0 if !doomed[node.0] && occ[node.0] < cap => {
+                        occ[node.0] += 1;
+                        idx.inc(node);
+                    }
+                    1 if occ[node.0] > 0 => {
+                        occ[node.0] -= 1;
+                        idx.dec(node);
+                    }
+                    2 if !doomed[node.0] => {
+                        doomed[node.0] = true;
+                        idx.doom(node);
+                    }
+                    3 if doomed[node.0] => {
+                        doomed[node.0] = false;
+                        idx.repair(node);
+                    }
+                    _ => {}
+                }
+                let mut best: Option<NodeId> = None;
+                for v in 0..n {
+                    if doomed[v] || occ[v] >= cap {
+                        continue;
+                    }
+                    best = match best {
+                        Some(b) if occ[v] < occ[b.0] => Some(NodeId(v)),
+                        None => Some(NodeId(v)),
+                        keep => keep,
+                    };
+                }
+                assert_eq!(idx.best(), best, "index diverged from the linear scan");
+            }
+        }
     }
 
     #[test]

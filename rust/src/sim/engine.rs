@@ -6,15 +6,24 @@
 //! in delivery time are broken by a monotone sequence number, so insertion
 //! order is part of the contract (tested in `testkit` property tests).
 //!
-//! ## Hot-path design (see DESIGN.md §Hot path)
+//! ## Hot-path design (see DESIGN.md §Hot path, §Event queue)
 //!
 //! The engine owns no actors: [`Engine::run_until`] takes a *dispatch
 //! closure* and hands it each due event. Callers (notably
 //! [`crate::sim::harness`]) keep their actor state in a plain `Vec` and
 //! index it with the delivered [`ActorId`] — no `Box<dyn>` virtual call, no
-//! `Rc<RefCell<…>>` borrow, no allocation on the per-event path. The heap
-//! key is packed as `(time, seq)` into one `u128`, so the `BinaryHeap`
-//! sift compares are single integer compares.
+//! `Rc<RefCell<…>>` borrow, no allocation on the per-event path. The queue
+//! key is packed as `(time, seq)` into one `u128`, so every ordering
+//! compare is a single integer compare.
+//!
+//! The queue itself is a hierarchical timer wheel ([`EventQueue`]) rather
+//! than a global `BinaryHeap`: pushes on the fleet simulator's hot path are
+//! O(1) slot appends instead of O(log n) sift-ups, while the pop sequence
+//! is exactly the heap's total order — same `(time, seq)` key, same
+//! tie-break, property-tested event-for-event against a reference heap in
+//! `tests/properties.rs`. Far-future events (churn repair timers, doom
+//! events scheduled hours out) park in an overflow heap until the wheel
+//! rotates into their range.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -72,43 +81,219 @@ impl std::fmt::Display for SimTime {
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct ActorId(pub usize);
 
-/// A scheduled delivery. The heap key packs `(time, seq)` into one `u128`
-/// — `time` in the high 64 bits, `seq` in the low — so ordering is a
-/// single integer compare instead of a lexicographic tuple compare.
-struct Event<M> {
-    key: u128,
-    target: ActorId,
-    msg: M,
-}
-
+/// Pack `(time, seq)` into one `u128` — `time` in the high 64 bits, `seq`
+/// in the low — so ordering is a single integer compare instead of a
+/// lexicographic tuple compare. Public so the queue property tests can
+/// build keys exactly the way the engine does.
 #[inline]
-fn pack_key(at: SimTime, seq: u64) -> u128 {
+pub fn pack_key(at: SimTime, seq: u64) -> u128 {
     ((at.0 as u128) << 64) | seq as u128
 }
 
-impl<M> Event<M> {
-    #[inline]
-    fn at(&self) -> SimTime {
-        SimTime((self.key >> 64) as u64)
-    }
+/// A queue entry: the packed `(time, seq)` key plus the caller's payload.
+struct Entry<T> {
+    key: u128,
+    item: T,
 }
 
-// Order by the packed (time, seq) key — BinaryHeap is a max-heap so the
-// engine wraps events in Reverse.
-impl<M> PartialEq for Event<M> {
+// Order by the packed (time, seq) key — the internal heaps are max-heaps,
+// so the queue wraps entries in Reverse.
+impl<T> PartialEq for Entry<T> {
     fn eq(&self, other: &Self) -> bool {
         self.key == other.key
     }
 }
-impl<M> Eq for Event<M> {}
-impl<M> PartialOrd for Event<M> {
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
 }
-impl<M> Ord for Event<M> {
+impl<T> Ord for Entry<T> {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.key.cmp(&other.key)
+    }
+}
+
+/// Bits per wheel level: 2^6 = 64 slots, so a level's occupancy is one u64
+/// bitmap and "earliest non-empty slot" is a `trailing_zeros`.
+const WHEEL_BITS: usize = 6;
+const WHEEL_SLOTS: usize = 1 << WHEEL_BITS;
+const SLOT_MASK: u64 = WHEEL_SLOTS as u64 - 1;
+/// Hierarchy depth: 4 levels × 6 bits = 24 granule bits in-wheel.
+const WHEEL_LEVELS: usize = 4;
+/// Granule size: 2^20 ns ≈ 1.05 ms. Level spans are then ≈ 67 ms, 4.3 s,
+/// 4.6 min and 4.9 h; anything further out goes to the overflow heap.
+const GRANULE_BITS: u32 = 20;
+
+#[inline]
+fn granule_of(key: u128) -> u64 {
+    ((key >> 64) as u64) >> GRANULE_BITS
+}
+
+/// A hierarchical timer wheel ordered by a packed `(time, seq)` `u128` key
+/// — the engine's event queue (DESIGN.md §Event queue).
+///
+/// Time is bucketed into *granules* of 2^[`GRANULE_BITS`] ns. The wheel
+/// keeps [`WHEEL_LEVELS`] levels of [`WHEEL_SLOTS`] slots; an entry's slot
+/// at level `l` is digit `l` of its granule in base 64 (absolute indexing,
+/// Linux-kernel style, so cascades only touch entries whose time has
+/// arrived). Entries whose granule differs from the cursor above the top
+/// level wait in an `overflow` heap until the wheel rotates into range.
+///
+/// Invariants (the pop-order argument, tested against a reference
+/// `BinaryHeap` in `tests/properties.rs`):
+///
+/// * every entry in `due` has granule **equal to** `cursor`; every entry
+///   in the levels or overflow has granule **greater than** `cursor`;
+/// * within a granule, `due` is a min-heap on the full key, so equal-time
+///   ties pop in `seq` (insertion) order;
+/// * levels are filled lowest-first: if level `l` is non-empty, its
+///   earliest slot holds the globally earliest pending granule, because
+///   any level-`l+1` entry differs from the cursor in a strictly higher
+///   base-64 digit and is therefore later.
+///
+/// Together these give: `pop` always returns the globally minimum key —
+/// exactly the `BinaryHeap<Reverse<_>>` sequence it replaced.
+pub struct EventQueue<T> {
+    /// Current-granule entries, ordered by full key.
+    due: BinaryHeap<Reverse<Entry<T>>>,
+    /// `levels[l][slot]`: unordered entries due in a future granule whose
+    /// base-64 digit `l` is `slot` (and whose higher digits match the
+    /// cursor's). Sorted on drain via `due`.
+    levels: Vec<Vec<Vec<Entry<T>>>>,
+    /// Per-level bitmap of non-empty slots.
+    occupied: [u64; WHEEL_LEVELS],
+    /// Entries beyond the top level's span (> ~4.9 h of virtual time out).
+    overflow: BinaryHeap<Reverse<Entry<T>>>,
+    /// The granule currently being drained. Monotone within a run; every
+    /// queued entry's granule is ≥ the cursor.
+    cursor: u64,
+    len: usize,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            due: BinaryHeap::new(),
+            levels: (0..WHEEL_LEVELS)
+                .map(|_| (0..WHEEL_SLOTS).map(|_| Vec::new()).collect())
+                .collect(),
+            occupied: [0; WHEEL_LEVELS],
+            overflow: BinaryHeap::new(),
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Empty the queue and rewind the cursor, keeping every slot/heap
+    /// allocation — the `recycle()` half of trial-scratch reuse.
+    pub fn clear(&mut self) {
+        self.due.clear();
+        self.overflow.clear();
+        for level in &mut self.levels {
+            for slot in level {
+                slot.clear();
+            }
+        }
+        self.occupied = [0; WHEEL_LEVELS];
+        self.cursor = 0;
+        self.len = 0;
+    }
+
+    /// Insert an entry. Keys must not lie in the already-drained past
+    /// (granule < cursor): the engine's clamp-to-now contract guarantees
+    /// this, and the queue clamps such an entry into the current granule
+    /// as a defensive backstop.
+    pub fn push(&mut self, key: u128, item: T) {
+        self.len += 1;
+        self.place(Entry { key, item });
+    }
+
+    /// The minimum pending key, without removing it. `&mut` because the
+    /// wheel may rotate to expose it (rotation never reorders anything).
+    pub fn peek_key(&mut self) -> Option<u128> {
+        self.advance();
+        self.due.peek().map(|Reverse(e)| e.key)
+    }
+
+    /// Remove and return the minimum-key entry.
+    pub fn pop(&mut self) -> Option<(u128, T)> {
+        self.advance();
+        let Reverse(e) = self.due.pop()?;
+        self.len -= 1;
+        Some((e.key, e.item))
+    }
+
+    /// Route one entry to `due`, a wheel slot, or overflow (no len change).
+    fn place(&mut self, e: Entry<T>) {
+        let granule = granule_of(e.key);
+        debug_assert!(granule >= self.cursor, "event scheduled into the drained past");
+        if granule <= self.cursor {
+            self.due.push(Reverse(e));
+            return;
+        }
+        let diff = granule ^ self.cursor;
+        let level = (63 - diff.leading_zeros()) as usize / WHEEL_BITS;
+        if level >= WHEEL_LEVELS {
+            self.overflow.push(Reverse(e));
+            return;
+        }
+        let slot = ((granule >> (level * WHEEL_BITS)) & SLOT_MASK) as usize;
+        self.levels[level][slot].push(e);
+        self.occupied[level] |= 1 << slot;
+    }
+
+    /// Rotate until `due` holds the earliest pending granule (or the queue
+    /// is empty): drain the earliest slot of the lowest non-empty level,
+    /// re-basing the cursor so drained entries cascade into lower levels
+    /// and, ultimately, `due`. When the whole wheel is empty, jump the
+    /// cursor to the earliest overflow entry and pull in everything that
+    /// now fits under the top level's span.
+    fn advance(&mut self) {
+        while self.due.is_empty() && self.len > 0 {
+            if let Some(level) = (0..WHEEL_LEVELS).find(|&l| self.occupied[l] != 0) {
+                let slot = self.occupied[level].trailing_zeros() as usize;
+                self.occupied[level] &= !(1u64 << slot);
+                let shift = level * WHEEL_BITS;
+                let kept = (self.cursor >> (shift + WHEEL_BITS)) << (shift + WHEEL_BITS);
+                self.cursor = kept | ((slot as u64) << shift);
+                let mut batch = std::mem::take(&mut self.levels[level][slot]);
+                for e in batch.drain(..) {
+                    self.place(e);
+                }
+                // drained entries re-place strictly below this level, so
+                // the slot's allocation is free to hand back
+                self.levels[level][slot] = batch;
+            } else {
+                let Reverse(first) = self.overflow.pop().expect("len > 0 with empty wheel");
+                self.cursor = granule_of(first.key);
+                self.place(first);
+                while let Some(Reverse(e)) = self.overflow.peek() {
+                    if (granule_of(e.key) ^ self.cursor) >> (WHEEL_BITS * WHEEL_LEVELS) != 0 {
+                        // overflow pops in ascending key order, so the
+                        // first out-of-span entry ends the in-span run
+                        break;
+                    }
+                    let Reverse(e) = self.overflow.pop().expect("peeked entry");
+                    self.place(e);
+                }
+            }
+        }
     }
 }
 
@@ -152,7 +337,7 @@ pub type EventLog = Vec<(SimTime, usize, u64)>;
 /// The engine. Generic over the message type `M`; protocols define their
 /// own message enums and dispatch to their own state in the run closure.
 pub struct Engine<M> {
-    queue: BinaryHeap<Reverse<Event<M>>>,
+    queue: EventQueue<(ActorId, M)>,
     now: SimTime,
     seq: u64,
     dispatched: u64,
@@ -172,7 +357,7 @@ impl<M> Default for Engine<M> {
 impl<M> Engine<M> {
     pub fn new() -> Self {
         Self {
-            queue: BinaryHeap::new(),
+            queue: EventQueue::new(),
             now: SimTime::ZERO,
             seq: 0,
             dispatched: 0,
@@ -218,9 +403,8 @@ impl<M> Engine<M> {
 
     /// Schedule an initial event.
     pub fn schedule(&mut self, at: SimTime, target: ActorId, msg: M) {
-        let ev = Event { key: pack_key(at, self.seq), target, msg };
+        self.queue.push(pack_key(at, self.seq), (target, msg));
         self.seq += 1;
-        self.queue.push(Reverse(ev));
     }
 
     pub fn now(&self) -> SimTime {
@@ -244,27 +428,27 @@ impl<M> Engine<M> {
     where
         F: FnMut(ActorId, M, &mut Outbox<'_, M>),
     {
-        while let Some(Reverse(ev)) = self.queue.pop() {
-            let at = ev.at();
+        while let Some(key) = self.queue.peek_key() {
+            let at = SimTime((key >> 64) as u64);
             if at > horizon {
-                // Past the horizon: clamp the clock and stop.
+                // Past the horizon: clamp the clock and stop (the event
+                // stays queued).
                 self.now = horizon;
-                self.queue.push(Reverse(ev));
                 break;
             }
+            let (_, (target, msg)) = self.queue.pop().expect("peeked event");
             debug_assert!(at >= self.now, "time went backwards");
             self.now = at;
             self.dispatched += 1;
             if let Some(tag) = self.tagger {
-                self.log.push((at, ev.target.0, tag(&ev.msg)));
+                self.log.push((at, target.0, tag(&msg)));
             }
             let mut out = Outbox { now: at, staged: &mut self.staging, stop: false };
-            dispatch(ev.target, ev.msg, &mut out);
+            dispatch(target, msg, &mut out);
             let stop = out.stop;
             for (t, target, msg) in self.staging.drain(..) {
-                let e = Event { key: pack_key(t, self.seq), target, msg };
+                self.queue.push(pack_key(t, self.seq), (target, msg));
                 self.seq += 1;
-                self.queue.push(Reverse(e));
             }
             if stop {
                 break;
@@ -304,10 +488,77 @@ mod tests {
     fn packed_key_orders_time_then_seq() {
         assert!(pack_key(SimTime(1), u64::MAX) < pack_key(SimTime(2), 0));
         assert!(pack_key(SimTime(5), 3) < pack_key(SimTime(5), 4));
-        assert_eq!(
-            Event::<u32> { key: pack_key(SimTime(7), 9), target: ActorId(0), msg: 0 }.at(),
-            SimTime(7)
-        );
+    }
+
+    #[test]
+    fn queue_pops_in_key_order_across_levels_and_overflow() {
+        // one entry per regime: same granule, level 0..3, and far enough
+        // out to overflow (> ~4.9 h)
+        let times_s =
+            [0.0, 0.000_5, 0.01, 1.0, 60.0, 3600.0, 5.0 * 3600.0, 100.0 * 3600.0];
+        let mut q: EventQueue<usize> = EventQueue::new();
+        // push in reverse so order is the queue's doing, not insertion's
+        for (i, &s) in times_s.iter().enumerate().rev() {
+            q.push(pack_key(SimTime::from_secs(s), i as u64), i);
+        }
+        assert_eq!(q.len(), times_s.len());
+        let mut got = Vec::new();
+        let mut last = 0u128;
+        while let Some((key, item)) = q.pop() {
+            assert!(key >= last, "keys must pop in ascending order");
+            last = key;
+            got.push(item);
+        }
+        assert_eq!(got, (0..times_s.len()).collect::<Vec<_>>());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn queue_breaks_equal_time_ties_by_seq() {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let t = SimTime::from_secs(2.0);
+        for seq in [5u64, 1, 3, 0, 4, 2] {
+            q.push(pack_key(t, seq), seq);
+        }
+        let mut got = Vec::new();
+        while let Some((_, s)) = q.pop() {
+            got.push(s);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn queue_interleaves_pushes_with_rotation() {
+        // pushes after the cursor has rotated must land correctly, both
+        // into the granule being drained and into future slots
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.push(pack_key(SimTime::from_secs(10.0), 0), 0);
+        q.push(pack_key(SimTime::from_secs(30.0), 1), 1);
+        assert_eq!(q.pop().map(|(_, i)| i), Some(0));
+        // the cursor now sits at t=10's granule
+        q.push(pack_key(SimTime::from_secs(20.0), 2), 2);
+        q.push(pack_key(SimTime(10_000_000_100), 3), 3); // same granule as the cursor
+        assert_eq!(q.pop().map(|(_, i)| i), Some(3));
+        assert_eq!(q.pop().map(|(_, i)| i), Some(2));
+        assert_eq!(q.pop().map(|(_, i)| i), Some(1));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn queue_peek_matches_pop_and_clear_resets() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        q.push(pack_key(SimTime::from_secs(7.0), 0), 7);
+        q.push(pack_key(SimTime::from_secs(3.0), 1), 3);
+        assert_eq!(q.peek_key(), Some(pack_key(SimTime::from_secs(3.0), 1)));
+        assert_eq!(q.pop().map(|(_, i)| i), Some(3));
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_key(), None);
+        // reusable after clear, including the far-future path
+        q.push(pack_key(SimTime::from_secs(50.0 * 3600.0), 0), 1);
+        q.push(pack_key(SimTime::from_secs(1.0), 1), 2);
+        assert_eq!(q.pop().map(|(_, i)| i), Some(2));
+        assert_eq!(q.pop().map(|(_, i)| i), Some(1));
     }
 
     #[test]
@@ -461,5 +712,32 @@ mod tests {
         assert_eq!(eng.pending(), 0);
         let second = run(&mut eng);
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn recycled_engine_replays_across_overflow_horizons() {
+        // churn repair timers live hours out: the recycle contract must
+        // hold through the overflow path too
+        let run = |eng: &mut Engine<Msg>| {
+            eng.capture_log(|m| match m {
+                Msg::Ping(i) => *i as u64,
+                Msg::Pong(i) => 1000 + *i as u64,
+            });
+            for i in 0..8 {
+                eng.schedule(
+                    SimTime::from_secs(i as f64 * 3.0 * 3600.0),
+                    ActorId(0),
+                    Msg::Ping(i),
+                );
+            }
+            eng.run(|_me, _msg, _out| {});
+            (eng.take_log(), eng.dispatched(), eng.now())
+        };
+        let mut eng: Engine<Msg> = Engine::new();
+        let first = run(&mut eng);
+        eng.recycle();
+        let second = run(&mut eng);
+        assert_eq!(first, second);
+        assert_eq!(first.0.len(), 8);
     }
 }

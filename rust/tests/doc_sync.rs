@@ -46,7 +46,7 @@ fn registry_and_experiments_md_agree() {
 #[test]
 fn fleet_family_is_documented() {
     let documented = md_index_ids();
-    for id in ["fleet", "fleet-contention", "fleet-churn"] {
+    for id in ["fleet", "fleet-contention", "fleet-churn", "fleet-scale"] {
         assert!(documented.contains(id), "{id} missing from EXPERIMENTS.md index");
     }
 }

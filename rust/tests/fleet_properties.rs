@@ -105,6 +105,56 @@ fn fleet_sweep_byte_identical_at_thread_counts_1_and_8() {
 }
 
 #[test]
+fn mid_size_scale_fleet_byte_identical_at_threads_1_and_8() {
+    // ≥ 500 nodes / ~10k arrivals through the timer-wheel event queue,
+    // the (load, node) placement index and the generation-checked job
+    // slab — the scale path keeps both fleet contracts: a trial is a pure
+    // function of (spec, seed), and sweep cells are byte-identical at any
+    // thread count.
+    let spec = FleetSpec::scale_fleet(Strategy::Hybrid, 512, 10_000, 0.05);
+    let a = run_fleet(&spec, 31);
+    assert!(
+        a.jobs_arrived >= 9_000,
+        "scale sizing must deliver ~10k arrivals, got {}",
+        a.jobs_arrived
+    );
+    assert!(a.jobs_completed > 0, "{a:?}");
+    // the slab's footprint is live jobs, far below total arrivals
+    assert!(
+        a.peak_live_jobs * 4 < a.jobs_arrived,
+        "peak live {} should be far below {} arrivals",
+        a.peak_live_jobs,
+        a.jobs_arrived
+    );
+    let b = run_fleet(&spec, 31);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.jobs_arrived, b.jobs_arrived);
+    assert_eq!(a.jobs_completed, b.jobs_completed);
+    assert_eq!(a.peak_live_jobs, b.peak_live_jobs);
+    assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits());
+    assert_eq!(a.p95_slowdown.to_bits(), b.p95_slowdown.to_bits());
+    assert_eq!(a.goodput_ratio.to_bits(), b.goodput_ratio.to_bits());
+    assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+    assert_eq!(a.last_completion_s.to_bits(), b.last_completion_s.to_bits());
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.rollbacks, b.rollbacks);
+
+    let trials = 2;
+    let cells = vec![CellSpec::fleet(spec, FleetMetric::MeanSlowdown, 31)];
+    let one = run_sweep(&SweepSpec { threads: Some(1), ..SweepSpec::new(cells.clone(), trials) });
+    let eight = run_sweep(&SweepSpec { threads: Some(8), ..SweepSpec::new(cells, trials) });
+    assert_eq!(one.len(), eight.len());
+    for (x, y) in one.iter().zip(&eight) {
+        assert_eq!(x.mean.to_bits(), y.mean.to_bits());
+        assert_eq!(x.std.to_bits(), y.std.to_bits());
+        assert_eq!(x.median.to_bits(), y.median.to_bits());
+        assert_eq!(x.p95.to_bits(), y.p95.to_bits());
+        assert_eq!(x.min.to_bits(), y.min.to_bits());
+        assert_eq!(x.max.to_bits(), y.max.to_bits());
+    }
+}
+
+#[test]
 fn degenerate_fleet_reduces_to_run_live() {
     let topo = Topology::ring(16, 2);
     for strategy in [Strategy::Agent, Strategy::Core, Strategy::Hybrid] {

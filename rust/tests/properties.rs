@@ -9,9 +9,11 @@ use biomaft::hybrid::rules::{decide, RuleInputs};
 use biomaft::job::DepGraph;
 use biomaft::net::message::SubJobId;
 use biomaft::net::{NodeId, Topology};
-use biomaft::sim::engine::{ActorId, Engine};
+use biomaft::sim::engine::{pack_key, ActorId, Engine, EventQueue};
 use biomaft::sim::{Rng, SimTime};
 use biomaft::testkit::{forall, Gen};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 fn any_preset(g: &mut Gen) -> ClusterPreset {
     *g.pick(&ClusterPreset::all())
@@ -53,6 +55,51 @@ fn prop_des_episode_equals_closed_form() {
         let c = simulate_core_migration(&costs.core, z, data_kb, proc_kb, &adjacent, &mut rng, 0.0)
             .unwrap();
         assert!((c.reinstate_s - costs.core.reinstate_s(z, data_kb, proc_kb)).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_timer_wheel_pops_exact_binary_heap_sequence() {
+    // the hierarchical timer wheel must be order-indistinguishable from
+    // the reference BinaryHeap under randomized push/pop interleavings:
+    // equal-time ties (seq tie-break), sub-granule clusters, wheel-span
+    // deltas and far-future overflow (beyond the ~4.9 h top level) all in
+    // one queue. Pushes never precede the last popped time — the engine's
+    // send_at clamp guarantees that invariant for the real queue.
+    forall(120, 111, |g| {
+        let mut wheel: EventQueue<u64> = EventQueue::new();
+        let mut heap: BinaryHeap<Reverse<u128>> = BinaryHeap::new();
+        let ops = g.usize(1, 400);
+        let mut seq = 0u64;
+        let mut now_ns = 0u64;
+        for _ in 0..ops {
+            if g.bool() || wheel.is_empty() {
+                let delta_ns = match g.usize(0, 3) {
+                    0 => 0,                                 // equal-time tie with `now`
+                    1 => g.u64(0, 2_000_000),               // within/near one granule
+                    2 => g.u64(0, 4 * 3_600_000_000_000),   // inside the wheel span
+                    _ => g.u64(0, 400 * 3_600_000_000_000), // far-future overflow
+                };
+                let key = pack_key(SimTime(now_ns + delta_ns), seq);
+                wheel.push(key, seq);
+                heap.push(Reverse(key));
+                seq += 1;
+            } else {
+                let want = heap.pop().unwrap().0;
+                assert_eq!(wheel.peek_key(), Some(want), "peek diverged from heap");
+                let (got, item) = wheel.pop().unwrap();
+                assert_eq!(got, want, "pop order diverged from heap");
+                assert_eq!(item as u128, got & u64::MAX as u128, "payload follows its key");
+                now_ns = (want >> 64) as u64;
+            }
+            assert_eq!(wheel.len(), heap.len());
+        }
+        while let Some(Reverse(want)) = heap.pop() {
+            let (got, _) = wheel.pop().unwrap();
+            assert_eq!(got, want, "drain order diverged from heap");
+        }
+        assert!(wheel.pop().is_none());
+        assert!(wheel.is_empty());
     });
 }
 
