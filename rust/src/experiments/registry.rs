@@ -59,6 +59,22 @@ pub fn list() -> Vec<Experiment> {
         Experiment { id: "fleet-contention", what: "fleet: checkpoint-server bandwidth contention under churn", runner: |t, s| Ok(run_series(fleet::fleet_contention(t, s))) },
         Experiment { id: "fleet-churn", what: "fleet: goodput under node churn (fail/repair/rejoin)", runner: |t, s| Ok(run_series(fleet::fleet_churn(t, s))) },
         Experiment { id: "fleet-scale", what: "fleet: goodput vs cluster size at ~90% load (scale ladder)", runner: |t, s| Ok(run_series(fleet::fleet_scale(t, s))) },
+        Experiment { id: "vopr", what: "vopr: chaos-explore spec/seed space under invariant checking", runner: |t, s| {
+            let cfg = crate::scenario::VoprCfg {
+                walks: t.max(1) * 8,
+                base_seed: s,
+                max_nodes: 32,
+                max_arrivals: 512,
+                ..Default::default()
+            };
+            let report = crate::scenario::explore(&cfg);
+            let rendered = report.render();
+            if report.passed() {
+                Ok(rendered)
+            } else {
+                Err(anyhow::anyhow!(rendered))
+            }
+        } },
     ]
 }
 
@@ -108,6 +124,12 @@ mod tests {
         for id in ["fleet", "fleet-contention", "fleet-churn", "fleet-scale"] {
             assert!(ids.contains(&id), "{id} missing");
         }
+    }
+
+    #[test]
+    fn registry_covers_vopr() {
+        let ids: Vec<&str> = list().iter().map(|e| e.id).collect();
+        assert!(ids.contains(&"vopr"), "vopr missing");
     }
 
     #[test]

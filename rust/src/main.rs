@@ -6,6 +6,8 @@
 //! * `genome-search` — run the real AOT genome search end-to-end;
 //! * `reinstate` — one-off reinstate measurement (cluster, approach, Z, sizes);
 //! * `fleet` — one continuous multi-job fleet trial (arrivals, churn, contention);
+//! * `vopr` — chaos-explore spec/seed space with continuous invariant
+//!   checking and automatic shrinking (exits non-zero on violation);
 //! * `clusters` — show the cluster presets.
 
 use biomaft::checkpoint::CheckpointStrategy;
@@ -13,7 +15,7 @@ use biomaft::cluster::{preset, ClusterPreset};
 use biomaft::coordinator::ftmanager::Strategy;
 use biomaft::coordinator::run::{measure_reinstate, ExperimentCfg};
 use biomaft::experiments;
-use biomaft::scenario::{run_fleet, ChurnSpec, FleetSpec};
+use biomaft::scenario::{explore, run_fleet, run_repro, ChurnSpec, FleetSpec, VoprCfg};
 use biomaft::sim::Rng;
 use biomaft::util::cli::Command;
 use biomaft::util::fmt::{hms_ms, kb_pow2};
@@ -91,6 +93,14 @@ fn commands() -> Vec<Command> {
                  0 = off)",
             )
             .opt("seed", "2014", "trial seed"),
+        Command::new("vopr", "chaos-explore spec/seed space with invariant checking")
+            .opt("walks", "1000", "random (spec, seed) walks to explore")
+            .opt("seed", "2014", "root seed (or trial seed with --repro)")
+            .opt("max-nodes", "64", "largest generated fleet")
+            .opt("max-arrivals", "2000", "cap on expected arrivals per fleet lifetime")
+            .opt("trace-window", "32", "events kept before a violation")
+            .opt("threads", "auto", "worker threads: auto | N | 0 = one per core")
+            .opt("repro", "", "replay one encoded spec instead of exploring"),
         Command::new("clusters", "print the cluster presets"),
         Command::new("run", "run a config-file experiment: run --config <file>")
             .opt_req("config", "path to a TOML-subset config (see configs/)"),
@@ -181,25 +191,10 @@ fn run() -> anyhow::Result<()> {
             let arrival_per_h: f64 = p.req("arrival-per-h")?;
             let churn_per_h: f64 = p.req("churn-per-h")?;
             let horizon_h: f64 = p.req("horizon-h")?;
-            let capacity: usize = p.req("capacity")?;
-            let streams: usize = p.req("streams")?;
             if nodes == 0 {
+                // everything else goes through FleetSpec::validate, but
+                // the ring topology can't even be built with zero nodes
                 anyhow::bail!("--nodes must be at least 1");
-            }
-            if capacity == 0 {
-                anyhow::bail!("--capacity must be at least 1");
-            }
-            if streams == 0 {
-                anyhow::bail!("--streams must be at least 1");
-            }
-            if !horizon_h.is_finite() || horizon_h <= 0.0 {
-                anyhow::bail!("--horizon-h must be a finite number > 0, got {horizon_h}");
-            }
-            if !arrival_per_h.is_finite() || arrival_per_h < 0.0 {
-                anyhow::bail!("--arrival-per-h must be a finite number >= 0, got {arrival_per_h}");
-            }
-            if !churn_per_h.is_finite() || churn_per_h < 0.0 {
-                anyhow::bail!("--churn-per-h must be a finite number >= 0, got {churn_per_h}");
             }
             // --arrivals N switches to scale sizing: rate 0.9*nodes/2
             // jobs/h (~90% load on 2-slot nodes) with the horizon
@@ -211,8 +206,8 @@ fn run() -> anyhow::Result<()> {
                 s.horizon_s = horizon_h * 3600.0;
                 s
             };
-            spec.capacity = capacity;
-            spec.ckpt_streams = streams;
+            spec.capacity = p.req("capacity")?;
+            spec.ckpt_streams = p.req("streams")?;
             if let ChurnSpec::PerNode { repair_s, .. } = &mut spec.churn {
                 *repair_s = p.req("repair-s")?;
             }
@@ -220,6 +215,7 @@ fn run() -> anyhow::Result<()> {
                 // checkpoint baselines are reactive only
                 spec.job.predictable_frac = 0.0;
             }
+            spec.validate().map_err(|e| anyhow::anyhow!("invalid fleet spec: {e}"))?;
             let o = run_fleet(&spec, p.req("seed")?);
             let rate_per_h = match &spec.arrivals {
                 biomaft::scenario::ArrivalSpec::Poisson { rate_per_h } => *rate_per_h,
@@ -258,6 +254,44 @@ fn run() -> anyhow::Result<()> {
                 o.subs_lost
             );
             println!("  events {}   last completion {}", o.events, hms_ms(o.last_completion_s));
+        }
+        "vopr" => {
+            let p = find("vopr").parse(rest)?;
+            let seed: u64 = p.req("seed")?;
+            let trace_window: usize = p.req("trace-window")?;
+            let repro: String = p.req("repro")?;
+            if !repro.is_empty() {
+                let (report, violated) =
+                    run_repro(&repro, seed, trace_window).map_err(|e| anyhow::anyhow!(e))?;
+                print!("{report}");
+                if violated {
+                    anyhow::bail!("invariant violation reproduced");
+                }
+                return Ok(());
+            }
+            let threads = match p.req::<String>("threads")?.as_str() {
+                "auto" => None,
+                t => Some(t.parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("--threads takes `auto` or a number, got `{t}`")
+                })?),
+            };
+            let cfg = VoprCfg {
+                walks: p.req("walks")?,
+                base_seed: seed,
+                max_nodes: p.req("max-nodes")?,
+                max_arrivals: p.req("max-arrivals")?,
+                trace_window,
+                threads,
+                // cfg(test) is never consistent between lib and bin, so
+                // the self-test hook is feature-gated only here
+                #[cfg(feature = "vopr-selftest")]
+                fault: None,
+            };
+            let report = explore(&cfg);
+            print!("{}", report.render());
+            if !report.passed() {
+                anyhow::bail!("invariant violation found");
+            }
         }
         "clusters" => {
             for p in ClusterPreset::all() {

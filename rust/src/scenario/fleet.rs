@@ -157,6 +157,27 @@ pub struct FleetSpec {
     pub ckpt_streams: usize,
     /// Virtual-time horizon of one trial in seconds.
     pub horizon_s: f64,
+    /// Deliberate single-transition corruption for the VOPR self-test
+    /// (`scenario::vopr`): proves the invariant checkers fire and the
+    /// shrinker converges. Compiled out of normal builds — it exists only
+    /// under `cfg(test)` and the `vopr-selftest` feature, so production
+    /// code cannot even name it. Carried in the spec (not a thread-local)
+    /// so a faulty walk stays deterministic under any thread count.
+    #[cfg(any(test, feature = "vopr-selftest"))]
+    pub fault: Option<InjectedFault>,
+}
+
+/// Which transition the VOPR self-test corrupts (see [`FleetSpec::fault`]).
+#[cfg(any(test, feature = "vopr-selftest"))]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectedFault {
+    /// Skip the wait-queue requeue after a job completion: freed slots are
+    /// never offered to queued jobs. Caught by the queue-progress checker.
+    SkipRequeue,
+    /// Leak the completed sub-job's occupancy slot (skip the placement-
+    /// index decrement). Caught by the bookkeeping-agreement checker on
+    /// the very event that leaks.
+    LeakSlot,
 }
 
 impl FleetSpec {
@@ -196,6 +217,8 @@ impl FleetSpec {
             },
             ckpt_streams: 2,
             horizon_s: 4.0 * 3600.0,
+            #[cfg(any(test, feature = "vopr-selftest"))]
+            fault: None,
         }
     }
 
@@ -218,7 +241,172 @@ impl FleetSpec {
         spec.horizon_s = horizon_s;
         spec
     }
+
+    /// Validate the spec as user/generator input: structural minimums
+    /// (nodes, slots, streams, sub-jobs ≥ 1) and finite, sensible numbers
+    /// everywhere a rate or duration enters the simulation. This is the
+    /// one validation layer shared by the `biomaft fleet` CLI and the
+    /// `scenario::vopr` spec generator, so generated specs can never be
+    /// vacuously invalid. [`run_fleet`] itself stays more permissive (the
+    /// degenerate zero-horizon fleet is well-defined and tested).
+    pub fn validate(&self) -> Result<(), SpecError> {
+        if self.topo.len() == 0 {
+            return Err(SpecError::NoNodes);
+        }
+        if self.capacity == 0 {
+            return Err(SpecError::ZeroCapacity);
+        }
+        if self.ckpt_streams == 0 {
+            return Err(SpecError::ZeroStreams);
+        }
+        if self.job.n_subs == 0 {
+            return Err(SpecError::ZeroSubs);
+        }
+        if !self.horizon_s.is_finite() || self.horizon_s <= 0.0 {
+            return Err(SpecError::BadHorizon(self.horizon_s));
+        }
+        if !self.job.compute_s.is_finite() || self.job.compute_s <= 0.0 {
+            return Err(SpecError::BadComputeTime(self.job.compute_s));
+        }
+        let pf = self.job.predictable_frac;
+        if !pf.is_finite() || !(0.0..=1.0).contains(&pf) {
+            return Err(SpecError::BadPredictableFrac(pf));
+        }
+        for d in [self.job.ckpt_reinstate_s, self.job.ckpt_overhead_s] {
+            if !d.is_finite() || d < 0.0 {
+                return Err(SpecError::BadRecoveryTime(d));
+            }
+        }
+        match &self.arrivals {
+            ArrivalSpec::Poisson { rate_per_h } => {
+                if !rate_per_h.is_finite() || *rate_per_h < 0.0 {
+                    return Err(SpecError::BadArrivalRate(*rate_per_h));
+                }
+            }
+            ArrivalSpec::Trace { at_s } => {
+                for &t in at_s {
+                    if !t.is_finite() || t < 0.0 {
+                        return Err(SpecError::BadArrivalTime(t));
+                    }
+                }
+            }
+        }
+        match &self.churn {
+            // explicit plans carry integer SimTimes: nothing to reject
+            ChurnSpec::Plan(_) => {}
+            ChurnSpec::PerNode { process, window_s, repair_s } => {
+                if !window_s.is_finite() || *window_s <= 0.0 {
+                    return Err(SpecError::BadChurnWindow(*window_s));
+                }
+                if !repair_s.is_finite() || *repair_s < 0.0 {
+                    return Err(SpecError::BadRepairTime(*repair_s));
+                }
+                validate_process(process)?;
+            }
+        }
+        Ok(())
+    }
 }
+
+/// Finite-and-sensible check on a churn process's own parameters.
+fn validate_process(p: &FailureProcess) -> Result<(), SpecError> {
+    match p {
+        FailureProcess::Periodic { offset_s } => {
+            if !offset_s.is_finite() || *offset_s < 0.0 {
+                return Err(SpecError::BadChurnRate(*offset_s));
+            }
+        }
+        FailureProcess::Poisson { rate_per_window } => {
+            if !rate_per_window.is_finite() || *rate_per_window < 0.0 {
+                return Err(SpecError::BadChurnRate(*rate_per_window));
+            }
+        }
+        FailureProcess::Trace { offsets_s } => {
+            for &t in offsets_s {
+                if !t.is_finite() || t < 0.0 {
+                    return Err(SpecError::BadChurnRate(t));
+                }
+            }
+        }
+        FailureProcess::RandomUniform | FailureProcess::RandomUniformK { .. } => {}
+    }
+    Ok(())
+}
+
+/// Structured rejection from [`FleetSpec::validate`] — one variant per
+/// checked field, so callers (CLI, vopr generator tests) can match on the
+/// exact failure instead of parsing a message.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SpecError {
+    /// The topology has no nodes.
+    NoNodes,
+    /// `capacity` is 0 — nodes need at least one sub-job slot.
+    ZeroCapacity,
+    /// `ckpt_streams` is 0 — the checkpoint server needs a stream.
+    ZeroStreams,
+    /// `job.n_subs` is 0 — jobs need at least one sub-job.
+    ZeroSubs,
+    /// `horizon_s` is not a finite number > 0.
+    BadHorizon(f64),
+    /// `job.compute_s` is not a finite number > 0.
+    BadComputeTime(f64),
+    /// A Poisson arrival rate is not finite and ≥ 0.
+    BadArrivalRate(f64),
+    /// A traced arrival time is not finite and ≥ 0.
+    BadArrivalTime(f64),
+    /// A churn-process parameter (rate, offset or traced time) is not
+    /// finite and ≥ 0.
+    BadChurnRate(f64),
+    /// A per-node churn window is not a finite number > 0.
+    BadChurnWindow(f64),
+    /// `repair_s` is not finite and ≥ 0.
+    BadRepairTime(f64),
+    /// `job.predictable_frac` is outside `[0, 1]`.
+    BadPredictableFrac(f64),
+    /// A reactive recovery figure (`ckpt_reinstate_s`/`ckpt_overhead_s`)
+    /// is not finite and ≥ 0.
+    BadRecoveryTime(f64),
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::NoNodes => write!(f, "fleet needs at least 1 node"),
+            SpecError::ZeroCapacity => write!(f, "capacity must be at least 1 slot per node"),
+            SpecError::ZeroStreams => {
+                write!(f, "the checkpoint server needs at least 1 recovery stream")
+            }
+            SpecError::ZeroSubs => write!(f, "jobs need at least 1 sub-job"),
+            SpecError::BadHorizon(v) => write!(f, "horizon must be a finite number > 0, got {v}"),
+            SpecError::BadComputeTime(v) => {
+                write!(f, "compute time must be a finite number > 0, got {v}")
+            }
+            SpecError::BadArrivalRate(v) => {
+                write!(f, "arrival rate must be a finite number >= 0, got {v}")
+            }
+            SpecError::BadArrivalTime(v) => {
+                write!(f, "traced arrival times must be finite and >= 0, got {v}")
+            }
+            SpecError::BadChurnRate(v) => {
+                write!(f, "churn process parameters must be finite and >= 0, got {v}")
+            }
+            SpecError::BadChurnWindow(v) => {
+                write!(f, "churn window must be a finite number > 0, got {v}")
+            }
+            SpecError::BadRepairTime(v) => {
+                write!(f, "repair time must be finite and >= 0, got {v}")
+            }
+            SpecError::BadPredictableFrac(v) => {
+                write!(f, "predictable fraction must be in [0, 1], got {v}")
+            }
+            SpecError::BadRecoveryTime(v) => {
+                write!(f, "recovery figures must be finite and >= 0, got {v}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
 
 /// Aggregate of one fleet trial.
 #[derive(Debug, Clone)]
@@ -260,6 +448,193 @@ pub struct FleetOutcome {
     pub peak_live_jobs: usize,
     /// Dispatched DES events (determinism fingerprint).
     pub events: u64,
+}
+
+/// Compact, copyable description of one dispatched fleet event, handed to
+/// a [`FleetObserver`] after the handler ran. Jobs are named by slab slot
+/// (`slot`) or arrival index (`job`) — cheap `u32`s, not handles — because
+/// the observer only labels, never dereferences.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetEv {
+    /// Job `job` (arrival-order index) arrived.
+    Arrival { job: u32 },
+    /// Node `node` was doomed (`predictable` ⇒ a prediction fired too).
+    Doom { node: u32, predictable: bool },
+    /// The proactive prediction scan ran on `node`.
+    Prediction { node: u32 },
+    /// Node `node`'s hardware failed.
+    Failure { node: u32 },
+    /// Node `node` repaired and rejoined the pool.
+    Repair { node: u32 },
+    /// A migration of `(slot, sub)` to node `to` resolved; `landed` is
+    /// false when the move had been aborted or superseded in flight.
+    MigrationDone { slot: u32, sub: u32, to: u32, landed: bool },
+    /// Rollback recovery `rec` of job `slot` completed.
+    RecoveryDone { slot: u32, rec: u32 },
+    /// Sub-job `(slot, sub)` completed; `job_completed` when it was the
+    /// job's last (the wait queue is drained on exactly these events).
+    SubDone { slot: u32, sub: u32, job_completed: bool },
+}
+
+impl std::fmt::Display for FleetEv {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetEv::Arrival { job } => write!(f, "Arrival job={job}"),
+            FleetEv::Doom { node, predictable } => {
+                write!(f, "Doom node={node} predictable={predictable}")
+            }
+            FleetEv::Prediction { node } => write!(f, "Prediction node={node}"),
+            FleetEv::Failure { node } => write!(f, "Failure node={node}"),
+            FleetEv::Repair { node } => write!(f, "Repair node={node}"),
+            FleetEv::MigrationDone { slot, sub, to, landed } => {
+                write!(f, "MigrationDone slot={slot} sub={sub} to={to} landed={landed}")
+            }
+            FleetEv::RecoveryDone { slot, rec } => {
+                write!(f, "RecoveryDone slot={slot} rec={rec}")
+            }
+            FleetEv::SubDone { slot, sub, job_completed } => {
+                write!(f, "SubDone slot={slot} sub={sub} job_completed={job_completed}")
+            }
+        }
+    }
+}
+
+/// A consistent snapshot of the fleet's bookkeeping after one event, built
+/// only when an observer is enabled. Counter fields come straight off the
+/// system's counters; the `hosted`/`sub_*`/`distinct_recs` fields are re-derived
+/// from the slab and the per-node lists, so an invariant checker can
+/// compare the two views of the same facts. Plain values and slices — a
+/// test can hand-build one.
+pub struct FleetView<'a> {
+    /// Virtual time of the event just handled.
+    pub now: SimTime,
+    /// Sub-jobs per job (`spec.job.n_subs`).
+    pub n_subs: usize,
+    /// Slots per node (`spec.capacity`).
+    pub capacity: usize,
+    /// Jobs whose `Arrival` has dispatched.
+    pub arrived: usize,
+    /// Jobs completed (and retired).
+    pub completed: usize,
+    /// Live jobs in the slab (placed + queued).
+    pub live_jobs: usize,
+    /// Jobs in the wait queue.
+    pub queued: usize,
+    /// The system's Running-sub counter (utilization integrand).
+    pub running: usize,
+    /// The system's in-flight migration counter.
+    pub migr_inflight: usize,
+    /// The system's in-flight rollback-recovery counter.
+    pub rec_inflight: usize,
+    /// Per-node occupancy from the placement index.
+    pub occupancy: &'a [usize],
+    /// Per-node down-flag from the placement index.
+    pub doomed: &'a [bool],
+    /// Per-node non-done sub-job count from the per-node lists
+    /// (independently derived; must agree with `occupancy`).
+    pub hosted: &'a [usize],
+    /// Running subs counted by slab walk (must equal `running`).
+    pub sub_running: usize,
+    /// Migrating subs counted by slab walk (must equal `migr_inflight`).
+    pub sub_migrating: usize,
+    /// Distinct recovery ids among Recovering subs (must equal
+    /// `rec_inflight`).
+    pub distinct_recs: usize,
+    /// Every live job's `remaining` equals its non-Done sub count.
+    pub remaining_ok: bool,
+    /// Per-node list entries pointing at dead/moved subs (must be 0).
+    pub stale_node_subs: usize,
+}
+
+/// Observer hook on the fleet event loop. The unit observer `()` is the
+/// no-op: its `ENABLED` is false, every view construction is skipped, and
+/// the monomorphized [`run_fleet`] body is the pre-observer code — zero
+/// cost, and the byte-identical determinism contract is untouched (an
+/// observer draws no randomness and schedules no events; it can only
+/// read).
+pub trait FleetObserver {
+    /// Compile-time gate: view derivation is skipped entirely when false.
+    const ENABLED: bool = true;
+    /// Called after each event's handler ran, with the post-state view.
+    fn after_event(&mut self, ev: FleetEv, view: &FleetView<'_>);
+    /// Called once after the trial's final tick. `hit_horizon` is false
+    /// when the event queue drained (quiescence) before the horizon.
+    fn at_end(&mut self, view: &FleetView<'_>, hit_horizon: bool) {
+        let _ = (view, hit_horizon);
+    }
+}
+
+/// The no-op observer: [`run_fleet`] without invariant checking.
+impl FleetObserver for () {
+    const ENABLED: bool = false;
+    fn after_event(&mut self, _ev: FleetEv, _view: &FleetView<'_>) {}
+}
+
+/// Reused buffers for the derived half of a [`FleetView`] (slab walk +
+/// per-node list lengths). Refreshed per event only when the observer is
+/// enabled — O(nodes + live subs) per refresh, irrelevant at vopr scale
+/// and never run on the unobserved path.
+#[derive(Debug, Default)]
+struct Derive {
+    hosted: Vec<usize>,
+    recs: Vec<usize>,
+    sub_running: usize,
+    sub_migrating: usize,
+    distinct_recs: usize,
+    remaining_ok: bool,
+    stale_node_subs: usize,
+}
+
+impl Derive {
+    fn refresh(&mut self, jobs: &JobSlab, node_subs: &[BTreeSet<NodeSub>]) {
+        self.hosted.clear();
+        self.hosted.extend(node_subs.iter().map(BTreeSet::len));
+        self.recs.clear();
+        self.sub_running = 0;
+        self.sub_migrating = 0;
+        self.remaining_ok = true;
+        for rec in jobs.slots.iter().filter(|r| r.live) {
+            let mut not_done = 0;
+            for s in &rec.state {
+                match s {
+                    SubState::Running { .. } => {
+                        self.sub_running += 1;
+                        not_done += 1;
+                    }
+                    SubState::Migrating { .. } => {
+                        self.sub_migrating += 1;
+                        not_done += 1;
+                    }
+                    SubState::Recovering { rec: r, .. } => {
+                        self.recs.push(*r);
+                        not_done += 1;
+                    }
+                    SubState::Done => {}
+                }
+            }
+            // a queued (never-placed) job has no states yet: remaining 0
+            if rec.remaining != not_done {
+                self.remaining_ok = false;
+            }
+        }
+        self.recs.sort_unstable();
+        self.recs.dedup();
+        self.distinct_recs = self.recs.len();
+        self.stale_node_subs = 0;
+        for (v, set) in node_subs.iter().enumerate() {
+            for &(arrival, sub, slot) in set {
+                let ok = jobs.slots.get(slot as usize).is_some_and(|r| {
+                    r.live
+                        && r.arrival == arrival
+                        && r.host.get(sub as usize) == Some(&NodeId(v))
+                        && r.state.get(sub as usize) != Some(&SubState::Done)
+                });
+                if !ok {
+                    self.stale_node_subs += 1;
+                }
+            }
+        }
+    }
 }
 
 /// Generation-checked handle into the [`JobSlab`]. A slot's generation
@@ -488,6 +863,7 @@ pub struct FleetScratch {
     node_subs: Vec<BTreeSet<NodeSub>>,
     scan: Vec<NodeSub>,
     predicted: Vec<bool>,
+    derive: Derive,
 }
 
 impl FleetScratch {
@@ -500,6 +876,7 @@ impl FleetScratch {
             node_subs: Vec::new(),
             scan: Vec::new(),
             predicted: Vec::new(),
+            derive: Derive::default(),
         }
     }
 }
@@ -510,8 +887,12 @@ impl Default for FleetScratch {
     }
 }
 
-struct System<'a> {
+struct System<'a, O: FleetObserver> {
     spec: &'a FleetSpec,
+    /// The observer hook (the unit observer on the unobserved path).
+    obs: &'a mut O,
+    /// Derived-view buffers; touched only when `O::ENABLED`.
+    derive: Derive,
     jobs: JobSlab,
     /// FIFO of jobs awaiting placement (head-of-line blocking by design:
     /// placement order is part of the determinism contract).
@@ -551,7 +932,7 @@ struct System<'a> {
     peak_rec: usize,
 }
 
-impl System<'_> {
+impl<O: FleetObserver> System<'_, O> {
     /// Integrate the running-slot fraction over `[last_t, now)` into the
     /// time-weighted accumulator. Zero-duration intervals carry no mass
     /// (the accumulator's documented edge contract). The denominator is
@@ -668,11 +1049,94 @@ impl System<'_> {
     }
 }
 
-impl Scenario for System<'_> {
-    type Msg = Ev;
+/// Project the private event onto its public observer label. The
+/// post-state flags (`job_completed`, `landed`) are patched in afterwards
+/// from counter deltas.
+fn ev_kind(ev: &Ev) -> FleetEv {
+    match ev {
+        Ev::Arrival { job } => FleetEv::Arrival { job: *job as u32 },
+        Ev::Doom { node, predictable, .. } => {
+            FleetEv::Doom { node: node.0 as u32, predictable: *predictable }
+        }
+        Ev::Prediction { node } => FleetEv::Prediction { node: node.0 as u32 },
+        Ev::Failure { node } => FleetEv::Failure { node: node.0 as u32 },
+        Ev::Repair { node } => FleetEv::Repair { node: node.0 as u32 },
+        Ev::MigrationDone { job, sub, to } => FleetEv::MigrationDone {
+            slot: job.slot,
+            sub: *sub as u32,
+            to: to.0 as u32,
+            landed: false,
+        },
+        Ev::RecoveryDone { job, rec } => {
+            FleetEv::RecoveryDone { slot: job.slot, rec: *rec as u32 }
+        }
+        Ev::SubDone { job, sub } => {
+            FleetEv::SubDone { slot: job.slot, sub: *sub as u32, job_completed: false }
+        }
+    }
+}
 
-    fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, Ev>, ev: Ev) {
-        self.tick(ctx.now());
+impl<O: FleetObserver> System<'_, O> {
+    /// Refresh the derived view and notify the observer (enabled path
+    /// only — `observe` is never reached when `O::ENABLED` is false).
+    fn observe(&mut self, now: SimTime, ev: FleetEv) {
+        self.derive.refresh(&self.jobs, &self.node_subs);
+        let view = FleetView {
+            now,
+            n_subs: self.spec.job.n_subs,
+            capacity: self.spec.capacity,
+            arrived: self.arrived,
+            completed: self.completed,
+            live_jobs: self.jobs.live,
+            queued: self.queue.len(),
+            running: self.running,
+            migr_inflight: self.migr_inflight,
+            rec_inflight: self.rec_inflight,
+            occupancy: &self.placement.occupancy,
+            doomed: &self.placement.doomed,
+            hosted: &self.derive.hosted,
+            sub_running: self.derive.sub_running,
+            sub_migrating: self.derive.sub_migrating,
+            distinct_recs: self.derive.distinct_recs,
+            remaining_ok: self.derive.remaining_ok,
+            stale_node_subs: self.derive.stale_node_subs,
+        };
+        self.obs.after_event(ev, &view);
+    }
+
+    /// Final observer callback after the trial's closing tick.
+    fn observe_end(&mut self, now: SimTime, hit_horizon: bool) {
+        if !O::ENABLED {
+            return;
+        }
+        self.derive.refresh(&self.jobs, &self.node_subs);
+        let view = FleetView {
+            now,
+            n_subs: self.spec.job.n_subs,
+            capacity: self.spec.capacity,
+            arrived: self.arrived,
+            completed: self.completed,
+            live_jobs: self.jobs.live,
+            queued: self.queue.len(),
+            running: self.running,
+            migr_inflight: self.migr_inflight,
+            rec_inflight: self.rec_inflight,
+            occupancy: &self.placement.occupancy,
+            doomed: &self.placement.doomed,
+            hosted: &self.derive.hosted,
+            sub_running: self.derive.sub_running,
+            sub_migrating: self.derive.sub_migrating,
+            distinct_recs: self.derive.distinct_recs,
+            remaining_ok: self.derive.remaining_ok,
+            stale_node_subs: self.derive.stale_node_subs,
+        };
+        self.obs.at_end(&view, hit_horizon);
+    }
+
+    /// Dispatch one event — the event-loop body, observer-free. Early
+    /// returns here (absorbed strikes, stale handles) still reach the
+    /// observer: `on_msg` wraps this call.
+    fn handle(&mut self, ctx: &mut Ctx<'_, '_, Ev>, ev: Ev) {
         let now = ctx.now();
         let me = ctx.me();
         match ev {
@@ -896,7 +1360,17 @@ impl Scenario for System<'_> {
                         let remaining = rec.remaining;
                         let arrived_at = rec.arrived_at;
                         self.running -= 1;
-                        self.placement.dec(host);
+                        // vopr self-test fault LeakSlot: keep the freed
+                        // slot counted in the placement index — the
+                        // bookkeeping-agreement checker must fire on this
+                        // very event
+                        #[cfg(any(test, feature = "vopr-selftest"))]
+                        let leak = self.spec.fault == Some(InjectedFault::LeakSlot);
+                        #[cfg(not(any(test, feature = "vopr-selftest")))]
+                        let leak = false;
+                        if !leak {
+                            self.placement.dec(host);
+                        }
                         self.node_subs[host.0].remove(&(arrival, sub as u32, job.slot));
                         if remaining == 0 {
                             self.completed += 1;
@@ -906,7 +1380,16 @@ impl Scenario for System<'_> {
                             self.slowdowns.push(elapsed / cfg.compute_s);
                             self.last_completion = now;
                             self.jobs.retire(job);
-                            self.drain_queue(ctx);
+                            // vopr self-test fault SkipRequeue: never offer
+                            // the freed slots to the wait queue — the
+                            // queue-progress checker must fire
+                            #[cfg(any(test, feature = "vopr-selftest"))]
+                            let skip = self.spec.fault == Some(InjectedFault::SkipRequeue);
+                            #[cfg(not(any(test, feature = "vopr-selftest")))]
+                            let skip = false;
+                            if !skip {
+                                self.drain_queue(ctx);
+                            }
                         }
                     }
                     // else: a stale completion from before a migration —
@@ -914,6 +1397,32 @@ impl Scenario for System<'_> {
                 }
             }
         }
+    }
+}
+
+impl<O: FleetObserver> Scenario for System<'_, O> {
+    type Msg = Ev;
+
+    fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, Ev>, ev: Ev) {
+        self.tick(ctx.now());
+        if !O::ENABLED {
+            self.handle(ctx, ev);
+            return;
+        }
+        let mut kind = ev_kind(&ev);
+        let (pre_completed, pre_migrations) = (self.completed, self.migrations);
+        self.handle(ctx, ev);
+        // post-state flags from counter deltas, so `handle` stays verbatim
+        match &mut kind {
+            FleetEv::SubDone { job_completed, .. } => {
+                *job_completed = self.completed > pre_completed;
+            }
+            FleetEv::MigrationDone { landed, .. } => {
+                *landed = self.migrations > pre_migrations;
+            }
+            _ => {}
+        }
+        self.observe(ctx.now(), kind);
     }
 }
 
@@ -925,16 +1434,16 @@ pub fn run_fleet(spec: &FleetSpec, seed: u64) -> FleetOutcome {
 /// [`run_fleet`] on recycled trial allocations — bit-identical results; a
 /// sweep worker threads one [`FleetScratch`] through its chunk of trials.
 pub fn run_fleet_scratch(spec: &FleetSpec, seed: u64, scratch: &mut FleetScratch) -> FleetOutcome {
-    assert!(spec.job.n_subs > 0, "fleet jobs need at least one sub-job");
-    assert!(spec.capacity > 0, "fleet nodes need at least one slot");
-    let n = spec.topo.len();
-    // Stream discipline (the degenerate-equivalence contract): the harness
-    // stream forks off the root *first*, then the root serves exactly one
-    // predictability draw per churn event in plan order — run_live's exact
-    // sequence. Arrivals and churn plans use salted side streams that
-    // never touch the root.
-    let mut root = Rng::new(seed);
-    let harness_rng = root.fork(1);
+    run_fleet_observed(spec, seed, scratch, &mut ())
+}
+
+/// The trial's arrival times, materialized: the exact sorted in-horizon
+/// list the run schedules, whether the spec traces them or draws them from
+/// the Poisson side stream. Substituting them back as
+/// [`ArrivalSpec::Trace`] leaves the trial bit-identical (the arrival
+/// stream is salted off to the side and feeds nothing else) — which is how
+/// the vopr shrinker turns a rate into a shrinkable list.
+pub fn sample_arrivals(spec: &FleetSpec, seed: u64) -> Vec<f64> {
     let mut at_s: Vec<f64> = match &spec.arrivals {
         ArrivalSpec::Trace { at_s } => {
             at_s.iter().copied().filter(|&t| t < spec.horizon_s).collect()
@@ -954,6 +1463,31 @@ pub fn run_fleet_scratch(spec: &FleetSpec, seed: u64, scratch: &mut FleetScratch
         }
     };
     at_s.sort_by(f64::total_cmp);
+    at_s
+}
+
+/// [`run_fleet_scratch`] with a [`FleetObserver`] wired into the event
+/// loop (the vopr invariant checkers ride this). With the unit observer
+/// this *is* `run_fleet_scratch` — same monomorphized body, same bytes
+/// out; an observer cannot perturb the run (no draws, no events), only
+/// watch it.
+pub fn run_fleet_observed<O: FleetObserver>(
+    spec: &FleetSpec,
+    seed: u64,
+    scratch: &mut FleetScratch,
+    obs: &mut O,
+) -> FleetOutcome {
+    assert!(spec.job.n_subs > 0, "fleet jobs need at least one sub-job");
+    assert!(spec.capacity > 0, "fleet nodes need at least one slot");
+    let n = spec.topo.len();
+    // Stream discipline (the degenerate-equivalence contract): the harness
+    // stream forks off the root *first*, then the root serves exactly one
+    // predictability draw per churn event in plan order — run_live's exact
+    // sequence. Arrivals and churn plans use salted side streams that
+    // never touch the root.
+    let mut root = Rng::new(seed);
+    let harness_rng = root.fork(1);
+    let at_s = sample_arrivals(spec, seed);
     let (plan, repair_s) = match &spec.churn {
         ChurnSpec::Plan(p) => (p.clone(), None),
         ChurnSpec::PerNode { process, window_s, repair_s } => {
@@ -988,8 +1522,11 @@ pub fn run_fleet_scratch(spec: &FleetSpec, seed: u64, scratch: &mut FleetScratch
     let mut predicted = std::mem::take(&mut scratch.predicted);
     predicted.clear();
     predicted.resize(n, false);
+    let derive = std::mem::take(&mut scratch.derive);
     let system = System {
         spec,
+        obs,
+        derive,
         jobs,
         queue,
         placement,
@@ -1030,9 +1567,12 @@ pub fn run_fleet_scratch(spec: &FleetSpec, seed: u64, scratch: &mut FleetScratch
     let (fin, sim) = h.run_until_reclaim(horizon);
     scratch.sim = sim;
     let events = fin.events;
+    // the queue drained before the horizon ⇔ the trial went quiescent
+    let hit_horizon = fin.end == horizon;
     let mut system = fin.into_scenario();
     // integrate the idle tail so utilization covers the whole horizon
     system.tick(horizon);
+    system.observe_end(horizon, hit_horizon);
 
     let slot_s = spec.horizon_s * (n * spec.capacity) as f64;
     let (mean_slowdown, p95_slowdown) = if system.slowdowns.count() > 0 {
@@ -1066,6 +1606,7 @@ pub fn run_fleet_scratch(spec: &FleetSpec, seed: u64, scratch: &mut FleetScratch
     scratch.node_subs = system.node_subs;
     scratch.scan = system.scan;
     scratch.predicted = system.predicted;
+    scratch.derive = system.derive;
     outcome
 }
 

@@ -34,18 +34,35 @@
 //! production regime the paper's discussion points at (DESIGN.md §Fleet
 //! simulator).
 //!
+//! [`vopr`] closes the loop on correctness: a VOPR-style chaos explorer
+//! that random-walks `FleetSpec`/`ScenarioSpec` space across seeds,
+//! checks invariants continuously through the zero-cost
+//! [`FleetObserver`](fleet::FleetObserver) hook (job conservation,
+//! capacity bounds, bookkeeping agreement, queue progress, monotone
+//! time, termination), and greedily shrinks any failing `(spec, seed)`
+//! pair into a copy-pasteable repro (DESIGN.md §VOPR explorer).
+//!
 //! [`FailureProcess`]: crate::failure::injector::FailureProcess
 
 pub mod batch;
 pub mod fleet;
 pub mod spec;
 pub mod sweep;
+pub mod vopr;
 
 pub use batch::{
     default_threads, parallel_map_trials, parallel_map_trials_scratch, run_batch, thread_policy,
     BatchCfg, BatchOutcome,
 };
 pub use crate::coordinator::livesim::LiveScratch;
-pub use fleet::{run_fleet, ArrivalSpec, ChurnSpec, FleetMetric, FleetOutcome, FleetSpec};
+pub use fleet::{
+    run_fleet, run_fleet_observed, run_fleet_scratch, sample_arrivals, ArrivalSpec, ChurnSpec,
+    FleetEv, FleetMetric, FleetObserver, FleetOutcome, FleetScratch, FleetSpec, FleetView,
+    SpecError,
+};
 pub use spec::{FailureRegime, ScenarioSpec};
 pub use sweep::{run_sweep, CellKind, CellSpec, SweepSpec};
+pub use vopr::{
+    decode_walk, default_invariants, encode_walk, explore, run_repro, shrink_fleet, ExploreReport,
+    Invariant, InvariantObserver, Violation, VoprCfg, WalkSpec,
+};

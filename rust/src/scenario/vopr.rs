@@ -1,0 +1,1718 @@
+//! VOPR-style chaos explorer: randomized spec/seed walks over the fleet
+//! simulator with continuous invariant checking and automatic shrinking.
+//!
+//! `run_fleet(spec, seed)` is a pure function of its arguments, which is
+//! exactly the precondition for FoundationDB/TigerBeetle-style
+//! deterministic simulation testing (SNIPPETS.md §kimberlite-sim): pick a
+//! seed, sample a whole cluster scenario from it, run it, and check
+//! invariants *continuously* — after every dispatched event, not just at
+//! trial end. A violation yields a perfectly reproducible `(spec, seed)`
+//! pair, which the shrinker then minimizes dimension-by-dimension (nodes,
+//! arrivals, horizon, churn, capacity, sub-jobs) into a small repro,
+//! printed as a copy-pasteable `biomaft vopr --repro ...` command plus the
+//! last-N-events trace window before the violation.
+//!
+//! The pieces:
+//!
+//! * **Generator** — [`gen_walk`] samples a [`WalkSpec`] (a full
+//!   [`FleetSpec`] lifetime, or a single-job [`ScenarioSpec`] episode
+//!   under one of the multi-failure regimes) from a per-walk seeded
+//!   stream. Every generated fleet passes [`FleetSpec::validate`] — the
+//!   same validation layer the `biomaft fleet` CLI uses, so walks can
+//!   never be vacuously invalid.
+//! * **Invariants** — the [`Invariant`] trait plus the default checkers
+//!   ([`default_invariants`]): job conservation, capacity bounds,
+//!   placement-index/slab/per-node-list agreement, wait-queue progress,
+//!   monotone virtual time, and termination of in-flight recovery work.
+//!   They ride the [`FleetObserver`] hook, which is compiled out of the
+//!   unobserved path entirely — the byte-identical determinism contract
+//!   and the hot-path performance of `run_fleet` are untouched.
+//! * **Shrinker** — [`shrink_fleet`] greedily re-runs the deterministic
+//!   failure while shrinking one dimension at a time (Poisson arrivals are
+//!   first materialized into an explicit trace via
+//!   [`sample_arrivals`], a bit-identical substitution), accepting a step
+//!   only when the *same* invariant still fails, until no tried move
+//!   shrinks further (a greedy local minimum) or the rerun budget is
+//!   spent.
+//! * **Codec** — [`encode_walk`]/[`decode_walk`] round-trip a walk spec
+//!   through a one-line string with `f64`s as exact bit patterns, so a
+//!   repro pasted from CI replays the identical trajectory.
+//! * **Self-test** — `FleetSpec::fault` (an `InjectedFault`, which exists
+//!   only under `cfg(any(test, feature = "vopr-selftest"))`) deliberately
+//!   corrupts one transition; tests prove each checker actually fires and
+//!   the shrinker converges to a small repro.
+//!
+//! Episodes have no shrinker: a [`ScenarioSpec`] runs exactly one job, so
+//! a failing episode is already minimal — the repro command replays it
+//! as-is.
+
+use crate::checkpoint::CheckpointStrategy;
+use crate::coordinator::ftmanager::Strategy;
+use crate::failure::injector::{FailureEvent, FailurePlan, FailureProcess};
+use crate::net::{NodeId, Topology};
+use crate::scenario::batch::{parallel_map_trials_scratch, thread_policy};
+use crate::scenario::fleet::{
+    run_fleet_observed, sample_arrivals, ArrivalSpec, ChurnSpec, FleetEv, FleetObserver,
+    FleetOutcome, FleetScratch, FleetSpec, FleetView,
+};
+use crate::scenario::spec::{FailureRegime, ScenarioSpec};
+use crate::sim::{Rng, SimTime};
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+
+#[cfg(any(test, feature = "vopr-selftest"))]
+use crate::scenario::fleet::InjectedFault;
+
+/// Hard ceiling on shrinker reruns per failure.
+const MAX_RERUNS: usize = 500;
+
+/// Absolute slack for floating-point outcome bounds.
+const EPS: f64 = 1e-9;
+
+/// Configuration of one exploration run.
+#[derive(Debug, Clone)]
+pub struct VoprCfg {
+    /// Number of independent (spec, seed) walks.
+    pub walks: usize,
+    /// Root seed; every walk derives its own generator and trial seed from
+    /// `(base_seed, walk index)`, so runs are reproducible and walk
+    /// results are independent of the thread count.
+    pub base_seed: u64,
+    /// Largest generated fleet (nodes).
+    pub max_nodes: usize,
+    /// Cap on expected arrivals per generated fleet lifetime.
+    pub max_arrivals: usize,
+    /// Events kept in the pre-violation trace window.
+    pub trace_window: usize,
+    /// Worker threads (`None` ⇒ all cores); output is identical at any
+    /// value.
+    pub threads: Option<usize>,
+    /// Arm the deliberate corruption on every generated fleet — the
+    /// self-test hook proving the checkers fire and the shrinker
+    /// converges. Compiled out of normal builds.
+    #[cfg(any(test, feature = "vopr-selftest"))]
+    pub fault: Option<InjectedFault>,
+}
+
+impl Default for VoprCfg {
+    fn default() -> Self {
+        Self {
+            walks: 1000,
+            base_seed: 2014,
+            max_nodes: 64,
+            max_arrivals: 2000,
+            trace_window: 32,
+            threads: None,
+            #[cfg(any(test, feature = "vopr-selftest"))]
+            fault: None,
+        }
+    }
+}
+
+/// One sampled point in spec space: a whole fleet lifetime or a single-job
+/// scenario episode.
+#[derive(Debug, Clone)]
+pub enum WalkSpec {
+    Fleet(FleetSpec),
+    Episode(ScenarioSpec),
+}
+
+/// One entry of the pre-violation trace window.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEntry {
+    /// 1-based dispatch index of the event within the trial.
+    pub index: u64,
+    /// Virtual time of the event in seconds.
+    pub at_s: f64,
+    pub ev: FleetEv,
+}
+
+/// A checked invariant that failed, with the window of events leading up
+/// to it.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Name of the failed checker (stable; the shrinker matches on it).
+    pub invariant: &'static str,
+    /// Human-readable account of the disagreement.
+    pub detail: String,
+    /// Virtual time of the violating event in seconds.
+    pub at_s: f64,
+    /// Dispatch index of the violating event (0 for outcome-level checks
+    /// of an episode).
+    pub event_index: u64,
+    /// Last events before (and including) the violation, oldest first.
+    pub trace: Vec<TraceEntry>,
+}
+
+// ---------------------------------------------------------------------------
+// Invariants
+
+/// A continuously-checked fleet invariant. `check` runs after every
+/// dispatched event with the post-state [`FleetView`]; `at_end` runs once
+/// after the final tick. Checkers are cheap pure reads — they see the
+/// view, never the system — so a passing trial is bit-identical with and
+/// without them.
+pub trait Invariant {
+    /// Stable name, used in reports and by the shrinker's oracle.
+    fn name(&self) -> &'static str;
+    /// Check the post-state of one event.
+    fn check(&mut self, ev: &FleetEv, view: &FleetView<'_>) -> Result<(), String>;
+    /// Check the final state. `hit_horizon` is false when the event queue
+    /// drained (quiescence) before the horizon.
+    fn at_end(&mut self, view: &FleetView<'_>, hit_horizon: bool) -> Result<(), String> {
+        let _ = (view, hit_horizon);
+        Ok(())
+    }
+}
+
+/// No job is ever lost or double-counted: every arrival is either
+/// completed or live (placed or queued), at all times.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct JobConservation;
+
+impl JobConservation {
+    fn check_view(view: &FleetView<'_>) -> Result<(), String> {
+        if view.arrived != view.completed + view.live_jobs {
+            return Err(format!(
+                "arrived {} != completed {} + live {}",
+                view.arrived, view.completed, view.live_jobs
+            ));
+        }
+        if view.queued > view.live_jobs {
+            return Err(format!("queued {} > live jobs {}", view.queued, view.live_jobs));
+        }
+        Ok(())
+    }
+}
+
+impl Invariant for JobConservation {
+    fn name(&self) -> &'static str {
+        "job-conservation"
+    }
+    fn check(&mut self, _ev: &FleetEv, view: &FleetView<'_>) -> Result<(), String> {
+        Self::check_view(view)
+    }
+    fn at_end(&mut self, view: &FleetView<'_>, _hit_horizon: bool) -> Result<(), String> {
+        Self::check_view(view)
+    }
+}
+
+/// Placement never overfills a node and the cluster never runs more subs
+/// than it has slots — goodput ≤ capacity at the bookkeeping level.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CapacityBound;
+
+impl CapacityBound {
+    fn check_view(view: &FleetView<'_>) -> Result<(), String> {
+        for (v, &o) in view.occupancy.iter().enumerate() {
+            if o > view.capacity {
+                return Err(format!(
+                    "node {v} occupancy {o} > capacity {}",
+                    view.capacity
+                ));
+            }
+        }
+        let slots = view.occupancy.len() * view.capacity;
+        if view.running > slots {
+            return Err(format!("running subs {} > cluster slots {slots}", view.running));
+        }
+        Ok(())
+    }
+}
+
+impl Invariant for CapacityBound {
+    fn name(&self) -> &'static str {
+        "capacity-bound"
+    }
+    fn check(&mut self, _ev: &FleetEv, view: &FleetView<'_>) -> Result<(), String> {
+        Self::check_view(view)
+    }
+    fn at_end(&mut self, view: &FleetView<'_>, _hit_horizon: bool) -> Result<(), String> {
+        Self::check_view(view)
+    }
+}
+
+/// The three independent bookkeeping structures — placement index, job
+/// slab, per-node sub lists — agree on every fact they share.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BookkeepingAgreement;
+
+impl BookkeepingAgreement {
+    fn check_view(view: &FleetView<'_>) -> Result<(), String> {
+        for (v, (&occ, &hosted)) in view.occupancy.iter().zip(view.hosted).enumerate() {
+            if occ != hosted {
+                return Err(format!(
+                    "node {v}: placement index says {occ} occupied, per-node list says {hosted}"
+                ));
+            }
+        }
+        if view.sub_running != view.running {
+            return Err(format!(
+                "slab counts {} running subs, counter says {}",
+                view.sub_running, view.running
+            ));
+        }
+        if view.sub_migrating != view.migr_inflight {
+            return Err(format!(
+                "slab counts {} migrating subs, counter says {}",
+                view.sub_migrating, view.migr_inflight
+            ));
+        }
+        if view.distinct_recs != view.rec_inflight {
+            return Err(format!(
+                "slab holds {} distinct recovery groups, counter says {}",
+                view.distinct_recs, view.rec_inflight
+            ));
+        }
+        if !view.remaining_ok {
+            return Err("a live job's `remaining` disagrees with its non-Done sub count".into());
+        }
+        if view.stale_node_subs > 0 {
+            return Err(format!(
+                "{} per-node list entries point at dead or moved subs",
+                view.stale_node_subs
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Invariant for BookkeepingAgreement {
+    fn name(&self) -> &'static str {
+        "bookkeeping-agreement"
+    }
+    fn check(&mut self, _ev: &FleetEv, view: &FleetView<'_>) -> Result<(), String> {
+        Self::check_view(view)
+    }
+    fn at_end(&mut self, view: &FleetView<'_>, _hit_horizon: bool) -> Result<(), String> {
+        Self::check_view(view)
+    }
+}
+
+/// The wait queue makes progress: immediately after the events that drain
+/// it (a job-completing `SubDone`, a `Repair`), a non-empty queue implies
+/// its all-or-nothing head genuinely does not fit the free healthy slots.
+/// (Other events may legitimately free capacity without a drain — the next
+/// drain point picks it up — so only drain points are checked, plus
+/// quiescence.)
+#[derive(Debug, Default, Clone, Copy)]
+pub struct QueueProgress;
+
+impl QueueProgress {
+    fn head_must_not_fit(view: &FleetView<'_>) -> Result<(), String> {
+        if view.queued == 0 {
+            return Ok(());
+        }
+        let free: usize = view
+            .occupancy
+            .iter()
+            .zip(view.doomed)
+            .filter(|&(_, &down)| !down)
+            .map(|(&o, _)| view.capacity.saturating_sub(o))
+            .sum();
+        if free >= view.n_subs {
+            return Err(format!(
+                "{} jobs queued but {free} free healthy slots fit a {}-sub job",
+                view.queued, view.n_subs
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Invariant for QueueProgress {
+    fn name(&self) -> &'static str {
+        "queue-progress"
+    }
+    fn check(&mut self, ev: &FleetEv, view: &FleetView<'_>) -> Result<(), String> {
+        let drain_point = matches!(
+            ev,
+            FleetEv::SubDone { job_completed: true, .. } | FleetEv::Repair { .. }
+        );
+        if !drain_point {
+            return Ok(());
+        }
+        Self::head_must_not_fit(view)
+    }
+    fn at_end(&mut self, view: &FleetView<'_>, hit_horizon: bool) -> Result<(), String> {
+        if hit_horizon {
+            return Ok(());
+        }
+        Self::head_must_not_fit(view)
+    }
+}
+
+/// Virtual time never runs backwards across dispatched events.
+#[derive(Debug, Default)]
+pub struct MonotoneTime {
+    last_ns: u64,
+}
+
+impl Invariant for MonotoneTime {
+    fn name(&self) -> &'static str {
+        "monotone-time"
+    }
+    fn check(&mut self, _ev: &FleetEv, view: &FleetView<'_>) -> Result<(), String> {
+        let now = view.now.0;
+        if now < self.last_ns {
+            return Err(format!(
+                "time ran backwards: {} ns after {} ns",
+                now, self.last_ns
+            ));
+        }
+        self.last_ns = now;
+        Ok(())
+    }
+}
+
+/// Every migration and rollback recovery terminates: if the event queue
+/// drains before the horizon, nothing may still be in flight.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Termination;
+
+impl Invariant for Termination {
+    fn name(&self) -> &'static str {
+        "termination"
+    }
+    fn check(&mut self, _ev: &FleetEv, _view: &FleetView<'_>) -> Result<(), String> {
+        Ok(())
+    }
+    fn at_end(&mut self, view: &FleetView<'_>, hit_horizon: bool) -> Result<(), String> {
+        if !hit_horizon && (view.migr_inflight > 0 || view.rec_inflight > 0) {
+            return Err(format!(
+                "quiescent before the horizon with {} migrations and {} recoveries in flight",
+                view.migr_inflight, view.rec_inflight
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The full default checker set, fresh state per trial. Order matters
+/// mildly: structural checkers run before derived ones so the first
+/// reported violation is the most primitive disagreement.
+pub fn default_invariants() -> Vec<Box<dyn Invariant>> {
+    vec![
+        Box::new(MonotoneTime::default()),
+        Box::new(JobConservation),
+        Box::new(CapacityBound),
+        Box::new(BookkeepingAgreement),
+        Box::new(QueueProgress),
+        Box::new(Termination),
+    ]
+}
+
+/// The [`FleetObserver`] that drives a checker set and keeps the rolling
+/// pre-violation trace window. Records the *first* violation only — once
+/// one checker disagrees the derived state is suspect, so later reports
+/// would be noise.
+pub struct InvariantObserver {
+    checkers: Vec<Box<dyn Invariant>>,
+    window: usize,
+    ring: VecDeque<TraceEntry>,
+    events: u64,
+    violation: Option<Violation>,
+}
+
+impl InvariantObserver {
+    /// The default checker set with a trace window of `window` events
+    /// (clamped to ≥ 1).
+    pub fn new(window: usize) -> Self {
+        Self::with_checkers(default_invariants(), window)
+    }
+
+    pub fn with_checkers(checkers: Vec<Box<dyn Invariant>>, window: usize) -> Self {
+        Self {
+            checkers,
+            window: window.max(1),
+            ring: VecDeque::new(),
+            events: 0,
+            violation: None,
+        }
+    }
+
+    /// The first violation, if any checker fired so far.
+    pub fn violation(&self) -> Option<&Violation> {
+        self.violation.as_ref()
+    }
+
+    /// Events observed so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Tear down into the violation (if any) and the final trace window.
+    pub fn finish(self) -> (Option<Violation>, Vec<TraceEntry>) {
+        (self.violation, self.ring.into_iter().collect())
+    }
+
+    fn record(&mut self, invariant: &'static str, detail: String, at_s: f64) {
+        self.violation = Some(Violation {
+            invariant,
+            detail,
+            at_s,
+            event_index: self.events,
+            trace: self.ring.iter().copied().collect(),
+        });
+    }
+}
+
+impl FleetObserver for InvariantObserver {
+    fn after_event(&mut self, ev: FleetEv, view: &FleetView<'_>) {
+        self.events += 1;
+        if self.ring.len() == self.window {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(TraceEntry { index: self.events, at_s: view.now.as_secs(), ev });
+        if self.violation.is_some() {
+            return;
+        }
+        let hit = self.checkers.iter_mut().find_map(|c| match c.check(&ev, view) {
+            Err(detail) => Some((c.name(), detail)),
+            Ok(()) => None,
+        });
+        if let Some((name, detail)) = hit {
+            self.record(name, detail, view.now.as_secs());
+        }
+    }
+
+    fn at_end(&mut self, view: &FleetView<'_>, hit_horizon: bool) {
+        if self.violation.is_some() {
+            return;
+        }
+        let hit = self.checkers.iter_mut().find_map(|c| match c.at_end(view, hit_horizon) {
+            Err(detail) => Some((c.name(), detail)),
+            Ok(()) => None,
+        });
+        if let Some((name, detail)) = hit {
+            self.record(name, detail, view.now.as_secs());
+        }
+    }
+}
+
+/// Outcome-level sanity bounds checked after a clean event loop: the
+/// aggregate metrics must respect their own definitions.
+fn check_fleet_outcome(
+    spec: &FleetSpec,
+    o: &FleetOutcome,
+) -> Result<(), (&'static str, String)> {
+    if !(o.goodput_ratio.is_nan() || o.goodput_ratio <= 1.0 + EPS) {
+        return Err((
+            "goodput-bound",
+            format!("goodput ratio {} exceeds cluster capacity", o.goodput_ratio),
+        ));
+    }
+    if !(o.utilization.is_nan() || (-EPS..=1.0 + EPS).contains(&o.utilization)) {
+        return Err((
+            "utilization-bound",
+            format!("utilization {} outside [0, 1]", o.utilization),
+        ));
+    }
+    if !(o.mean_slowdown.is_nan() || o.mean_slowdown >= 1.0 - EPS) {
+        return Err((
+            "slowdown-floor",
+            format!("mean slowdown {} below 1 (faster than nominal)", o.mean_slowdown),
+        ));
+    }
+    if o.last_completion_s > spec.horizon_s + EPS {
+        return Err((
+            "completion-past-horizon",
+            format!(
+                "last completion at {} s past the {} s horizon",
+                o.last_completion_s, spec.horizon_s
+            ),
+        ));
+    }
+    if o.jobs_completed > o.jobs_arrived {
+        return Err((
+            "outcome-conservation",
+            format!("completed {} > arrived {}", o.jobs_completed, o.jobs_arrived),
+        ));
+    }
+    if o.jobs_waiting > o.jobs_arrived - o.jobs_completed {
+        return Err((
+            "outcome-conservation",
+            format!(
+                "waiting {} > arrived {} - completed {}",
+                o.jobs_waiting, o.jobs_arrived, o.jobs_completed
+            ),
+        ));
+    }
+    if o.peak_live_jobs > o.jobs_arrived {
+        return Err((
+            "outcome-conservation",
+            format!("peak live {} > arrived {}", o.peak_live_jobs, o.jobs_arrived),
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Generator
+
+fn walk_rng(base_seed: u64, walk: u64) -> Rng {
+    Rng::new(base_seed ^ walk.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17))
+}
+
+/// Sample walk `walk`'s spec and trial seed. Pure in `(cfg, walk)`: the
+/// explorer calls this from worker threads, so walk results are keyed by
+/// index and independent of the thread count.
+pub fn gen_walk(cfg: &VoprCfg, walk: u64) -> (WalkSpec, u64) {
+    let mut rng = walk_rng(cfg.base_seed, walk);
+    let seed = rng.next_u64();
+    let spec = if rng.chance(0.25) {
+        WalkSpec::Episode(gen_episode(&mut rng))
+    } else {
+        WalkSpec::Fleet(gen_fleet(&mut rng, cfg))
+    };
+    (spec, seed)
+}
+
+const STRATEGIES: [Strategy; 4] = [
+    Strategy::Agent,
+    Strategy::Core,
+    Strategy::Hybrid,
+    Strategy::Checkpoint(CheckpointStrategy::CentralSingle),
+];
+
+fn gen_fleet(rng: &mut Rng, cfg: &VoprCfg) -> FleetSpec {
+    let strategy = *rng.pick(&STRATEGIES);
+    let nodes = 1 + rng.range_usize(0, cfg.max_nodes.max(1));
+    let mut spec = FleetSpec::placentia_fleet(strategy, nodes, 0.0, 0.0);
+    spec.capacity = 1 + rng.range_usize(0, 4);
+    spec.ckpt_streams = 1 + rng.range_usize(0, 4);
+    spec.job.n_subs = 1 + rng.range_usize(0, 8);
+    spec.job.z = 1 + rng.range_usize(0, 8);
+    spec.job.compute_s = rng.uniform(300.0, 3600.0);
+    spec.job.predictable_frac =
+        if strategy.is_multi_agent() { rng.f64() } else { 0.0 };
+    spec.horizon_s = rng.uniform(1800.0, 4.0 * 3600.0);
+    // Arrival rate scaled against what the cluster can clear, so a good
+    // share of walks saturate — queues are where placement bugs live —
+    // capped so the expected arrival count stays within `max_arrivals`.
+    spec.arrivals = if rng.chance(0.5) {
+        let slots = (nodes * spec.capacity) as f64;
+        let clear_per_h = slots * 3600.0 / (spec.job.n_subs as f64 * spec.job.compute_s);
+        let cap_rate = cfg.max_arrivals.max(1) as f64 / (spec.horizon_s / 3600.0);
+        ArrivalSpec::Poisson { rate_per_h: rng.uniform(0.0, (2.0 * clear_per_h).min(cap_rate)) }
+    } else {
+        let n = rng.range_usize(0, cfg.max_arrivals.max(1) + 1);
+        ArrivalSpec::Trace { at_s: (0..n).map(|_| rng.uniform(0.0, spec.horizon_s)).collect() }
+    };
+    spec.churn = if rng.chance(0.6) {
+        ChurnSpec::PerNode {
+            process: FailureProcess::Poisson { rate_per_window: rng.uniform(0.0, 2.0) },
+            window_s: rng.uniform(600.0, 3600.0),
+            repair_s: rng.uniform(60.0, 1800.0),
+        }
+    } else {
+        // A planned multi-failure regime, built through the same plan
+        // builder the scenario layer uses — concurrent-k, rack-correlated,
+        // or a k-per-window burst. Planned nodes never repair.
+        let windows = (spec.horizon_s / 3600.0).ceil() as usize;
+        let regime = match rng.range_usize(0, 3) {
+            0 => FailureRegime::Single(FailureProcess::RandomUniformK {
+                k: 1 + rng.range_usize(0, 3),
+            }),
+            1 => FailureRegime::ConcurrentK {
+                k: 1 + rng.range_usize(0, 4),
+                offset_s: rng.uniform(0.0, 1800.0),
+                spacing_s: rng.uniform(0.0, 120.0),
+            },
+            _ => FailureRegime::Correlated {
+                primary: FailureProcess::Periodic { offset_s: rng.uniform(0.0, 3600.0) },
+                rack_size: 1 + rng.range_usize(0, 8),
+                p_spread: rng.f64(),
+                lag_s: rng.uniform(0.0, 300.0),
+            },
+        };
+        let probe = ScenarioSpec {
+            cfg: spec.job.clone(),
+            topo: spec.topo.clone(),
+            regime,
+            windows,
+            window_s: 3600.0,
+        };
+        ChurnSpec::Plan(probe.plan(&mut rng.fork(0xC4A0)))
+    };
+    #[cfg(any(test, feature = "vopr-selftest"))]
+    {
+        spec.fault = cfg.fault;
+    }
+    debug_assert!(spec.validate().is_ok());
+    spec
+}
+
+fn gen_episode(rng: &mut Rng) -> ScenarioSpec {
+    let strategy = *rng.pick(&STRATEGIES);
+    let predictable_frac = if strategy.is_multi_agent() { rng.f64() } else { 0.0 };
+    let n_subs = 1 + rng.range_usize(0, 16);
+    let regime = match rng.range_usize(0, 6) {
+        0 => FailureRegime::Single(FailureProcess::Periodic {
+            offset_s: rng.uniform(0.0, 3000.0),
+        }),
+        1 => FailureRegime::Single(FailureProcess::RandomUniform),
+        2 => FailureRegime::Single(FailureProcess::RandomUniformK {
+            k: 1 + rng.range_usize(0, 4),
+        }),
+        3 => FailureRegime::ConcurrentK {
+            k: 1 + rng.range_usize(0, 4),
+            offset_s: rng.uniform(0.0, 1800.0),
+            spacing_s: rng.uniform(0.0, 120.0),
+        },
+        4 => FailureRegime::Correlated {
+            primary: FailureProcess::Periodic { offset_s: rng.uniform(0.0, 3600.0) },
+            rack_size: 1 + rng.range_usize(0, 8),
+            p_spread: rng.f64(),
+            lag_s: rng.uniform(0.0, 300.0),
+        },
+        _ => FailureRegime::Cascade {
+            trigger: FailureProcess::Periodic { offset_s: rng.uniform(0.0, 3600.0) },
+            p_follow: rng.f64(),
+            lag_s: rng.uniform(0.0, 60.0),
+        },
+    };
+    let mut spec = ScenarioSpec::placentia_ring16(strategy, predictable_frac, n_subs, regime);
+    spec.topo = Topology::ring(2 + rng.range_usize(0, 31), 2);
+    spec.windows = 1 + rng.range_usize(0, 3);
+    spec
+}
+
+// ---------------------------------------------------------------------------
+// Walk execution
+
+/// Run one walk under the full checker set. Returns the dispatched event
+/// count and the first violation, if any.
+pub fn run_walk(
+    spec: &WalkSpec,
+    seed: u64,
+    window: usize,
+    scratch: &mut FleetScratch,
+) -> (u64, Option<Violation>) {
+    match spec {
+        WalkSpec::Fleet(f) => {
+            let mut obs = InvariantObserver::new(window);
+            let out = run_fleet_observed(f, seed, scratch, &mut obs);
+            let (violation, ring) = obs.finish();
+            if let Some(v) = violation {
+                return (out.events, Some(v));
+            }
+            if let Err((name, detail)) = check_fleet_outcome(f, &out) {
+                let v = Violation {
+                    invariant: name,
+                    detail,
+                    at_s: f.horizon_s,
+                    event_index: out.events,
+                    trace: ring,
+                };
+                return (out.events, Some(v));
+            }
+            (out.events, None)
+        }
+        WalkSpec::Episode(e) => run_episode(e, seed),
+    }
+}
+
+/// Episode walks: run the single-job scenario twice on the same seed and
+/// hold it to determinism plus basic physics (the job completes, taking at
+/// least its nominal compute time, in a non-empty event trace).
+fn run_episode(spec: &ScenarioSpec, seed: u64) -> (u64, Option<Violation>) {
+    let a = spec.run_trial(seed);
+    let b = spec.run_trial(seed);
+    let mk = |invariant: &'static str, detail: String| Violation {
+        invariant,
+        detail,
+        at_s: a.completed_at_s,
+        event_index: a.events,
+        trace: Vec::new(),
+    };
+    let same = a.events == b.events
+        && a.completed_at_s.to_bits() == b.completed_at_s.to_bits()
+        && a.migrations == b.migrations
+        && a.rollbacks == b.rollbacks
+        && a.lost_then_recovered == b.lost_then_recovered
+        && a.cascades == b.cascades;
+    if !same {
+        let v = mk(
+            "episode-determinism",
+            format!(
+                "two runs of the same (spec, seed) diverged: \
+                 {} vs {} events, completion {} vs {}",
+                a.events, b.events, a.completed_at_s, b.completed_at_s
+            ),
+        );
+        return (a.events, Some(v));
+    }
+    if a.events == 0 {
+        return (a.events, Some(mk("episode-sanity", "trial dispatched no events".into())));
+    }
+    if !(a.completed_at_s.is_finite() && a.completed_at_s >= spec.cfg.compute_s - 1e-6) {
+        let v = mk(
+            "episode-sanity",
+            format!(
+                "completion at {} s beats the {} s nominal compute time",
+                a.completed_at_s, spec.cfg.compute_s
+            ),
+        );
+        return (a.events, Some(v));
+    }
+    (a.events, None)
+}
+
+// ---------------------------------------------------------------------------
+// Explorer
+
+/// A failing walk: the original spec and violation, plus the shrunk repro
+/// when the walk was a fleet (episodes are already minimal).
+#[derive(Debug, Clone)]
+pub struct WalkFailure {
+    /// Index of the first failing walk.
+    pub walk: usize,
+    /// Its trial seed (pass to `--seed` with the repro string).
+    pub seed: u64,
+    pub spec: WalkSpec,
+    pub violation: Violation,
+    pub shrunk: Option<Shrunk>,
+}
+
+/// Result of shrinking a failing fleet spec.
+#[derive(Debug, Clone)]
+pub struct Shrunk {
+    pub spec: FleetSpec,
+    /// The violation as it fires on the shrunk spec (same invariant).
+    pub violation: Violation,
+    /// Deterministic reruns the shrinker spent.
+    pub reruns: usize,
+}
+
+/// Aggregate of one exploration run.
+#[derive(Debug, Clone)]
+pub struct ExploreReport {
+    pub walks: usize,
+    pub fleet_walks: usize,
+    pub episode_walks: usize,
+    /// Dispatched events across all walks.
+    pub total_events: u64,
+    pub threads: usize,
+    /// The first failing walk (lowest index), shrunk if possible.
+    pub failure: Option<WalkFailure>,
+}
+
+impl ExploreReport {
+    pub fn passed(&self) -> bool {
+        self.failure.is_none()
+    }
+
+    /// Render the human-readable report, including the repro command and
+    /// the pre-violation trace window on failure.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "vopr: {} walks ({} fleet, {} episode) on {} threads, {} events dispatched",
+            self.walks, self.fleet_walks, self.episode_walks, self.threads, self.total_events
+        );
+        let Some(f) = &self.failure else {
+            let _ = writeln!(s, "all invariants held");
+            return s;
+        };
+        let _ = writeln!(
+            s,
+            "walk {} (trial seed {:#018x}) violated `{}`:",
+            f.walk, f.seed, f.violation.invariant
+        );
+        let _ = writeln!(s, "  {}", f.violation.detail);
+        let _ = writeln!(s, "  original spec: {}", walk_dims(&f.spec));
+        let (repro_spec, trace_violation) = match &f.shrunk {
+            Some(sh) => {
+                let _ = writeln!(
+                    s,
+                    "  shrunk after {} reruns: {}",
+                    sh.reruns,
+                    fleet_dims(&sh.spec)
+                );
+                let _ = writeln!(s, "  {}", sh.violation.detail);
+                (WalkSpec::Fleet(sh.spec.clone()), &sh.violation)
+            }
+            None => {
+                if matches!(f.spec, WalkSpec::Episode(_)) {
+                    let _ = writeln!(s, "  (episode specs run one job; already minimal)");
+                }
+                (f.spec.clone(), &f.violation)
+            }
+        };
+        render_trace(&mut s, trace_violation);
+        let _ = writeln!(
+            s,
+            "  repro: biomaft vopr --seed {} --repro '{}'",
+            f.seed,
+            encode_walk(&repro_spec)
+        );
+        s
+    }
+}
+
+fn render_trace(s: &mut String, v: &Violation) {
+    if v.trace.is_empty() {
+        return;
+    }
+    let _ = writeln!(
+        s,
+        "  trace (last {} events up to the violation at t={:.3}s, event #{}):",
+        v.trace.len(),
+        v.at_s,
+        v.event_index
+    );
+    for t in &v.trace {
+        let _ = writeln!(s, "    [{:>7}] {:>12.3}s  {}", t.index, t.at_s, t.ev);
+    }
+}
+
+/// One-line dimensional summary of a fleet spec.
+pub fn fleet_dims(spec: &FleetSpec) -> String {
+    let arrivals = match &spec.arrivals {
+        ArrivalSpec::Poisson { rate_per_h } => format!("poisson {rate_per_h:.2}/h"),
+        ArrivalSpec::Trace { at_s } => format!("{} arrivals", at_s.len()),
+    };
+    let churn = match &spec.churn {
+        ChurnSpec::Plan(p) => format!("{} planned failures", p.events.len()),
+        ChurnSpec::PerNode { process: FailureProcess::Poisson { rate_per_window }, .. } => {
+            format!("per-node churn {rate_per_window:.2}/window")
+        }
+        ChurnSpec::PerNode { .. } => "per-node churn".into(),
+    };
+    format!(
+        "{} nodes x {} slots, {}-sub jobs, {arrivals}, {churn}, horizon {:.0}s",
+        spec.topo.len(),
+        spec.capacity,
+        spec.job.n_subs,
+        spec.horizon_s
+    )
+}
+
+/// One-line dimensional summary of a walk spec.
+pub fn walk_dims(spec: &WalkSpec) -> String {
+    match spec {
+        WalkSpec::Fleet(f) => fleet_dims(f),
+        WalkSpec::Episode(e) => {
+            let regime = match &e.regime {
+                FailureRegime::Single(_) => "single",
+                FailureRegime::ConcurrentK { .. } => "concurrent-k",
+                FailureRegime::Correlated { .. } => "correlated",
+                FailureRegime::Cascade { .. } => "cascade",
+            };
+            format!(
+                "episode ({regime}): {} nodes, {}-sub job, {} windows x {:.0}s",
+                e.topo.len(),
+                e.cfg.n_subs,
+                e.windows,
+                e.window_s
+            )
+        }
+    }
+}
+
+/// Random-walk `cfg.walks` (spec, seed) pairs under continuous invariant
+/// checking, shrink the first failure, and report. Deterministic in
+/// `cfg`: walks are keyed by index (not by thread), so the report —
+/// counts, event totals, first failure, shrunk repro — is identical at
+/// any thread count.
+pub fn explore(cfg: &VoprCfg) -> ExploreReport {
+    let threads = thread_policy(cfg.threads, cfg.walks);
+    let walks = parallel_map_trials_scratch(cfg.walks, threads, FleetScratch::new, |scratch, i| {
+        let (spec, seed) = gen_walk(cfg, i as u64);
+        let (events, violation) = run_walk(&spec, seed, cfg.trace_window, scratch);
+        (matches!(spec, WalkSpec::Fleet(_)), events, violation.map(|v| (spec, seed, v)))
+    });
+    let fleet_walks = walks.iter().filter(|w| w.0).count();
+    let total_events: u64 = walks.iter().map(|w| w.1).sum();
+    let first = walks
+        .into_iter()
+        .enumerate()
+        .find_map(|(walk, (_, _, failed))| failed.map(|f| (walk, f)));
+    let failure = first.map(|(walk, (spec, seed, violation))| {
+        let shrunk = match &spec {
+            WalkSpec::Fleet(f) => shrink_fleet(f, seed, cfg.trace_window, violation.invariant),
+            WalkSpec::Episode(_) => None,
+        };
+        WalkFailure { walk, seed, spec, violation, shrunk }
+    });
+    ExploreReport {
+        walks: cfg.walks,
+        fleet_walks,
+        episode_walks: cfg.walks - fleet_walks,
+        total_events,
+        threads,
+        failure,
+    }
+}
+
+/// Decode and replay a repro string against the full checker set; returns
+/// the rendered report and whether the invariant violation reproduced.
+pub fn run_repro(encoded: &str, seed: u64, window: usize) -> Result<(String, bool), String> {
+    let spec = decode_walk(encoded)?;
+    let mut scratch = FleetScratch::new();
+    let (events, violation) = run_walk(&spec, seed, window, &mut scratch);
+    let mut s = String::new();
+    let _ = writeln!(s, "repro: {}", walk_dims(&spec));
+    match &violation {
+        None => {
+            let _ = writeln!(s, "ran clean: {events} events, all invariants held");
+        }
+        Some(v) => {
+            let _ = writeln!(s, "violated `{}`: {}", v.invariant, v.detail);
+            render_trace(&mut s, v);
+        }
+    }
+    Ok((s, violation.is_some()))
+}
+
+// ---------------------------------------------------------------------------
+// Shrinker
+
+struct ShrinkCtx<'a> {
+    seed: u64,
+    window: usize,
+    /// Only steps that reproduce this same invariant are accepted.
+    target: &'a str,
+    scratch: FleetScratch,
+    reruns: usize,
+}
+
+impl ShrinkCtx<'_> {
+    /// Deterministic oracle: does `spec` still violate the target
+    /// invariant on this seed?
+    fn refails(&mut self, spec: &FleetSpec) -> Option<Violation> {
+        if self.reruns >= MAX_RERUNS {
+            return None;
+        }
+        self.reruns += 1;
+        let mut obs = InvariantObserver::new(self.window);
+        let out = run_fleet_observed(spec, self.seed, &mut self.scratch, &mut obs);
+        let (violation, ring) = obs.finish();
+        let violation = violation.or_else(|| match check_fleet_outcome(spec, &out) {
+            Err((name, detail)) => Some(Violation {
+                invariant: name,
+                detail,
+                at_s: spec.horizon_s,
+                event_index: out.events,
+                trace: ring,
+            }),
+            Ok(()) => None,
+        });
+        violation.filter(|v| v.invariant == self.target)
+    }
+}
+
+fn trace_arrivals(spec: &FleetSpec) -> &[f64] {
+    match &spec.arrivals {
+        ArrivalSpec::Trace { at_s } => at_s,
+        ArrivalSpec::Poisson { .. } => &[],
+    }
+}
+
+/// Shrink one integer dimension: try `n/2` then `n-1`, keep stepping while
+/// the target invariant still fires.
+fn shrink_scalar(
+    ctx: &mut ShrinkCtx<'_>,
+    cur: &mut FleetSpec,
+    best: &mut Violation,
+    changed: &mut bool,
+    get: impl Fn(&FleetSpec) -> usize,
+    set: impl Fn(&mut FleetSpec, usize),
+) {
+    while get(cur) > 1 && ctx.reruns < MAX_RERUNS {
+        let n = get(cur);
+        let mut cands = vec![n / 2, n - 1];
+        cands.retain(|&t| t >= 1 && t < n);
+        cands.dedup();
+        let mut stepped = false;
+        for t in cands {
+            let mut c = cur.clone();
+            set(&mut c, t);
+            if let Some(v) = ctx.refails(&c) {
+                *cur = c;
+                *best = v;
+                *changed = true;
+                stepped = true;
+                break;
+            }
+        }
+        if !stepped {
+            break;
+        }
+    }
+}
+
+/// Greedily minimize a failing `(spec, seed)` pair dimension-by-dimension
+/// — churn, nodes, arrivals, horizon, capacity, checkpoint streams,
+/// sub-jobs — re-running deterministically and accepting a step only when
+/// the *same* invariant still fails, until no tried move shrinks further
+/// (a greedy local minimum) or the rerun budget is spent. Poisson
+/// arrivals are first materialized into an explicit trace (bit-identical
+/// substitution — `run_fleet` materializes them through
+/// [`sample_arrivals`] itself) so the arrival list can shrink
+/// element-by-element. Returns `None` only if the failure does not
+/// reproduce at all (impossible for a deterministic violation).
+pub fn shrink_fleet(
+    spec: &FleetSpec,
+    seed: u64,
+    window: usize,
+    target: &str,
+) -> Option<Shrunk> {
+    let mut ctx = ShrinkCtx { seed, window, target, scratch: FleetScratch::new(), reruns: 0 };
+    let mut cur = spec.clone();
+    cur.arrivals = ArrivalSpec::Trace { at_s: sample_arrivals(spec, seed) };
+    let mut best = match ctx.refails(&cur) {
+        Some(v) => v,
+        None => {
+            // The substitution is bit-identical by construction, but stay
+            // honest: fall back to the original spec.
+            cur = spec.clone();
+            ctx.refails(&cur)?
+        }
+    };
+    let mut changed = true;
+    while changed && ctx.reruns < MAX_RERUNS {
+        changed = false;
+
+        // Churn: try dropping it entirely first — the biggest single cut.
+        let has_churn = !matches!(&cur.churn, ChurnSpec::Plan(p) if p.events.is_empty());
+        if has_churn {
+            let mut c = cur.clone();
+            c.churn = ChurnSpec::Plan(FailurePlan { events: Vec::new() });
+            if let Some(v) = ctx.refails(&c) {
+                cur = c;
+                best = v;
+                changed = true;
+            }
+        }
+
+        // Nodes: halve, then decrement; planned failures on dropped nodes
+        // go with them.
+        shrink_scalar(
+            &mut ctx,
+            &mut cur,
+            &mut best,
+            &mut changed,
+            |s| s.topo.len(),
+            |s, n| {
+                s.topo = Topology::ring(n, 2);
+                if let ChurnSpec::Plan(p) = &mut s.churn {
+                    p.events.retain(|e| e.node.0 < n);
+                }
+            },
+        );
+
+        // Arrivals: binary chunk removal (keep either half) ...
+        while ctx.reruns < MAX_RERUNS {
+            let at = trace_arrivals(&cur).to_vec();
+            if at.len() <= 1 {
+                break;
+            }
+            let half = at.len() / 2;
+            let mut stepped = false;
+            for cand in [at[..half].to_vec(), at[half..].to_vec()] {
+                let mut c = cur.clone();
+                c.arrivals = ArrivalSpec::Trace { at_s: cand };
+                if let Some(v) = ctx.refails(&c) {
+                    cur = c;
+                    best = v;
+                    changed = true;
+                    stepped = true;
+                    break;
+                }
+            }
+            if !stepped {
+                break;
+            }
+        }
+        // ... then single-arrival removal once the list is small.
+        let mut i = 0;
+        while ctx.reruns < MAX_RERUNS {
+            let at = trace_arrivals(&cur);
+            if at.len() <= 1 || at.len() > 64 || i >= at.len() {
+                break;
+            }
+            let mut cand = at.to_vec();
+            cand.remove(i);
+            let mut c = cur.clone();
+            c.arrivals = ArrivalSpec::Trace { at_s: cand };
+            if let Some(v) = ctx.refails(&c) {
+                cur = c;
+                best = v;
+                changed = true;
+                // the next element shifted into position i — retry it
+            } else {
+                i += 1;
+            }
+        }
+
+        // Horizon: halve while the violation still fires.
+        while ctx.reruns < MAX_RERUNS {
+            let h = cur.horizon_s / 2.0;
+            if h < 60.0 {
+                break;
+            }
+            let mut c = cur.clone();
+            c.horizon_s = h;
+            match ctx.refails(&c) {
+                Some(v) => {
+                    cur = c;
+                    best = v;
+                    changed = true;
+                }
+                None => break,
+            }
+        }
+
+        shrink_scalar(&mut ctx, &mut cur, &mut best, &mut changed, |s| s.capacity, |s, n| {
+            s.capacity = n;
+        });
+        shrink_scalar(&mut ctx, &mut cur, &mut best, &mut changed, |s| s.ckpt_streams, |s, n| {
+            s.ckpt_streams = n;
+        });
+        shrink_scalar(&mut ctx, &mut cur, &mut best, &mut changed, |s| s.job.n_subs, |s, n| {
+            s.job.n_subs = n;
+        });
+
+        // Per-node churn: halve the rate toward quiet.
+        while ctx.reruns < MAX_RERUNS {
+            let rate = match &cur.churn {
+                ChurnSpec::PerNode {
+                    process: FailureProcess::Poisson { rate_per_window },
+                    ..
+                } if *rate_per_window > 1e-3 => *rate_per_window,
+                _ => break,
+            };
+            let mut c = cur.clone();
+            if let ChurnSpec::PerNode {
+                process: FailureProcess::Poisson { rate_per_window },
+                ..
+            } = &mut c.churn
+            {
+                *rate_per_window = rate / 2.0;
+            }
+            match ctx.refails(&c) {
+                Some(v) => {
+                    cur = c;
+                    best = v;
+                    changed = true;
+                }
+                None => break,
+            }
+        }
+
+        // Planned churn: binary chunk removal over the event list.
+        while ctx.reruns < MAX_RERUNS {
+            let events = match &cur.churn {
+                ChurnSpec::Plan(p) if !p.events.is_empty() => p.events.clone(),
+                _ => break,
+            };
+            let half = events.len() / 2;
+            let mut stepped = false;
+            for cand in [events[..half].to_vec(), events[half..].to_vec()] {
+                if cand.len() == events.len() {
+                    continue;
+                }
+                let mut c = cur.clone();
+                c.churn = ChurnSpec::Plan(FailurePlan { events: cand });
+                if let Some(v) = ctx.refails(&c) {
+                    cur = c;
+                    best = v;
+                    changed = true;
+                    stepped = true;
+                    break;
+                }
+            }
+            if !stepped {
+                break;
+            }
+        }
+    }
+    Some(Shrunk { spec: cur, violation: best, reruns: ctx.reruns })
+}
+
+// ---------------------------------------------------------------------------
+// Repro codec
+//
+// One-line `key=value;` strings. Every f64 is its exact bit pattern in
+// hex, so a pasted repro replays the identical trajectory. The codec
+// covers the generator/shrinker dialect: Placentia costs, ring(n, 2)
+// topologies, Poisson per-node churn or explicit plans.
+
+fn fhex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn unfhex(s: &str) -> Result<f64, String> {
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|e| format!("bad f64 hex {s:?}: {e}"))
+}
+
+fn uint<T: std::str::FromStr>(s: &str) -> Result<T, String>
+where
+    T::Err: std::fmt::Display,
+{
+    s.parse().map_err(|e| format!("bad integer {s:?}: {e}"))
+}
+
+fn strat_str(s: Strategy) -> &'static str {
+    match s {
+        Strategy::Agent => "agent",
+        Strategy::Core => "core",
+        Strategy::Hybrid => "hybrid",
+        Strategy::ColdRestart => "cold",
+        Strategy::Checkpoint(CheckpointStrategy::CentralSingle) => "ckpt",
+        Strategy::Checkpoint(CheckpointStrategy::CentralMulti) => "ckpt-multi",
+        Strategy::Checkpoint(CheckpointStrategy::Decentral) => "ckpt-decentral",
+    }
+}
+
+fn dec_strat(s: &str) -> Result<Strategy, String> {
+    Ok(match s {
+        "agent" => Strategy::Agent,
+        "core" => Strategy::Core,
+        "hybrid" => Strategy::Hybrid,
+        "cold" => Strategy::ColdRestart,
+        "ckpt" => Strategy::Checkpoint(CheckpointStrategy::CentralSingle),
+        "ckpt-multi" => Strategy::Checkpoint(CheckpointStrategy::CentralMulti),
+        "ckpt-decentral" => Strategy::Checkpoint(CheckpointStrategy::Decentral),
+        _ => return Err(format!("unknown strategy {s:?}")),
+    })
+}
+
+fn enc_process(p: &FailureProcess) -> String {
+    match p {
+        FailureProcess::Periodic { offset_s } => format!("per:{}", fhex(*offset_s)),
+        FailureProcess::RandomUniform => "uni".into(),
+        FailureProcess::RandomUniformK { k } => format!("unik:{k}"),
+        FailureProcess::Poisson { rate_per_window } => format!("poi:{}", fhex(*rate_per_window)),
+        FailureProcess::Trace { offsets_s } => {
+            let offs: Vec<String> = offsets_s.iter().map(|t| fhex(*t)).collect();
+            format!("tr:{}", offs.join("+"))
+        }
+    }
+}
+
+fn dec_process(s: &str) -> Result<FailureProcess, String> {
+    if s == "uni" {
+        return Ok(FailureProcess::RandomUniform);
+    }
+    let (tag, rest) = s.split_once(':').ok_or_else(|| format!("bad process {s:?}"))?;
+    Ok(match tag {
+        "per" => FailureProcess::Periodic { offset_s: unfhex(rest)? },
+        "unik" => FailureProcess::RandomUniformK { k: uint(rest)? },
+        "poi" => FailureProcess::Poisson { rate_per_window: unfhex(rest)? },
+        "tr" => {
+            let offsets_s = if rest.is_empty() {
+                Vec::new()
+            } else {
+                rest.split('+').map(unfhex).collect::<Result<_, _>>()?
+            };
+            FailureProcess::Trace { offsets_s }
+        }
+        _ => return Err(format!("unknown process {tag:?}")),
+    })
+}
+
+fn enc_regime(r: &FailureRegime) -> String {
+    match r {
+        FailureRegime::Single(p) => format!("sg|{}", enc_process(p)),
+        FailureRegime::ConcurrentK { k, offset_s, spacing_s } => {
+            format!("ck|{k}|{}|{}", fhex(*offset_s), fhex(*spacing_s))
+        }
+        FailureRegime::Correlated { primary, rack_size, p_spread, lag_s } => format!(
+            "co|{}|{rack_size}|{}|{}",
+            enc_process(primary),
+            fhex(*p_spread),
+            fhex(*lag_s)
+        ),
+        FailureRegime::Cascade { trigger, p_follow, lag_s } => {
+            format!("ca|{}|{}|{}", enc_process(trigger), fhex(*p_follow), fhex(*lag_s))
+        }
+    }
+}
+
+fn dec_regime(s: &str) -> Result<FailureRegime, String> {
+    let mut it = s.split('|');
+    let tag = it.next().ok_or("empty regime")?;
+    let mut next = |what: &str| {
+        it.next().map(str::to_owned).ok_or_else(|| format!("regime {tag}: missing {what}"))
+    };
+    Ok(match tag {
+        "sg" => FailureRegime::Single(dec_process(&next("process")?)?),
+        "ck" => FailureRegime::ConcurrentK {
+            k: uint(&next("k")?)?,
+            offset_s: unfhex(&next("offset")?)?,
+            spacing_s: unfhex(&next("spacing")?)?,
+        },
+        "co" => FailureRegime::Correlated {
+            primary: dec_process(&next("primary")?)?,
+            rack_size: uint(&next("rack size")?)?,
+            p_spread: unfhex(&next("p_spread")?)?,
+            lag_s: unfhex(&next("lag")?)?,
+        },
+        "ca" => FailureRegime::Cascade {
+            trigger: dec_process(&next("trigger")?)?,
+            p_follow: unfhex(&next("p_follow")?)?,
+            lag_s: unfhex(&next("lag")?)?,
+        },
+        _ => return Err(format!("unknown regime {tag:?}")),
+    })
+}
+
+/// Encode a walk spec as a one-line repro string (exact: every f64 is its
+/// bit pattern).
+pub fn encode_walk(spec: &WalkSpec) -> String {
+    match spec {
+        WalkSpec::Fleet(f) => {
+            let mut s = format!(
+                "fleet;s={};n={};cap={};st={};sub={};z={};dkb={};pkb={};cs={};pf={};crs={};cos={};hz={}",
+                strat_str(f.job.strategy),
+                f.topo.len(),
+                f.capacity,
+                f.ckpt_streams,
+                f.job.n_subs,
+                f.job.z,
+                f.job.data_kb,
+                f.job.proc_kb,
+                fhex(f.job.compute_s),
+                fhex(f.job.predictable_frac),
+                fhex(f.job.ckpt_reinstate_s),
+                fhex(f.job.ckpt_overhead_s),
+                fhex(f.horizon_s),
+            );
+            match &f.arrivals {
+                ArrivalSpec::Poisson { rate_per_h } => {
+                    let _ = write!(s, ";arr=p{}", fhex(*rate_per_h));
+                }
+                ArrivalSpec::Trace { at_s } => {
+                    let ts: Vec<String> = at_s.iter().map(|t| fhex(*t)).collect();
+                    let _ = write!(s, ";arr=t{}", ts.join(","));
+                }
+            }
+            match &f.churn {
+                ChurnSpec::PerNode { process, window_s, repair_s } => {
+                    let _ = write!(
+                        s,
+                        ";ch=pn|{}|{}|{}",
+                        enc_process(process),
+                        fhex(*window_s),
+                        fhex(*repair_s)
+                    );
+                }
+                ChurnSpec::Plan(p) => {
+                    let evs: Vec<String> =
+                        p.events.iter().map(|e| format!("{}@{}", e.at.0, e.node.0)).collect();
+                    let _ = write!(s, ";ch=pl|{}", evs.join(","));
+                }
+            }
+            s
+        }
+        WalkSpec::Episode(e) => {
+            format!(
+                "ep;s={};n={};sub={};z={};dkb={};pkb={};cs={};pf={};crs={};cos={};w={};ws={};rg={}",
+                strat_str(e.cfg.strategy),
+                e.topo.len(),
+                e.cfg.n_subs,
+                e.cfg.z,
+                e.cfg.data_kb,
+                e.cfg.proc_kb,
+                fhex(e.cfg.compute_s),
+                fhex(e.cfg.predictable_frac),
+                fhex(e.cfg.ckpt_reinstate_s),
+                fhex(e.cfg.ckpt_overhead_s),
+                e.windows,
+                fhex(e.window_s),
+                enc_regime(&e.regime),
+            )
+        }
+    }
+}
+
+/// Decode a repro string produced by [`encode_walk`]. Fleet specs are
+/// validated through [`FleetSpec::validate`]; a decoded spec re-encodes to
+/// the same string.
+pub fn decode_walk(s: &str) -> Result<WalkSpec, String> {
+    let mut parts = s.trim().split(';');
+    let kind = parts.next().ok_or("empty repro string")?;
+    let mut kv: Vec<(&str, &str)> = Vec::new();
+    for p in parts {
+        if p.is_empty() {
+            continue;
+        }
+        let (k, v) = p.split_once('=').ok_or_else(|| format!("bad field {p:?}"))?;
+        kv.push((k, v));
+    }
+    let get = |k: &str| -> Result<&str, String> {
+        kv.iter()
+            .find(|(key, _)| *key == k)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| format!("missing field `{k}`"))
+    };
+    match kind {
+        "fleet" => {
+            let n: usize = uint(get("n")?)?;
+            if n == 0 {
+                return Err("fleet needs at least one node".into());
+            }
+            let mut f = FleetSpec::placentia_fleet(dec_strat(get("s")?)?, n, 0.0, 0.0);
+            f.capacity = uint(get("cap")?)?;
+            f.ckpt_streams = uint(get("st")?)?;
+            f.job.n_subs = uint(get("sub")?)?;
+            f.job.z = uint(get("z")?)?;
+            f.job.data_kb = uint(get("dkb")?)?;
+            f.job.proc_kb = uint(get("pkb")?)?;
+            f.job.compute_s = unfhex(get("cs")?)?;
+            f.job.predictable_frac = unfhex(get("pf")?)?;
+            f.job.ckpt_reinstate_s = unfhex(get("crs")?)?;
+            f.job.ckpt_overhead_s = unfhex(get("cos")?)?;
+            f.horizon_s = unfhex(get("hz")?)?;
+            let arr = get("arr")?;
+            f.arrivals = if let Some(rest) = arr.strip_prefix('p') {
+                ArrivalSpec::Poisson { rate_per_h: unfhex(rest)? }
+            } else if let Some(rest) = arr.strip_prefix('t') {
+                let at_s = if rest.is_empty() {
+                    Vec::new()
+                } else {
+                    rest.split(',').map(unfhex).collect::<Result<_, _>>()?
+                };
+                ArrivalSpec::Trace { at_s }
+            } else {
+                return Err(format!("bad arrivals {arr:?}"));
+            };
+            let ch = get("ch")?;
+            f.churn = if let Some(rest) = ch.strip_prefix("pn|") {
+                let mut it = rest.split('|');
+                let mut next = |what: &str| {
+                    it.next().map(str::to_owned).ok_or_else(|| format!("pn churn: missing {what}"))
+                };
+                ChurnSpec::PerNode {
+                    process: dec_process(&next("process")?)?,
+                    window_s: unfhex(&next("window")?)?,
+                    repair_s: unfhex(&next("repair")?)?,
+                }
+            } else if let Some(rest) = ch.strip_prefix("pl|") {
+                let events = if rest.is_empty() {
+                    Vec::new()
+                } else {
+                    rest.split(',')
+                        .map(|e| {
+                            let (ns, node) = e
+                                .split_once('@')
+                                .ok_or_else(|| format!("bad plan event {e:?}"))?;
+                            Ok(FailureEvent {
+                                at: SimTime(uint(ns)?),
+                                node: NodeId(uint(node)?),
+                            })
+                        })
+                        .collect::<Result<Vec<_>, String>>()?
+                };
+                ChurnSpec::Plan(FailurePlan { events })
+            } else {
+                return Err(format!("bad churn {ch:?}"));
+            };
+            f.validate().map_err(|e| e.to_string())?;
+            Ok(WalkSpec::Fleet(f))
+        }
+        "ep" => {
+            let n: usize = uint(get("n")?)?;
+            if n == 0 {
+                return Err("episode needs at least one node".into());
+            }
+            let strategy = dec_strat(get("s")?)?;
+            let predictable_frac = unfhex(get("pf")?)?;
+            let n_subs: usize = uint(get("sub")?)?;
+            if n_subs == 0 {
+                return Err("episode needs at least one sub-job".into());
+            }
+            let regime = dec_regime(get("rg")?)?;
+            let mut e = ScenarioSpec::placentia_ring16(strategy, predictable_frac, n_subs, regime);
+            e.topo = Topology::ring(n, 2);
+            e.windows = uint(get("w")?)?;
+            e.window_s = unfhex(get("ws")?)?;
+            e.cfg.z = uint(get("z")?)?;
+            e.cfg.data_kb = uint(get("dkb")?)?;
+            e.cfg.proc_kb = uint(get("pkb")?)?;
+            e.cfg.compute_s = unfhex(get("cs")?)?;
+            e.cfg.ckpt_reinstate_s = unfhex(get("crs")?)?;
+            e.cfg.ckpt_overhead_s = unfhex(get("cos")?)?;
+            if e.windows == 0 || !(e.window_s.is_finite() && e.window_s > 0.0) {
+                return Err("episode needs positive windows".into());
+            }
+            Ok(WalkSpec::Episode(e))
+        }
+        _ => Err(format!("unknown walk kind {kind:?} (expected `fleet` or `ep`)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn selftest_cfg(fault: InjectedFault) -> VoprCfg {
+        VoprCfg {
+            walks: 96,
+            base_seed: 11,
+            max_nodes: 16,
+            max_arrivals: 32,
+            trace_window: 16,
+            threads: Some(1),
+            fault: Some(fault),
+        }
+    }
+
+    /// A hand-built spec where the skipped requeue must fire: two 1-slot
+    /// nodes, four 1-sub jobs arriving up front, no churn. Jobs 0 and 1
+    /// place; at the first completion the freed slot fits the queue head,
+    /// but the corrupted transition never offers it.
+    fn skip_requeue_spec() -> FleetSpec {
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 2, 0.0, 0.0);
+        spec.capacity = 1;
+        spec.job.n_subs = 1;
+        spec.job.compute_s = 600.0;
+        spec.horizon_s = 10_000.0;
+        spec.arrivals = ArrivalSpec::Trace { at_s: vec![0.0, 1.0, 2.0, 3.0] };
+        spec.churn = ChurnSpec::Plan(FailurePlan { events: Vec::new() });
+        spec.fault = Some(InjectedFault::SkipRequeue);
+        spec
+    }
+
+    #[test]
+    fn generated_fleets_always_validate() {
+        let cfg = VoprCfg { walks: 512, ..Default::default() };
+        for i in 0..512 {
+            let (spec, _) = gen_walk(&cfg, i);
+            match spec {
+                WalkSpec::Fleet(f) => f.validate().unwrap(),
+                WalkSpec::Episode(e) => {
+                    assert!(e.topo.len() >= 2 && e.cfg.n_subs >= 1 && e.windows >= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codec_round_trips_generated_specs() {
+        let cfg = VoprCfg { max_nodes: 12, max_arrivals: 24, ..Default::default() };
+        for i in 0..64 {
+            let (spec, _) = gen_walk(&cfg, i);
+            let enc = encode_walk(&spec);
+            let dec = decode_walk(&enc).unwrap();
+            assert_eq!(enc, encode_walk(&dec), "walk {i} did not round-trip");
+        }
+    }
+
+    #[test]
+    fn decoded_fleet_replays_identically() {
+        let cfg = VoprCfg { max_nodes: 8, max_arrivals: 16, ..Default::default() };
+        let mut scratch = FleetScratch::new();
+        let mut checked = 0;
+        for i in 0..32 {
+            let (spec, seed) = gen_walk(&cfg, i);
+            let WalkSpec::Fleet(f) = &spec else { continue };
+            let dec = decode_walk(&encode_walk(&spec)).unwrap();
+            let WalkSpec::Fleet(g) = &dec else { panic!("kind changed") };
+            let a = crate::scenario::fleet::run_fleet_scratch(f, seed, &mut scratch);
+            let b = crate::scenario::fleet::run_fleet_scratch(g, seed, &mut scratch);
+            assert_eq!(a.events, b.events, "walk {i} diverged after decode");
+            assert_eq!(a.jobs_completed, b.jobs_completed);
+            checked += 1;
+        }
+        assert!(checked > 4, "too few fleet walks sampled");
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode_walk("").is_err());
+        assert!(decode_walk("nonsense;n=4").is_err());
+        assert!(decode_walk("fleet;n=4").is_err()); // missing fields
+        // structurally complete but invalid (zero capacity)
+        let mut spec = skip_requeue_spec();
+        spec.capacity = 0;
+        assert!(decode_walk(&encode_walk(&WalkSpec::Fleet(spec))).is_err());
+    }
+
+    #[test]
+    fn skipped_requeue_is_detected() {
+        let spec = skip_requeue_spec();
+        let mut scratch = FleetScratch::new();
+        let (_, v) = run_walk(&WalkSpec::Fleet(spec), 7, 16, &mut scratch);
+        let v = v.expect("corrupted requeue must violate an invariant");
+        assert_eq!(v.invariant, "queue-progress", "{}", v.detail);
+        assert!(!v.trace.is_empty(), "violation must carry a trace window");
+    }
+
+    #[test]
+    fn leaked_slot_is_detected_on_the_leaking_event() {
+        let mut spec = skip_requeue_spec();
+        spec.fault = Some(InjectedFault::LeakSlot);
+        spec.arrivals = ArrivalSpec::Trace { at_s: vec![0.0] };
+        let mut scratch = FleetScratch::new();
+        let (_, v) = run_walk(&WalkSpec::Fleet(spec), 7, 16, &mut scratch);
+        let v = v.expect("leaked slot must violate an invariant");
+        assert_eq!(v.invariant, "bookkeeping-agreement", "{}", v.detail);
+        assert!(
+            matches!(v.trace.last().unwrap().ev, FleetEv::SubDone { .. }),
+            "the violating event should be the completing SubDone"
+        );
+    }
+
+    #[test]
+    fn shrinker_minimizes_the_crafted_repro() {
+        let spec = skip_requeue_spec();
+        let sh = shrink_fleet(&spec, 7, 16, "queue-progress").expect("must reproduce");
+        assert_eq!(sh.violation.invariant, "queue-progress");
+        assert!(sh.reruns >= 2, "shrinking must actually re-run");
+        assert!(sh.spec.topo.len() <= 2, "nodes did not shrink: {}", fleet_dims(&sh.spec));
+        let arrivals = match &sh.spec.arrivals {
+            ArrivalSpec::Trace { at_s } => at_s.len(),
+            ArrivalSpec::Poisson { .. } => panic!("shrinker must materialize arrivals"),
+        };
+        assert!(arrivals <= 2, "arrivals did not shrink: {arrivals}");
+        // deterministic: a second shrink lands on the identical spec
+        let again = shrink_fleet(&spec, 7, 16, "queue-progress").unwrap();
+        assert_eq!(
+            encode_walk(&WalkSpec::Fleet(sh.spec.clone())),
+            encode_walk(&WalkSpec::Fleet(again.spec)),
+        );
+    }
+
+    #[test]
+    fn explorer_finds_and_shrinks_an_injected_fault() {
+        let cfg = selftest_cfg(InjectedFault::SkipRequeue);
+        let report = explore(&cfg);
+        let f = report.failure.as_ref().expect("armed fault must be found");
+        assert_eq!(f.violation.invariant, "queue-progress", "{}", report.render());
+        let sh = f.shrunk.as_ref().expect("fleet failures must shrink");
+        assert!(
+            sh.spec.topo.len() <= 8,
+            "shrunk repro too big: {}",
+            fleet_dims(&sh.spec)
+        );
+        let arrivals = trace_arrivals(&sh.spec).len();
+        assert!(arrivals <= 32, "shrunk repro keeps {arrivals} arrivals");
+        // the report carries a copy-pasteable repro that replays the
+        // violation
+        let enc = encode_walk(&WalkSpec::Fleet(sh.spec.clone()));
+        let rendered = report.render();
+        assert!(rendered.contains(&enc), "render must embed the repro string");
+        // the explorer is deterministic end to end
+        let again = explore(&cfg);
+        let g = again.failure.as_ref().unwrap();
+        assert_eq!(f.walk, g.walk);
+        assert_eq!(f.seed, g.seed);
+        assert_eq!(enc, encode_walk(&WalkSpec::Fleet(g.shrunk.as_ref().unwrap().spec.clone())));
+    }
+
+    #[test]
+    fn repro_string_replays_the_injected_violation() {
+        let spec = skip_requeue_spec();
+        let enc = encode_walk(&WalkSpec::Fleet(spec));
+        let (report, violated) = run_repro(&enc, 7, 16).unwrap();
+        assert!(violated, "repro must reproduce: {report}");
+        assert!(report.contains("queue-progress"));
+    }
+}

@@ -14,7 +14,8 @@ use biomaft::coordinator::livesim::{run_live, LiveCfg};
 use biomaft::failure::injector::{FailurePlan, FailureProcess};
 use biomaft::net::Topology;
 use biomaft::scenario::{
-    run_fleet, run_sweep, ArrivalSpec, CellSpec, ChurnSpec, FleetMetric, FleetSpec, SweepSpec,
+    run_fleet, run_fleet_observed, run_sweep, ArrivalSpec, CellSpec, ChurnSpec, FleetMetric,
+    FleetScratch, FleetSpec, InvariantObserver, SweepSpec,
 };
 use biomaft::sim::Rng;
 
@@ -36,17 +37,19 @@ fn live_cfg(strategy: Strategy, n_subs: usize, seed: u64) -> LiveCfg {
 
 /// The degenerate fleet around one `run_live` trial: a single traced job
 /// at t = 0, the trial's explicit failure plan as churn, and capacity far
-/// beyond anything the job can pile onto one node.
+/// beyond anything the job can pile onto one node. (Built on a preset
+/// base rather than a struct literal so the spec stays exhaustive even
+/// when `--features vopr-selftest` adds the fault-injection field.)
 fn degenerate(cfg: LiveCfg, topo: Topology, plan: FailurePlan) -> FleetSpec {
-    FleetSpec {
-        job: cfg,
-        topo,
-        capacity: 1 << 20,
-        arrivals: ArrivalSpec::Trace { at_s: vec![0.0] },
-        churn: ChurnSpec::Plan(plan),
-        ckpt_streams: 1 << 20,
-        horizon_s: 200_000.0,
-    }
+    let mut spec = FleetSpec::placentia_fleet(cfg.strategy, topo.len(), 0.0, 0.0);
+    spec.job = cfg;
+    spec.topo = topo;
+    spec.capacity = 1 << 20;
+    spec.arrivals = ArrivalSpec::Trace { at_s: vec![0.0] };
+    spec.churn = ChurnSpec::Plan(plan);
+    spec.ckpt_streams = 1 << 20;
+    spec.horizon_s = 200_000.0;
+    spec
 }
 
 #[test]
@@ -198,6 +201,41 @@ fn degenerate_fleet_with_unpredicted_failures_still_matches() {
     assert_eq!(o.last_completion_s.to_bits(), direct.completed_at_s.to_bits());
     assert_eq!(o.rollbacks, direct.rollbacks);
     assert_eq!(o.subs_lost, direct.lost_then_recovered);
+}
+
+#[test]
+fn observed_trial_is_bit_identical_to_unobserved() {
+    // The vopr invariant observer reads derived views but never touches
+    // RNG or scheduling, so a checked trial must equal the plain one on
+    // every outcome field, bit for bit — the zero-cost-observer contract
+    // (DESIGN.md §VOPR explorer).
+    let mut scratch = FleetScratch::new();
+    for (nodes, arrival, churn, seed) in
+        [(24, 6.0, 1.0, 5u64), (40, 12.0, 0.25, 91), (8, 2.0, 2.0, 7)]
+    {
+        let spec = FleetSpec::placentia_fleet(Strategy::Hybrid, nodes, arrival, churn);
+        let plain = run_fleet(&spec, seed);
+        let mut obs = InvariantObserver::new(32);
+        let checked = run_fleet_observed(&spec, seed, &mut scratch, &mut obs);
+        assert!(obs.violation().is_none(), "clean spec must pass: {:?}", obs.violation());
+        assert_eq!(obs.events(), plain.events, "observer must see every event");
+        assert_eq!(plain.events, checked.events);
+        assert_eq!(plain.jobs_arrived, checked.jobs_arrived);
+        assert_eq!(plain.jobs_completed, checked.jobs_completed);
+        assert_eq!(plain.jobs_waiting, checked.jobs_waiting);
+        assert_eq!(plain.peak_live_jobs, checked.peak_live_jobs);
+        assert_eq!(plain.mean_slowdown.to_bits(), checked.mean_slowdown.to_bits());
+        assert_eq!(plain.p95_slowdown.to_bits(), checked.p95_slowdown.to_bits());
+        assert_eq!(plain.goodput_ratio.to_bits(), checked.goodput_ratio.to_bits());
+        assert_eq!(plain.utilization.to_bits(), checked.utilization.to_bits());
+        assert_eq!(plain.last_completion_s.to_bits(), checked.last_completion_s.to_bits());
+        assert_eq!(plain.migrations, checked.migrations);
+        assert_eq!(plain.rollbacks, checked.rollbacks);
+        assert_eq!(plain.subs_lost, checked.subs_lost);
+        assert_eq!(plain.absorbed_failures, checked.absorbed_failures);
+        assert_eq!(plain.peak_concurrent_migrations, checked.peak_concurrent_migrations);
+        assert_eq!(plain.peak_concurrent_recoveries, checked.peak_concurrent_recoveries);
+    }
 }
 
 #[test]

@@ -1,0 +1,205 @@
+//! VOPR-layer property tests (DESIGN.md §VOPR explorer):
+//!
+//! * every default invariant checker accepts a consistent hand-built
+//!   [`FleetView`] and rejects the matching hand-built inconsistency;
+//! * 256 random-walked (spec, seed) pairs pass all invariants, and the
+//!   explorer's report is identical at thread counts 1 and 8;
+//! * repro strings round-trip exactly through the codec.
+//!
+//! The self-tests that *inject* a fault and watch a checker fire live in
+//! `src/scenario/vopr.rs` — the fault hook is a `cfg(test)` field on
+//! `FleetSpec`, invisible to integration tests by design.
+
+use biomaft::scenario::vopr::gen_walk;
+use biomaft::scenario::{
+    decode_walk, default_invariants, encode_walk, explore, FleetEv, FleetView, Invariant, VoprCfg,
+};
+use biomaft::sim::SimTime;
+
+/// A consistent two-node view: one 2-sub job running on nodes 0 and 1,
+/// nothing queued, nothing in flight. Tests mutate one fact at a time.
+fn view<'a>(occupancy: &'a [usize], doomed: &'a [bool], hosted: &'a [usize]) -> FleetView<'a> {
+    FleetView {
+        now: SimTime::from_secs(100.0),
+        n_subs: 2,
+        capacity: 1,
+        arrived: 1,
+        completed: 0,
+        live_jobs: 1,
+        queued: 0,
+        running: 2,
+        migr_inflight: 0,
+        rec_inflight: 0,
+        occupancy,
+        doomed,
+        hosted,
+        sub_running: 2,
+        sub_migrating: 0,
+        distinct_recs: 0,
+        remaining_ok: true,
+        stale_node_subs: 0,
+    }
+}
+
+fn checker(name: &str) -> Box<dyn Invariant> {
+    default_invariants()
+        .into_iter()
+        .find(|c| c.name() == name)
+        .unwrap_or_else(|| panic!("no default checker named {name}"))
+}
+
+const EV: FleetEv = FleetEv::Arrival { job: 0 };
+
+#[test]
+fn job_conservation_passes_and_fails() {
+    let v = view(&[1, 1], &[false, false], &[1, 1]);
+    let mut c = checker("job-conservation");
+    assert!(c.check(&EV, &v).is_ok());
+    assert!(c.at_end(&v, true).is_ok());
+
+    let mut lost = view(&[1, 1], &[false, false], &[1, 1]);
+    lost.arrived = 2; // one arrival neither completed nor live
+    assert!(c.check(&EV, &lost).is_err());
+
+    let mut phantom = view(&[1, 1], &[false, false], &[1, 1]);
+    phantom.queued = 2; // more queued than live
+    phantom.live_jobs = 1;
+    phantom.arrived = 1;
+    assert!(c.check(&EV, &phantom).is_err());
+}
+
+#[test]
+fn capacity_bound_passes_and_fails() {
+    let v = view(&[1, 1], &[false, false], &[1, 1]);
+    let mut c = checker("capacity-bound");
+    assert!(c.check(&EV, &v).is_ok());
+
+    let over = view(&[2, 0], &[false, false], &[2, 0]); // capacity is 1
+    assert!(c.check(&EV, &over).is_err());
+
+    let mut ghost = view(&[1, 1], &[false, false], &[1, 1]);
+    ghost.running = 5; // 2 nodes x 1 slot
+    assert!(c.check(&EV, &ghost).is_err());
+}
+
+#[test]
+fn bookkeeping_agreement_passes_and_fails() {
+    let v = view(&[1, 1], &[false, false], &[1, 1]);
+    let mut c = checker("bookkeeping-agreement");
+    assert!(c.check(&EV, &v).is_ok());
+
+    // placement index and per-node lists disagree on node 0
+    let leak = view(&[1, 1], &[false, false], &[0, 1]);
+    assert!(c.check(&EV, &leak).is_err());
+
+    let mut slab = view(&[1, 1], &[false, false], &[1, 1]);
+    slab.sub_running = 1; // slab walk disagrees with the counter
+    assert!(c.check(&EV, &slab).is_err());
+
+    let mut rem = view(&[1, 1], &[false, false], &[1, 1]);
+    rem.remaining_ok = false;
+    assert!(c.check(&EV, &rem).is_err());
+
+    let mut stale = view(&[1, 1], &[false, false], &[1, 1]);
+    stale.stale_node_subs = 1;
+    assert!(c.check(&EV, &stale).is_err());
+}
+
+#[test]
+fn queue_progress_fires_only_on_drain_points() {
+    let drain = FleetEv::SubDone { slot: 0, sub: 0, job_completed: true };
+    let mut c = checker("queue-progress");
+
+    // a queued 2-sub job while both slots are free must fail at a drain
+    // point ...
+    let mut stuck = view(&[0, 0], &[false, false], &[0, 0]);
+    stuck.queued = 1;
+    stuck.running = 0;
+    stuck.sub_running = 0;
+    stuck.live_jobs = 1;
+    assert!(c.check(&drain, &stuck).is_err());
+    // ... and at quiescence, but never on a non-drain event (other events
+    // may free capacity without draining; the next drain point picks it up)
+    assert!(c.check(&EV, &stuck).is_ok());
+    assert!(c.at_end(&stuck, false).is_err());
+    assert!(c.at_end(&stuck, true).is_ok());
+
+    // genuinely insufficient room: one slot down, one occupied
+    let mut full = view(&[1, 0], &[false, true], &[1, 0]);
+    full.queued = 1;
+    full.live_jobs = 2;
+    full.arrived = 2;
+    full.running = 1;
+    full.sub_running = 1;
+    assert!(c.check(&drain, &full).is_ok());
+}
+
+#[test]
+fn monotone_time_passes_and_fails() {
+    let mut c = checker("monotone-time");
+    let mut v = view(&[1, 1], &[false, false], &[1, 1]);
+    v.now = SimTime::from_secs(10.0);
+    assert!(c.check(&EV, &v).is_ok());
+    v.now = SimTime::from_secs(10.0); // equal times are fine
+    assert!(c.check(&EV, &v).is_ok());
+    v.now = SimTime::from_secs(20.0);
+    assert!(c.check(&EV, &v).is_ok());
+    v.now = SimTime::from_secs(15.0); // backwards
+    assert!(c.check(&EV, &v).is_err());
+}
+
+#[test]
+fn termination_passes_and_fails() {
+    let mut c = checker("termination");
+    let v = view(&[1, 1], &[false, false], &[1, 1]);
+    assert!(c.check(&EV, &v).is_ok(), "termination is an end-only check");
+
+    let mut hung = view(&[1, 1], &[false, false], &[1, 1]);
+    hung.migr_inflight = 1;
+    assert!(c.at_end(&hung, false).is_err(), "quiescent with a migration in flight");
+    assert!(c.at_end(&hung, true).is_ok(), "the horizon may cut work off mid-flight");
+    let done = view(&[0, 0], &[false, false], &[0, 0]);
+    assert!(c.at_end(&done, false).is_ok());
+}
+
+#[test]
+fn explorer_passes_256_walks_identically_at_threads_1_and_8() {
+    let cfg = |threads: usize| VoprCfg {
+        walks: 256,
+        base_seed: 0xB10F,
+        max_nodes: 16,
+        max_arrivals: 96,
+        threads: Some(threads),
+        ..Default::default()
+    };
+    let one = explore(&cfg(1));
+    assert!(one.passed(), "{}", one.render());
+    assert!(one.total_events > 0);
+    assert_eq!(one.walks, 256);
+    assert_eq!(one.fleet_walks + one.episode_walks, 256);
+    assert!(one.fleet_walks > 0 && one.episode_walks > 0, "both walk kinds must be sampled");
+
+    let eight = explore(&cfg(8));
+    assert!(eight.passed(), "{}", eight.render());
+    assert_eq!(one.total_events, eight.total_events, "walks are keyed by index, not thread");
+    assert_eq!(one.fleet_walks, eight.fleet_walks);
+}
+
+#[test]
+fn repro_codec_round_trips_generated_walks() {
+    let cfg = VoprCfg {
+        walks: 48,
+        base_seed: 77,
+        max_nodes: 10,
+        max_arrivals: 24,
+        ..Default::default()
+    };
+    for i in 0..48 {
+        let (spec, _) = gen_walk(&cfg, i);
+        let enc = encode_walk(&spec);
+        let dec = decode_walk(&enc).unwrap_or_else(|e| panic!("walk {i}: {e}"));
+        assert_eq!(enc, encode_walk(&dec), "walk {i} did not round-trip");
+    }
+    assert!(decode_walk("fleet;nonsense").is_err());
+    assert!(decode_walk("who;s=agent").is_err());
+}
