@@ -18,7 +18,9 @@
 //! result.
 
 use crate::cluster::spec::{size_log_factor, AgentCosts};
-use crate::net::NodeId;
+use crate::net::faults::FaultPlane;
+use crate::net::message::SubJobId;
+use crate::net::{LinkClass, MsgKind, NetCost, NodeId};
 use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime, TrialScratch};
 
 pub use crate::sim::harness::StepTrace;
@@ -198,6 +200,44 @@ pub fn skip_episode(
 
 /// Number of jittered steps in the agent episode (Fig. 3).
 pub const AGENT_JITTERS: usize = 4;
+
+/// Total network cost of the Fig. 3 message sequence under a fault plane:
+/// the `SpawnProcess`/`SpawnAck` handshake, the `TransferState`/
+/// `TransferDone` payload transfer (data + process image), and the
+/// `NotifyDependent`/`NotifyAck` round. Each phase is one
+/// [`FaultPlane::exchange`] under the plane's shared timeout/retry/backoff
+/// policy; a phase that exhausts its retries aborts the sequence (delivery
+/// is conjunctive — later phases are never attempted) and the caller falls
+/// back to reactive checkpoint recovery. Draws come only from the salted
+/// side-stream keyed by `(seed, edge_key, seq)`, so calling this never
+/// perturbs an episode's own jitter draws: with the plane off it returns
+/// [`NetCost::CLEAN`] after zero-probability draws and the simulation is
+/// byte-identical to one that never calls it.
+pub fn sequence_net_cost(
+    faults: &FaultPlane,
+    seed: u64,
+    edge_key: u64,
+    seq: &mut u64,
+    cut: bool,
+    data_kb: u64,
+    proc_kb: u64,
+) -> NetCost {
+    let phases = [
+        MsgKind::SpawnProcess { sub_job: SubJobId(0) }.wire_bytes(),
+        MsgKind::TransferState { bytes: (data_kb + proc_kb) * 1024 }.wire_bytes(),
+        MsgKind::NotifyDependent { sub_job: SubJobId(0) }.wire_bytes(),
+    ];
+    let mut total = NetCost::CLEAN;
+    for bytes in phases {
+        let c = faults.exchange(LinkClass::Peer, seed, edge_key, seq, cut, bytes);
+        let failed = !c.delivered;
+        total.absorb(c);
+        if failed {
+            break;
+        }
+    }
+    total
+}
 
 /// Reusable engine allocations for agent episodes; batch workers thread
 /// one through consecutive trials (reuse never changes a result).
@@ -382,6 +422,45 @@ mod tests {
         };
         assert_eq!(run(99), run(99));
         assert_ne!(run(99), run(100));
+    }
+
+    #[test]
+    fn off_plane_sequence_is_clean() {
+        let p = FaultPlane::default();
+        let mut seq = 0;
+        let c = sequence_net_cost(&p, 1, 42, &mut seq, false, 1 << 19, 1 << 19);
+        assert_eq!(c, NetCost::CLEAN);
+        assert_eq!(seq, 6, "three phases consume two draws each");
+    }
+
+    #[test]
+    fn certain_loss_aborts_the_sequence_on_phase_one() {
+        use crate::net::LinkFaults;
+        let p = FaultPlane {
+            peer: LinkFaults { loss_p: 1.0, ..LinkFaults::off() },
+            ..FaultPlane::default()
+        };
+        let mut seq = 0;
+        let c = sequence_net_cost(&p, 1, 42, &mut seq, false, 1 << 19, 1 << 19);
+        assert!(!c.delivered, "loss_p = 1 can never complete the handshake");
+        let attempts = p.retry.max_retries as u64 + 1;
+        assert_eq!(c.timeouts, attempts, "later phases must never start");
+        assert_eq!(seq, 2 * attempts);
+        assert!(c.penalty_s > 0.0);
+    }
+
+    #[test]
+    fn sequence_cost_is_pure_in_its_key() {
+        use crate::net::LinkFaults;
+        let p = FaultPlane {
+            peer: LinkFaults { loss_p: 0.4, dup_p: 0.2, delay_p: 0.3, delay_mean_s: 0.2 },
+            ..FaultPlane::default()
+        };
+        let (mut s1, mut s2) = (0u64, 0u64);
+        let a = sequence_net_cost(&p, 9, 77, &mut s1, false, 1 << 20, 1 << 18);
+        let b = sequence_net_cost(&p, 9, 77, &mut s2, false, 1 << 20, 1 << 18);
+        assert_eq!(a, b, "same (seed, edge, seq) must mean same cost");
+        assert_eq!(s1, s2);
     }
 
     #[test]

@@ -35,9 +35,46 @@ use crate::cluster::spec::FtCosts;
 use crate::coordinator::ftmanager::Strategy;
 use crate::failure::injector::FailurePlan;
 use crate::hybrid::rules::{decide, Mover, RuleInputs};
+use crate::net::faults::{self, FaultPlane};
 use crate::net::message::SubJobId;
-use crate::net::{NodeId, Topology};
+use crate::net::{NetCost, NodeId, Topology};
 use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime, TrialScratch};
+
+/// Sentinel `from` marker for [`LiveState::Recovering`] entries created by
+/// the *fallback* ladder (a migration whose message sequence exhausted its
+/// retries) rather than by a node failure. Never a real node id, so the
+/// node-keyed [`Ev::RecoveryDone`] scan can never cross-resume a fallback
+/// sub-job; fallbacks resume through their own [`Ev::FallbackDone`].
+const FALLBACK_FROM: NodeId = NodeId(usize::MAX);
+
+/// Network cost of one migration's full message sequence under `cfg`'s
+/// strategy: the Fig. 3 agent handshakes, the Fig. 5 object migration, or
+/// the hybrid negotiation followed by the winner's sequence. The single
+/// dispatch point shared by the live simulator and the fleet simulator, so
+/// both price a migration's wire traffic identically. Draws come only from
+/// the fault plane's salted side-stream via `(seed, edge_key, seq)`.
+pub fn migration_net_cost(
+    cfg: &LiveCfg,
+    faults: &FaultPlane,
+    seed: u64,
+    edge_key: u64,
+    seq: &mut u64,
+    cut: bool,
+) -> NetCost {
+    match cfg.strategy {
+        Strategy::Agent => crate::agentft::migration::sequence_net_cost(
+            faults, seed, edge_key, seq, cut, cfg.data_kb, cfg.proc_kb,
+        ),
+        Strategy::Hybrid => crate::hybrid::negotiate::sequence_net_cost(
+            faults, seed, edge_key, seq, cut, cfg.z, cfg.data_kb, cfg.proc_kb,
+        ),
+        // Core — and any other strategy that migrates in a fleet context —
+        // moves the job object the Fig. 5 way.
+        _ => crate::coreft::migration::sequence_net_cost(
+            faults, seed, edge_key, seq, cut, cfg.data_kb,
+        ),
+    }
+}
 
 /// Events of the live simulation.
 #[derive(Debug, Clone)]
@@ -56,6 +93,10 @@ enum Ev {
     /// Checkpoint recovery for `node`'s failure completes; the sub-jobs
     /// lost to *that* failure resume.
     RecoveryDone { node: NodeId },
+    /// Fallback checkpoint recovery for one sub-job completes: its
+    /// migration's message sequence exhausted its retries under the fault
+    /// plane and the sub-job rolled back instead of migrating.
+    FallbackDone { sub: SubJobId },
     /// A sub-job finishes its compute.
     SubJobDone { sub: SubJobId },
 }
@@ -79,6 +120,15 @@ pub struct LiveOutcome {
     pub lost_then_recovered: usize,
     /// Follow-on failures injected on migration targets (cascade regimes).
     pub cascades: usize,
+    /// Retransmissions spent across every exchange under the fault plane.
+    pub net_retries: u64,
+    /// Attempts that timed out (lost request or ack, or a partition).
+    pub net_timeouts: u64,
+    /// Recoveries taken one rung down the ladder: migrations that fell
+    /// back to checkpoint recovery, plus restores degraded to cold.
+    pub fallbacks: u64,
+    /// Duplicate deliveries suppressed by receivers (counted, free).
+    pub dup_suppressed: u64,
     /// Virtual-time event trace length (for determinism checks).
     pub events: u64,
 }
@@ -148,6 +198,10 @@ impl Default for LiveScratch {
 struct System<'a> {
     cfg: &'a LiveCfg,
     topo: &'a Topology,
+    faults: &'a FaultPlane,
+    /// Side-stream sequence counter for fault draws; advances per message
+    /// whether or not it survives, so replays are exact.
+    fault_seq: u64,
     host: Vec<NodeId>,
     state: Vec<LiveState>,
     doomed: Vec<bool>,
@@ -232,32 +286,75 @@ impl Scenario for System<'_> {
                         let remaining = (done_at.saturating_sub(now)).as_secs();
                         let dur = self.reinstate_s(self.cfg.z, ctx);
                         if let Some(target) = self.pick_target(node, ctx) {
-                            self.state[i] =
-                                LiveState::Migrating { resume_remaining_s: remaining };
-                            self.host[i] = target;
-                            ctx.send_in(
-                                SimTime::from_secs(dur),
-                                me,
-                                Ev::MigrationDone { sub, to: target },
-                            );
-                            // Cascade regimes: the chosen target is doomed
-                            // right as the migration starts and fails
-                            // `lag_s` later — possibly mid-reinstate.
-                            if let Some(c) = self.cascade {
-                                if ctx.rng().chance(c.p_follow) {
-                                    let predictable =
-                                        ctx.rng().chance(self.cfg.predictable_frac);
-                                    ctx.send_in(
-                                        SimTime::from_secs(0.0),
-                                        me,
-                                        Ev::Doom {
-                                            node: target,
-                                            predictable,
-                                            cascade: true,
-                                            fail_in_s: c.lag_s,
-                                        },
-                                    );
+                            // Price the migration's message sequence on the
+                            // fault plane's side-stream. Off plane: no draw,
+                            // no cost — byte-identical to the unfaulted run.
+                            let mut extra_s = 0.0;
+                            let mut delivered = true;
+                            if !self.faults.is_off() {
+                                let cut = self.faults.cut_peer(node, target, now.as_secs());
+                                let cost = migration_net_cost(
+                                    self.cfg,
+                                    self.faults,
+                                    self.cfg.seed,
+                                    faults::edge(node, target),
+                                    &mut self.fault_seq,
+                                    cut,
+                                );
+                                self.outcome.net_retries += cost.retries;
+                                self.outcome.net_timeouts += cost.timeouts;
+                                self.outcome.dup_suppressed += cost.dup_deliveries;
+                                extra_s = cost.penalty_s;
+                                delivered = cost.delivered;
+                            }
+                            if delivered {
+                                self.state[i] =
+                                    LiveState::Migrating { resume_remaining_s: remaining };
+                                self.host[i] = target;
+                                ctx.send_in(
+                                    SimTime::from_secs(dur + extra_s),
+                                    me,
+                                    Ev::MigrationDone { sub, to: target },
+                                );
+                                // Cascade regimes: the chosen target is doomed
+                                // right as the migration starts and fails
+                                // `lag_s` later — possibly mid-reinstate.
+                                if let Some(c) = self.cascade {
+                                    if ctx.rng().chance(c.p_follow) {
+                                        let predictable =
+                                            ctx.rng().chance(self.cfg.predictable_frac);
+                                        ctx.send_in(
+                                            SimTime::from_secs(0.0),
+                                            me,
+                                            Ev::Doom {
+                                                node: target,
+                                                predictable,
+                                                cascade: true,
+                                                fail_in_s: c.lag_s,
+                                            },
+                                        );
+                                    }
                                 }
+                            } else {
+                                // The sequence exhausted its retries: fall
+                                // back to reactive checkpoint recovery —
+                                // one rung down the ladder, never a lost
+                                // sub-job. The sub stays on the doomed node
+                                // until FallbackDone re-homes it.
+                                self.state[i] = LiveState::Recovering {
+                                    resume_remaining_s: remaining,
+                                    from: FALLBACK_FROM,
+                                };
+                                self.outcome.rollbacks += 1;
+                                self.outcome.lost_then_recovered += 1;
+                                self.outcome.fallbacks += 1;
+                                let rdur =
+                                    self.cfg.ckpt_reinstate_s + self.cfg.ckpt_overhead_s;
+                                ctx.send_in(
+                                    SimTime::from_secs(extra_s + rdur),
+                                    me,
+                                    Ev::FallbackDone { sub },
+                                );
                             }
                         }
                         // no healthy neighbour: stay put; the failure path
@@ -304,7 +401,30 @@ impl Scenario for System<'_> {
                     lost += 1;
                 }
                 if lost > 0 {
-                    let dur = self.cfg.ckpt_reinstate_s + self.cfg.ckpt_overhead_s;
+                    let mut dur = self.cfg.ckpt_reinstate_s + self.cfg.ckpt_overhead_s;
+                    // The restore itself crosses the network: price the
+                    // RestoreRequest/RestoreData exchange against the
+                    // checkpoint server on the side-stream. An exchange
+                    // that exhausts its retries degrades to a cold restore
+                    // (bottom rung of the ladder) — slower, never lost.
+                    if !self.faults.is_off() {
+                        let cost = self.faults.restore_exchange(
+                            self.cfg.seed,
+                            node,
+                            &mut self.fault_seq,
+                            now.as_secs(),
+                            self.cfg.data_kb,
+                        );
+                        self.outcome.net_retries += cost.retries;
+                        self.outcome.net_timeouts += cost.timeouts;
+                        self.outcome.dup_suppressed += cost.dup_deliveries;
+                        if cost.delivered {
+                            dur += cost.penalty_s;
+                        } else {
+                            dur = dur * self.faults.cold_restore_factor + cost.penalty_s;
+                            self.outcome.fallbacks += 1;
+                        }
+                    }
                     self.outcome.rollbacks += 1;
                     self.outcome.lost_then_recovered += lost;
                     ctx.send_in(SimTime::from_secs(dur), me, Ev::RecoveryDone { node });
@@ -352,6 +472,23 @@ impl Scenario for System<'_> {
                     }
                 }
             }
+            Ev::FallbackDone { sub } => {
+                if let LiveState::Recovering { resume_remaining_s, from } = self.state[sub.0] {
+                    if from == FALLBACK_FROM {
+                        // the sub waited out its fallback on the doomed
+                        // node; re-home before resuming, exactly like the
+                        // node-failure recovery path
+                        if self.doomed[self.host[sub.0].0] {
+                            if let Some(t) = self.pick_target(self.host[sub.0], ctx) {
+                                self.host[sub.0] = t;
+                            }
+                        }
+                        let done_at = now + SimTime::from_secs(resume_remaining_s);
+                        self.state[sub.0] = LiveState::Running { done_at };
+                        ctx.send_at(done_at, me, Ev::SubJobDone { sub });
+                    }
+                }
+            }
             Ev::SubJobDone { sub } => {
                 if let LiveState::Running { done_at } = self.state[sub.0] {
                     if done_at == now {
@@ -396,6 +533,33 @@ pub fn run_live_scratch(
     cascade: Option<CascadeSpec>,
     scratch: &mut LiveScratch,
 ) -> LiveOutcome {
+    run_live_faulted_scratch(cfg, topo, plan, cascade, &FaultPlane::default(), scratch)
+}
+
+/// Live run under a network fault plane: migrations pay (and may lose)
+/// their message sequences, restores pay the checkpoint-server exchange,
+/// and every exhausted exchange falls back one rung instead of losing the
+/// sub-job. With `faults` off this is byte-identical to
+/// [`run_live_with`] — the plane is never consulted.
+pub fn run_live_faulted(
+    cfg: &LiveCfg,
+    topo: &Topology,
+    plan: &FailurePlan,
+    cascade: Option<CascadeSpec>,
+    faults: &FaultPlane,
+) -> LiveOutcome {
+    run_live_faulted_scratch(cfg, topo, plan, cascade, faults, &mut LiveScratch::new())
+}
+
+/// [`run_live_faulted`] on recycled trial allocations.
+pub fn run_live_faulted_scratch(
+    cfg: &LiveCfg,
+    topo: &Topology,
+    plan: &FailurePlan,
+    cascade: Option<CascadeSpec>,
+    faults: &FaultPlane,
+    scratch: &mut LiveScratch,
+) -> LiveOutcome {
     let mut rng = Rng::new(cfg.seed);
     let mut host = std::mem::take(&mut scratch.host);
     host.clear();
@@ -414,6 +578,8 @@ pub fn run_live_scratch(
     let system = System {
         cfg,
         topo,
+        faults,
+        fault_seq: 0,
         host,
         state,
         doomed,
@@ -615,6 +781,99 @@ mod tests {
             "rollback cost must show: {}",
             o.completed_at_s
         );
+    }
+
+    #[test]
+    fn default_plane_is_byte_identical_to_run_live() {
+        let mut rng = Rng::new(13);
+        let plan = FailureProcess::RandomUniformK { k: 4 }.plan(1, 3600.0, 8, &mut rng);
+        let c = cfg(Strategy::Hybrid, 0.7);
+        let a = run_live(&c, &topo(), &plan);
+        let b = run_live_faulted(&c, &topo(), &plan, None, &FaultPlane::default());
+        assert_eq!(a.completed_at_s.to_bits(), b.completed_at_s.to_bits());
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.rollbacks, b.rollbacks);
+        assert_eq!(b.net_retries, 0);
+        assert_eq!(b.net_timeouts, 0);
+        assert_eq!(b.fallbacks, 0);
+        assert_eq!(b.dup_suppressed, 0);
+    }
+
+    #[test]
+    fn total_peer_loss_falls_back_instead_of_migrating() {
+        use crate::net::LinkFaults;
+        let mut rng = Rng::new(3);
+        let plan = FailureProcess::Periodic { offset_s: 900.0 }.plan(1, 3600.0, 8, &mut rng);
+        let c = cfg(Strategy::Core, 1.0);
+        let p = FaultPlane {
+            peer: LinkFaults { loss_p: 1.0, ..LinkFaults::off() },
+            ..FaultPlane::default()
+        };
+        let clean = run_live(&c, &topo(), &plan);
+        let o = run_live_faulted(&c, &topo(), &plan, None, &p);
+        assert_eq!(o.migrations, 0, "no sequence can complete: {o:?}");
+        assert_eq!(o.fallbacks as usize, clean.migrations, "every migration fell back");
+        assert_eq!(o.rollbacks as u64, o.fallbacks, "{o:?}");
+        assert!(o.net_timeouts > 0 && o.net_retries > 0, "{o:?}");
+        // the job still completes, paying the checkpoint recovery instead
+        if clean.migrations > 0 {
+            assert!(
+                o.completed_at_s >= 3600.0 + 848.0 + 485.0 - 1.0,
+                "{}",
+                o.completed_at_s
+            );
+        }
+    }
+
+    #[test]
+    fn severed_checkpoint_server_degrades_the_restore() {
+        use crate::net::{CutSet, Partition};
+        let mut rng = Rng::new(4);
+        let plan = FailureProcess::Periodic { offset_s: 600.0 }.plan(1, 3600.0, 1, &mut rng);
+        let c = cfg(Strategy::Hybrid, 0.0); // unpredicted → reactive restore
+        let p = FaultPlane {
+            partitions: vec![Partition {
+                start_s: 0.0,
+                end_s: 8.0 * 3600.0,
+                cut: CutSet::Checkpoint,
+            }],
+            ..FaultPlane::default()
+        };
+        let clean = run_live(&c, &topo(), &plan);
+        let o = run_live_faulted(&c, &topo(), &plan, None, &p);
+        assert_eq!(o.rollbacks, clean.rollbacks);
+        assert!(o.fallbacks >= 1, "restore exchange must exhaust: {o:?}");
+        // cold restore at factor 2 plus timeout/backoff penalties
+        assert!(
+            o.completed_at_s > clean.completed_at_s + (848.0 + 485.0) - 1.0,
+            "degraded {} vs clean {}",
+            o.completed_at_s,
+            clean.completed_at_s
+        );
+        // degraded, never lost: the run terminated with every sub done
+        assert!(o.completed_at_s.is_finite());
+    }
+
+    #[test]
+    fn faulted_run_is_deterministic_per_seed() {
+        use crate::net::LinkFaults;
+        let mut rng = Rng::new(21);
+        let plan = FailureProcess::RandomUniformK { k: 5 }.plan(1, 3600.0, 8, &mut rng);
+        let c = cfg(Strategy::Hybrid, 0.6);
+        let p = FaultPlane {
+            peer: LinkFaults { loss_p: 0.5, dup_p: 0.2, delay_p: 0.4, delay_mean_s: 1.0 },
+            ckpt: LinkFaults { loss_p: 0.3, ..LinkFaults::off() },
+            ..FaultPlane::default()
+        };
+        let a = run_live_faulted(&c, &topo(), &plan, None, &p);
+        let b = run_live_faulted(&c, &topo(), &plan, None, &p);
+        assert_eq!(a.completed_at_s.to_bits(), b.completed_at_s.to_bits());
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.net_retries, b.net_retries);
+        assert_eq!(a.net_timeouts, b.net_timeouts);
+        assert_eq!(a.fallbacks, b.fallbacks);
+        assert_eq!(a.dup_suppressed, b.dup_suppressed);
     }
 
     #[test]

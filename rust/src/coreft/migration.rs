@@ -15,7 +15,9 @@
 
 use crate::agentft::migration::{draw_episode, EpisodeDraws, StepTrace};
 use crate::cluster::spec::{size_log_factor, CoreCosts};
-use crate::net::NodeId;
+use crate::net::faults::FaultPlane;
+use crate::net::message::SubJobId;
+use crate::net::{LinkClass, MsgKind, NetCost, NodeId};
 use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime, TrialScratch};
 
 /// Result of a core-intelligence migration episode.
@@ -102,6 +104,38 @@ impl Scenario for EpisodeActor<'_> {
 /// Number of jittered steps in the core episode (Fig. 5).
 pub const CORE_JITTERS: usize = 3;
 
+/// Total network cost of the Fig. 5 message sequence under a fault plane:
+/// the `MigrateObject`/`MigrateAck` payload exchange (data + handle
+/// registration, priced at the object's wire size) followed by the
+/// runtime's `RebindRound` control exchange. Same contract as
+/// [`crate::agentft::migration::sequence_net_cost`]: per-phase
+/// timeout/retry/backoff from the plane's shared
+/// [`crate::net::RetryPolicy`], conjunctive delivery with early abort, and
+/// draws only from the salted side-stream so episode jitters never shift.
+pub fn sequence_net_cost(
+    faults: &FaultPlane,
+    seed: u64,
+    edge_key: u64,
+    seq: &mut u64,
+    cut: bool,
+    data_kb: u64,
+) -> NetCost {
+    let phases = [
+        MsgKind::MigrateObject { sub_job: SubJobId(0), bytes: data_kb * 1024 }.wire_bytes(),
+        MsgKind::RebindRound { remaining: 0 }.wire_bytes(),
+    ];
+    let mut total = NetCost::CLEAN;
+    for bytes in phases {
+        let c = faults.exchange(LinkClass::Peer, seed, edge_key, seq, cut, bytes);
+        let failed = !c.delivered;
+        total.absorb(c);
+        if failed {
+            break;
+        }
+    }
+    total
+}
+
 /// Reusable engine allocations for core episodes; batch workers thread
 /// one through consecutive trials (reuse never changes a result).
 pub struct EpisodeScratch(TrialScratch<Ep>);
@@ -181,6 +215,45 @@ mod tests {
 
     fn adj(n: usize) -> Vec<(NodeId, bool)> {
         (0..n).map(|i| (NodeId(i + 200), false)).collect()
+    }
+
+    #[test]
+    fn off_plane_sequence_is_clean() {
+        let p = FaultPlane::default();
+        let mut seq = 0;
+        let c = sequence_net_cost(&p, 3, 17, &mut seq, false, 1 << 19);
+        assert_eq!(c, NetCost::CLEAN);
+        assert_eq!(seq, 4, "two phases consume two draws each");
+    }
+
+    #[test]
+    fn certain_loss_never_delivers_and_is_bounded() {
+        use crate::net::LinkFaults;
+        let p = FaultPlane {
+            peer: LinkFaults { loss_p: 1.0, ..LinkFaults::off() },
+            ..FaultPlane::default()
+        };
+        let mut seq = 0;
+        let c = sequence_net_cost(&p, 3, 17, &mut seq, false, 1 << 19);
+        assert!(!c.delivered);
+        let attempts = p.retry.max_retries as u64 + 1;
+        assert_eq!(c.timeouts, attempts, "phase two must never start");
+        assert_eq!(c.retries, attempts - 1, "retries are bounded by the policy");
+        assert_eq!(seq, 2 * attempts);
+    }
+
+    #[test]
+    fn sequence_cost_is_pure_in_its_key() {
+        use crate::net::LinkFaults;
+        let p = FaultPlane {
+            peer: LinkFaults { loss_p: 0.3, dup_p: 0.3, delay_p: 0.3, delay_mean_s: 0.1 },
+            ..FaultPlane::default()
+        };
+        let (mut s1, mut s2) = (0u64, 0u64);
+        let a = sequence_net_cost(&p, 5, 31, &mut s1, false, 1 << 25);
+        let b = sequence_net_cost(&p, 5, 31, &mut s2, false, 1 << 25);
+        assert_eq!(a, b);
+        assert_eq!(s1, s2);
     }
 
     #[test]

@@ -30,8 +30,8 @@ use crate::scenario::{run_sweep, CellSpec, FleetMetric, FleetSpec, SweepSpec};
 const NODES: usize = 48;
 
 /// One line of a fleet figure: a label plus the spec builder for an
-/// x-axis value.
-type Variant<'a> = (&'a str, Box<dyn Fn(f64) -> FleetSpec>);
+/// x-axis value. Shared with the `netfault` family.
+pub(crate) type Variant<'a> = (&'a str, Box<dyn Fn(f64) -> FleetSpec>);
 
 /// The checkpoint baseline of the fleet figures: central single-server
 /// checkpointing is reactive only (no prediction-driven migration), so its
@@ -54,7 +54,7 @@ fn checkpoint_fleet(arrival_per_h: f64, churn_per_node_h: f64, streams: usize) -
 /// realistic trial count, so neighbouring x-points never share trial
 /// seeds — while variants share seeds deliberately (common random
 /// numbers: every strategy faces the same arrival/churn stories).
-fn fleet_series(
+pub(crate) fn fleet_series(
     title: &str,
     x_label: &str,
     y_label: &str,

@@ -9,6 +9,7 @@ pub mod fig14;
 pub mod fleet;
 pub mod md_decisions;
 pub mod multifailure;
+pub mod netfault;
 pub mod prediction;
 pub mod registry;
 pub mod rules_validation;

@@ -1,0 +1,131 @@
+//! The network-fault experiment: what the deterministic fault plane
+//! ([`crate::net::faults`]) costs each recovery strategy (EXPERIMENTS.md
+//! §Network faults).
+//!
+//! * `netfault` — goodput vs per-message loss rate, loss × detector
+//!   accuracy: every migration handshake and checkpoint-server exchange
+//!   pays timeouts, retransmissions and exponential backoff out of the
+//!   same [`RetryPolicy`](crate::net::RetryPolicy), and an exhausted
+//!   exchange degrades gracefully (migration falls back to reactive
+//!   checkpoint recovery; a severed restore pays the cold-restore factor)
+//!   instead of losing the job. The figure shows the proactive lines
+//!   eroding toward the reactive baseline as loss climbs — lost
+//!   negotiation/handshake traffic converts predicted failures back into
+//!   rollbacks — while an accurate detector keeps a margin at every loss
+//!   rate.
+//!
+//! Both link classes (peer and checkpoint-server) share the swept loss
+//! probability, so the checkpoint baseline is not given a free perfect
+//! network. Seeds follow the fleet-family convention: common random
+//! numbers across variants, 2³²-spaced per x-point.
+
+use super::fleet::{fleet_series, Variant};
+use crate::checkpoint::CheckpointStrategy;
+use crate::coordinator::ftmanager::Strategy;
+use crate::metrics::Series;
+use crate::scenario::{FleetMetric, FleetSpec};
+
+/// Cluster size of the netfault figure (ring of 32 nodes × 2 slots).
+const NODES: usize = 32;
+
+/// Apply a symmetric loss rate to both link classes of the spec's fault
+/// plane. Duplication/delay stay off so the x-axis isolates loss; the
+/// retry policy stays at its calibrated default.
+fn faulted(mut spec: FleetSpec, loss_p: f64) -> FleetSpec {
+    spec.faults.peer.loss_p = loss_p;
+    spec.faults.ckpt.loss_p = loss_p;
+    spec
+}
+
+/// Goodput vs per-message loss rate: loss × detector accuracy.
+pub fn netfault(trials: usize, seed: u64) -> Series {
+    let arrival = 6.0;
+    let churn = 1.0;
+    let variants: Vec<Variant<'_>> = vec![
+        (
+            "hybrid, accurate detector (90% predicted)",
+            Box::new(move |l| {
+                faulted(FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, arrival, churn), l)
+            }),
+        ),
+        (
+            "hybrid, weak detector (50% predicted)",
+            Box::new(move |l| {
+                let mut s = FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, arrival, churn);
+                s.job.predictable_frac = 0.5;
+                faulted(s, l)
+            }),
+        ),
+        (
+            "checkpoint (central, 2 streams, reactive)",
+            Box::new(move |l| {
+                let mut s = FleetSpec::placentia_fleet(
+                    Strategy::Checkpoint(CheckpointStrategy::CentralSingle),
+                    NODES,
+                    arrival,
+                    churn,
+                );
+                s.job.predictable_frac = 0.0;
+                faulted(s, l)
+            }),
+        ),
+    ];
+    fleet_series(
+        "Netfault: goodput vs message loss rate (32 nodes, 6 jobs/h, churn 1/node/h)",
+        "per-message loss probability (both link classes)",
+        "goodput (completed compute / cluster slot-seconds)",
+        &[0.0, 0.02, 0.05, 0.1, 0.2],
+        &variants,
+        FleetMetric::Goodput,
+        trials,
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn netfault_shape_and_determinism() {
+        let a = netfault(2, 9);
+        assert_eq!(a.series.len(), 3);
+        assert_eq!(a.x, vec![0.0, 0.02, 0.05, 0.1, 0.2]);
+        for (name, y) in &a.series {
+            assert_eq!(y.len(), 5, "{name}");
+            assert!(y.iter().all(|v| v.is_finite()), "{name}: goodput is never NaN");
+        }
+        let b = netfault(2, 9);
+        assert_eq!(a.to_csv(), b.to_csv());
+    }
+
+    #[test]
+    fn lossless_point_matches_the_unfaulted_fleet() {
+        // At loss 0.0 the plane is off and the cell must be byte-identical
+        // to a spec that never mentions faults at all.
+        let spec = faulted(
+            FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, 6.0, 1.0),
+            0.0,
+        );
+        assert!(spec.faults.is_off());
+        let clean = FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, 6.0, 1.0);
+        let a = crate::scenario::fleet::run_fleet(&spec, 42);
+        let b = crate::scenario::fleet::run_fleet(&clean, 42);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.jobs_completed, b.jobs_completed);
+        assert_eq!(a.net_retries, 0);
+        assert_eq!(a.fallbacks, 0);
+    }
+
+    #[test]
+    fn loss_never_raises_goodput_for_the_accurate_detector() {
+        let s = netfault(3, 5);
+        let (name, y) = &s.series[0];
+        assert!(
+            y[0] >= *y.last().unwrap() - 1e-9,
+            "{name}: lossless goodput {} should be at least the 20%-loss one {}",
+            y[0],
+            y.last().unwrap()
+        );
+    }
+}

@@ -15,7 +15,8 @@
 
 use super::rules::{decide, Mover, RuleInputs, RuleTrace};
 use crate::cluster::spec::FtCosts;
-use crate::net::NodeId;
+use crate::net::faults::FaultPlane;
+use crate::net::{LinkClass, MsgKind, NetCost, NodeId};
 
 /// Record of one negotiation (for reporting and tests).
 #[derive(Debug, Clone)]
@@ -71,6 +72,49 @@ pub fn hybrid_reinstate_s(costs: &FtCosts, inp: RuleInputs) -> f64 {
     episode + NEGOTIATION_S
 }
 
+/// Total network cost of the hybrid sequence under a fault plane: the
+/// `PredictionRequest`/`PredictionReply` negotiation exchange between the
+/// conflicting parties, then the *winner's* full message sequence — the
+/// Fig. 3 agent handshakes or the Fig. 5 object migration, chosen by the
+/// same [`decide`] rules the timing model uses. Delivery is conjunctive: a
+/// negotiation that exhausts its retries aborts before either mover
+/// starts, and the caller falls back to reactive checkpoint recovery.
+/// Draws come only from the salted side-stream keyed by
+/// `(seed, edge_key, seq)`; an off plane returns [`NetCost::CLEAN`].
+#[allow(clippy::too_many_arguments)]
+pub fn sequence_net_cost(
+    faults: &FaultPlane,
+    seed: u64,
+    edge_key: u64,
+    seq: &mut u64,
+    cut: bool,
+    z: usize,
+    data_kb: u64,
+    proc_kb: u64,
+) -> NetCost {
+    let mut total = faults.exchange(
+        LinkClass::Peer,
+        seed,
+        edge_key,
+        seq,
+        cut,
+        MsgKind::PredictionRequest.wire_bytes(),
+    );
+    if !total.delivered {
+        return total;
+    }
+    let rest = match decide(RuleInputs { z, data_kb, proc_kb }).0 {
+        Mover::Agent => crate::agentft::migration::sequence_net_cost(
+            faults, seed, edge_key, seq, cut, data_kb, proc_kb,
+        ),
+        Mover::Core => {
+            crate::coreft::migration::sequence_net_cost(faults, seed, edge_key, seq, cut, data_kb)
+        }
+    };
+    total.absorb(rest);
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,6 +122,50 @@ mod tests {
 
     fn inp(z: usize, d: u64, p: u64) -> RuleInputs {
         RuleInputs { z, data_kb: d, proc_kb: p }
+    }
+
+    #[test]
+    fn off_plane_sequence_is_clean_and_follows_the_winner() {
+        let p = FaultPlane::default();
+        // Core wins at the Table 1 point: negotiation + 2 core phases.
+        let mut seq = 0;
+        let c = sequence_net_cost(&p, 1, 9, &mut seq, false, 4, 1 << 19, 1 << 19);
+        assert_eq!(c, NetCost::CLEAN);
+        assert_eq!(seq, 6, "negotiation + MigrateObject + RebindRound, two draws each");
+        // Agent wins at Z > 10 with small data: negotiation + 3 agent phases.
+        let mut seq = 0;
+        let c = sequence_net_cost(&p, 1, 9, &mut seq, false, 12, 1 << 19, 1 << 19);
+        assert_eq!(c, NetCost::CLEAN);
+        assert_eq!(seq, 8, "negotiation + Spawn + Transfer + Notify, two draws each");
+    }
+
+    #[test]
+    fn lost_negotiation_aborts_before_any_mover_starts() {
+        use crate::net::LinkFaults;
+        let p = FaultPlane {
+            peer: LinkFaults { loss_p: 1.0, ..LinkFaults::off() },
+            ..FaultPlane::default()
+        };
+        let mut seq = 0;
+        let c = sequence_net_cost(&p, 1, 9, &mut seq, false, 4, 1 << 19, 1 << 19);
+        assert!(!c.delivered);
+        let attempts = p.retry.max_retries as u64 + 1;
+        assert_eq!(c.timeouts, attempts, "the winner's sequence must never start");
+        assert_eq!(seq, 2 * attempts);
+    }
+
+    #[test]
+    fn sequence_cost_is_pure_in_its_key() {
+        use crate::net::LinkFaults;
+        let p = FaultPlane {
+            peer: LinkFaults { loss_p: 0.25, dup_p: 0.25, delay_p: 0.25, delay_mean_s: 0.05 },
+            ..FaultPlane::default()
+        };
+        let (mut s1, mut s2) = (0u64, 0u64);
+        let a = sequence_net_cost(&p, 4, 21, &mut s1, false, 4, 1 << 19, 1 << 19);
+        let b = sequence_net_cost(&p, 4, 21, &mut s2, false, 4, 1 << 19, 1 << 19);
+        assert_eq!(a, b);
+        assert_eq!(s1, s2);
     }
 
     #[test]

@@ -92,6 +92,14 @@ fn commands() -> Vec<Command> {
                  horizon to fit, overriding arrival-per-h and horizon-h; \
                  0 = off)",
             )
+            .opt(
+                "loss-p",
+                "0",
+                "per-message loss probability on both link classes \
+                 (migration handshakes and checkpoint-server exchanges pay \
+                 timeout/retry/backoff and degrade gracefully; 0 = pristine \
+                 network, byte-identical to a build without the fault plane)",
+            )
             .opt("seed", "2014", "trial seed"),
         Command::new("vopr", "chaos-explore spec/seed space with invariant checking")
             .opt("walks", "1000", "random (spec, seed) walks to explore")
@@ -215,6 +223,9 @@ fn run() -> anyhow::Result<()> {
                 // checkpoint baselines are reactive only
                 spec.job.predictable_frac = 0.0;
             }
+            let loss_p: f64 = p.req("loss-p")?;
+            spec.faults.peer.loss_p = loss_p;
+            spec.faults.ckpt.loss_p = loss_p;
             spec.validate().map_err(|e| anyhow::anyhow!("invalid fleet spec: {e}"))?;
             let o = run_fleet(&spec, p.req("seed")?);
             let rate_per_h = match &spec.arrivals {
@@ -252,6 +263,10 @@ fn run() -> anyhow::Result<()> {
                 o.rollbacks,
                 o.peak_concurrent_recoveries,
                 o.subs_lost
+            );
+            println!(
+                "  network: {} retries, {} timeouts, {} fallbacks to checkpoint recovery, {} duplicates suppressed",
+                o.net_retries, o.net_timeouts, o.fallbacks, o.dup_suppressed
             );
             println!("  events {}   last completion {}", o.events, hms_ms(o.last_completion_s));
         }

@@ -1,0 +1,584 @@
+//! Deterministic network fault plane: message loss, duplication, extra
+//! delay and timed partitions, plus the bounded timeout/retry/backoff
+//! machinery every recovery protocol runs its message exchanges through
+//! (DESIGN.md §Network fault plane).
+//!
+//! The central discipline is the **salted side-stream**: every fault draw
+//! comes from a throwaway RNG keyed by `(trial seed, edge, message seq)` —
+//! never from the simulation's main stream. Consuming a draw therefore
+//! cannot perturb arrival times, churn plans, jitters or placement, so
+//! `run_live`/`run_fleet` stay pure functions of `(spec, seed)` with the
+//! plane on, and with the plane off ([`FaultPlane::is_off`]) no draw is
+//! taken at all — the off path is byte-identical to a build without the
+//! plane, the same zero-cost contract the vopr
+//! [`FleetObserver`](crate::scenario::fleet::FleetObserver) keeps.
+//!
+//! [`FaultPlane::exchange`] is the one retry loop every protocol shares: a
+//! request/ack round-trip that retries on loss or partition with a
+//! per-phase timeout and deterministic exponential backoff
+//! ([`RetryPolicy`]), pricing each retransmission at the message's real
+//! wire size ([`MsgKind::wire_bytes`](crate::net::MsgKind::wire_bytes) ×
+//! [`LinkParams::transfer_time`]). It returns a [`NetCost`]: whether the
+//! exchange ultimately delivered, the retries/timeouts/duplicates spent,
+//! and the total extra seconds the caller must add to its phase. A caller
+//! whose exchange exhausts its retries falls back one rung on the recovery
+//! ladder (migration → reactive checkpoint recovery → degraded cold
+//! restore) instead of losing the job — the fallback bookkeeping lives in
+//! `coordinator::livesim` and `scenario::fleet`.
+
+use crate::net::link::LinkParams;
+use crate::net::message::MsgKind;
+use crate::net::topology::NodeId;
+use crate::scenario::fleet::SpecError;
+use crate::sim::Rng;
+
+/// Salt for the fault side-stream. Draw keys are
+/// `seed ^ FAULT_SALT ^ mix(edge, seq)`, so fault draws can never collide
+/// with the arrival (`ARRIVAL_SALT`), churn (`CHURN_SALT`) or plan
+/// (`PLAN_SALT`) streams.
+pub const FAULT_SALT: u64 = 0xFA17_5EED_DE11_FE77;
+
+/// splitmix64 finalizer: decorrelates adjacent `(edge, seq)` keys.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+/// Stable key for the directed peer link `a → b`.
+pub fn edge(a: NodeId, b: NodeId) -> u64 {
+    ((a.0 as u64) << 32) | (b.0 as u64 & 0xFFFF_FFFF)
+}
+
+/// Stable key for the link from node `a` to the checkpoint server.
+pub fn ckpt_edge(a: NodeId) -> u64 {
+    (1 << 63) | a.0 as u64
+}
+
+/// Which link class an exchange crosses: node↔node or node↔checkpoint
+/// server. The two classes carry independent fault parameters — a flaky
+/// interconnect and a healthy storage network (or vice versa) are distinct
+/// scenarios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    Peer,
+    Ckpt,
+}
+
+/// Per-link-class fault parameters. All probabilities are per message
+/// (request and ack are drawn independently).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFaults {
+    /// Probability a message is silently dropped.
+    pub loss_p: f64,
+    /// Probability a delivered message arrives twice (the receiver must
+    /// suppress the duplicate; suppression is counted, and free).
+    pub dup_p: f64,
+    /// Probability a delivered message is delayed beyond the link's
+    /// nominal transfer time.
+    pub delay_p: f64,
+    /// Mean of the exponential extra-delay distribution, seconds.
+    pub delay_mean_s: f64,
+}
+
+impl LinkFaults {
+    /// No loss, no duplication, no extra delay.
+    pub const fn off() -> Self {
+        Self { loss_p: 0.0, dup_p: 0.0, delay_p: 0.0, delay_mean_s: 0.0 }
+    }
+
+    /// True when this link class can never perturb a delivery.
+    pub fn is_off(&self) -> bool {
+        self.loss_p == 0.0 && self.dup_p == 0.0 && self.delay_p == 0.0
+    }
+
+    fn validate(&self) -> Result<(), SpecError> {
+        for p in [self.loss_p, self.dup_p, self.delay_p] {
+            if !(p.is_finite() && (0.0..=1.0).contains(&p)) {
+                return Err(SpecError::BadFaultProbability);
+            }
+        }
+        if !(self.delay_mean_s.is_finite() && self.delay_mean_s >= 0.0) {
+            return Err(SpecError::BadFaultDelay);
+        }
+        Ok(())
+    }
+}
+
+impl Default for LinkFaults {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+/// Which links a timed [`Partition`] severs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CutSet {
+    /// Split the ring into `[0, at)` vs `[at, n)`: peer messages crossing
+    /// the boundary are cut, intra-side traffic is unaffected.
+    Split { at: usize },
+    /// Sever every node from the checkpoint server (restores and
+    /// checkpoint writes time out; peer traffic is unaffected).
+    Checkpoint,
+}
+
+/// A timed network partition, active on `[start_s, end_s)` of virtual
+/// time. Partitions are deterministic — no draws — so they compose freely
+/// with the probabilistic faults.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Partition {
+    pub start_s: f64,
+    pub end_s: f64,
+    pub cut: CutSet,
+}
+
+impl Partition {
+    fn active(&self, t_s: f64) -> bool {
+        self.start_s <= t_s && t_s < self.end_s
+    }
+
+    fn validate(&self) -> Result<(), SpecError> {
+        if !(self.start_s.is_finite() && self.end_s.is_finite())
+            || self.start_s < 0.0
+            || self.end_s <= self.start_s
+        {
+            return Err(SpecError::BadPartitionWindow);
+        }
+        if let CutSet::Split { at } = self.cut {
+            if at == 0 {
+                return Err(SpecError::BadPartitionCut);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Timeout/retry/backoff constants for one request/ack exchange — spec
+/// data, never hardcoded in a protocol. The retransmit schedule is a pure
+/// function of these four numbers: attempt `i ≥ 1` is sent
+/// `timeout_s + backoff_s(i - 1)` after attempt `i - 1`, and after
+/// `max_retries` retransmissions the exchange gives up and the caller
+/// falls back.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Seconds a sender waits for the ack before declaring the attempt
+    /// lost.
+    pub timeout_s: f64,
+    /// Retransmissions after the first attempt (total attempts =
+    /// `max_retries + 1`).
+    pub max_retries: u32,
+    /// First backoff, seconds.
+    pub backoff_base_s: f64,
+    /// Geometric backoff multiplier (≥ 1).
+    pub backoff_mult: f64,
+}
+
+impl RetryPolicy {
+    /// Deterministic exponential backoff before retransmission
+    /// `attempt + 1`: `backoff_base_s * backoff_mult^attempt`.
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        self.backoff_base_s * self.backoff_mult.powi(attempt as i32)
+    }
+
+    fn validate(&self) -> Result<(), SpecError> {
+        let ok = self.timeout_s.is_finite()
+            && self.timeout_s > 0.0
+            && self.backoff_base_s.is_finite()
+            && self.backoff_base_s >= 0.0
+            && self.backoff_mult.is_finite()
+            && self.backoff_mult >= 1.0
+            && self.max_retries <= 64;
+        if ok {
+            Ok(())
+        } else {
+            Err(SpecError::BadRetryPolicy)
+        }
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { timeout_s: 0.5, max_retries: 4, backoff_base_s: 0.25, backoff_mult: 2.0 }
+    }
+}
+
+/// The whole fault plane: per-class probabilistic faults, timed
+/// partitions, the shared retry policy, the link model that prices
+/// retransmissions, and the degradation factor for recoveries whose
+/// checkpoint-server exchange exhausts its retries.
+/// `FaultPlane::default()` is **off**: no draw is ever taken and every
+/// simulation is byte-identical to one without the plane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlane {
+    /// Faults on node↔node links (migration traffic).
+    pub peer: LinkFaults,
+    /// Faults on node↔checkpoint-server links (write/restore traffic).
+    pub ckpt: LinkFaults,
+    /// Timed partitions, checked deterministically at exchange start.
+    pub partitions: Vec<Partition>,
+    /// Timeout/retry/backoff constants shared by every protocol phase.
+    pub retry: RetryPolicy,
+    /// Link model pricing each retransmission (`wire_bytes` ×
+    /// `transfer_time`).
+    pub link: LinkParams,
+    /// Multiplier on the reactive recovery time when the checkpoint
+    /// restore exchange itself exhausts its retries — the bottom rung of
+    /// the fallback ladder (degraded cold restore), never a lost job.
+    pub cold_restore_factor: f64,
+}
+
+impl Default for FaultPlane {
+    fn default() -> Self {
+        Self {
+            peer: LinkFaults::off(),
+            ckpt: LinkFaults::off(),
+            partitions: Vec::new(),
+            retry: RetryPolicy::default(),
+            link: LinkParams::gige(),
+            cold_restore_factor: 2.0,
+        }
+    }
+}
+
+impl FaultPlane {
+    /// True when no delivery can ever be perturbed: both link classes off
+    /// and no partitions. The retry policy is irrelevant then — no
+    /// exchange is attempted — so the hot path skips the plane entirely.
+    pub fn is_off(&self) -> bool {
+        self.peer.is_off() && self.ckpt.is_off() && self.partitions.is_empty()
+    }
+
+    /// Structured validation, surfaced through `FleetSpec::validate` and
+    /// the vopr generator.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        self.peer.validate()?;
+        self.ckpt.validate()?;
+        for p in &self.partitions {
+            p.validate()?;
+        }
+        self.retry.validate()?;
+        self.link.validate()?;
+        if !(self.cold_restore_factor.is_finite() && self.cold_restore_factor >= 1.0) {
+            return Err(SpecError::BadColdRestoreFactor);
+        }
+        Ok(())
+    }
+
+    /// Is the peer link `a ↔ b` severed at virtual time `t_s`?
+    pub fn cut_peer(&self, a: NodeId, b: NodeId, t_s: f64) -> bool {
+        self.partitions.iter().any(|p| {
+            p.active(t_s)
+                && matches!(p.cut, CutSet::Split { at } if (a.0 < at) != (b.0 < at))
+        })
+    }
+
+    /// Is node `a` severed from the checkpoint server at virtual time
+    /// `t_s`?
+    pub fn cut_ckpt(&self, _a: NodeId, t_s: f64) -> bool {
+        self.partitions
+            .iter()
+            .any(|p| p.active(t_s) && matches!(p.cut, CutSet::Checkpoint))
+    }
+
+    /// One message's fate, a pure function of `(seed, edge, seq)`: the
+    /// salted side-stream discipline. Same key, same fate — replays are
+    /// exact — and no draw touches the simulation's main RNG.
+    pub fn delivery(&self, class: LinkClass, seed: u64, edge: u64, seq: u64) -> Delivery {
+        let lf = match class {
+            LinkClass::Peer => &self.peer,
+            LinkClass::Ckpt => &self.ckpt,
+        };
+        let mut rng = Rng::new(seed ^ FAULT_SALT ^ mix(edge.wrapping_add(mix(seq))));
+        let lost = rng.chance(lf.loss_p);
+        let duplicate = rng.chance(lf.dup_p);
+        let extra_delay_s =
+            if rng.chance(lf.delay_p) { rng.exponential(lf.delay_mean_s) } else { 0.0 };
+        Delivery { lost, duplicate, extra_delay_s }
+    }
+
+    /// One request/ack exchange under the retry policy. `cut` is the
+    /// partition verdict at exchange start (a partitioned exchange times
+    /// out every attempt); `bytes` is the request's wire size, pricing
+    /// each retransmission at `link.transfer_time(bytes)`. Consumes two
+    /// side-stream draws (request, ack) per attempt — `seq` advances
+    /// identically whether or not the messages survive, so downstream
+    /// draws never shift.
+    pub fn exchange(
+        &self,
+        class: LinkClass,
+        seed: u64,
+        edge_key: u64,
+        seq: &mut u64,
+        cut: bool,
+        bytes: u64,
+    ) -> NetCost {
+        let resend_s = self.link.transfer_time(bytes);
+        let mut out = NetCost {
+            delivered: false,
+            retries: 0,
+            timeouts: 0,
+            dup_deliveries: 0,
+            penalty_s: 0.0,
+        };
+        for attempt in 0..=self.retry.max_retries {
+            if attempt > 0 {
+                out.retries += 1;
+                out.penalty_s += self.retry.backoff_s(attempt - 1) + resend_s;
+            }
+            let req = self.take(class, seed, edge_key, seq);
+            let ack = self.take(class, seed, edge_key, seq);
+            if cut || req.lost || ack.lost {
+                out.timeouts += 1;
+                out.penalty_s += self.retry.timeout_s;
+                continue;
+            }
+            out.dup_deliveries += u64::from(req.duplicate) + u64::from(ack.duplicate);
+            out.penalty_s += req.extra_delay_s + ack.extra_delay_s;
+            out.delivered = true;
+            break;
+        }
+        out
+    }
+
+    /// The checkpoint-restore exchange: `RestoreRequest`/`RestoreData`
+    /// against the checkpoint server, partition-checked at `t_s`.
+    pub fn restore_exchange(
+        &self,
+        seed: u64,
+        node: NodeId,
+        seq: &mut u64,
+        t_s: f64,
+        data_kb: u64,
+    ) -> NetCost {
+        let bytes = MsgKind::RestoreRequest { bytes: data_kb * 1024 }.wire_bytes();
+        let cut = self.cut_ckpt(node, t_s);
+        self.exchange(LinkClass::Ckpt, seed, ckpt_edge(node), seq, cut, bytes)
+    }
+
+    fn take(&self, class: LinkClass, seed: u64, edge_key: u64, seq: &mut u64) -> Delivery {
+        let d = self.delivery(class, seed, edge_key, *seq);
+        *seq += 1;
+        d
+    }
+}
+
+/// One message's fate on the wire.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Delivery {
+    pub lost: bool,
+    pub duplicate: bool,
+    pub extra_delay_s: f64,
+}
+
+/// What a message exchange (or a whole protocol's worth of exchanges)
+/// cost: delivery verdict, retries/timeouts/duplicate-suppressions spent,
+/// and the extra seconds the calling phase must absorb. The penalty is
+/// *additive* — the nominal phase cost is the protocol's closed form, and
+/// an off plane contributes exactly [`NetCost::CLEAN`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetCost {
+    /// False when the final attempt also timed out: the caller must fall
+    /// back, never silently drop the work.
+    pub delivered: bool,
+    pub retries: u64,
+    pub timeouts: u64,
+    pub dup_deliveries: u64,
+    pub penalty_s: f64,
+}
+
+impl NetCost {
+    /// The off-plane outcome: delivered, nothing spent.
+    pub const CLEAN: NetCost =
+        NetCost { delivered: true, retries: 0, timeouts: 0, dup_deliveries: 0, penalty_s: 0.0 };
+
+    /// Fold a later exchange into a running protocol total. Delivery is
+    /// conjunctive: one exhausted phase fails the protocol.
+    pub fn absorb(&mut self, o: NetCost) {
+        self.delivered = self.delivered && o.delivered;
+        self.retries += o.retries;
+        self.timeouts += o.timeouts;
+        self.dup_deliveries += o.dup_deliveries;
+        self.penalty_s += o.penalty_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lossy(loss_p: f64) -> FaultPlane {
+        FaultPlane {
+            peer: LinkFaults { loss_p, ..LinkFaults::off() },
+            ckpt: LinkFaults { loss_p, ..LinkFaults::off() },
+            ..FaultPlane::default()
+        }
+    }
+
+    #[test]
+    fn default_plane_is_off_and_validates() {
+        let p = FaultPlane::default();
+        assert!(p.is_off());
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn delivery_is_pure_in_its_key() {
+        let p = lossy(0.5);
+        let mut lost = 0;
+        for seq in 0..256 {
+            let a = p.delivery(LinkClass::Peer, 7, edge(NodeId(0), NodeId(1)), seq);
+            let b = p.delivery(LinkClass::Peer, 7, edge(NodeId(0), NodeId(1)), seq);
+            assert_eq!(a, b, "same key must mean same fate");
+            lost += a.lost as usize;
+        }
+        assert!(lost > 64 && lost < 192, "p=0.5 loss should land near half: {lost}");
+        // a different edge sees an independent stream
+        let a = p.delivery(LinkClass::Peer, 7, edge(NodeId(0), NodeId(1)), 0);
+        let c = p.delivery(LinkClass::Peer, 7, edge(NodeId(1), NodeId(0)), 0);
+        let _ = (a, c); // may coincide on one draw; purity is the contract
+    }
+
+    #[test]
+    fn clean_link_delivers_first_attempt_for_free() {
+        let p = FaultPlane::default();
+        let mut seq = 0;
+        let c = p.exchange(LinkClass::Peer, 3, edge(NodeId(0), NodeId(1)), &mut seq, false, 256);
+        assert!(c.delivered);
+        assert_eq!(c.retries, 0);
+        assert_eq!(c.timeouts, 0);
+        assert_eq!(c.penalty_s.to_bits(), 0f64.to_bits());
+        assert_eq!(seq, 2, "one attempt consumes exactly two draws");
+    }
+
+    #[test]
+    fn certain_loss_exhausts_on_the_closed_form_schedule() {
+        let p = lossy(1.0);
+        let mut seq = 0;
+        let bytes = 256;
+        let c = p.exchange(LinkClass::Peer, 9, edge(NodeId(2), NodeId(5)), &mut seq, false, bytes);
+        assert!(!c.delivered, "loss_p = 1 can never deliver");
+        let attempts = p.retry.max_retries as u64 + 1;
+        assert_eq!(c.retries, attempts - 1);
+        assert_eq!(c.timeouts, attempts);
+        assert_eq!(seq, 2 * attempts, "draws advance on every attempt");
+        // penalty = every timeout + every backoff + every retransmission
+        let mut want = 0.0;
+        for attempt in 0..p.retry.max_retries {
+            want += p.retry.backoff_s(attempt) + p.link.transfer_time(bytes);
+        }
+        want += attempts as f64 * p.retry.timeout_s;
+        assert!((c.penalty_s - want).abs() < 1e-12, "{} vs {}", c.penalty_s, want);
+    }
+
+    #[test]
+    fn partitioned_exchange_times_out_without_loss() {
+        let p = FaultPlane {
+            partitions: vec![Partition {
+                start_s: 100.0,
+                end_s: 200.0,
+                cut: CutSet::Split { at: 2 },
+            }],
+            ..FaultPlane::default()
+        };
+        assert!(!p.is_off());
+        assert!(p.cut_peer(NodeId(0), NodeId(3), 150.0), "cross-boundary link is cut");
+        assert!(!p.cut_peer(NodeId(0), NodeId(1), 150.0), "intra-side link survives");
+        assert!(!p.cut_peer(NodeId(0), NodeId(3), 250.0), "partition heals");
+        assert!(!p.cut_ckpt(NodeId(0), 150.0), "split does not touch the server");
+        let cut = p.cut_peer(NodeId(0), NodeId(3), 150.0);
+        let mut seq = 0;
+        let c = p.exchange(LinkClass::Peer, 1, edge(NodeId(0), NodeId(3)), &mut seq, cut, 256);
+        assert!(!c.delivered);
+        assert_eq!(c.timeouts, p.retry.max_retries as u64 + 1);
+    }
+
+    #[test]
+    fn checkpoint_cut_severs_only_the_server() {
+        let p = FaultPlane {
+            partitions: vec![Partition { start_s: 0.0, end_s: 50.0, cut: CutSet::Checkpoint }],
+            ..FaultPlane::default()
+        };
+        assert!(p.cut_ckpt(NodeId(4), 10.0));
+        assert!(!p.cut_ckpt(NodeId(4), 60.0));
+        assert!(!p.cut_peer(NodeId(0), NodeId(4), 10.0));
+        let mut seq = 0;
+        let c = p.restore_exchange(11, NodeId(4), &mut seq, 10.0, 512);
+        assert!(!c.delivered, "restore during the cut must exhaust");
+        let healed = p.restore_exchange(11, NodeId(4), &mut seq, 60.0, 512);
+        assert!(healed.delivered);
+    }
+
+    #[test]
+    fn duplicates_and_delays_are_counted_not_fatal() {
+        let p = FaultPlane {
+            peer: LinkFaults { loss_p: 0.0, dup_p: 1.0, delay_p: 1.0, delay_mean_s: 0.1 },
+            ..FaultPlane::default()
+        };
+        let mut seq = 0;
+        let c = p.exchange(LinkClass::Peer, 5, edge(NodeId(1), NodeId(2)), &mut seq, false, 256);
+        assert!(c.delivered);
+        assert_eq!(c.dup_deliveries, 2, "request and ack both duplicated");
+        assert!(c.penalty_s > 0.0, "extra delay must cost time");
+        assert_eq!(c.retries, 0);
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_bounded() {
+        let r = RetryPolicy { timeout_s: 1.0, max_retries: 5, backoff_base_s: 0.5, backoff_mult: 2.0 };
+        let widths: Vec<f64> = (0..r.max_retries).map(|i| r.backoff_s(i)).collect();
+        assert_eq!(widths, vec![0.5, 1.0, 2.0, 4.0, 8.0]);
+        let again: Vec<f64> = (0..r.max_retries).map(|i| r.backoff_s(i)).collect();
+        assert_eq!(widths, again);
+    }
+
+    #[test]
+    fn netcost_absorb_is_conjunctive_on_delivery() {
+        let mut total = NetCost::CLEAN;
+        total.absorb(NetCost { delivered: true, retries: 2, timeouts: 2, dup_deliveries: 1, penalty_s: 1.5 });
+        assert!(total.delivered);
+        total.absorb(NetCost { delivered: false, retries: 4, timeouts: 5, dup_deliveries: 0, penalty_s: 9.0 });
+        assert!(!total.delivered);
+        assert_eq!(total.retries, 6);
+        assert_eq!(total.timeouts, 7);
+        assert_eq!(total.dup_deliveries, 1);
+        assert!((total.penalty_s - 10.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_each_bad_dimension() {
+        let mut p = FaultPlane::default();
+        p.peer.loss_p = 1.5;
+        assert_eq!(p.validate(), Err(SpecError::BadFaultProbability));
+
+        let mut p = FaultPlane::default();
+        p.ckpt.delay_mean_s = -1.0;
+        assert_eq!(p.validate(), Err(SpecError::BadFaultDelay));
+
+        let mut p = FaultPlane::default();
+        p.retry.timeout_s = 0.0;
+        assert_eq!(p.validate(), Err(SpecError::BadRetryPolicy));
+
+        let mut p = FaultPlane::default();
+        p.retry.backoff_mult = 0.5;
+        assert_eq!(p.validate(), Err(SpecError::BadRetryPolicy));
+
+        let mut p = FaultPlane::default();
+        p.partitions.push(Partition { start_s: 10.0, end_s: 5.0, cut: CutSet::Checkpoint });
+        assert_eq!(p.validate(), Err(SpecError::BadPartitionWindow));
+
+        let mut p = FaultPlane::default();
+        p.partitions.push(Partition { start_s: 0.0, end_s: 5.0, cut: CutSet::Split { at: 0 } });
+        assert_eq!(p.validate(), Err(SpecError::BadPartitionCut));
+
+        let mut p = FaultPlane::default();
+        p.cold_restore_factor = 0.5;
+        assert_eq!(p.validate(), Err(SpecError::BadColdRestoreFactor));
+
+        let mut p = FaultPlane::default();
+        p.link.bandwidth_bps = 0.0;
+        assert_eq!(p.validate(), Err(SpecError::BadLinkBandwidth));
+    }
+}

@@ -1,5 +1,6 @@
 //! Link timing model: per-message latency plus bandwidth-limited payload.
 
+use crate::scenario::fleet::SpecError;
 use crate::sim::SimTime;
 
 /// Parameters of one interconnect class (GigE vs InfiniBand in the paper's
@@ -41,6 +42,24 @@ impl LinkParams {
 
     pub fn transfer(&self, bytes: u64) -> SimTime {
         SimTime::from_secs(self.transfer_time(bytes))
+    }
+
+    /// Structured validation: negative or non-finite latency/overhead and
+    /// non-positive bandwidth are rejected (zero `bandwidth_bps` would
+    /// make every [`transfer_time`](Self::transfer_time) infinite).
+    /// Called from `FleetSpec::validate` and the vopr generator so no
+    /// simulated link can silently carry a nonsensical timing model.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        if !(self.latency_s.is_finite() && self.latency_s >= 0.0) {
+            return Err(SpecError::BadLinkLatency);
+        }
+        if !(self.bandwidth_bps.is_finite() && self.bandwidth_bps > 0.0) {
+            return Err(SpecError::BadLinkBandwidth);
+        }
+        if !(self.sw_overhead_s.is_finite() && self.sw_overhead_s >= 0.0) {
+            return Err(SpecError::BadLinkOverhead);
+        }
+        Ok(())
     }
 }
 
@@ -87,5 +106,35 @@ mod tests {
     fn simtime_conversion() {
         let l = LinkParams::gige();
         assert_eq!(l.transfer(0), SimTime::from_secs(l.latency_s + l.sw_overhead_s));
+    }
+
+    #[test]
+    fn presets_validate() {
+        LinkParams::gige().validate().unwrap();
+        LinkParams::infiniband().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_links() {
+        let mut l = LinkParams::gige();
+        l.latency_s = -1e-6;
+        assert_eq!(l.validate(), Err(SpecError::BadLinkLatency));
+        let mut l = LinkParams::gige();
+        l.latency_s = f64::NAN;
+        assert_eq!(l.validate(), Err(SpecError::BadLinkLatency));
+
+        let mut l = LinkParams::gige();
+        l.bandwidth_bps = 0.0; // transfer_time would be infinite
+        assert_eq!(l.validate(), Err(SpecError::BadLinkBandwidth));
+        let mut l = LinkParams::gige();
+        l.bandwidth_bps = -110e6;
+        assert_eq!(l.validate(), Err(SpecError::BadLinkBandwidth));
+        let mut l = LinkParams::gige();
+        l.bandwidth_bps = f64::INFINITY;
+        assert_eq!(l.validate(), Err(SpecError::BadLinkBandwidth));
+
+        let mut l = LinkParams::gige();
+        l.sw_overhead_s = f64::NEG_INFINITY;
+        assert_eq!(l.validate(), Err(SpecError::BadLinkOverhead));
     }
 }

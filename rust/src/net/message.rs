@@ -77,6 +77,12 @@ pub struct Message {
     pub sent_at: SimTime,
 }
 
+/// Wire size of every payload-free protocol message: headers, ids and
+/// flags fit one envelope. The single source of truth for control-message
+/// timing — call sites must go through [`MsgKind::wire_bytes`] rather than
+/// repeating the number.
+pub const CONTROL_ENVELOPE_BYTES: u64 = 256;
+
 impl MsgKind {
     /// Stable tag for determinism traces.
     pub fn tag(&self) -> u64 {
@@ -119,7 +125,7 @@ impl MsgKind {
             | MsgKind::MigrateObject { bytes, .. }
             | MsgKind::CheckpointWrite { bytes }
             | MsgKind::RestoreRequest { bytes } => *bytes,
-            _ => 256, // control message envelope
+            _ => CONTROL_ENVELOPE_BYTES,
         }
     }
 }
@@ -173,5 +179,50 @@ mod tests {
             MsgKind::MigrateObject { sub_job: SubJobId(1), bytes: 99 }.wire_bytes(),
             99
         );
+    }
+
+    /// Pins the wire size of every variant. Timing-affecting constants
+    /// must never drift silently between protocols: a change here is a
+    /// deliberate, reviewed change to every simulated transfer time.
+    #[test]
+    fn wire_bytes_pinned_for_every_variant() {
+        let payload = 7_654_321u64;
+        let sized: [(MsgKind, u64); 4] = [
+            (MsgKind::TransferState { bytes: payload }, payload),
+            (MsgKind::MigrateObject { sub_job: SubJobId(3), bytes: payload }, payload),
+            (MsgKind::CheckpointWrite { bytes: payload }, payload),
+            (MsgKind::RestoreRequest { bytes: payload }, payload),
+        ];
+        for (kind, want) in sized {
+            assert_eq!(kind.wire_bytes(), want, "{kind:?}");
+        }
+        let control = [
+            MsgKind::ProbeTick,
+            MsgKind::AliveQuery,
+            MsgKind::AliveReply { healthy: true },
+            MsgKind::FailurePredicted { node: NodeId(0) },
+            MsgKind::PredictionRequest,
+            MsgKind::PredictionReply { will_fail: false },
+            MsgKind::SpawnProcess { sub_job: SubJobId(0) },
+            MsgKind::SpawnAck,
+            MsgKind::TransferDone,
+            MsgKind::NotifyDependent { sub_job: SubJobId(0) },
+            MsgKind::NotifyAck,
+            MsgKind::EstablishDependency { sub_job: SubJobId(0) },
+            MsgKind::DependencyReady,
+            MsgKind::Terminate,
+            MsgKind::MigrateAck,
+            MsgKind::RebindRound { remaining: 1 },
+            MsgKind::CheckpointBegin,
+            MsgKind::CheckpointAck,
+            MsgKind::RestoreData,
+            MsgKind::ServerDiscovery,
+            MsgKind::InjectFailure { node: NodeId(0) },
+            MsgKind::SubJobDone { sub_job: SubJobId(0) },
+            MsgKind::CollateResults,
+        ];
+        for kind in control {
+            assert_eq!(kind.wire_bytes(), CONTROL_ENVELOPE_BYTES, "{kind:?}");
+        }
     }
 }

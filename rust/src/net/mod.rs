@@ -5,10 +5,15 @@
 //! protocol layers ([`crate::agentft`], [`crate::coreft`],
 //! [`crate::checkpoint`]) running on the DES.
 
+pub mod faults;
 pub mod link;
 pub mod message;
 pub mod topology;
 
+pub use faults::{
+    CutSet, Delivery, FaultPlane, LinkClass, LinkFaults, NetCost, Partition, RetryPolicy,
+    FAULT_SALT,
+};
 pub use link::LinkParams;
 pub use message::{Message, MsgKind};
 pub use topology::{NodeId, Topology};

@@ -57,7 +57,10 @@
 //! from `Rng::new(seed ^ ARRIVAL_SALT)`, churn plans from
 //! `Rng::new(seed ^ CHURN_SALT)` (one forked stream per node), and the
 //! in-run dynamics from the harness stream `Rng::new(seed).fork(1)` with
-//! per-failure predictability flags off the root — the *same* stream
+//! per-failure predictability flags off the root — and network fault draws
+//! from the stateless side-stream keyed by `(seed ^ FAULT_SALT, edge, seq)`
+//! ([`net::faults`](crate::net::faults)), which touches no other stream.
+//! This is the *same* stream
 //! discipline as [`run_live`](crate::coordinator::livesim::run_live), so a
 //! degenerate fleet (one traced job at t = 0, an explicit churn plan, no
 //! binding capacity) reproduces `run_live`'s completion time, migrations
@@ -71,10 +74,11 @@
 
 use crate::cluster::{preset, ClusterPreset};
 use crate::coordinator::ftmanager::Strategy;
-use crate::coordinator::livesim::LiveCfg;
+use crate::coordinator::livesim::{migration_net_cost, LiveCfg};
 use crate::failure::injector::{FailureEvent, FailurePlan, FailureProcess};
 use crate::hybrid::rules::{decide, Mover, RuleInputs};
 use crate::metrics::Accumulator;
+use crate::net::faults::{self, FaultPlane};
 use crate::net::{NodeId, Topology};
 use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime, TrialScratch};
 use std::collections::{BTreeSet, VecDeque};
@@ -157,6 +161,12 @@ pub struct FleetSpec {
     pub ckpt_streams: usize,
     /// Virtual-time horizon of one trial in seconds.
     pub horizon_s: f64,
+    /// The network fault plane ([`net::faults`](crate::net::faults)):
+    /// per-link-class message loss/duplication/extra delay, timed
+    /// partitions, and the timeout/retry/backoff constants every recovery
+    /// exchange runs under. [`FaultPlane::default`] is **off** and leaves
+    /// every trial byte-identical to a build without the plane.
+    pub faults: FaultPlane,
     /// Deliberate single-transition corruption for the VOPR self-test
     /// (`scenario::vopr`): proves the invariant checkers fire and the
     /// shrinker converges. Compiled out of normal builds — it exists only
@@ -178,6 +188,12 @@ pub enum InjectedFault {
     /// index decrement). Caught by the bookkeeping-agreement checker on
     /// the very event that leaks.
     LeakSlot,
+    /// Drop every `SpawnAck`: the migration handshake can never complete
+    /// *and* the (deliberately broken) protocol abandons the sub-job
+    /// instead of falling back to checkpoint recovery — the exact bug the
+    /// PR-8 hardening exists to prevent. Caught by the no-lost-job
+    /// checker on the abandoning `Prediction` event.
+    DropSpawnAck,
 }
 
 impl FleetSpec {
@@ -217,6 +233,7 @@ impl FleetSpec {
             },
             ckpt_streams: 2,
             horizon_s: 4.0 * 3600.0,
+            faults: FaultPlane::default(),
             #[cfg(any(test, feature = "vopr-selftest"))]
             fault: None,
         }
@@ -304,6 +321,7 @@ impl FleetSpec {
                 validate_process(process)?;
             }
         }
+        self.faults.validate()?;
         Ok(())
     }
 }
@@ -366,6 +384,27 @@ pub enum SpecError {
     /// A reactive recovery figure (`ckpt_reinstate_s`/`ckpt_overhead_s`)
     /// is not finite and ≥ 0.
     BadRecoveryTime(f64),
+    /// A fault-plane loss/duplication/delay probability is outside `[0, 1]`.
+    BadFaultProbability,
+    /// A fault-plane extra-delay mean is not finite and ≥ 0.
+    BadFaultDelay,
+    /// A retry policy is degenerate: non-positive timeout, negative
+    /// backoff, multiplier below 1 or more than 64 retransmissions.
+    BadRetryPolicy,
+    /// A partition window is not a finite `[start, end)` with
+    /// `0 ≤ start < end`.
+    BadPartitionWindow,
+    /// A split partition cuts at node 0 (an empty side is no partition).
+    BadPartitionCut,
+    /// `cold_restore_factor` is not finite and ≥ 1.
+    BadColdRestoreFactor,
+    /// A link's one-way latency is not finite and ≥ 0.
+    BadLinkLatency,
+    /// A link's bandwidth is not finite and > 0 (zero would make every
+    /// transfer time infinite).
+    BadLinkBandwidth,
+    /// A link's per-message software overhead is not finite and ≥ 0.
+    BadLinkOverhead,
 }
 
 impl std::fmt::Display for SpecError {
@@ -401,6 +440,34 @@ impl std::fmt::Display for SpecError {
             }
             SpecError::BadRecoveryTime(v) => {
                 write!(f, "recovery figures must be finite and >= 0, got {v}")
+            }
+            SpecError::BadFaultProbability => {
+                write!(f, "fault probabilities must be in [0, 1]")
+            }
+            SpecError::BadFaultDelay => {
+                write!(f, "fault delay mean must be finite and >= 0")
+            }
+            SpecError::BadRetryPolicy => write!(
+                f,
+                "retry policy needs timeout > 0, backoff >= 0, multiplier >= 1, retries <= 64"
+            ),
+            SpecError::BadPartitionWindow => {
+                write!(f, "partition windows must satisfy 0 <= start < end, finite")
+            }
+            SpecError::BadPartitionCut => {
+                write!(f, "split partitions must cut at node index >= 1")
+            }
+            SpecError::BadColdRestoreFactor => {
+                write!(f, "cold restore factor must be finite and >= 1")
+            }
+            SpecError::BadLinkLatency => {
+                write!(f, "link latency must be finite and >= 0")
+            }
+            SpecError::BadLinkBandwidth => {
+                write!(f, "link bandwidth must be finite and > 0")
+            }
+            SpecError::BadLinkOverhead => {
+                write!(f, "link software overhead must be finite and >= 0")
             }
         }
     }
@@ -446,6 +513,18 @@ pub struct FleetOutcome {
     /// is what a lifetime allocates for (versus `jobs_arrived` it merely
     /// counts through).
     pub peak_live_jobs: usize,
+    /// Message retransmissions spent by recovery exchanges under the fault
+    /// plane (0 when the plane is off).
+    pub net_retries: u64,
+    /// Exchange attempts that timed out (lost request/ack or partition).
+    pub net_timeouts: u64,
+    /// Recoveries that fell back a rung on the ladder: migrations whose
+    /// handshake exhausted its retries (→ reactive checkpoint recovery)
+    /// plus restores whose server exchange exhausted (→ degraded cold
+    /// restore). Never a lost job.
+    pub fallbacks: u64,
+    /// Duplicate deliveries suppressed by receivers (counted, free).
+    pub dup_suppressed: u64,
     /// Dispatched DES events (determinism fingerprint).
     pub events: u64,
 }
@@ -544,6 +623,10 @@ pub struct FleetView<'a> {
     pub remaining_ok: bool,
     /// Per-node list entries pointing at dead/moved subs (must be 0).
     pub stale_node_subs: usize,
+    /// Sub-jobs abandoned with no scheduled resume — a recovery that
+    /// neither completed, fell back nor rescheduled. Must always be 0:
+    /// the no-lost-job checker fires on the first abandonment.
+    pub abandoned: usize,
 }
 
 /// Observer hook on the fleet event loop. The unit observer `()` is the
@@ -930,6 +1013,18 @@ struct System<'a, O: FleetObserver> {
     absorbed_failures: usize,
     peak_migr: usize,
     peak_rec: usize,
+    /// Trial seed, keying the fault side-stream (never drawn from when
+    /// the plane is off).
+    seed: u64,
+    /// Monotone message-sequence counter for fault-draw keys.
+    fault_seq: u64,
+    net_retries: u64,
+    net_timeouts: u64,
+    fallbacks: u64,
+    dup_suppressed: u64,
+    /// Sub-jobs stranded with no scheduled resume (only an injected
+    /// self-test defect can raise this; the no-lost-job checker fires).
+    abandoned: usize,
 }
 
 impl<O: FleetObserver> System<'_, O> {
@@ -1100,6 +1195,7 @@ impl<O: FleetObserver> System<'_, O> {
             distinct_recs: self.derive.distinct_recs,
             remaining_ok: self.derive.remaining_ok,
             stale_node_subs: self.derive.stale_node_subs,
+            abandoned: self.abandoned,
         };
         self.obs.after_event(ev, &view);
     }
@@ -1129,6 +1225,7 @@ impl<O: FleetObserver> System<'_, O> {
             distinct_recs: self.derive.distinct_recs,
             remaining_ok: self.derive.remaining_ok,
             stale_node_subs: self.derive.stale_node_subs,
+            abandoned: self.abandoned,
         };
         self.obs.at_end(&view, hit_horizon);
     }
@@ -1184,22 +1281,111 @@ impl<O: FleetObserver> System<'_, O> {
                         let gen = rec.gen;
                         let dur = self.reinstate_s(ctx);
                         if let Some(target) = self.pick_target(node, ctx) {
-                            let rec = &mut self.jobs.slots[slot as usize];
-                            rec.state[i] =
-                                SubState::Migrating { resume_remaining_s: remaining };
-                            rec.host[i] = target;
-                            self.placement.dec(node);
-                            self.placement.inc(target);
-                            self.node_subs[node.0].remove(&(arrival, sub, slot));
-                            self.node_subs[target.0].insert((arrival, sub, slot));
-                            self.running -= 1;
-                            self.migr_inflight += 1;
-                            self.peak_migr = self.peak_migr.max(self.migr_inflight);
-                            ctx.send_in(
-                                SimTime::from_secs(dur),
-                                me,
-                                Ev::MigrationDone { job: JobId { slot, gen }, sub: i, to: target },
-                            );
+                            // Harden the migration handshake against the
+                            // fault plane. The exchange draws only from the
+                            // salted side-stream, so with the plane off this
+                            // whole block is skipped and the trial is
+                            // byte-identical to a build without it.
+                            #[cfg(any(test, feature = "vopr-selftest"))]
+                            let drop_ack =
+                                self.spec.fault == Some(InjectedFault::DropSpawnAck);
+                            #[cfg(not(any(test, feature = "vopr-selftest")))]
+                            let drop_ack = false;
+                            let mut extra_s = 0.0;
+                            let mut delivered = !drop_ack;
+                            if !drop_ack && !self.spec.faults.is_off() {
+                                let cut =
+                                    self.spec.faults.cut_peer(node, target, now.as_secs());
+                                let cost = migration_net_cost(
+                                    &self.spec.job,
+                                    &self.spec.faults,
+                                    self.seed,
+                                    faults::edge(node, target),
+                                    &mut self.fault_seq,
+                                    cut,
+                                );
+                                self.net_retries += cost.retries;
+                                self.net_timeouts += cost.timeouts;
+                                self.dup_suppressed += cost.dup_deliveries;
+                                extra_s = cost.penalty_s;
+                                delivered = cost.delivered;
+                            }
+                            if delivered {
+                                let rec = &mut self.jobs.slots[slot as usize];
+                                rec.state[i] =
+                                    SubState::Migrating { resume_remaining_s: remaining };
+                                rec.host[i] = target;
+                                self.placement.dec(node);
+                                self.placement.inc(target);
+                                self.node_subs[node.0].remove(&(arrival, sub, slot));
+                                self.node_subs[target.0].insert((arrival, sub, slot));
+                                self.running -= 1;
+                                self.migr_inflight += 1;
+                                self.peak_migr = self.peak_migr.max(self.migr_inflight);
+                                ctx.send_in(
+                                    SimTime::from_secs(dur + extra_s),
+                                    me,
+                                    Ev::MigrationDone {
+                                        job: JobId { slot, gen },
+                                        sub: i,
+                                        to: target,
+                                    },
+                                );
+                            } else if drop_ack {
+                                // injected self-test defect: the handshake
+                                // never completes and the broken protocol
+                                // strands the sub — Migrating forever, no
+                                // event scheduled, no fallback. Bookkeeping
+                                // stays self-consistent so only the
+                                // no-lost-job checker fires.
+                                let rec = &mut self.jobs.slots[slot as usize];
+                                rec.state[i] =
+                                    SubState::Migrating { resume_remaining_s: remaining };
+                                rec.host[i] = target;
+                                self.placement.dec(node);
+                                self.placement.inc(target);
+                                self.node_subs[node.0].remove(&(arrival, sub, slot));
+                                self.node_subs[target.0].insert((arrival, sub, slot));
+                                self.running -= 1;
+                                self.migr_inflight += 1;
+                                self.peak_migr = self.peak_migr.max(self.migr_inflight);
+                                self.abandoned += 1;
+                            } else {
+                                // the handshake exhausted its retries (or
+                                // the target partitioned away): fall back
+                                // one rung to reactive checkpoint recovery —
+                                // the Failure-path bookkeeping, never a
+                                // lost job. The time spent retrying
+                                // (`extra_s`) delays the recovery's start.
+                                let rec_id = self.next_rec;
+                                self.next_rec += 1;
+                                self.jobs.slots[slot as usize].state[i] =
+                                    SubState::Recovering {
+                                        resume_remaining_s: remaining,
+                                        rec: rec_id,
+                                    };
+                                self.running -= 1;
+                                if let Some(t) = self.pick_target(node, ctx) {
+                                    self.jobs.slots[slot as usize].host[i] = t;
+                                    self.placement.dec(node);
+                                    self.placement.inc(t);
+                                    self.node_subs[node.0].remove(&(arrival, sub, slot));
+                                    self.node_subs[t.0].insert((arrival, sub, slot));
+                                }
+                                self.rec_inflight += 1;
+                                self.peak_rec = self.peak_rec.max(self.rec_inflight);
+                                let rdur = self.recovery_s();
+                                self.rollbacks += 1;
+                                self.fallbacks += 1;
+                                ctx.send_in(
+                                    SimTime::from_secs(extra_s + rdur),
+                                    me,
+                                    Ev::RecoveryDone {
+                                        job: JobId { slot, gen },
+                                        rec: rec_id,
+                                    },
+                                );
+                            }
                         }
                         // no healthy neighbour with a spare slot: stay
                         // put; the failure path will roll back
@@ -1258,7 +1444,30 @@ impl<O: FleetObserver> System<'_, O> {
                         self.next_rec += 1;
                         self.rec_inflight += 1;
                         self.peak_rec = self.peak_rec.max(self.rec_inflight);
-                        let dur = self.recovery_s();
+                        let mut dur = self.recovery_s();
+                        if !self.spec.faults.is_off() {
+                            // the rollback's RestoreRequest/RestoreData
+                            // exchange rides the node↔server link; an
+                            // exhausted exchange degrades to a cold restore
+                            // (the ladder's bottom rung) — never a lost job
+                            let cost = self.spec.faults.restore_exchange(
+                                self.seed,
+                                node,
+                                &mut self.fault_seq,
+                                now.as_secs(),
+                                self.spec.job.data_kb,
+                            );
+                            self.net_retries += cost.retries;
+                            self.net_timeouts += cost.timeouts;
+                            self.dup_suppressed += cost.dup_deliveries;
+                            if cost.delivered {
+                                dur += cost.penalty_s;
+                            } else {
+                                dur = dur * self.spec.faults.cold_restore_factor
+                                    + cost.penalty_s;
+                                self.fallbacks += 1;
+                            }
+                        }
                         self.rollbacks += 1;
                         self.subs_lost += lost;
                         let gen = self.jobs.slots[slot as usize].gen;
@@ -1551,6 +1760,13 @@ pub fn run_fleet_observed<O: FleetObserver>(
         absorbed_failures: 0,
         peak_migr: 0,
         peak_rec: 0,
+        seed,
+        fault_seq: 0,
+        net_retries: 0,
+        net_timeouts: 0,
+        fallbacks: 0,
+        dup_suppressed: 0,
+        abandoned: 0,
     };
     let mut h = Harness::from_scratch(harness_rng, std::mem::take(&mut scratch.sim));
     let sys = h.add(system);
@@ -1597,6 +1813,10 @@ pub fn run_fleet_observed<O: FleetObserver>(
         peak_concurrent_migrations: system.peak_migr,
         peak_concurrent_recoveries: system.peak_rec,
         peak_live_jobs: system.jobs.peak_live,
+        net_retries: system.net_retries,
+        net_timeouts: system.net_timeouts,
+        fallbacks: system.fallbacks,
+        dup_suppressed: system.dup_suppressed,
         events,
     };
     // hand the allocations back for the next trial
@@ -1879,5 +2099,85 @@ mod tests {
         assert_eq!(FleetMetric::MeanSlowdown.measure(&o), o.mean_slowdown);
         assert_eq!(FleetMetric::Goodput.measure(&o), o.goodput_ratio);
         assert_eq!(FleetMetric::Utilization.measure(&o), o.utilization);
+    }
+
+    #[test]
+    fn default_plane_reports_zero_net_activity() {
+        let spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 32, 8.0, 1.0);
+        let o = run_fleet(&spec, 11);
+        assert!(o.migrations > 0 || o.rollbacks > 0, "churny fixture must recover: {o:?}");
+        assert_eq!(o.net_retries, 0);
+        assert_eq!(o.net_timeouts, 0);
+        assert_eq!(o.fallbacks, 0);
+        assert_eq!(o.dup_suppressed, 0);
+    }
+
+    #[test]
+    fn total_peer_loss_falls_back_to_checkpoint_recovery() {
+        // loss_p = 1 on the peer links: no migration handshake can ever
+        // complete, so every proactive migration must fall back to a
+        // reactive rollback — and the fleet must keep completing jobs.
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 16, 4.0, 1.0);
+        spec.faults.peer.loss_p = 1.0;
+        let o = run_fleet(&spec, 3);
+        assert!(o.net_timeouts > 0, "{o:?}");
+        assert!(o.net_retries > 0, "{o:?}");
+        assert!(o.fallbacks > 0, "exhausted handshakes must fall back: {o:?}");
+        assert_eq!(o.migrations, 0, "loss_p = 1 lets no migration land: {o:?}");
+        assert!(o.rollbacks as u64 >= o.fallbacks, "every fallback is a rollback: {o:?}");
+        assert!(o.jobs_completed > 0, "{o:?}");
+    }
+
+    #[test]
+    fn checkpoint_partition_degrades_restores_but_never_loses_jobs() {
+        use crate::net::{CutSet, Partition};
+        let ckpt = Strategy::Checkpoint(CheckpointStrategy::CentralSingle);
+        let mut spec = FleetSpec::placentia_fleet(ckpt, 16, 4.0, 1.0);
+        spec.job.predictable_frac = 0.0; // reactive only
+        spec.faults.partitions.push(Partition {
+            start_s: 0.0,
+            end_s: spec.horizon_s,
+            cut: CutSet::Checkpoint,
+        });
+        let o = run_fleet(&spec, 5);
+        assert!(o.rollbacks > 0, "{o:?}");
+        assert!(o.fallbacks > 0, "a severed server must degrade restores: {o:?}");
+        assert_eq!(
+            o.fallbacks, o.rollbacks as u64,
+            "every rollback's restore exchange hit the cut: {o:?}"
+        );
+        assert!(o.net_timeouts > 0, "{o:?}");
+        assert!(o.jobs_completed > 0, "degraded cold restores still finish: {o:?}");
+    }
+
+    #[test]
+    fn lossy_plane_is_deterministic_in_seed() {
+        use crate::net::LinkFaults;
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 24, 6.0, 1.0);
+        spec.faults.peer =
+            LinkFaults { loss_p: 0.3, dup_p: 0.1, delay_p: 0.2, delay_mean_s: 0.5 };
+        spec.faults.ckpt = LinkFaults { loss_p: 0.2, ..LinkFaults::off() };
+        let a = run_fleet(&spec, 17);
+        let b = run_fleet(&spec, 17);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.net_retries, b.net_retries);
+        assert_eq!(a.net_timeouts, b.net_timeouts);
+        assert_eq!(a.fallbacks, b.fallbacks);
+        assert_eq!(a.dup_suppressed, b.dup_suppressed);
+        assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits());
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+    }
+
+    #[test]
+    fn validate_surfaces_fault_plane_errors() {
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 4, 1.0, 0.0);
+        spec.faults.peer.loss_p = 2.0;
+        assert_eq!(spec.validate(), Err(SpecError::BadFaultProbability));
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 4, 1.0, 0.0);
+        spec.faults.link.bandwidth_bps = 0.0;
+        assert_eq!(spec.validate(), Err(SpecError::BadLinkBandwidth));
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 4, 1.0, 0.0);
+        spec.faults.retry.max_retries = 65;
+        assert_eq!(spec.validate(), Err(SpecError::BadRetryPolicy));
     }
 }

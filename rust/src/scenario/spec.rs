@@ -6,10 +6,10 @@
 use crate::cluster::{preset, ClusterPreset};
 use crate::coordinator::ftmanager::Strategy;
 use crate::coordinator::livesim::{
-    run_live_scratch, CascadeSpec, LiveCfg, LiveOutcome, LiveScratch,
+    run_live_faulted_scratch, CascadeSpec, LiveCfg, LiveOutcome, LiveScratch,
 };
 use crate::failure::injector::{FailureEvent, FailurePlan, FailureProcess};
-use crate::net::{NodeId, Topology};
+use crate::net::{FaultPlane, NodeId, Topology};
 use crate::sim::{Rng, SimTime};
 
 /// Salt separating a trial's plan stream from its live-run stream.
@@ -48,13 +48,23 @@ pub struct ScenarioSpec {
     pub windows: usize,
     /// Window length in seconds.
     pub window_s: f64,
+    /// Network fault plane; `FaultPlane::default()` is off and trials are
+    /// byte-identical to builds that predate the plane.
+    pub faults: FaultPlane,
 }
 
 impl ScenarioSpec {
     /// The paper's regime: a single-failure process over one window.
     pub fn single(cfg: LiveCfg, topo: Topology, process: FailureProcess) -> Self {
         let window_s = cfg.compute_s;
-        Self { cfg, topo, regime: FailureRegime::Single(process), windows: 1, window_s }
+        Self {
+            cfg,
+            topo,
+            regime: FailureRegime::Single(process),
+            windows: 1,
+            window_s,
+            faults: FaultPlane::default(),
+        }
     }
 
     /// The shared demo fixture (tests, benches and the multi-failure
@@ -81,7 +91,14 @@ impl ScenarioSpec {
             ckpt_overhead_s: 485.0,
             seed: 0,
         };
-        Self { cfg, topo: Topology::ring(16, 2), regime, windows: 1, window_s: 3600.0 }
+        Self {
+            cfg,
+            topo: Topology::ring(16, 2),
+            regime,
+            windows: 1,
+            window_s: 3600.0,
+            faults: FaultPlane::default(),
+        }
     }
 
     /// Build the (plannable part of the) failure plan for one trial.
@@ -166,7 +183,7 @@ impl ScenarioSpec {
         cfg.seed = seed;
         let mut plan_rng = Rng::new(seed ^ PLAN_SALT);
         let plan = self.plan(&mut plan_rng);
-        run_live_scratch(&cfg, &self.topo, &plan, self.cascade(), scratch)
+        run_live_faulted_scratch(&cfg, &self.topo, &plan, self.cascade(), &self.faults, scratch)
     }
 }
 

@@ -21,7 +21,8 @@
 //!   same validation layer the `biomaft fleet` CLI uses, so walks can
 //!   never be vacuously invalid.
 //! * **Invariants** — the [`Invariant`] trait plus the default checkers
-//!   ([`default_invariants`]): job conservation, capacity bounds,
+//!   ([`default_invariants`]): job conservation, no-lost-job (graceful
+//!   degradation under the network fault plane), capacity bounds,
 //!   placement-index/slab/per-node-list agreement, wait-queue progress,
 //!   monotone virtual time, and termination of in-flight recovery work.
 //!   They ride the [`FleetObserver`] hook, which is compiled out of the
@@ -49,7 +50,7 @@
 use crate::checkpoint::CheckpointStrategy;
 use crate::coordinator::ftmanager::Strategy;
 use crate::failure::injector::{FailureEvent, FailurePlan, FailureProcess};
-use crate::net::{NodeId, Topology};
+use crate::net::{CutSet, FaultPlane, LinkFaults, NodeId, Partition, RetryPolicy, Topology};
 use crate::scenario::batch::{parallel_map_trials_scratch, thread_policy};
 use crate::scenario::fleet::{
     run_fleet_observed, sample_arrivals, ArrivalSpec, ChurnSpec, FleetEv, FleetObserver,
@@ -188,6 +189,39 @@ impl JobConservation {
 impl Invariant for JobConservation {
     fn name(&self) -> &'static str {
         "job-conservation"
+    }
+    fn check(&mut self, _ev: &FleetEv, view: &FleetView<'_>) -> Result<(), String> {
+        Self::check_view(view)
+    }
+    fn at_end(&mut self, view: &FleetView<'_>, _hit_horizon: bool) -> Result<(), String> {
+        Self::check_view(view)
+    }
+}
+
+/// Graceful degradation, never silent loss: no transition may strand a
+/// sub-job without a scheduled continuation. The fleet counts such
+/// abandonments ([`FleetView::abandoned`]); a correct protocol keeps the
+/// count at zero forever — a migration whose message sequence exhausts its
+/// retries under the network fault plane must fall back to reactive
+/// checkpoint recovery, not drop the work.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoLostJob;
+
+impl NoLostJob {
+    fn check_view(view: &FleetView<'_>) -> Result<(), String> {
+        if view.abandoned > 0 {
+            return Err(format!(
+                "{} sub-jobs abandoned with no scheduled continuation",
+                view.abandoned
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Invariant for NoLostJob {
+    fn name(&self) -> &'static str {
+        "no-lost-job"
     }
     fn check(&mut self, _ev: &FleetEv, view: &FleetView<'_>) -> Result<(), String> {
         Self::check_view(view)
@@ -395,6 +429,7 @@ pub fn default_invariants() -> Vec<Box<dyn Invariant>> {
     vec![
         Box::new(MonotoneTime::default()),
         Box::new(JobConservation),
+        Box::new(NoLostJob),
         Box::new(CapacityBound),
         Box::new(BookkeepingAgreement),
         Box::new(QueueProgress),
@@ -632,15 +667,66 @@ fn gen_fleet(rng: &mut Rng, cfg: &VoprCfg) -> FleetSpec {
             regime,
             windows,
             window_s: 3600.0,
+            faults: FaultPlane::default(),
         };
         ChurnSpec::Plan(probe.plan(&mut rng.fork(0xC4A0)))
     };
+    // Network fault plane: half the walks run under a sampled plane. The
+    // plane draws from a forked stream, after every other dimension, so
+    // earlier dims sample exactly as they would without it.
+    if rng.chance(0.5) {
+        spec.faults = sample_fault_plane(&mut rng.fork(0xFA17), nodes);
+    }
     #[cfg(any(test, feature = "vopr-selftest"))]
     {
         spec.fault = cfg.fault;
     }
     debug_assert!(spec.validate().is_ok());
     spec
+}
+
+fn sample_link_faults(rng: &mut Rng) -> LinkFaults {
+    if rng.chance(0.5) {
+        LinkFaults::off()
+    } else {
+        LinkFaults {
+            loss_p: rng.uniform(0.0, 0.3),
+            dup_p: rng.uniform(0.0, 0.2),
+            delay_p: rng.uniform(0.0, 0.5),
+            delay_mean_s: rng.uniform(0.0, 2.0),
+        }
+    }
+}
+
+/// Sample a fault plane for a generated fleet: mild-to-moderate loss,
+/// duplication and delay on either link class, sometimes a timed
+/// partition, and a retry policy drawn around the default. The result may
+/// still be off (both links clean, no partition) — those walks double as
+/// is-off fast-path coverage.
+fn sample_fault_plane(rng: &mut Rng, nodes: usize) -> FaultPlane {
+    let peer = sample_link_faults(rng);
+    let ckpt = sample_link_faults(rng);
+    let mut partitions = Vec::new();
+    if rng.chance(0.3) {
+        let cut = if nodes >= 2 && rng.chance(0.5) {
+            CutSet::Split { at: 1 + rng.range_usize(0, nodes - 1) }
+        } else {
+            CutSet::Checkpoint
+        };
+        let start_s = rng.uniform(0.0, 3600.0);
+        partitions.push(Partition {
+            start_s,
+            end_s: start_s + rng.uniform(60.0, 1800.0),
+            cut,
+        });
+    }
+    let retry = RetryPolicy {
+        timeout_s: rng.uniform(0.1, 2.0),
+        max_retries: 1 + rng.range_usize(0, 6) as u32,
+        backoff_base_s: rng.uniform(0.0, 1.0),
+        backoff_mult: rng.uniform(1.0, 3.0),
+    };
+    FaultPlane { peer, ckpt, partitions, retry, ..FaultPlane::default() }
 }
 
 fn gen_episode(rng: &mut Rng) -> ScenarioSpec {
@@ -1088,6 +1174,18 @@ pub fn shrink_fleet(
             }
         }
 
+        // Fault plane: try turning it off entirely — when the violation
+        // survives without network faults, the repro reads much simpler.
+        if !cur.faults.is_off() {
+            let mut c = cur.clone();
+            c.faults = FaultPlane::default();
+            if let Some(v) = ctx.refails(&c) {
+                cur = c;
+                best = v;
+                changed = true;
+            }
+        }
+
         // Nodes: halve, then decrement; planned failures on dropped nodes
         // go with them.
         shrink_scalar(
@@ -1409,6 +1507,43 @@ pub fn encode_walk(spec: &WalkSpec) -> String {
                     let _ = write!(s, ";ch=pl|{}", evs.join(","));
                 }
             }
+            // Fault plane, only when it can perturb a delivery — off planes
+            // (including every pre-plane repro string) omit both keys, so
+            // old strings keep decoding and re-encode unchanged.
+            if !f.faults.is_off() {
+                let p = &f.faults;
+                let _ = write!(
+                    s,
+                    ";nf={}+{}+{}+{}+{}+{}+{}+{}+{}+{}+{}+{}+{}",
+                    fhex(p.peer.loss_p),
+                    fhex(p.peer.dup_p),
+                    fhex(p.peer.delay_p),
+                    fhex(p.peer.delay_mean_s),
+                    fhex(p.ckpt.loss_p),
+                    fhex(p.ckpt.dup_p),
+                    fhex(p.ckpt.delay_p),
+                    fhex(p.ckpt.delay_mean_s),
+                    fhex(p.retry.timeout_s),
+                    p.retry.max_retries,
+                    fhex(p.retry.backoff_base_s),
+                    fhex(p.retry.backoff_mult),
+                    fhex(p.cold_restore_factor),
+                );
+                if !p.partitions.is_empty() {
+                    let ps: Vec<String> = p
+                        .partitions
+                        .iter()
+                        .map(|q| {
+                            let cut = match q.cut {
+                                CutSet::Split { at } => format!("s{at}"),
+                                CutSet::Checkpoint => "c".into(),
+                            };
+                            format!("{}@{}@{cut}", fhex(q.start_s), fhex(q.end_s))
+                        })
+                        .collect();
+                    let _ = write!(s, ";np={}", ps.join(","));
+                }
+            }
             s
         }
         WalkSpec::Episode(e) => {
@@ -1514,6 +1649,53 @@ pub fn decode_walk(s: &str) -> Result<WalkSpec, String> {
             } else {
                 return Err(format!("bad churn {ch:?}"));
             };
+            // Optional fault-plane keys — absent in every pre-plane repro
+            // string, which therefore decodes to the default (off) plane.
+            let opt = |k: &str| kv.iter().find(|(key, _)| *key == k).map(|(_, v)| *v);
+            if let Some(nf) = opt("nf") {
+                let fields: Vec<&str> = nf.split('+').collect();
+                if fields.len() != 13 {
+                    return Err(format!("nf needs 13 `+`-joined fields, got {}", fields.len()));
+                }
+                f.faults.peer = LinkFaults {
+                    loss_p: unfhex(fields[0])?,
+                    dup_p: unfhex(fields[1])?,
+                    delay_p: unfhex(fields[2])?,
+                    delay_mean_s: unfhex(fields[3])?,
+                };
+                f.faults.ckpt = LinkFaults {
+                    loss_p: unfhex(fields[4])?,
+                    dup_p: unfhex(fields[5])?,
+                    delay_p: unfhex(fields[6])?,
+                    delay_mean_s: unfhex(fields[7])?,
+                };
+                f.faults.retry = RetryPolicy {
+                    timeout_s: unfhex(fields[8])?,
+                    max_retries: uint(fields[9])?,
+                    backoff_base_s: unfhex(fields[10])?,
+                    backoff_mult: unfhex(fields[11])?,
+                };
+                f.faults.cold_restore_factor = unfhex(fields[12])?;
+            }
+            if let Some(np) = opt("np") {
+                for p in np.split(',') {
+                    let mut it = p.split('@');
+                    let mut next = |what: &str| {
+                        it.next().ok_or_else(|| format!("np partition: missing {what}"))
+                    };
+                    let start_s = unfhex(next("start")?)?;
+                    let end_s = unfhex(next("end")?)?;
+                    let cut = next("cut")?;
+                    let cut = if let Some(at) = cut.strip_prefix('s') {
+                        CutSet::Split { at: uint(at)? }
+                    } else if cut == "c" {
+                        CutSet::Checkpoint
+                    } else {
+                        return Err(format!("bad partition cut {cut:?}"));
+                    };
+                    f.faults.partitions.push(Partition { start_s, end_s, cut });
+                }
+            }
             f.validate().map_err(|e| e.to_string())?;
             Ok(WalkSpec::Fleet(f))
         }
@@ -1714,5 +1896,114 @@ mod tests {
         let (report, violated) = run_repro(&enc, 7, 16).unwrap();
         assert!(violated, "repro must reproduce: {report}");
         assert!(report.contains("queue-progress"));
+    }
+
+    /// A hand-built spec where the armed [`InjectedFault::DropSpawnAck`]
+    /// must fire: every failure is predicted (`pf = 1.0`), one planned
+    /// failure strikes node 0 mid-compute, so node 0's prediction attempts
+    /// a migration whose SpawnAck the corrupted transition swallows.
+    fn drop_spawn_ack_spec() -> FleetSpec {
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 2, 0.0, 0.0);
+        spec.capacity = 2;
+        spec.job.n_subs = 1;
+        spec.job.compute_s = 600.0;
+        spec.job.predictable_frac = 1.0;
+        spec.horizon_s = 10_000.0;
+        spec.arrivals = ArrivalSpec::Trace { at_s: vec![0.0, 1.0] };
+        spec.churn = ChurnSpec::Plan(FailurePlan {
+            events: vec![FailureEvent { at: SimTime::from_secs(300.0), node: NodeId(0) }],
+        });
+        spec.fault = Some(InjectedFault::DropSpawnAck);
+        spec
+    }
+
+    #[test]
+    fn dropped_spawn_ack_is_detected_by_no_lost_job() {
+        let spec = drop_spawn_ack_spec();
+        let mut scratch = FleetScratch::new();
+        let (_, v) = run_walk(&WalkSpec::Fleet(spec), 7, 16, &mut scratch);
+        let v = v.expect("a swallowed SpawnAck must strand a sub-job");
+        assert_eq!(v.invariant, "no-lost-job", "{}", v.detail);
+        assert!(!v.trace.is_empty(), "violation must carry a trace window");
+    }
+
+    #[test]
+    fn shrinker_minimizes_the_dropped_ack_repro() {
+        let spec = drop_spawn_ack_spec();
+        let sh = shrink_fleet(&spec, 7, 16, "no-lost-job").expect("must reproduce");
+        assert_eq!(sh.violation.invariant, "no-lost-job");
+        assert!(sh.spec.topo.len() <= 2, "nodes did not shrink: {}", fleet_dims(&sh.spec));
+        let arrivals = match &sh.spec.arrivals {
+            ArrivalSpec::Trace { at_s } => at_s.len(),
+            ArrivalSpec::Poisson { .. } => panic!("shrinker must materialize arrivals"),
+        };
+        assert!(arrivals <= 2, "arrivals did not shrink: {arrivals}");
+    }
+
+    #[test]
+    fn explorer_finds_the_dropped_ack_fault() {
+        // More walks than the requeue self-test: the drop only fires on
+        // walks that sample both a predictable failure mix and churn.
+        let cfg = VoprCfg { walks: 256, ..selftest_cfg(InjectedFault::DropSpawnAck) };
+        let report = explore(&cfg);
+        let f = report.failure.as_ref().expect("armed fault must be found");
+        assert_eq!(f.violation.invariant, "no-lost-job", "{}", report.render());
+        assert!(f.shrunk.is_some(), "fleet failures must shrink");
+    }
+
+    #[test]
+    fn pre_fault_plane_repro_strings_still_decode() {
+        // Captured verbatim from the encoder *before* the fault plane
+        // existed. It must decode to an off plane and re-encode untouched.
+        let legacy = "fleet;s=hybrid;n=4;cap=2;st=2;sub=1;z=4;dkb=524288;pkb=524288;\
+                      cs=409c200000000000;pf=0000000000000000;crs=408a800000000000;\
+                      cos=407e500000000000;hz=40cc200000000000;arr=t0000000000000000;ch=pl|";
+        let legacy: String = legacy.split_whitespace().collect();
+        let dec = decode_walk(&legacy).unwrap();
+        let WalkSpec::Fleet(f) = &dec else { panic!("kind changed") };
+        assert!(f.faults.is_off(), "absent keys must decode to the off plane");
+        assert_eq!(encode_walk(&dec), legacy, "legacy strings must re-encode unchanged");
+    }
+
+    #[test]
+    fn fault_plane_codec_round_trips() {
+        let mut spec = skip_requeue_spec();
+        spec.fault = None;
+        spec.faults.peer =
+            LinkFaults { loss_p: 0.1, dup_p: 0.05, delay_p: 0.25, delay_mean_s: 0.75 };
+        spec.faults.ckpt =
+            LinkFaults { loss_p: 0.02, dup_p: 0.0, delay_p: 0.4, delay_mean_s: 1.5 };
+        spec.faults.retry = RetryPolicy {
+            timeout_s: 0.75,
+            max_retries: 3,
+            backoff_base_s: 0.5,
+            backoff_mult: 1.5,
+        };
+        spec.faults.partitions = vec![
+            Partition { start_s: 100.0, end_s: 400.0, cut: CutSet::Split { at: 1 } },
+            Partition { start_s: 900.0, end_s: 1200.0, cut: CutSet::Checkpoint },
+        ];
+        let enc = encode_walk(&WalkSpec::Fleet(spec.clone()));
+        assert!(enc.contains(";nf="), "faulted plane must encode its link/retry block");
+        assert!(enc.contains(";np="), "partitions must encode");
+        let dec = decode_walk(&enc).unwrap();
+        let WalkSpec::Fleet(g) = &dec else { panic!("kind changed") };
+        assert_eq!(g.faults, spec.faults, "decoded plane must equal the original");
+        assert_eq!(encode_walk(&dec), enc, "codec must round-trip byte-for-byte");
+    }
+
+    #[test]
+    fn sampled_fault_planes_always_validate() {
+        let cfg = VoprCfg { walks: 512, ..Default::default() };
+        let mut faulted = 0;
+        for i in 0..512 {
+            let (spec, _) = gen_walk(&cfg, i);
+            if let WalkSpec::Fleet(f) = spec {
+                if !f.faults.is_off() {
+                    faulted += 1;
+                }
+            }
+        }
+        assert!(faulted > 32, "too few faulted planes sampled: {faulted}");
     }
 }

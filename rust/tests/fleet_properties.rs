@@ -12,7 +12,7 @@ use biomaft::cluster::{preset, ClusterPreset};
 use biomaft::coordinator::ftmanager::Strategy;
 use biomaft::coordinator::livesim::{run_live, LiveCfg};
 use biomaft::failure::injector::{FailurePlan, FailureProcess};
-use biomaft::net::Topology;
+use biomaft::net::{FaultPlane, LinkFaults, RetryPolicy, Topology};
 use biomaft::scenario::{
     run_fleet, run_fleet_observed, run_sweep, ArrivalSpec, CellSpec, ChurnSpec, FleetMetric,
     FleetScratch, FleetSpec, InvariantObserver, SweepSpec,
@@ -235,6 +235,106 @@ fn observed_trial_is_bit_identical_to_unobserved() {
         assert_eq!(plain.absorbed_failures, checked.absorbed_failures);
         assert_eq!(plain.peak_concurrent_migrations, checked.peak_concurrent_migrations);
         assert_eq!(plain.peak_concurrent_recoveries, checked.peak_concurrent_recoveries);
+    }
+}
+
+/// The fleet fixture with a moderately hostile fault plane: lossy,
+/// duplicating, delaying links on both classes and a non-default retry
+/// policy.
+fn faulted_spec() -> FleetSpec {
+    let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 24, 6.0, 1.0);
+    spec.faults.peer = LinkFaults { loss_p: 0.15, dup_p: 0.1, delay_p: 0.3, delay_mean_s: 0.5 };
+    spec.faults.ckpt = LinkFaults { loss_p: 0.1, dup_p: 0.05, delay_p: 0.2, delay_mean_s: 1.0 };
+    spec.faults.retry =
+        RetryPolicy { timeout_s: 0.4, max_retries: 3, backoff_base_s: 0.2, backoff_mult: 1.8 };
+    spec
+}
+
+#[test]
+fn explicitly_zeroed_plane_is_byte_identical_to_default() {
+    // A plane whose every probability is written out as 0.0 — and whose
+    // retry policy is nothing like the default — must be indistinguishable
+    // from a spec that never mentions faults: `is_off` short-circuits
+    // before any draw or retry constant is consulted.
+    let mut zeroed = FleetSpec::placentia_fleet(Strategy::Hybrid, 24, 6.0, 1.0);
+    zeroed.faults = FaultPlane {
+        peer: LinkFaults { loss_p: 0.0, dup_p: 0.0, delay_p: 0.0, delay_mean_s: 5.0 },
+        ckpt: LinkFaults { loss_p: 0.0, dup_p: 0.0, delay_p: 0.0, delay_mean_s: 9.0 },
+        retry: RetryPolicy {
+            timeout_s: 7.0,
+            max_retries: 64,
+            backoff_base_s: 3.0,
+            backoff_mult: 11.0,
+        },
+        ..FaultPlane::default()
+    };
+    assert!(zeroed.faults.is_off());
+    let plain = FleetSpec::placentia_fleet(Strategy::Hybrid, 24, 6.0, 1.0);
+    for seed in [0u64, 5, 91] {
+        let a = run_fleet(&zeroed, seed);
+        let b = run_fleet(&plain, seed);
+        assert_eq!(a.events, b.events, "seed {seed}");
+        assert_eq!(a.jobs_completed, b.jobs_completed);
+        assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits());
+        assert_eq!(a.goodput_ratio.to_bits(), b.goodput_ratio.to_bits());
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        assert_eq!(a.last_completion_s.to_bits(), b.last_completion_s.to_bits());
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.rollbacks, b.rollbacks);
+        assert_eq!((a.net_retries, a.net_timeouts, a.fallbacks, a.dup_suppressed), (0, 0, 0, 0));
+        assert_eq!((b.net_retries, b.net_timeouts, b.fallbacks, b.dup_suppressed), (0, 0, 0, 0));
+    }
+
+    // ... and byte-identical through the threaded sweep too
+    let trials = 4;
+    let za = run_sweep(&SweepSpec {
+        threads: Some(1),
+        ..SweepSpec::new(vec![CellSpec::fleet(zeroed, FleetMetric::MeanSlowdown, 7)], trials)
+    });
+    let pb = run_sweep(&SweepSpec {
+        threads: Some(8),
+        ..SweepSpec::new(vec![CellSpec::fleet(plain, FleetMetric::MeanSlowdown, 7)], trials)
+    });
+    assert_eq!(za[0].mean.to_bits(), pb[0].mean.to_bits());
+    assert_eq!(za[0].std.to_bits(), pb[0].std.to_bits());
+    assert_eq!(za[0].p95.to_bits(), pb[0].p95.to_bits());
+}
+
+#[test]
+fn faulted_fleet_is_pure_and_thread_count_invariant() {
+    // With the plane on, the trial stays a pure function of (spec, seed):
+    // fault draws come from a stateless side-stream keyed by
+    // (seed, edge, seq), never from the main RNG streams.
+    let spec = faulted_spec();
+    for seed in [2u64, 13, 77] {
+        let a = run_fleet(&spec, seed);
+        let b = run_fleet(&spec, seed);
+        assert_eq!(a.events, b.events, "seed {seed}");
+        assert_eq!(a.jobs_completed, b.jobs_completed);
+        assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits());
+        assert_eq!(a.goodput_ratio.to_bits(), b.goodput_ratio.to_bits());
+        assert_eq!(a.last_completion_s.to_bits(), b.last_completion_s.to_bits());
+        assert_eq!(a.net_retries, b.net_retries);
+        assert_eq!(a.net_timeouts, b.net_timeouts);
+        assert_eq!(a.fallbacks, b.fallbacks);
+        assert_eq!(a.dup_suppressed, b.dup_suppressed);
+    }
+    // the fixture actually exercises the plane
+    let o = run_fleet(&spec, 2);
+    assert!(
+        o.net_retries > 0 || o.net_timeouts > 0 || o.dup_suppressed > 0,
+        "faulted fixture drew nothing: {o:?}"
+    );
+
+    let trials = 5;
+    let cells = vec![CellSpec::fleet(spec, FleetMetric::Goodput, 41)];
+    let one = run_sweep(&SweepSpec { threads: Some(1), ..SweepSpec::new(cells.clone(), trials) });
+    let eight = run_sweep(&SweepSpec { threads: Some(8), ..SweepSpec::new(cells, trials) });
+    for (a, b) in one.iter().zip(&eight) {
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.std.to_bits(), b.std.to_bits());
+        assert_eq!(a.median.to_bits(), b.median.to_bits());
+        assert_eq!(a.p95.to_bits(), b.p95.to_bits());
     }
 }
 

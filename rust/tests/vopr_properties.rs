@@ -38,6 +38,7 @@ fn view<'a>(occupancy: &'a [usize], doomed: &'a [bool], hosted: &'a [usize]) -> 
         distinct_recs: 0,
         remaining_ok: true,
         stale_node_subs: 0,
+        abandoned: 0,
     }
 }
 
@@ -132,6 +133,19 @@ fn queue_progress_fires_only_on_drain_points() {
     full.running = 1;
     full.sub_running = 1;
     assert!(c.check(&drain, &full).is_ok());
+}
+
+#[test]
+fn no_lost_job_passes_and_fails() {
+    let v = view(&[1, 1], &[false, false], &[1, 1]);
+    let mut c = checker("no-lost-job");
+    assert!(c.check(&EV, &v).is_ok());
+    assert!(c.at_end(&v, true).is_ok());
+
+    let mut stranded = view(&[1, 1], &[false, false], &[1, 1]);
+    stranded.abandoned = 1; // a sub-job with no scheduled continuation
+    assert!(c.check(&EV, &stranded).is_err());
+    assert!(c.at_end(&stranded, false).is_err());
 }
 
 #[test]
