@@ -1,0 +1,140 @@
+//! The gray-failure experiment: what flapping nodes and an imperfect
+//! detector cost each recovery strategy (EXPERIMENTS.md §Gray failures).
+//!
+//! * `grayfail` — goodput vs flap-burst rate, flap × detector precision:
+//!   flapping nodes fail and rejoin in short bursts, each burst forcing a
+//!   reactive rollback wave; an imperfect detector spends migrations on
+//!   false alarms (`spurious_migrations`) while its lead-time jitter and
+//!   missed coverage convert predicted failures back into rollbacks. The
+//!   suspicion/quarantine policy is the counterweight: repeat offenders
+//!   sit out a probation, so the figure shows the quarantine-off line
+//!   eroding fastest as the flap rate climbs.
+//!
+//! The detector dimension runs the paper's calibrated operating point
+//! (29 % coverage at 64 % precision — Discussion, "Predicting potential
+//! failures") against the fleet default oracle (`predictable_frac = 0.9`,
+//! no false alarms), which DESIGN.md §Gray-failure plane documents as
+//! deliberately optimistic. Seeds follow the fleet-family convention:
+//! common random numbers across variants, 2³²-spaced per x-point.
+
+use super::fleet::{fleet_series, Variant};
+use crate::checkpoint::CheckpointStrategy;
+use crate::coordinator::ftmanager::Strategy;
+use crate::failure::gray::DetectorModel;
+use crate::metrics::Series;
+use crate::scenario::{FleetMetric, FleetSpec};
+
+/// Cluster size of the grayfail figure (ring of 32 nodes × 2 slots).
+const NODES: usize = 32;
+
+/// Apply a flap-burst rate to the spec's gray plane. Fail-slow stays off
+/// so the x-axis isolates churn-by-flapping; burst shape and quarantine
+/// policy stay at their calibrated defaults unless a variant says
+/// otherwise.
+fn flapped(mut spec: FleetSpec, rate_per_node_h: f64) -> FleetSpec {
+    spec.gray.flapping.rate_per_node_h = rate_per_node_h;
+    spec
+}
+
+/// Goodput vs flap-burst rate: flapping × detector precision.
+pub fn grayfail(trials: usize, seed: u64) -> Series {
+    let arrival = 6.0;
+    let churn = 1.0;
+    let variants: Vec<Variant<'_>> = vec![
+        (
+            "hybrid, oracle detector (90% coverage, no false alarms)",
+            Box::new(move |r| {
+                flapped(FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, arrival, churn), r)
+            }),
+        ),
+        (
+            "hybrid, paper detector (29% coverage, 64% precision)",
+            Box::new(move |r| {
+                let mut s = FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, arrival, churn);
+                s.gray.detector = Some(DetectorModel::paper_calibrated());
+                flapped(s, r)
+            }),
+        ),
+        (
+            "hybrid, paper detector, quarantine off",
+            Box::new(move |r| {
+                let mut s = FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, arrival, churn);
+                s.gray.detector = Some(DetectorModel::paper_calibrated());
+                s.gray.quarantine.threshold = 0;
+                flapped(s, r)
+            }),
+        ),
+        (
+            "checkpoint (central, 2 streams, reactive)",
+            Box::new(move |r| {
+                let mut s = FleetSpec::placentia_fleet(
+                    Strategy::Checkpoint(CheckpointStrategy::CentralSingle),
+                    NODES,
+                    arrival,
+                    churn,
+                );
+                s.job.predictable_frac = 0.0;
+                flapped(s, r)
+            }),
+        ),
+    ];
+    fleet_series(
+        "Grayfail: goodput vs flap rate (32 nodes, 6 jobs/h, churn 1/node/h)",
+        "flap bursts per node-hour",
+        "goodput (completed compute / cluster slot-seconds)",
+        &[0.0, 0.25, 0.5, 1.0, 2.0],
+        &variants,
+        FleetMetric::Goodput,
+        trials,
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::fleet::run_fleet;
+
+    #[test]
+    fn grayfail_shape_and_determinism() {
+        let a = grayfail(2, 9);
+        assert_eq!(a.series.len(), 4);
+        assert_eq!(a.x, vec![0.0, 0.25, 0.5, 1.0, 2.0]);
+        for (name, y) in &a.series {
+            assert_eq!(y.len(), 5, "{name}");
+            assert!(y.iter().all(|v| v.is_finite()), "{name}: goodput is never NaN");
+        }
+        let b = grayfail(2, 9);
+        assert_eq!(a.to_csv(), b.to_csv());
+    }
+
+    #[test]
+    fn flapless_point_matches_the_clean_fleet() {
+        // At flap rate 0.0 the oracle variant's plane is off and the cell
+        // must be byte-identical to a spec that never mentions gray at all.
+        let spec = flapped(FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, 6.0, 1.0), 0.0);
+        assert!(spec.gray.is_off());
+        let clean = FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, 6.0, 1.0);
+        let a = run_fleet(&spec, 42);
+        let b = run_fleet(&clean, 42);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.jobs_completed, b.jobs_completed);
+        assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits());
+        assert_eq!((a.spurious_migrations, a.quarantines, a.quarantine_releases), (0, 0, 0));
+        assert_eq!(a.degraded_node_s.to_bits(), 0f64.to_bits());
+    }
+
+    #[test]
+    fn paper_detector_pays_false_alarms_and_quarantine_contains_flapping() {
+        // The paper-calibrated variant at the top flap rate must exercise
+        // the gray counters: false alarms become spurious migrations and
+        // repeat flap offenders get quarantined.
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, NODES, 6.0, 1.0);
+        spec.gray.detector = Some(DetectorModel::paper_calibrated());
+        let spec = flapped(spec, 2.0);
+        let o = run_fleet(&spec, 11);
+        assert!(o.spurious_migrations > 0, "paper detector never cried wolf: {o:?}");
+        assert!(o.quarantines > 0, "flap bursts never crossed the threshold: {o:?}");
+        assert!(o.jobs_completed > 0, "{o:?}");
+    }
+}

@@ -7,6 +7,7 @@ pub mod ablations;
 pub mod figures;
 pub mod fig14;
 pub mod fleet;
+pub mod grayfail;
 pub mod md_decisions;
 pub mod multifailure;
 pub mod netfault;

@@ -205,19 +205,10 @@ mod tests {
         run_prediction(&PredictionCfg::default(), &mut rng)
     }
 
-    #[test]
-    fn coverage_matches_paper_band() {
-        let s = stats();
-        let c = s.coverage();
-        assert!((0.23..0.35).contains(&c), "coverage {c}");
-    }
-
-    #[test]
-    fn precision_matches_paper_band() {
-        let s = stats();
-        let p = s.precision();
-        assert!((0.55..0.74).contains(&p), "precision {p}");
-    }
+    // The paper-band assertions on coverage and precision live in
+    // `tests/prediction_calibration.rs`: they calibrate the public
+    // operating point (shared with `DetectorModel::paper_calibrated`)
+    // and belong to the crate's external contract, not its internals.
 
     #[test]
     fn census_accounts_for_every_window() {

@@ -1,6 +1,6 @@
 //! The experiment registry: id → runner, one per paper table/figure.
 
-use super::{ablations, fig14, figures, fleet, md_decisions, multifailure, netfault, prediction, rules_validation, tables};
+use super::{ablations, fig14, figures, fleet, grayfail, md_decisions, multifailure, netfault, prediction, rules_validation, tables};
 use crate::coordinator::timeline;
 use crate::sim::Rng;
 
@@ -60,6 +60,7 @@ pub fn list() -> Vec<Experiment> {
         Experiment { id: "fleet-churn", what: "fleet: goodput under node churn (fail/repair/rejoin)", runner: |t, s| Ok(run_series(fleet::fleet_churn(t, s))) },
         Experiment { id: "fleet-scale", what: "fleet: goodput vs cluster size at ~90% load (scale ladder)", runner: |t, s| Ok(run_series(fleet::fleet_scale(t, s))) },
         Experiment { id: "netfault", what: "netfault: goodput vs message loss rate x detector accuracy", runner: |t, s| Ok(run_series(netfault::netfault(t, s))) },
+        Experiment { id: "grayfail", what: "grayfail: goodput vs flap rate x detector precision", runner: |t, s| Ok(run_series(grayfail::grayfail(t, s))) },
         Experiment { id: "vopr", what: "vopr: chaos-explore spec/seed space under invariant checking", runner: |t, s| {
             let cfg = crate::scenario::VoprCfg {
                 walks: t.max(1) * 8,
@@ -137,6 +138,12 @@ mod tests {
     fn registry_covers_netfault() {
         let ids: Vec<&str> = list().iter().map(|e| e.id).collect();
         assert!(ids.contains(&"netfault"), "netfault missing");
+    }
+
+    #[test]
+    fn registry_covers_grayfail() {
+        let ids: Vec<&str> = list().iter().map(|e| e.id).collect();
+        assert!(ids.contains(&"grayfail"), "grayfail missing");
     }
 
     #[test]

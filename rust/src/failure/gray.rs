@@ -1,0 +1,610 @@
+//! Deterministic gray-failure plane: imperfect detectors, fail-slow
+//! episodes, flapping nodes and the suspicion/quarantine placement policy
+//! (DESIGN.md §Gray-failure plane).
+//!
+//! The fleet simulator's stock failure model is fail-stop with a perfect
+//! oracle: a node is either up or doomed, and a doomed node is predicted
+//! with probability `predictable_frac` — every prediction is correct and
+//! every lead time is exact. Real detectors are nothing like that
+//! (coverage ≈29 %, precision ≈64 % in the paper's log-based learner, and
+//! the fault-tolerance literature's "gray failures" — degraded-but-alive
+//! nodes, flapping links — sit entirely outside the fail-stop model). The
+//! [`GrayPlane`] closes that gap along four axes:
+//!
+//! * [`DetectorModel`] — replaces the raw coin with `(coverage, precision,
+//!   lead_jitter)`: coverage is the fraction of real failures predicted,
+//!   sub-unit precision emits *false-positive* predictions on healthy
+//!   nodes (paying full spurious-migration cost), and lead jitter smears
+//!   the warning time. `detector: None` reproduces the legacy coin
+//!   byte-for-byte.
+//! * [`FailSlow`] — degraded-but-alive episodes: resident sub-jobs execute
+//!   at `speed_factor` instead of fail-stopping.
+//! * [`Flapping`] — fail/recover bursts: short unpredicted downs with fast
+//!   repairs, the classic migration-storm trigger.
+//! * [`QuarantinePolicy`] — the defence: nodes that flap or attract false
+//!   alarms accrue suspicion and are excluded from placement with
+//!   exponential probation backoff, bounding the storm.
+//!
+//! The determinism discipline is the same salted side-stream contract as
+//! the network [`FaultPlane`](crate::net::FaultPlane): every gray draw
+//! comes from a throwaway RNG keyed by `(trial seed, tag, node-or-event)`
+//! — never from the simulation's main stream — so trials stay pure
+//! functions of `(spec, seed)` at any thread count, and with the plane off
+//! ([`GrayPlane::is_off`]) no draw is taken at all.
+
+use crate::scenario::fleet::SpecError;
+use crate::sim::Rng;
+
+/// Salt for the gray side-streams. Draw keys are
+/// `seed ^ GRAY_SALT ^ mix(tag + mix(key))`, disjoint by construction from
+/// the arrival (`ARRIVAL_SALT`), churn (`CHURN_SALT`) and network fault
+/// (`FAULT_SALT`) streams.
+pub const GRAY_SALT: u64 = 0x6A4F_A170_DE7E_C7ED;
+
+const TAG_JITTER: u64 = 1;
+const TAG_FALSE_POS: u64 = 2;
+const TAG_FLAP: u64 = 3;
+const TAG_SLOW: u64 = 4;
+
+/// splitmix64 finalizer: decorrelates adjacent `(tag, key)` pairs.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+fn side_stream(seed: u64, tag: u64, key: u64) -> Rng {
+    Rng::new(seed ^ GRAY_SALT ^ mix(tag.wrapping_add(mix(key))))
+}
+
+/// Expected-count rounding shared by every gray schedule: `floor(expect)`
+/// events plus one more with probability `fract(expect)`, so the mean
+/// count equals the configured rate exactly while each node's count stays
+/// a pure function of its side-stream.
+fn round_count(rng: &mut Rng, expect: f64) -> usize {
+    let mut n = expect.floor() as usize;
+    if rng.chance(expect.fract()) {
+        n += 1;
+    }
+    n
+}
+
+/// An imperfect failure detector. `coverage` is the probability a real
+/// (plan-churn) failure is predicted at all; `precision` is the fraction
+/// of emitted predictions that point at a real failure — each covered
+/// failure drags `(1 - precision) / precision` expected false alarms on
+/// *healthy* nodes along with it, so the prediction census matches the
+/// configured precision in expectation; `lead_jitter_s` smears the warning
+/// lead uniformly by `±lead_jitter_s` (clamped at zero lead).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DetectorModel {
+    pub coverage: f64,
+    pub precision: f64,
+    pub lead_jitter_s: f64,
+}
+
+impl DetectorModel {
+    /// A perfect detector with the given coverage: reproduces the legacy
+    /// `predictable_frac` coin byte-for-byte (property-tested).
+    pub const fn perfect(coverage: f64) -> Self {
+        Self { coverage, precision: 1.0, lead_jitter_s: 0.0 }
+    }
+
+    /// The paper-calibrated operating point: 29 % coverage at 64 %
+    /// precision (Discussion, "Predicting potential failures"), with a
+    /// ±10 s lead smear. This is what the `grayfail` experiment runs —
+    /// the fleet default `predictable_frac = 0.9` is a deliberately
+    /// optimistic oracle (DESIGN.md §Gray-failure plane).
+    pub const fn paper_calibrated() -> Self {
+        Self { coverage: 0.29, precision: 0.64, lead_jitter_s: 10.0 }
+    }
+
+    fn validate(&self) -> Result<(), SpecError> {
+        let ok = self.coverage.is_finite()
+            && (0.0..=1.0).contains(&self.coverage)
+            && self.precision.is_finite()
+            && self.precision > 0.0
+            && self.precision <= 1.0
+            && self.lead_jitter_s.is_finite()
+            && self.lead_jitter_s >= 0.0;
+        if ok {
+            Ok(())
+        } else {
+            Err(SpecError::BadDetector)
+        }
+    }
+}
+
+/// Fail-slow episodes: the node stays up but resident sub-jobs execute at
+/// `speed_factor` (< 1) for the episode's duration. Episodes never lose
+/// work — they stretch it — which is exactly what makes them invisible to
+/// a fail-stop detector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailSlow {
+    /// Expected episodes per node per hour (0 = none).
+    pub rate_per_node_h: f64,
+    /// Mean episode length, seconds (exponential).
+    pub mean_duration_s: f64,
+    /// Execution speed inside an episode, in (0, 1]. Overlapping episodes
+    /// merge — degradation clamps at this factor, it never stacks.
+    pub speed_factor: f64,
+}
+
+impl Default for FailSlow {
+    fn default() -> Self {
+        Self { rate_per_node_h: 0.0, mean_duration_s: 600.0, speed_factor: 0.25 }
+    }
+}
+
+impl FailSlow {
+    fn validate(&self) -> Result<(), SpecError> {
+        let ok = self.rate_per_node_h.is_finite()
+            && self.rate_per_node_h >= 0.0
+            && self.mean_duration_s.is_finite()
+            && self.mean_duration_s >= 0.0
+            && self.speed_factor.is_finite()
+            && self.speed_factor > 0.0
+            && self.speed_factor <= 1.0;
+        if ok {
+            Ok(())
+        } else {
+            Err(SpecError::BadFailSlow)
+        }
+    }
+}
+
+/// Flapping churn: bursts of short, *unpredicted* fail/recover cycles.
+/// Each burst is `burst_len` downs of `down_s` seconds separated by
+/// `gap_s` seconds of uptime — the node keeps coming back just long
+/// enough to attract placements, the classic migration-storm shape the
+/// quarantine policy exists to bound.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Flapping {
+    /// Expected bursts per node per hour (0 = none).
+    pub rate_per_node_h: f64,
+    /// Downs per burst.
+    pub burst_len: u32,
+    /// Seconds each flap-down lasts (fast repair, distinct from the plan
+    /// churn's `repair_s`).
+    pub down_s: f64,
+    /// Uptime seconds between consecutive downs in a burst.
+    pub gap_s: f64,
+}
+
+impl Default for Flapping {
+    fn default() -> Self {
+        Self { rate_per_node_h: 0.0, burst_len: 3, down_s: 60.0, gap_s: 120.0 }
+    }
+}
+
+impl Flapping {
+    fn validate(&self) -> Result<(), SpecError> {
+        let ok = self.rate_per_node_h.is_finite()
+            && self.rate_per_node_h >= 0.0
+            && (1..=64).contains(&self.burst_len)
+            && self.down_s.is_finite()
+            && self.down_s > 0.0
+            && self.gap_s.is_finite()
+            && self.gap_s >= 0.0;
+        if ok {
+            Ok(())
+        } else {
+            Err(SpecError::BadFlapping)
+        }
+    }
+}
+
+/// The suspicion/quarantine placement policy. Gray events (false alarms,
+/// flap-downs) accrue suspicion; at `threshold` the node is quarantined —
+/// excluded from [`PlacementIndex`](crate::scenario::fleet) — for a
+/// probation that backs off exponentially per repeat offence, then
+/// released. Quarantine never evicts resident sub-jobs; it only stops new
+/// placements, bounding misprediction/flap-induced migration storms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuarantinePolicy {
+    /// Suspicion events before quarantine (0 disables the policy).
+    pub threshold: u32,
+    /// First probation length, seconds.
+    pub probation_s: f64,
+    /// Geometric probation multiplier per repeat offence (≥ 1).
+    pub backoff_mult: f64,
+    /// Probation ceiling, seconds.
+    pub max_probation_s: f64,
+}
+
+impl Default for QuarantinePolicy {
+    fn default() -> Self {
+        Self { threshold: 3, probation_s: 600.0, backoff_mult: 2.0, max_probation_s: 7200.0 }
+    }
+}
+
+impl QuarantinePolicy {
+    /// Probation for offence number `offense` (0-based), seconds.
+    pub fn probation(&self, offense: u32) -> f64 {
+        (self.probation_s * self.backoff_mult.powi(offense.min(64) as i32))
+            .min(self.max_probation_s)
+    }
+
+    fn validate(&self) -> Result<(), SpecError> {
+        let ok = self.probation_s.is_finite()
+            && self.probation_s > 0.0
+            && self.backoff_mult.is_finite()
+            && self.backoff_mult >= 1.0
+            && self.max_probation_s.is_finite()
+            && self.max_probation_s >= self.probation_s;
+        if ok {
+            Ok(())
+        } else {
+            Err(SpecError::BadQuarantine)
+        }
+    }
+}
+
+/// The whole gray-failure plane. `GrayPlane::default()` is **off**: no
+/// detector override, no fail-slow, no flapping — no gray draw is ever
+/// taken and the simulation is byte-identical to a build without the
+/// plane. The quarantine policy defaults *on* (threshold 3) but suspicion
+/// only ever accrues from gray events, so it is inert when the plane is
+/// off.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GrayPlane {
+    /// `None` = the legacy `predictable_frac` coin, byte-for-byte.
+    pub detector: Option<DetectorModel>,
+    pub fail_slow: FailSlow,
+    pub flapping: Flapping,
+    pub quarantine: QuarantinePolicy,
+}
+
+impl Default for GrayPlane {
+    fn default() -> Self {
+        Self {
+            detector: None,
+            fail_slow: FailSlow::default(),
+            flapping: Flapping::default(),
+            quarantine: QuarantinePolicy::default(),
+        }
+    }
+}
+
+impl GrayPlane {
+    /// True when the plane cannot perturb anything: no detector override
+    /// and both episode rates zero. Suspicion sources vanish with the
+    /// gray events, so the quarantine policy is irrelevant then.
+    pub fn is_off(&self) -> bool {
+        self.detector.is_none()
+            && self.fail_slow.rate_per_node_h == 0.0
+            && self.flapping.rate_per_node_h == 0.0
+    }
+
+    /// Structured validation, surfaced through `FleetSpec::validate` and
+    /// the vopr generator.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        if let Some(d) = &self.detector {
+            d.validate()?;
+        }
+        self.fail_slow.validate()?;
+        self.flapping.validate()?;
+        self.quarantine.validate()?;
+        Ok(())
+    }
+
+    /// Detection probability for one plan-churn failure: the detector's
+    /// coverage, or the legacy coin when no detector is configured.
+    pub fn coverage(&self, legacy_frac: f64) -> f64 {
+        self.detector.as_ref().map_or(legacy_frac, |d| d.coverage)
+    }
+
+    /// The (possibly jittered) warning lead for plan-churn event `k`.
+    /// Without a detector — or with `lead_jitter_s = 0` — this returns
+    /// `base_lead_s` untouched and takes **no draw**, preserving the
+    /// legacy path bit-for-bit.
+    pub fn lead_s(&self, seed: u64, k: u64, base_lead_s: f64) -> f64 {
+        match &self.detector {
+            Some(d) if d.lead_jitter_s > 0.0 => {
+                let mut rng = side_stream(seed, TAG_JITTER, k);
+                (base_lead_s + rng.uniform(-d.lead_jitter_s, d.lead_jitter_s)).max(0.0)
+            }
+            _ => base_lead_s,
+        }
+    }
+
+    /// False alarms dragged along by one *covered* plan-churn event `k`:
+    /// `(node, fire time)` pairs on the side-stream, expected count
+    /// `(1 - precision) / precision` so the overall prediction census
+    /// matches the configured precision. Empty without a detector or at
+    /// precision 1.
+    pub fn false_alarms(
+        &self,
+        seed: u64,
+        k: u64,
+        n_nodes: usize,
+        horizon_s: f64,
+    ) -> Vec<(usize, f64)> {
+        let Some(d) = &self.detector else { return Vec::new() };
+        if d.precision >= 1.0 {
+            return Vec::new();
+        }
+        let mut rng = side_stream(seed, TAG_FALSE_POS, k);
+        let n = round_count(&mut rng, (1.0 - d.precision) / d.precision);
+        (0..n).map(|_| (rng.range_usize(0, n_nodes), rng.uniform(0.0, horizon_s))).collect()
+    }
+
+    /// Flap-down times for `node`, sorted. Each burst start is uniform on
+    /// the horizon; downs inside a burst are `down_s + gap_s` apart and
+    /// clipped to the horizon.
+    pub fn flap_downs(&self, seed: u64, node: usize, horizon_s: f64) -> Vec<f64> {
+        let f = &self.flapping;
+        if f.rate_per_node_h == 0.0 {
+            return Vec::new();
+        }
+        let mut rng = side_stream(seed, TAG_FLAP, node as u64);
+        let bursts = round_count(&mut rng, f.rate_per_node_h * horizon_s / 3600.0);
+        let mut out = Vec::new();
+        for _ in 0..bursts {
+            let start = rng.uniform(0.0, horizon_s);
+            for j in 0..f.burst_len {
+                let t = start + j as f64 * (f.down_s + f.gap_s);
+                if t < horizon_s {
+                    out.push(t);
+                }
+            }
+        }
+        out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out
+    }
+
+    /// Fail-slow windows for `node`: sorted, merged (degradation clamps
+    /// at `speed_factor`, it never stacks) and clipped to the horizon.
+    pub fn slow_windows(&self, seed: u64, node: usize, horizon_s: f64) -> Vec<(f64, f64)> {
+        let fs = &self.fail_slow;
+        if fs.rate_per_node_h == 0.0 {
+            return Vec::new();
+        }
+        let mut rng = side_stream(seed, TAG_SLOW, node as u64);
+        let n = round_count(&mut rng, fs.rate_per_node_h * horizon_s / 3600.0);
+        let mut raw: Vec<(f64, f64)> = (0..n)
+            .map(|_| {
+                let a = rng.uniform(0.0, horizon_s);
+                let len = rng.exponential(fs.mean_duration_s);
+                (a, (a + len).min(horizon_s))
+            })
+            .collect();
+        raw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut merged: Vec<(f64, f64)> = Vec::new();
+        for (a, b) in raw {
+            match merged.last_mut() {
+                Some(m) if a <= m.1 => m.1 = m.1.max(b),
+                _ => merged.push((a, b)),
+            }
+        }
+        merged
+    }
+}
+
+/// Work seconds accrued on the wall-clock interval `[from, to]` given a
+/// node's merged fail-slow `windows`: full speed outside a window,
+/// `speed` inside. With no windows this is exactly `to - from`.
+pub fn wall_to_work(windows: &[(f64, f64)], speed: f64, from: f64, to: f64) -> f64 {
+    let mut work = to - from;
+    for &(a, b) in windows {
+        let lo = a.max(from);
+        let hi = b.min(to);
+        if hi > lo {
+            work -= (1.0 - speed) * (hi - lo);
+        }
+    }
+    work.max(0.0)
+}
+
+/// Wall seconds needed to accrue `work_s` work seconds starting at wall
+/// time `start`, the inverse of [`wall_to_work`]. Past the last window the
+/// node runs at full speed. With no windows this is `work_s` (callers on
+/// the byte-identity path early-out before calling, so the off path never
+/// even pays the float round-trip).
+pub fn work_to_wall(windows: &[(f64, f64)], speed: f64, start: f64, work_s: f64) -> f64 {
+    let mut t = start;
+    let mut left = work_s;
+    for &(a, b) in windows {
+        if b <= t {
+            continue;
+        }
+        if a > t {
+            let span = a - t;
+            if left <= span {
+                return t + left - start;
+            }
+            left -= span;
+            t = a;
+        }
+        let avail = (b - t) * speed;
+        if left <= avail {
+            return t + left / speed - start;
+        }
+        left -= avail;
+        t = b;
+    }
+    t + left - start
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn active() -> GrayPlane {
+        GrayPlane {
+            detector: Some(DetectorModel::paper_calibrated()),
+            fail_slow: FailSlow { rate_per_node_h: 0.5, ..FailSlow::default() },
+            flapping: Flapping { rate_per_node_h: 0.5, ..Flapping::default() },
+            quarantine: QuarantinePolicy::default(),
+        }
+    }
+
+    #[test]
+    fn default_plane_is_off_and_validates() {
+        let p = GrayPlane::default();
+        assert!(p.is_off());
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_calibrated_preset_validates_and_is_on() {
+        let p = GrayPlane { detector: Some(DetectorModel::paper_calibrated()), ..Default::default() };
+        assert!(!p.is_off());
+        p.validate().unwrap();
+        let d = DetectorModel::paper_calibrated();
+        assert!((d.coverage - 0.29).abs() < 1e-12);
+        assert!((d.precision - 0.64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_detector_takes_no_jitter_draw_and_emits_no_false_alarms() {
+        let p = GrayPlane { detector: Some(DetectorModel::perfect(0.9)), ..Default::default() };
+        assert_eq!(p.lead_s(7, 0, 41.0).to_bits(), 41.0f64.to_bits());
+        assert!(p.false_alarms(7, 0, 16, 3600.0).is_empty());
+        assert!((p.coverage(0.5) - 0.9).abs() < 1e-12, "detector overrides the coin");
+        assert_eq!(GrayPlane::default().coverage(0.5).to_bits(), 0.5f64.to_bits());
+    }
+
+    #[test]
+    fn schedules_are_pure_functions_of_their_key() {
+        let p = active();
+        for node in 0..8 {
+            assert_eq!(p.flap_downs(42, node, 14400.0), p.flap_downs(42, node, 14400.0));
+            assert_eq!(p.slow_windows(42, node, 14400.0), p.slow_windows(42, node, 14400.0));
+        }
+        for k in 0..8 {
+            assert_eq!(p.false_alarms(42, k, 16, 14400.0), p.false_alarms(42, k, 16, 14400.0));
+        }
+        // a different seed decorrelates
+        let a: usize = (0..32).map(|n| p.flap_downs(1, n, 14400.0).len()).sum();
+        let b: usize = (0..32).map(|n| p.flap_downs(2, n, 14400.0).len()).sum();
+        let _ = (a, b); // counts may coincide; purity above is the contract
+    }
+
+    #[test]
+    fn false_alarm_ratio_matches_precision_in_expectation() {
+        let p = GrayPlane {
+            detector: Some(DetectorModel { coverage: 1.0, precision: 0.5, lead_jitter_s: 0.0 }),
+            ..Default::default()
+        };
+        // ratio (1-p)/p = 1 exactly: every covered event drags exactly one
+        // false alarm (fract = 0 never rounds up)
+        let total: usize = (0..256).map(|k| p.false_alarms(9, k, 32, 3600.0).len()).sum();
+        assert_eq!(total, 256);
+        for k in 0..32 {
+            for (node, t) in p.false_alarms(9, k, 32, 3600.0) {
+                assert!(node < 32);
+                assert!((0.0..3600.0).contains(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn flap_bursts_have_the_configured_shape() {
+        let p = GrayPlane {
+            flapping: Flapping { rate_per_node_h: 1.0, burst_len: 3, down_s: 60.0, gap_s: 120.0 },
+            ..Default::default()
+        };
+        let mut shaped = 0;
+        for node in 0..64 {
+            let downs = p.flap_downs(5, node, 3600.0);
+            assert!(downs.windows(2).all(|w| w[0] <= w[1]), "sorted");
+            assert!(downs.iter().all(|&t| (0.0..3600.0).contains(&t)));
+            // a full mid-horizon burst spaces its downs by down_s + gap_s
+            for w in downs.windows(2) {
+                if (w[1] - w[0] - 180.0).abs() < 1e-9 {
+                    shaped += 1;
+                }
+            }
+        }
+        assert!(shaped > 0, "at least one full burst should fit the horizon");
+    }
+
+    #[test]
+    fn slow_windows_are_sorted_disjoint_and_clipped() {
+        let p = GrayPlane {
+            fail_slow: FailSlow { rate_per_node_h: 4.0, mean_duration_s: 900.0, speed_factor: 0.25 },
+            ..Default::default()
+        };
+        let mut any = false;
+        for node in 0..32 {
+            let w = p.slow_windows(11, node, 7200.0);
+            any |= !w.is_empty();
+            for pair in w.windows(2) {
+                assert!(pair[0].1 < pair[1].0, "merged windows must be disjoint: {pair:?}");
+            }
+            for &(a, b) in &w {
+                assert!(0.0 <= a && a < b && b <= 7200.0, "clipped: ({a}, {b})");
+            }
+        }
+        assert!(any, "rate 4/h over 2 h should produce windows somewhere");
+    }
+
+    #[test]
+    fn wall_work_conversions_invert_each_other() {
+        let windows = [(100.0, 400.0), (1000.0, 1600.0)];
+        let speed = 0.25;
+        for &(start, work) in
+            &[(0.0, 50.0), (0.0, 500.0), (50.0, 1000.0), (350.0, 10.0), (2000.0, 300.0)]
+        {
+            let wall = work_to_wall(&windows, speed, start, work);
+            let back = wall_to_work(&windows, speed, start, start + wall);
+            assert!((back - work).abs() < 1e-9, "start {start} work {work}: {back}");
+        }
+        // inside a window, work accrues at speed
+        assert!((wall_to_work(&windows, speed, 100.0, 200.0) - 25.0).abs() < 1e-12);
+        // no windows: identity
+        assert_eq!(wall_to_work(&[], speed, 10.0, 70.0).to_bits(), 60.0f64.to_bits());
+    }
+
+    #[test]
+    fn probation_backs_off_geometrically_to_the_ceiling() {
+        let q = QuarantinePolicy::default();
+        assert!((q.probation(0) - 600.0).abs() < 1e-12);
+        assert!((q.probation(1) - 1200.0).abs() < 1e-12);
+        assert!((q.probation(2) - 2400.0).abs() < 1e-12);
+        assert!((q.probation(10) - 7200.0).abs() < 1e-12, "clamped at max_probation_s");
+    }
+
+    #[test]
+    fn validate_rejects_each_bad_dimension() {
+        let mut p = GrayPlane::default();
+        p.detector = Some(DetectorModel { coverage: 1.5, precision: 1.0, lead_jitter_s: 0.0 });
+        assert_eq!(p.validate(), Err(SpecError::BadDetector));
+
+        let mut p = GrayPlane::default();
+        p.detector = Some(DetectorModel { coverage: 0.5, precision: 0.0, lead_jitter_s: 0.0 });
+        assert_eq!(p.validate(), Err(SpecError::BadDetector), "precision 0 would be all noise");
+
+        let mut p = GrayPlane::default();
+        p.detector = Some(DetectorModel { coverage: 0.5, precision: 1.0, lead_jitter_s: -1.0 });
+        assert_eq!(p.validate(), Err(SpecError::BadDetector));
+
+        let mut p = GrayPlane::default();
+        p.fail_slow.speed_factor = 0.0;
+        assert_eq!(p.validate(), Err(SpecError::BadFailSlow), "fail-slow is not fail-stop");
+
+        let mut p = GrayPlane::default();
+        p.fail_slow.rate_per_node_h = f64::NAN;
+        assert_eq!(p.validate(), Err(SpecError::BadFailSlow));
+
+        let mut p = GrayPlane::default();
+        p.flapping.burst_len = 0;
+        assert_eq!(p.validate(), Err(SpecError::BadFlapping));
+
+        let mut p = GrayPlane::default();
+        p.flapping.down_s = 0.0;
+        assert_eq!(p.validate(), Err(SpecError::BadFlapping));
+
+        let mut p = GrayPlane::default();
+        p.quarantine.backoff_mult = 0.5;
+        assert_eq!(p.validate(), Err(SpecError::BadQuarantine));
+
+        let mut p = GrayPlane::default();
+        p.quarantine.max_probation_s = 1.0;
+        assert_eq!(p.validate(), Err(SpecError::BadQuarantine), "ceiling below the floor");
+    }
+}

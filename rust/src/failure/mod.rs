@@ -5,11 +5,13 @@
 //! and predicts failures with a log-based learner achieving 29 % coverage at
 //! 64 % precision (Discussion, "Predicting potential failures").
 
+pub mod gray;
 pub mod injector;
 pub mod predictor;
 pub mod prober;
 pub mod states;
 
+pub use gray::{DetectorModel, FailSlow, Flapping, GrayPlane, QuarantinePolicy};
 pub use injector::{FailureEvent, FailurePlan, FailureProcess};
 pub use predictor::{Prediction, Predictor};
 pub use prober::Prober;

@@ -15,6 +15,7 @@ use biomaft::cluster::{preset, ClusterPreset};
 use biomaft::coordinator::ftmanager::Strategy;
 use biomaft::coordinator::run::{measure_reinstate, ExperimentCfg};
 use biomaft::experiments;
+use biomaft::failure::DetectorModel;
 use biomaft::scenario::{explore, run_fleet, run_repro, ChurnSpec, FleetSpec, VoprCfg};
 use biomaft::sim::Rng;
 use biomaft::util::cli::Command;
@@ -99,6 +100,22 @@ fn commands() -> Vec<Command> {
                  (migration handshakes and checkpoint-server exchanges pay \
                  timeout/retry/backoff and degrade gracefully; 0 = pristine \
                  network, byte-identical to a build without the fault plane)",
+            )
+            .opt(
+                "flap-rate",
+                "0",
+                "flap bursts per node-hour: nodes fail and rejoin in short \
+                 unpredicted bursts; repeat offenders are quarantined with \
+                 exponential probation backoff (0 = no flapping, \
+                 byte-identical to a build without the gray plane)",
+            )
+            .opt(
+                "detector-precision",
+                "1",
+                "failure-detector precision in (0, 1]: below 1, each \
+                 predicted failure is accompanied by (1-p)/p false alarms \
+                 on healthy nodes, each paying a spurious migration sweep \
+                 (1 = oracle detector, no false alarms)",
             )
             .opt("seed", "2014", "trial seed"),
         Command::new("vopr", "chaos-explore spec/seed space with invariant checking")
@@ -226,6 +243,17 @@ fn run() -> anyhow::Result<()> {
             let loss_p: f64 = p.req("loss-p")?;
             spec.faults.peer.loss_p = loss_p;
             spec.faults.ckpt.loss_p = loss_p;
+            spec.gray.flapping.rate_per_node_h = p.req("flap-rate")?;
+            let precision: f64 = p.req("detector-precision")?;
+            if precision < 1.0 {
+                // an imperfect detector keeps the legacy coverage but cries
+                // wolf: (1-p)/p false alarms per predicted failure
+                spec.gray.detector = Some(DetectorModel {
+                    coverage: spec.job.predictable_frac,
+                    precision,
+                    lead_jitter_s: 0.0,
+                });
+            }
             spec.validate().map_err(|e| anyhow::anyhow!("invalid fleet spec: {e}"))?;
             let o = run_fleet(&spec, p.req("seed")?);
             let rate_per_h = match &spec.arrivals {
@@ -268,6 +296,12 @@ fn run() -> anyhow::Result<()> {
                 "  network: {} retries, {} timeouts, {} fallbacks to checkpoint recovery, {} duplicates suppressed",
                 o.net_retries, o.net_timeouts, o.fallbacks, o.dup_suppressed
             );
+            if !spec.gray.is_off() {
+                println!(
+                    "  gray: {} spurious migrations, {} quarantines ({} released), {:.0} degraded node-seconds",
+                    o.spurious_migrations, o.quarantines, o.quarantine_releases, o.degraded_node_s
+                );
+            }
             println!("  events {}   last completion {}", o.events, hms_ms(o.last_completion_s));
         }
         "vopr" => {

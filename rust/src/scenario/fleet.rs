@@ -75,6 +75,7 @@
 use crate::cluster::{preset, ClusterPreset};
 use crate::coordinator::ftmanager::Strategy;
 use crate::coordinator::livesim::{migration_net_cost, LiveCfg};
+use crate::failure::gray::{self, GrayPlane};
 use crate::failure::injector::{FailureEvent, FailurePlan, FailureProcess};
 use crate::hybrid::rules::{decide, Mover, RuleInputs};
 use crate::metrics::Accumulator;
@@ -167,6 +168,13 @@ pub struct FleetSpec {
     /// exchange runs under. [`FaultPlane::default`] is **off** and leaves
     /// every trial byte-identical to a build without the plane.
     pub faults: FaultPlane,
+    /// The gray-failure plane ([`failure::gray`](crate::failure::gray)):
+    /// imperfect detector (coverage/precision/lead jitter, with
+    /// false-positive predictions on healthy nodes), fail-slow episodes,
+    /// flapping churn, and the suspicion/quarantine placement policy.
+    /// [`GrayPlane::default`] is **off** and leaves every trial
+    /// byte-identical to a build without the plane (property-tested).
+    pub gray: GrayPlane,
     /// Deliberate single-transition corruption for the VOPR self-test
     /// (`scenario::vopr`): proves the invariant checkers fire and the
     /// shrinker converges. Compiled out of normal builds — it exists only
@@ -194,6 +202,11 @@ pub enum InjectedFault {
     /// PR-8 hardening exists to prevent. Caught by the no-lost-job
     /// checker on the abandoning `Prediction` event.
     DropSpawnAck,
+    /// Never quarantine: suspicion accrues past the policy threshold but
+    /// the node is never excluded from placement — the migration-storm
+    /// bound silently evaporates. Caught by the storm-bound checker on the
+    /// first event that crosses the threshold.
+    QuarantineLeak,
 }
 
 impl FleetSpec {
@@ -234,6 +247,7 @@ impl FleetSpec {
             ckpt_streams: 2,
             horizon_s: 4.0 * 3600.0,
             faults: FaultPlane::default(),
+            gray: GrayPlane::default(),
             #[cfg(any(test, feature = "vopr-selftest"))]
             fault: None,
         }
@@ -322,6 +336,7 @@ impl FleetSpec {
             }
         }
         self.faults.validate()?;
+        self.gray.validate()?;
         Ok(())
     }
 }
@@ -405,6 +420,20 @@ pub enum SpecError {
     BadLinkBandwidth,
     /// A link's per-message software overhead is not finite and ≥ 0.
     BadLinkOverhead,
+    /// A detector model is out of range: coverage outside `[0, 1]`,
+    /// precision outside `(0, 1]` (0 would mean all noise, unbounded false
+    /// alarms) or a non-finite/negative lead jitter.
+    BadDetector,
+    /// A fail-slow episode spec is out of range: negative rate/duration or
+    /// a speed factor outside `(0, 1]` (0 would be fail-stop, not
+    /// fail-slow).
+    BadFailSlow,
+    /// A flapping spec is out of range: negative rate, empty or oversized
+    /// burst, non-positive down time or negative gap.
+    BadFlapping,
+    /// A quarantine policy is degenerate: non-positive probation,
+    /// multiplier below 1 or a ceiling below the first probation.
+    BadQuarantine,
 }
 
 impl std::fmt::Display for SpecError {
@@ -469,6 +498,19 @@ impl std::fmt::Display for SpecError {
             SpecError::BadLinkOverhead => {
                 write!(f, "link software overhead must be finite and >= 0")
             }
+            SpecError::BadDetector => {
+                write!(f, "detector needs coverage in [0, 1], precision in (0, 1], jitter >= 0")
+            }
+            SpecError::BadFailSlow => {
+                write!(f, "fail-slow needs rate/duration >= 0 and speed factor in (0, 1]")
+            }
+            SpecError::BadFlapping => {
+                write!(f, "flapping needs rate >= 0, 1..=64 downs per burst, down > 0, gap >= 0")
+            }
+            SpecError::BadQuarantine => write!(
+                f,
+                "quarantine needs probation > 0, backoff multiplier >= 1, ceiling >= probation"
+            ),
         }
     }
 }
@@ -525,6 +567,19 @@ pub struct FleetOutcome {
     pub fallbacks: u64,
     /// Duplicate deliveries suppressed by receivers (counted, free).
     pub dup_suppressed: u64,
+    /// Migrations triggered by false-positive predictions on healthy
+    /// nodes (full migration cost for nothing; 0 when the gray plane is
+    /// off or the detector is perfect).
+    pub spurious_migrations: u64,
+    /// Nodes quarantined by the suspicion policy (repeat offenders
+    /// excluded from placement with exponential probation backoff).
+    pub quarantines: u64,
+    /// Quarantine probations that expired, returning the node to the
+    /// placement pool. Always ≤ `quarantines`; equal at quiescence.
+    pub quarantine_releases: u64,
+    /// Total node-seconds spent in fail-slow episodes (sum of merged
+    /// degraded windows across nodes; 0 when the plane is off).
+    pub degraded_node_s: f64,
     /// Dispatched DES events (determinism fingerprint).
     pub events: u64,
 }
@@ -553,6 +608,10 @@ pub enum FleetEv {
     /// Sub-job `(slot, sub)` completed; `job_completed` when it was the
     /// job's last (the wait queue is drained on exactly these events).
     SubDone { slot: u32, sub: u32, job_completed: bool },
+    /// A false-positive prediction fired on (healthy) node `node`.
+    FalseAlarm { node: u32 },
+    /// Node `node`'s quarantine probation expired; it rejoined placement.
+    QuarantineRelease { node: u32 },
 }
 
 impl std::fmt::Display for FleetEv {
@@ -573,6 +632,10 @@ impl std::fmt::Display for FleetEv {
             }
             FleetEv::SubDone { slot, sub, job_completed } => {
                 write!(f, "SubDone slot={slot} sub={sub} job_completed={job_completed}")
+            }
+            FleetEv::FalseAlarm { node } => write!(f, "FalseAlarm node={node}"),
+            FleetEv::QuarantineRelease { node } => {
+                write!(f, "QuarantineRelease node={node}")
             }
         }
     }
@@ -627,6 +690,19 @@ pub struct FleetView<'a> {
     /// neither completed, fell back nor rescheduled. Must always be 0:
     /// the no-lost-job checker fires on the first abandonment.
     pub abandoned: usize,
+    /// Per-node quarantine flag from the placement index.
+    pub quarantined: &'a [bool],
+    /// Per-node suspicion counter — strictly below `suspicion_threshold`
+    /// after every event (crossing it triggers quarantine and a reset; the
+    /// storm-bound checker fires if the bound silently evaporates).
+    pub suspicion: &'a [u32],
+    /// The quarantine policy's threshold (0 = policy disabled).
+    pub suspicion_threshold: u32,
+    /// The system's quarantine counter.
+    pub quarantines: u64,
+    /// The system's quarantine-release counter (≤ `quarantines`; equal at
+    /// quiescence — every probation is scheduled and must fire).
+    pub quarantine_releases: u64,
 }
 
 /// Observer hook on the fleet event loop. The unit observer `()` is the
@@ -826,6 +902,10 @@ impl JobSlab {
 struct PlacementIndex {
     occupancy: Vec<usize>,
     doomed: Vec<bool>,
+    /// Suspicion-policy exclusion flag: a quarantined node keeps hosting
+    /// its resident sub-jobs but takes no new placements or migrations
+    /// until released ([`failure::gray::QuarantinePolicy`]).
+    quarantined: Vec<bool>,
     capacity: usize,
     avail: BTreeSet<(usize, usize)>,
 }
@@ -836,6 +916,8 @@ impl PlacementIndex {
         self.occupancy.resize(n, 0);
         self.doomed.clear();
         self.doomed.resize(n, false);
+        self.quarantined.clear();
+        self.quarantined.resize(n, false);
         self.capacity = capacity;
         self.avail.clear();
         self.avail.extend((0..n).map(|i| (0, i)));
@@ -849,7 +931,7 @@ impl PlacementIndex {
 
     fn inc(&mut self, node: NodeId) {
         let o = self.occupancy[node.0];
-        if !self.doomed[node.0] {
+        if !self.doomed[node.0] && !self.quarantined[node.0] {
             if o < self.capacity {
                 self.avail.remove(&(o, node.0));
             }
@@ -863,7 +945,7 @@ impl PlacementIndex {
     fn dec(&mut self, node: NodeId) {
         let o = self.occupancy[node.0];
         debug_assert!(o > 0, "occupancy underflow on node {}", node.0);
-        if !self.doomed[node.0] {
+        if !self.doomed[node.0] && !self.quarantined[node.0] {
             if o < self.capacity {
                 self.avail.remove(&(o, node.0));
             }
@@ -884,7 +966,25 @@ impl PlacementIndex {
 
     fn repair(&mut self, node: NodeId) {
         self.doomed[node.0] = false;
-        if self.occupancy[node.0] < self.capacity {
+        if !self.quarantined[node.0] && self.occupancy[node.0] < self.capacity {
+            self.avail.insert((self.occupancy[node.0], node.0));
+        }
+    }
+
+    /// Exclude a suspicious node from placement. Resident sub-jobs stay;
+    /// load bookkeeping continues while it is out. A doomed node may be
+    /// quarantined too — the flags are independent (the avail entry is
+    /// already absent then, and `remove` on an absent entry is a no-op).
+    fn quarantine(&mut self, node: NodeId) {
+        debug_assert!(!self.quarantined[node.0], "double quarantine");
+        self.quarantined[node.0] = true;
+        self.avail.remove(&(self.occupancy[node.0], node.0));
+    }
+
+    /// Probation expired: readmit the node (unless it is down or full).
+    fn release(&mut self, node: NodeId) {
+        self.quarantined[node.0] = false;
+        if !self.doomed[node.0] && self.occupancy[node.0] < self.capacity {
             self.avail.insert((self.occupancy[node.0], node.0));
         }
     }
@@ -893,9 +993,13 @@ impl PlacementIndex {
         self.doomed[node.0]
     }
 
-    /// Migration-candidate predicate: healthy with a spare slot.
+    fn is_quarantined(&self, node: NodeId) -> bool {
+        self.quarantined[node.0]
+    }
+
+    /// Migration-candidate predicate: healthy, unquarantined, spare slot.
     fn has_slot(&self, node: NodeId) -> bool {
-        !self.doomed[node.0] && self.occupancy[node.0] < self.capacity
+        !self.doomed[node.0] && !self.quarantined[node.0] && self.occupancy[node.0] < self.capacity
     }
 }
 
@@ -908,12 +1012,21 @@ enum Ev {
     /// Job `job` (arrival-order index) arrives and requests placement.
     Arrival { job: usize },
     /// A node is doomed: the prediction (if predictable) fires immediately
-    /// and the hardware fails `fail_in_s` later.
-    Doom { node: NodeId, predictable: bool, fail_in_s: f64 },
+    /// and the hardware fails `fail_in_s` later. `flap` marks a gray-plane
+    /// flap-down: always unpredicted, repaired after the flapping spec's
+    /// fast `down_s` instead of the churn `repair_s`, and a suspicion
+    /// source for the quarantine policy.
+    Doom { node: NodeId, predictable: bool, fail_in_s: f64, flap: bool },
     Prediction { node: NodeId },
-    Failure { node: NodeId },
+    Failure { node: NodeId, flap: bool },
     /// A failed node finishes repair and rejoins the pool.
     Repair { node: NodeId },
+    /// A false-positive prediction on a healthy node (gray-plane detector
+    /// with precision < 1): sub-jobs flee at full migration cost, and the
+    /// node accrues suspicion.
+    FalseAlarm { node: NodeId },
+    /// A quarantined node's probation expired.
+    QuarantineRelease { node: NodeId },
     MigrationDone { job: JobId, sub: usize, to: NodeId },
     /// Recovery `rec` (one per job per failure) completes.
     RecoveryDone { job: JobId, rec: usize },
@@ -946,6 +1059,9 @@ pub struct FleetScratch {
     node_subs: Vec<BTreeSet<NodeSub>>,
     scan: Vec<NodeSub>,
     predicted: Vec<bool>,
+    suspicion: Vec<u32>,
+    offenses: Vec<u32>,
+    slow_windows: Vec<Vec<(f64, f64)>>,
     derive: Derive,
 }
 
@@ -959,6 +1075,9 @@ impl FleetScratch {
             node_subs: Vec::new(),
             scan: Vec::new(),
             predicted: Vec::new(),
+            suspicion: Vec::new(),
+            offenses: Vec::new(),
+            slow_windows: Vec::new(),
             derive: Derive::default(),
         }
     }
@@ -989,6 +1108,19 @@ struct System<'a, O: FleetObserver> {
     /// the sets they walk).
     scan: Vec<NodeSub>,
     predicted: Vec<bool>,
+    /// Per-node suspicion counters (gray-plane quarantine policy; always
+    /// strictly below the threshold after an event completes).
+    suspicion: Vec<u32>,
+    /// Per-node quarantine offence counts (probation backoff exponent).
+    offenses: Vec<u32>,
+    /// Per-node merged fail-slow windows, `(start_s, end_s)` sorted and
+    /// disjoint; every entry empty when the gray plane is off, which is
+    /// the byte-identity early-out for the wall/work conversions.
+    slow_windows: Vec<Vec<(f64, f64)>>,
+    /// Execution speed inside a fail-slow window.
+    slow_speed: f64,
+    /// Repair time of a flap-down (the flapping spec's `down_s`).
+    flap_down_s: f64,
     repair_s: Option<f64>,
     /// Jobs whose Arrival has dispatched.
     arrived: usize,
@@ -1022,6 +1154,9 @@ struct System<'a, O: FleetObserver> {
     net_timeouts: u64,
     fallbacks: u64,
     dup_suppressed: u64,
+    spurious_migrations: u64,
+    quarantines: u64,
+    quarantine_releases: u64,
     /// Sub-jobs stranded with no scheduled resume (only an injected
     /// self-test defect can raise this; the no-lost-job checker fires).
     abandoned: usize,
@@ -1126,7 +1261,18 @@ impl<O: FleetObserver> System<'_, O> {
         for sub in 0..n_subs {
             let host = self.jobs.rec_mut(id).host[sub];
             self.node_subs[host.0].insert((arrival, sub as u32, id.slot));
-            ctx.send_at(done_at, me, Ev::SubDone { job: id, sub });
+            // a fail-slow host stretches this sub's wall clock; without
+            // windows the shared `done_at` is used untouched (the gray-off
+            // byte-identity path)
+            let d = if self.slow_windows[host.0].is_empty() {
+                done_at
+            } else {
+                let wall = self.work_to_wall(host, now, self.spec.job.compute_s);
+                let d = now + SimTime::from_secs(wall);
+                self.jobs.rec_mut(id).state[sub] = SubState::Running { done_at: d };
+                d
+            };
+            ctx.send_at(d, me, Ev::SubDone { job: id, sub });
         }
         true
     }
@@ -1142,6 +1288,63 @@ impl<O: FleetObserver> System<'_, O> {
             self.queue.pop_front();
         }
     }
+
+    /// Work seconds a sub accrues on `node` over the wall interval
+    /// `[from, to]`. A node without fail-slow windows takes the early
+    /// return — the legacy float arithmetic verbatim, so the gray-off
+    /// path stays byte-identical.
+    fn wall_to_work(&self, node: NodeId, from: SimTime, to: SimTime) -> f64 {
+        let w = &self.slow_windows[node.0];
+        if w.is_empty() {
+            return to.saturating_sub(from).as_secs();
+        }
+        gray::wall_to_work(w, self.slow_speed, from.as_secs(), to.as_secs())
+    }
+
+    /// Wall seconds `node` needs from `start` to accrue `work_s` work
+    /// seconds (inverse of [`wall_to_work`](Self::wall_to_work); same
+    /// no-window early return).
+    fn work_to_wall(&self, node: NodeId, start: SimTime, work_s: f64) -> f64 {
+        let w = &self.slow_windows[node.0];
+        if w.is_empty() {
+            return work_s;
+        }
+        gray::work_to_wall(w, self.slow_speed, start.as_secs(), work_s)
+    }
+
+    /// One suspicion event (a false alarm or a non-absorbed flap-down) on
+    /// `node`. Crossing the policy threshold quarantines the node, resets
+    /// its counter, bumps its offence count and schedules the release
+    /// after an exponentially backed-off probation. A node already in
+    /// quarantine accrues nothing — the counter stays strictly below the
+    /// threshold after every event (the storm-bound invariant).
+    fn suspicion_accrue(&mut self, node: NodeId, ctx: &mut Ctx<'_, '_, Ev>) {
+        let q = &self.spec.gray.quarantine;
+        if q.threshold == 0 || self.placement.is_quarantined(node) {
+            return;
+        }
+        self.suspicion[node.0] += 1;
+        if self.suspicion[node.0] < q.threshold {
+            return;
+        }
+        // vopr self-test fault QuarantineLeak: the threshold crossing is
+        // ignored, suspicion keeps accruing — the storm-bound checker
+        // must fire on this very event
+        #[cfg(any(test, feature = "vopr-selftest"))]
+        let leak = self.spec.fault == Some(InjectedFault::QuarantineLeak);
+        #[cfg(not(any(test, feature = "vopr-selftest")))]
+        let leak = false;
+        if leak {
+            return;
+        }
+        self.placement.quarantine(node);
+        self.quarantines += 1;
+        let probation = q.probation(self.offenses[node.0]);
+        self.offenses[node.0] = self.offenses[node.0].saturating_add(1);
+        self.suspicion[node.0] = 0;
+        let me = ctx.me();
+        ctx.send_in(SimTime::from_secs(probation), me, Ev::QuarantineRelease { node });
+    }
 }
 
 /// Project the private event onto its public observer label. The
@@ -1154,8 +1357,12 @@ fn ev_kind(ev: &Ev) -> FleetEv {
             FleetEv::Doom { node: node.0 as u32, predictable: *predictable }
         }
         Ev::Prediction { node } => FleetEv::Prediction { node: node.0 as u32 },
-        Ev::Failure { node } => FleetEv::Failure { node: node.0 as u32 },
+        Ev::Failure { node, .. } => FleetEv::Failure { node: node.0 as u32 },
         Ev::Repair { node } => FleetEv::Repair { node: node.0 as u32 },
+        Ev::FalseAlarm { node } => FleetEv::FalseAlarm { node: node.0 as u32 },
+        Ev::QuarantineRelease { node } => {
+            FleetEv::QuarantineRelease { node: node.0 as u32 }
+        }
         Ev::MigrationDone { job, sub, to } => FleetEv::MigrationDone {
             slot: job.slot,
             sub: *sub as u32,
@@ -1196,6 +1403,11 @@ impl<O: FleetObserver> System<'_, O> {
             remaining_ok: self.derive.remaining_ok,
             stale_node_subs: self.derive.stale_node_subs,
             abandoned: self.abandoned,
+            quarantined: &self.placement.quarantined,
+            suspicion: &self.suspicion,
+            suspicion_threshold: self.spec.gray.quarantine.threshold,
+            quarantines: self.quarantines,
+            quarantine_releases: self.quarantine_releases,
         };
         self.obs.after_event(ev, &view);
     }
@@ -1226,8 +1438,138 @@ impl<O: FleetObserver> System<'_, O> {
             remaining_ok: self.derive.remaining_ok,
             stale_node_subs: self.derive.stale_node_subs,
             abandoned: self.abandoned,
+            quarantined: &self.placement.quarantined,
+            suspicion: &self.suspicion,
+            suspicion_threshold: self.spec.gray.quarantine.threshold,
+            quarantines: self.quarantines,
+            quarantine_releases: self.quarantine_releases,
         };
         self.obs.at_end(&view, hit_horizon);
+    }
+
+    /// The proactive migration sweep (multi-agent strategies only):
+    /// migrate every running sub-job off `node`, jobs in arrival order,
+    /// subs in index order — livesim's scan and draw order verbatim for
+    /// each job. The node's sub-job set *is* that order; snapshot it
+    /// because migrations edit it. Shared by real predictions (`spurious
+    /// = false`, the node is doomed) and gray-plane false alarms
+    /// (`spurious = true`, the node is healthy and every migration is
+    /// pure waste, counted in `spurious_migrations`).
+    fn proactive_sweep(&mut self, ctx: &mut Ctx<'_, '_, Ev>, node: NodeId, spurious: bool) {
+        let now = ctx.now();
+        let me = ctx.me();
+        self.scan.clear();
+        self.scan.extend(self.node_subs[node.0].iter().copied());
+        for k in 0..self.scan.len() {
+            let (arrival, sub, slot) = self.scan[k];
+            let i = sub as usize;
+            let rec = &self.jobs.slots[slot as usize];
+            debug_assert!(rec.live && rec.arrival == arrival, "dead entry in node set");
+            debug_assert_eq!(rec.host[i], node, "entry strayed off its node");
+            if let SubState::Running { done_at } = rec.state[i] {
+                let remaining = self.wall_to_work(node, now, done_at);
+                let gen = rec.gen;
+                let dur = self.reinstate_s(ctx);
+                if let Some(target) = self.pick_target(node, ctx) {
+                    // Harden the migration handshake against the
+                    // fault plane. The exchange draws only from the
+                    // salted side-stream, so with the plane off this
+                    // whole block is skipped and the trial is
+                    // byte-identical to a build without it.
+                    #[cfg(any(test, feature = "vopr-selftest"))]
+                    let drop_ack = self.spec.fault == Some(InjectedFault::DropSpawnAck);
+                    #[cfg(not(any(test, feature = "vopr-selftest")))]
+                    let drop_ack = false;
+                    let mut extra_s = 0.0;
+                    let mut delivered = !drop_ack;
+                    if !drop_ack && !self.spec.faults.is_off() {
+                        let cut = self.spec.faults.cut_peer(node, target, now.as_secs());
+                        let cost = migration_net_cost(
+                            &self.spec.job,
+                            &self.spec.faults,
+                            self.seed,
+                            faults::edge(node, target),
+                            &mut self.fault_seq,
+                            cut,
+                        );
+                        self.net_retries += cost.retries;
+                        self.net_timeouts += cost.timeouts;
+                        self.dup_suppressed += cost.dup_deliveries;
+                        extra_s = cost.penalty_s;
+                        delivered = cost.delivered;
+                    }
+                    if delivered {
+                        let rec = &mut self.jobs.slots[slot as usize];
+                        rec.state[i] = SubState::Migrating { resume_remaining_s: remaining };
+                        rec.host[i] = target;
+                        self.placement.dec(node);
+                        self.placement.inc(target);
+                        self.node_subs[node.0].remove(&(arrival, sub, slot));
+                        self.node_subs[target.0].insert((arrival, sub, slot));
+                        self.running -= 1;
+                        self.migr_inflight += 1;
+                        self.peak_migr = self.peak_migr.max(self.migr_inflight);
+                        if spurious {
+                            self.spurious_migrations += 1;
+                        }
+                        ctx.send_in(
+                            SimTime::from_secs(dur + extra_s),
+                            me,
+                            Ev::MigrationDone { job: JobId { slot, gen }, sub: i, to: target },
+                        );
+                    } else if drop_ack {
+                        // injected self-test defect: the handshake
+                        // never completes and the broken protocol
+                        // strands the sub — Migrating forever, no
+                        // event scheduled, no fallback. Bookkeeping
+                        // stays self-consistent so only the
+                        // no-lost-job checker fires.
+                        let rec = &mut self.jobs.slots[slot as usize];
+                        rec.state[i] = SubState::Migrating { resume_remaining_s: remaining };
+                        rec.host[i] = target;
+                        self.placement.dec(node);
+                        self.placement.inc(target);
+                        self.node_subs[node.0].remove(&(arrival, sub, slot));
+                        self.node_subs[target.0].insert((arrival, sub, slot));
+                        self.running -= 1;
+                        self.migr_inflight += 1;
+                        self.peak_migr = self.peak_migr.max(self.migr_inflight);
+                        self.abandoned += 1;
+                    } else {
+                        // the handshake exhausted its retries (or
+                        // the target partitioned away): fall back
+                        // one rung to reactive checkpoint recovery —
+                        // the Failure-path bookkeeping, never a
+                        // lost job. The time spent retrying
+                        // (`extra_s`) delays the recovery's start.
+                        let rec_id = self.next_rec;
+                        self.next_rec += 1;
+                        self.jobs.slots[slot as usize].state[i] =
+                            SubState::Recovering { resume_remaining_s: remaining, rec: rec_id };
+                        self.running -= 1;
+                        if let Some(t) = self.pick_target(node, ctx) {
+                            self.jobs.slots[slot as usize].host[i] = t;
+                            self.placement.dec(node);
+                            self.placement.inc(t);
+                            self.node_subs[node.0].remove(&(arrival, sub, slot));
+                            self.node_subs[t.0].insert((arrival, sub, slot));
+                        }
+                        self.rec_inflight += 1;
+                        self.peak_rec = self.peak_rec.max(self.rec_inflight);
+                        let rdur = self.recovery_s();
+                        self.rollbacks += 1;
+                        self.fallbacks += 1;
+                        ctx.send_in(
+                            SimTime::from_secs(extra_s + rdur),
+                            me,
+                            Ev::RecoveryDone { job: JobId { slot, gen }, rec: rec_id },
+                        );
+                    }
+                }
+                // no healthy neighbour with a spare slot: stay
+                // put; the failure path will roll back
+            }
+        }
     }
 
     /// Dispatch one event — the event-loop body, observer-free. Early
@@ -1244,7 +1586,7 @@ impl<O: FleetObserver> System<'_, O> {
                     self.queue.push_back(id);
                 }
             }
-            Ev::Doom { node, predictable, fail_in_s } => {
+            Ev::Doom { node, predictable, fail_in_s, flap } => {
                 if self.placement.is_doomed(node) {
                     // still down from an earlier failure: the strike is
                     // absorbed (a node is doomed at most once per
@@ -1253,146 +1595,47 @@ impl<O: FleetObserver> System<'_, O> {
                     return;
                 }
                 self.placement.doom(node);
+                if flap {
+                    // a landed flap-down is a suspicion source (the strike
+                    // itself is always unpredicted: flaps stress the
+                    // reactive path)
+                    self.suspicion_accrue(node, ctx);
+                }
                 if predictable {
                     self.predicted[node.0] = true;
                     ctx.send_in(SimTime::from_secs(0.0), me, Ev::Prediction { node });
                 }
-                ctx.send_in(SimTime::from_secs(fail_in_s), me, Ev::Failure { node });
+                ctx.send_in(SimTime::from_secs(fail_in_s), me, Ev::Failure { node, flap });
             }
             Ev::Prediction { node } => {
                 // proactive path (multi-agent strategies only): migrate
-                // every running sub-job off the node, jobs in arrival
-                // order, subs in index order — livesim's scan and draw
-                // order verbatim for each job. The node's sub-job set *is*
-                // that order; snapshot it because migrations edit it.
+                // every running sub-job off the node
                 if !self.spec.job.strategy.is_multi_agent() {
                     return;
                 }
-                self.scan.clear();
-                self.scan.extend(self.node_subs[node.0].iter().copied());
-                for k in 0..self.scan.len() {
-                    let (arrival, sub, slot) = self.scan[k];
-                    let i = sub as usize;
-                    let rec = &self.jobs.slots[slot as usize];
-                    debug_assert!(rec.live && rec.arrival == arrival, "dead entry in node set");
-                    debug_assert_eq!(rec.host[i], node, "entry strayed off its node");
-                    if let SubState::Running { done_at } = rec.state[i] {
-                        let remaining = (done_at.saturating_sub(now)).as_secs();
-                        let gen = rec.gen;
-                        let dur = self.reinstate_s(ctx);
-                        if let Some(target) = self.pick_target(node, ctx) {
-                            // Harden the migration handshake against the
-                            // fault plane. The exchange draws only from the
-                            // salted side-stream, so with the plane off this
-                            // whole block is skipped and the trial is
-                            // byte-identical to a build without it.
-                            #[cfg(any(test, feature = "vopr-selftest"))]
-                            let drop_ack =
-                                self.spec.fault == Some(InjectedFault::DropSpawnAck);
-                            #[cfg(not(any(test, feature = "vopr-selftest")))]
-                            let drop_ack = false;
-                            let mut extra_s = 0.0;
-                            let mut delivered = !drop_ack;
-                            if !drop_ack && !self.spec.faults.is_off() {
-                                let cut =
-                                    self.spec.faults.cut_peer(node, target, now.as_secs());
-                                let cost = migration_net_cost(
-                                    &self.spec.job,
-                                    &self.spec.faults,
-                                    self.seed,
-                                    faults::edge(node, target),
-                                    &mut self.fault_seq,
-                                    cut,
-                                );
-                                self.net_retries += cost.retries;
-                                self.net_timeouts += cost.timeouts;
-                                self.dup_suppressed += cost.dup_deliveries;
-                                extra_s = cost.penalty_s;
-                                delivered = cost.delivered;
-                            }
-                            if delivered {
-                                let rec = &mut self.jobs.slots[slot as usize];
-                                rec.state[i] =
-                                    SubState::Migrating { resume_remaining_s: remaining };
-                                rec.host[i] = target;
-                                self.placement.dec(node);
-                                self.placement.inc(target);
-                                self.node_subs[node.0].remove(&(arrival, sub, slot));
-                                self.node_subs[target.0].insert((arrival, sub, slot));
-                                self.running -= 1;
-                                self.migr_inflight += 1;
-                                self.peak_migr = self.peak_migr.max(self.migr_inflight);
-                                ctx.send_in(
-                                    SimTime::from_secs(dur + extra_s),
-                                    me,
-                                    Ev::MigrationDone {
-                                        job: JobId { slot, gen },
-                                        sub: i,
-                                        to: target,
-                                    },
-                                );
-                            } else if drop_ack {
-                                // injected self-test defect: the handshake
-                                // never completes and the broken protocol
-                                // strands the sub — Migrating forever, no
-                                // event scheduled, no fallback. Bookkeeping
-                                // stays self-consistent so only the
-                                // no-lost-job checker fires.
-                                let rec = &mut self.jobs.slots[slot as usize];
-                                rec.state[i] =
-                                    SubState::Migrating { resume_remaining_s: remaining };
-                                rec.host[i] = target;
-                                self.placement.dec(node);
-                                self.placement.inc(target);
-                                self.node_subs[node.0].remove(&(arrival, sub, slot));
-                                self.node_subs[target.0].insert((arrival, sub, slot));
-                                self.running -= 1;
-                                self.migr_inflight += 1;
-                                self.peak_migr = self.peak_migr.max(self.migr_inflight);
-                                self.abandoned += 1;
-                            } else {
-                                // the handshake exhausted its retries (or
-                                // the target partitioned away): fall back
-                                // one rung to reactive checkpoint recovery —
-                                // the Failure-path bookkeeping, never a
-                                // lost job. The time spent retrying
-                                // (`extra_s`) delays the recovery's start.
-                                let rec_id = self.next_rec;
-                                self.next_rec += 1;
-                                self.jobs.slots[slot as usize].state[i] =
-                                    SubState::Recovering {
-                                        resume_remaining_s: remaining,
-                                        rec: rec_id,
-                                    };
-                                self.running -= 1;
-                                if let Some(t) = self.pick_target(node, ctx) {
-                                    self.jobs.slots[slot as usize].host[i] = t;
-                                    self.placement.dec(node);
-                                    self.placement.inc(t);
-                                    self.node_subs[node.0].remove(&(arrival, sub, slot));
-                                    self.node_subs[t.0].insert((arrival, sub, slot));
-                                }
-                                self.rec_inflight += 1;
-                                self.peak_rec = self.peak_rec.max(self.rec_inflight);
-                                let rdur = self.recovery_s();
-                                self.rollbacks += 1;
-                                self.fallbacks += 1;
-                                ctx.send_in(
-                                    SimTime::from_secs(extra_s + rdur),
-                                    me,
-                                    Ev::RecoveryDone {
-                                        job: JobId { slot, gen },
-                                        rec: rec_id,
-                                    },
-                                );
-                            }
-                        }
-                        // no healthy neighbour with a spare slot: stay
-                        // put; the failure path will roll back
-                    }
+                self.proactive_sweep(ctx, node, false);
+            }
+            Ev::FalseAlarm { node } => {
+                // a false-positive prediction (gray detector, precision
+                // < 1) on a node that was never going to fail. If it is
+                // down anyway the alarm is moot (absorbed like a doubled
+                // doom); otherwise it accrues suspicion and — for the
+                // proactive strategies — triggers the full migration
+                // sweep at full cost, for nothing.
+                if self.placement.is_doomed(node) {
+                    return;
+                }
+                self.suspicion_accrue(node, ctx);
+                if self.spec.job.strategy.is_multi_agent() {
+                    self.proactive_sweep(ctx, node, true);
                 }
             }
-            Ev::Failure { node } => {
+            Ev::QuarantineRelease { node } => {
+                self.quarantine_releases += 1;
+                self.placement.release(node);
+                self.drain_queue(ctx);
+            }
+            Ev::Failure { node, flap } => {
                 // every sub-job still on the failed node is lost → reactive
                 // rollback, one recovery per affected job (each its own
                 // checkpoint-server stream). The node's set is already
@@ -1411,7 +1654,7 @@ impl<O: FleetObserver> System<'_, O> {
                         let i = sub as usize;
                         match self.jobs.slots[slot as usize].state[i] {
                             SubState::Running { done_at } => {
-                                let remaining = (done_at.saturating_sub(now)).as_secs();
+                                let remaining = self.wall_to_work(node, now, done_at);
                                 self.jobs.slots[slot as usize].state[i] = SubState::Recovering {
                                     resume_remaining_s: remaining,
                                     rec: rec_id,
@@ -1478,7 +1721,13 @@ impl<O: FleetObserver> System<'_, O> {
                         );
                     }
                 }
-                if let Some(repair_s) = self.repair_s {
+                // a flap-down always repairs — after the flapping spec's
+                // fast down_s, not the churn repair_s (a plan failure
+                // absorbed during a flap window rides this repair too:
+                // the repair belongs to the failure that took the node
+                // down, see DESIGN.md §Gray-failure plane)
+                let repair = if flap { Some(self.flap_down_s) } else { self.repair_s };
+                if let Some(repair_s) = repair {
                     ctx.send_in(SimTime::from_secs(repair_s), me, Ev::Repair { node });
                 }
             }
@@ -1494,7 +1743,11 @@ impl<O: FleetObserver> System<'_, O> {
                 let Some(rec) = self.jobs.get(job) else { return };
                 if let SubState::Migrating { resume_remaining_s } = rec.state[sub] {
                     debug_assert_eq!(rec.host[sub], to);
-                    let done_at = now + SimTime::from_secs(resume_remaining_s);
+                    // `resume_remaining_s` is *work* seconds; a fail-slow
+                    // landing node stretches them (identity when the node
+                    // has no degraded windows)
+                    let done_at =
+                        now + SimTime::from_secs(self.work_to_wall(to, now, resume_remaining_s));
                     self.jobs.rec_mut(job).state[sub] = SubState::Running { done_at };
                     self.running += 1;
                     self.migr_inflight -= 1;
@@ -1545,7 +1798,13 @@ impl<O: FleetObserver> System<'_, O> {
                                     self.node_subs[t.0].insert((arrival, i as u32, job.slot));
                                 }
                             }
-                            let done_at = now + SimTime::from_secs(resume_remaining_s);
+                            let host = self.jobs.slots[job.slot as usize].host[i];
+                            let done_at = now
+                                + SimTime::from_secs(self.work_to_wall(
+                                    host,
+                                    now,
+                                    resume_remaining_s,
+                                ));
                             self.jobs.slots[job.slot as usize].state[i] =
                                 SubState::Running { done_at };
                             self.running += 1;
@@ -1731,6 +1990,29 @@ pub fn run_fleet_observed<O: FleetObserver>(
     let mut predicted = std::mem::take(&mut scratch.predicted);
     predicted.clear();
     predicted.resize(n, false);
+    let mut suspicion = std::mem::take(&mut scratch.suspicion);
+    suspicion.clear();
+    suspicion.resize(n, 0);
+    let mut offenses = std::mem::take(&mut scratch.offenses);
+    offenses.clear();
+    offenses.resize(n, 0);
+    // Fail-slow windows are static per trial: drawn from the gray
+    // side-stream at build time (one throwaway RNG per node, never the
+    // root), merged, and summed into the degraded-node-seconds counter.
+    // With the plane off every entry stays empty — the byte-identity
+    // early-out of the wall/work conversions.
+    let mut slow_windows = std::mem::take(&mut scratch.slow_windows);
+    for w in &mut slow_windows {
+        w.clear();
+    }
+    slow_windows.resize_with(n, Vec::new);
+    let mut degraded_node_s = 0.0;
+    if spec.gray.fail_slow.rate_per_node_h > 0.0 {
+        for (node, w) in slow_windows.iter_mut().enumerate() {
+            *w = spec.gray.slow_windows(seed, node, spec.horizon_s);
+            degraded_node_s += w.iter().map(|(a, b)| b - a).sum::<f64>();
+        }
+    }
     let derive = std::mem::take(&mut scratch.derive);
     let system = System {
         spec,
@@ -1742,6 +2024,11 @@ pub fn run_fleet_observed<O: FleetObserver>(
         node_subs,
         scan,
         predicted,
+        suspicion,
+        offenses,
+        slow_windows,
+        slow_speed: spec.gray.fail_slow.speed_factor,
+        flap_down_s: spec.gray.flapping.down_s,
         repair_s,
         arrived: 0,
         next_rec: 0,
@@ -1766,6 +2053,9 @@ pub fn run_fleet_observed<O: FleetObserver>(
         net_timeouts: 0,
         fallbacks: 0,
         dup_suppressed: 0,
+        spurious_migrations: 0,
+        quarantines: 0,
+        quarantine_releases: 0,
         abandoned: 0,
     };
     let mut h = Harness::from_scratch(harness_rng, std::mem::take(&mut scratch.sim));
@@ -1774,10 +2064,39 @@ pub fn run_fleet_observed<O: FleetObserver>(
         h.schedule(SimTime::from_secs(t), sys, Ev::Arrival { job: j });
     }
     let lead = spec.job.costs.predict.predict_time_s + 20.0;
-    for e in &plan.events {
-        let predictable = root.chance(spec.job.predictable_frac);
-        let doom_at = e.at.saturating_sub(SimTime::from_secs(lead));
-        h.schedule(doom_at, sys, Ev::Doom { node: e.node, predictable, fail_in_s: lead });
+    // The detector model overrides the raw predictable_frac coin with its
+    // coverage — still exactly one root draw per plan event, so the root
+    // stream is untouched by the gray plane; jitter and false alarms come
+    // from per-event side streams. With `detector: None` (the default)
+    // this loop is the legacy loop byte-for-byte.
+    let coverage = spec.gray.coverage(spec.job.predictable_frac);
+    for (k, e) in plan.events.iter().enumerate() {
+        let predictable = root.chance(coverage);
+        let lead_s = if predictable { spec.gray.lead_s(seed, k as u64, lead) } else { lead };
+        let doom_at = e.at.saturating_sub(SimTime::from_secs(lead_s));
+        h.schedule(
+            doom_at,
+            sys,
+            Ev::Doom { node: e.node, predictable, fail_in_s: lead_s, flap: false },
+        );
+        if predictable {
+            // sub-unit precision: every covered failure drags its
+            // expected share of false alarms on (a priori healthy) nodes
+            for (fp, t) in spec.gray.false_alarms(seed, k as u64, n, spec.horizon_s) {
+                h.schedule(SimTime::from_secs(t), sys, Ev::FalseAlarm { node: NodeId(fp) });
+            }
+        }
+    }
+    // Flap-downs: unpredicted, zero-lead dooms with the fast flap repair,
+    // drawn per node from the gray side stream at build time.
+    for node in 0..n {
+        for t in spec.gray.flap_downs(seed, node, spec.horizon_s) {
+            h.schedule(
+                SimTime::from_secs(t),
+                sys,
+                Ev::Doom { node: NodeId(node), predictable: false, fail_in_s: 0.0, flap: true },
+            );
+        }
     }
     let horizon = SimTime::from_secs(spec.horizon_s);
     let (fin, sim) = h.run_until_reclaim(horizon);
@@ -1817,6 +2136,10 @@ pub fn run_fleet_observed<O: FleetObserver>(
         net_timeouts: system.net_timeouts,
         fallbacks: system.fallbacks,
         dup_suppressed: system.dup_suppressed,
+        spurious_migrations: system.spurious_migrations,
+        quarantines: system.quarantines,
+        quarantine_releases: system.quarantine_releases,
+        degraded_node_s,
         events,
     };
     // hand the allocations back for the next trial
@@ -1826,6 +2149,9 @@ pub fn run_fleet_observed<O: FleetObserver>(
     scratch.node_subs = system.node_subs;
     scratch.scan = system.scan;
     scratch.predicted = system.predicted;
+    scratch.suspicion = system.suspicion;
+    scratch.offenses = system.offenses;
+    scratch.slow_windows = system.slow_windows;
     scratch.derive = system.derive;
     outcome
 }
@@ -2054,12 +2380,13 @@ mod tests {
             let mut idx = PlacementIndex::default();
             idx.reset(n, cap);
             let mut doomed = vec![false; n];
+            let mut quar = vec![false; n];
             let mut occ = vec![0usize; n];
             // random walk of the same transitions the fleet performs
             for _ in 0..120 {
                 let node = NodeId(rng.range_usize(0, n));
-                match rng.range_usize(0, 4) {
-                    0 if !doomed[node.0] && occ[node.0] < cap => {
+                match rng.range_usize(0, 6) {
+                    0 if !doomed[node.0] && !quar[node.0] && occ[node.0] < cap => {
                         occ[node.0] += 1;
                         idx.inc(node);
                     }
@@ -2075,11 +2402,19 @@ mod tests {
                         doomed[node.0] = false;
                         idx.repair(node);
                     }
+                    4 if !quar[node.0] => {
+                        quar[node.0] = true;
+                        idx.quarantine(node);
+                    }
+                    5 if quar[node.0] => {
+                        quar[node.0] = false;
+                        idx.release(node);
+                    }
                     _ => {}
                 }
                 let mut best: Option<NodeId> = None;
                 for v in 0..n {
-                    if doomed[v] || occ[v] >= cap {
+                    if doomed[v] || quar[v] || occ[v] >= cap {
                         continue;
                     }
                     best = match best {
@@ -2179,5 +2514,93 @@ mod tests {
         let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 4, 1.0, 0.0);
         spec.faults.retry.max_retries = 65;
         assert_eq!(spec.validate(), Err(SpecError::BadRetryPolicy));
+    }
+
+    #[test]
+    fn validate_surfaces_gray_plane_errors() {
+        use crate::failure::gray::DetectorModel;
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 4, 1.0, 0.0);
+        spec.gray.detector =
+            Some(DetectorModel { coverage: 1.5, precision: 0.5, lead_jitter_s: 0.0 });
+        assert_eq!(spec.validate(), Err(SpecError::BadDetector));
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 4, 1.0, 0.0);
+        spec.gray.fail_slow.speed_factor = 0.0;
+        assert_eq!(spec.validate(), Err(SpecError::BadFailSlow));
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 4, 1.0, 0.0);
+        spec.gray.flapping.burst_len = 0;
+        assert_eq!(spec.validate(), Err(SpecError::BadFlapping));
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 4, 1.0, 0.0);
+        spec.gray.quarantine.backoff_mult = 0.5;
+        assert_eq!(spec.validate(), Err(SpecError::BadQuarantine));
+    }
+
+    #[test]
+    fn flapping_quarantines_and_releases_repeat_offenders() {
+        // 2 bursts/node/h × burst_len 3 ≥ the suspicion threshold: over a
+        // 4-hour horizon essentially every node earns a quarantine, and
+        // the 10-minute probation releases fit inside the horizon too.
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 16, 4.0, 0.0);
+        spec.gray.flapping.rate_per_node_h = 2.0;
+        spec.validate().unwrap();
+        let o = run_fleet(&spec, 9);
+        assert!(o.quarantines > 0, "flap bursts must cross the threshold: {o:?}");
+        assert!(o.quarantine_releases > 0, "probation must lapse in-horizon: {o:?}");
+        assert!(o.quarantine_releases <= o.quarantines, "{o:?}");
+        assert!(o.jobs_completed > 0, "{o:?}");
+    }
+
+    #[test]
+    fn imperfect_detector_pays_spurious_migrations() {
+        use crate::failure::gray::DetectorModel;
+        // precision 0.25 drags three expected false alarms behind every
+        // covered failure; on a busy multi-agent fleet some of them land
+        // on nodes with resident sub-jobs and trigger paid-for sweeps.
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 32, 12.0, 1.0);
+        spec.gray.detector =
+            Some(DetectorModel { coverage: 0.9, precision: 0.25, lead_jitter_s: 30.0 });
+        spec.validate().unwrap();
+        let o = run_fleet(&spec, 7);
+        assert!(o.spurious_migrations > 0, "false alarms must cost migrations: {o:?}");
+        assert!(o.migrations as u64 >= o.spurious_migrations, "{o:?}");
+        assert!(o.jobs_completed > 0, "{o:?}");
+    }
+
+    #[test]
+    fn fail_slow_degrades_without_losing_work() {
+        // saturating fail-slow coverage on a single-job fixture: the job
+        // must still finish (degraded, never lost) and strictly later
+        // than the clean run.
+        let clean = quiet(Strategy::Hybrid);
+        let mut slow = quiet(Strategy::Hybrid);
+        slow.gray.fail_slow.rate_per_node_h = 30.0;
+        let a = run_fleet(&clean, 13);
+        let b = run_fleet(&slow, 13);
+        assert!(b.degraded_node_s > 0.0, "{b:?}");
+        assert_eq!(b.jobs_completed, 1, "{b:?}");
+        assert!(
+            b.last_completion_s > a.last_completion_s,
+            "degraded compute must stretch the completion: {} vs {}",
+            b.last_completion_s,
+            a.last_completion_s
+        );
+    }
+
+    #[test]
+    fn gray_plane_is_deterministic_in_seed() {
+        use crate::failure::gray::DetectorModel;
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 24, 6.0, 1.0);
+        spec.gray.detector =
+            Some(DetectorModel { coverage: 0.5, precision: 0.5, lead_jitter_s: 20.0 });
+        spec.gray.flapping.rate_per_node_h = 1.0;
+        spec.gray.fail_slow.rate_per_node_h = 0.5;
+        let a = run_fleet(&spec, 17);
+        let b = run_fleet(&spec, 17);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.spurious_migrations, b.spurious_migrations);
+        assert_eq!(a.quarantines, b.quarantines);
+        assert_eq!(a.quarantine_releases, b.quarantine_releases);
+        assert_eq!(a.degraded_node_s.to_bits(), b.degraded_node_s.to_bits());
+        assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits());
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
     }
 }

@@ -49,6 +49,7 @@
 
 use crate::checkpoint::CheckpointStrategy;
 use crate::coordinator::ftmanager::Strategy;
+use crate::failure::gray::{DetectorModel, FailSlow, Flapping, GrayPlane, QuarantinePolicy};
 use crate::failure::injector::{FailureEvent, FailurePlan, FailureProcess};
 use crate::net::{CutSet, FaultPlane, LinkFaults, NodeId, Partition, RetryPolicy, Topology};
 use crate::scenario::batch::{parallel_map_trials_scratch, thread_policy};
@@ -340,9 +341,9 @@ impl QueueProgress {
         let free: usize = view
             .occupancy
             .iter()
-            .zip(view.doomed)
-            .filter(|&(_, &down)| !down)
-            .map(|(&o, _)| view.capacity.saturating_sub(o))
+            .enumerate()
+            .filter(|&(v, _)| !view.doomed[v] && !view.quarantined[v])
+            .map(|(_, &o)| view.capacity.saturating_sub(o))
             .sum();
         if free >= view.n_subs {
             return Err(format!(
@@ -373,6 +374,79 @@ impl Invariant for QueueProgress {
             return Ok(());
         }
         Self::head_must_not_fit(view)
+    }
+}
+
+/// Misprediction/flap storms stay bounded: after any event, no
+/// un-quarantined node's suspicion may sit at or above the quarantine
+/// threshold — crossing the threshold must quarantine the node and reset
+/// its count in the same transition. This is the checker the cfg-gated
+/// [`InjectedFault::QuarantineLeak`] self-test proves fires.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StormBound;
+
+impl StormBound {
+    fn check_view(view: &FleetView<'_>) -> Result<(), String> {
+        if view.suspicion_threshold == 0 {
+            return Ok(()); // policy disabled: suspicion never accrues
+        }
+        for (v, &s) in view.suspicion.iter().enumerate() {
+            if s >= view.suspicion_threshold && !view.quarantined[v] {
+                return Err(format!(
+                    "node {v} suspicion {s} at/past threshold {} without quarantine",
+                    view.suspicion_threshold
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Invariant for StormBound {
+    fn name(&self) -> &'static str {
+        "storm-bound"
+    }
+    fn check(&mut self, _ev: &FleetEv, view: &FleetView<'_>) -> Result<(), String> {
+        Self::check_view(view)
+    }
+    fn at_end(&mut self, view: &FleetView<'_>, _hit_horizon: bool) -> Result<(), String> {
+        Self::check_view(view)
+    }
+}
+
+/// Quarantine bookkeeping balances: releases never exceed quarantines,
+/// and a fleet that went quiescent before the horizon holds no node in
+/// quarantine — every probation scheduled a release and every release
+/// fired.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct QuarantineReleases;
+
+impl Invariant for QuarantineReleases {
+    fn name(&self) -> &'static str {
+        "quarantine-releases"
+    }
+    fn check(&mut self, _ev: &FleetEv, view: &FleetView<'_>) -> Result<(), String> {
+        if view.quarantine_releases > view.quarantines {
+            return Err(format!(
+                "{} releases > {} quarantines",
+                view.quarantine_releases, view.quarantines
+            ));
+        }
+        Ok(())
+    }
+    fn at_end(&mut self, view: &FleetView<'_>, hit_horizon: bool) -> Result<(), String> {
+        if view.quarantine_releases > view.quarantines {
+            return Err(format!(
+                "{} releases > {} quarantines",
+                view.quarantine_releases, view.quarantines
+            ));
+        }
+        if !hit_horizon {
+            if let Some(v) = view.quarantined.iter().position(|&q| q) {
+                return Err(format!("quiescent before the horizon with node {v} quarantined"));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -433,6 +507,8 @@ pub fn default_invariants() -> Vec<Box<dyn Invariant>> {
         Box::new(CapacityBound),
         Box::new(BookkeepingAgreement),
         Box::new(QueueProgress),
+        Box::new(StormBound),
+        Box::new(QuarantineReleases),
         Box::new(Termination),
     ]
 }
@@ -677,12 +753,62 @@ fn gen_fleet(rng: &mut Rng, cfg: &VoprCfg) -> FleetSpec {
     if rng.chance(0.5) {
         spec.faults = sample_fault_plane(&mut rng.fork(0xFA17), nodes);
     }
+    // Gray-failure plane: half the walks run under a sampled plane, drawn
+    // from its own forked stream after every other dimension so earlier
+    // dims sample exactly as they would without it.
+    if rng.chance(0.5) {
+        spec.gray = sample_gray_plane(&mut rng.fork(0x64AF));
+    }
     #[cfg(any(test, feature = "vopr-selftest"))]
     {
         spec.fault = cfg.fault;
     }
     debug_assert!(spec.validate().is_ok());
     spec
+}
+
+/// Sample a gray plane for a generated fleet: an imperfect detector about
+/// half the time, mild flapping and fail-slow episodes, and a quarantine
+/// policy drawn around the default (threshold 0 disables it — those walks
+/// cover the policy-off path). The result may still be off (no detector,
+/// both rates zero) — those walks double as is-off fast-path coverage.
+fn sample_gray_plane(rng: &mut Rng) -> GrayPlane {
+    let detector = if rng.chance(0.5) {
+        Some(DetectorModel {
+            coverage: rng.f64(),
+            precision: rng.uniform(0.2, 1.0),
+            lead_jitter_s: rng.uniform(0.0, 60.0),
+        })
+    } else {
+        None
+    };
+    let fail_slow = if rng.chance(0.5) {
+        FailSlow {
+            rate_per_node_h: rng.uniform(0.0, 1.0),
+            mean_duration_s: rng.uniform(60.0, 1800.0),
+            speed_factor: rng.uniform(0.1, 1.0),
+        }
+    } else {
+        FailSlow::default()
+    };
+    let flapping = if rng.chance(0.5) {
+        Flapping {
+            rate_per_node_h: rng.uniform(0.0, 2.0),
+            burst_len: 1 + rng.range_usize(0, 6) as u32,
+            down_s: rng.uniform(10.0, 300.0),
+            gap_s: rng.uniform(0.0, 600.0),
+        }
+    } else {
+        Flapping::default()
+    };
+    let probation_s = rng.uniform(60.0, 1800.0);
+    let quarantine = QuarantinePolicy {
+        threshold: rng.range_usize(0, 6) as u32,
+        probation_s,
+        backoff_mult: rng.uniform(1.0, 3.0),
+        max_probation_s: probation_s * rng.uniform(1.0, 8.0),
+    };
+    GrayPlane { detector, fail_slow, flapping, quarantine }
 }
 
 fn sample_link_faults(rng: &mut Rng) -> LinkFaults {
@@ -1186,6 +1312,18 @@ pub fn shrink_fleet(
             }
         }
 
+        // Gray plane: same move — a repro without detectors, flapping and
+        // fail-slow episodes is the one worth reading first.
+        if !cur.gray.is_off() {
+            let mut c = cur.clone();
+            c.gray = GrayPlane::default();
+            if let Some(v) = ctx.refails(&c) {
+                cur = c;
+                best = v;
+                changed = true;
+            }
+        }
+
         // Nodes: halve, then decrement; planned failures on dropped nodes
         // go with them.
         shrink_scalar(
@@ -1544,6 +1682,45 @@ pub fn encode_walk(spec: &WalkSpec) -> String {
                     let _ = write!(s, ";np={}", ps.join(","));
                 }
             }
+            // Gray plane, only when it can perturb the run — off planes
+            // (including every pre-gray repro string) omit all four keys,
+            // so old strings keep decoding and re-encode unchanged. `gd`
+            // additionally requires a detector override.
+            if !f.gray.is_off() {
+                let g = &f.gray;
+                if let Some(d) = &g.detector {
+                    let _ = write!(
+                        s,
+                        ";gd={}+{}+{}",
+                        fhex(d.coverage),
+                        fhex(d.precision),
+                        fhex(d.lead_jitter_s),
+                    );
+                }
+                let _ = write!(
+                    s,
+                    ";gs={}+{}+{}",
+                    fhex(g.fail_slow.rate_per_node_h),
+                    fhex(g.fail_slow.mean_duration_s),
+                    fhex(g.fail_slow.speed_factor),
+                );
+                let _ = write!(
+                    s,
+                    ";gf={}+{}+{}+{}",
+                    fhex(g.flapping.rate_per_node_h),
+                    g.flapping.burst_len,
+                    fhex(g.flapping.down_s),
+                    fhex(g.flapping.gap_s),
+                );
+                let _ = write!(
+                    s,
+                    ";gq={}+{}+{}+{}",
+                    g.quarantine.threshold,
+                    fhex(g.quarantine.probation_s),
+                    fhex(g.quarantine.backoff_mult),
+                    fhex(g.quarantine.max_probation_s),
+                );
+            }
             s
         }
         WalkSpec::Episode(e) => {
@@ -1695,6 +1872,49 @@ pub fn decode_walk(s: &str) -> Result<WalkSpec, String> {
                     };
                     f.faults.partitions.push(Partition { start_s, end_s, cut });
                 }
+            }
+            // Optional gray-plane keys — absent in every pre-gray repro
+            // string, which therefore decodes to the default (off) plane.
+            let fields = |v: &str, n: usize, key: &str| -> Result<Vec<String>, String> {
+                let fs: Vec<String> = v.split('+').map(str::to_owned).collect();
+                if fs.len() != n {
+                    return Err(format!("{key} needs {n} `+`-joined fields, got {}", fs.len()));
+                }
+                Ok(fs)
+            };
+            if let Some(gd) = opt("gd") {
+                let fs = fields(gd, 3, "gd")?;
+                f.gray.detector = Some(DetectorModel {
+                    coverage: unfhex(&fs[0])?,
+                    precision: unfhex(&fs[1])?,
+                    lead_jitter_s: unfhex(&fs[2])?,
+                });
+            }
+            if let Some(gs) = opt("gs") {
+                let fs = fields(gs, 3, "gs")?;
+                f.gray.fail_slow = FailSlow {
+                    rate_per_node_h: unfhex(&fs[0])?,
+                    mean_duration_s: unfhex(&fs[1])?,
+                    speed_factor: unfhex(&fs[2])?,
+                };
+            }
+            if let Some(gf) = opt("gf") {
+                let fs = fields(gf, 4, "gf")?;
+                f.gray.flapping = Flapping {
+                    rate_per_node_h: unfhex(&fs[0])?,
+                    burst_len: uint(&fs[1])?,
+                    down_s: unfhex(&fs[2])?,
+                    gap_s: unfhex(&fs[3])?,
+                };
+            }
+            if let Some(gq) = opt("gq") {
+                let fs = fields(gq, 4, "gq")?;
+                f.gray.quarantine = QuarantinePolicy {
+                    threshold: uint(&fs[0])?,
+                    probation_s: unfhex(&fs[1])?,
+                    backoff_mult: unfhex(&fs[2])?,
+                    max_probation_s: unfhex(&fs[3])?,
+                };
             }
             f.validate().map_err(|e| e.to_string())?;
             Ok(WalkSpec::Fleet(f))
@@ -2005,5 +2225,109 @@ mod tests {
             }
         }
         assert!(faulted > 32, "too few faulted planes sampled: {faulted}");
+    }
+
+    #[test]
+    fn sampled_gray_planes_always_validate() {
+        // `gen_walk` debug-asserts validate() on every fleet; here we only
+        // need to know the gray dimension actually gets exercised.
+        let cfg = VoprCfg { walks: 512, ..Default::default() };
+        let mut gray = 0;
+        for i in 0..512 {
+            let (spec, _) = gen_walk(&cfg, i);
+            if let WalkSpec::Fleet(f) = spec {
+                f.validate().unwrap();
+                if !f.gray.is_off() {
+                    gray += 1;
+                }
+            }
+        }
+        assert!(gray > 32, "too few gray planes sampled: {gray}");
+    }
+
+    #[test]
+    fn pre_gray_plane_repro_strings_still_decode() {
+        // The same frozen pre-plane literal: absent gray keys must decode
+        // to the off plane and re-encode untouched.
+        let legacy = "fleet;s=hybrid;n=4;cap=2;st=2;sub=1;z=4;dkb=524288;pkb=524288;\
+                      cs=409c200000000000;pf=0000000000000000;crs=408a800000000000;\
+                      cos=407e500000000000;hz=40cc200000000000;arr=t0000000000000000;ch=pl|";
+        let legacy: String = legacy.split_whitespace().collect();
+        let dec = decode_walk(&legacy).unwrap();
+        let WalkSpec::Fleet(f) = &dec else { panic!("kind changed") };
+        assert!(f.gray.is_off(), "absent keys must decode to the off plane");
+        assert_eq!(f.gray, GrayPlane::default());
+        assert_eq!(encode_walk(&dec), legacy, "legacy strings must re-encode unchanged");
+    }
+
+    #[test]
+    fn gray_plane_codec_round_trips() {
+        let mut spec = skip_requeue_spec();
+        spec.fault = None;
+        spec.gray.detector =
+            Some(DetectorModel { coverage: 0.29, precision: 0.64, lead_jitter_s: 10.0 });
+        spec.gray.fail_slow =
+            FailSlow { rate_per_node_h: 0.5, mean_duration_s: 450.0, speed_factor: 0.3 };
+        spec.gray.flapping =
+            Flapping { rate_per_node_h: 1.25, burst_len: 4, down_s: 45.0, gap_s: 90.0 };
+        spec.gray.quarantine = QuarantinePolicy {
+            threshold: 2,
+            probation_s: 300.0,
+            backoff_mult: 1.5,
+            max_probation_s: 3600.0,
+        };
+        let enc = encode_walk(&WalkSpec::Fleet(spec.clone()));
+        for key in [";gd=", ";gs=", ";gf=", ";gq="] {
+            assert!(enc.contains(key), "active gray plane must encode {key}");
+        }
+        let dec = decode_walk(&enc).unwrap();
+        let WalkSpec::Fleet(g) = &dec else { panic!("kind changed") };
+        assert_eq!(g.gray, spec.gray, "decoded plane must equal the original");
+        assert_eq!(encode_walk(&dec), enc, "codec must round-trip byte-for-byte");
+    }
+
+    /// A hand-built spec where the armed [`InjectedFault::QuarantineLeak`]
+    /// must fire: flap bursts of 3 exactly meet the default suspicion
+    /// threshold, but the leak never quarantines, so the third unabsorbed
+    /// flap-down leaves suspicion at the threshold on a placeable node.
+    fn quarantine_leak_spec() -> FleetSpec {
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 2, 0.0, 0.0);
+        spec.capacity = 2;
+        spec.job.n_subs = 1;
+        spec.job.compute_s = 600.0;
+        spec.horizon_s = 10_000.0;
+        spec.arrivals = ArrivalSpec::Trace { at_s: vec![0.0, 1.0] };
+        spec.churn = ChurnSpec::Plan(FailurePlan { events: Vec::new() });
+        spec.gray.flapping.rate_per_node_h = 2.0;
+        spec.fault = Some(InjectedFault::QuarantineLeak);
+        spec
+    }
+
+    #[test]
+    fn quarantine_leak_is_detected_by_storm_bound() {
+        let spec = quarantine_leak_spec();
+        assert!(!spec.gray.is_off());
+        let mut scratch = FleetScratch::new();
+        let (_, v) = run_walk(&WalkSpec::Fleet(spec.clone()), 7, 16, &mut scratch);
+        let v = v.expect("a leaked quarantine must violate an invariant");
+        assert_eq!(v.invariant, "storm-bound", "{}", v.detail);
+        assert!(!v.trace.is_empty(), "violation must carry a trace window");
+        // the same plane without the leak holds every invariant
+        let mut clean = spec;
+        clean.fault = None;
+        let (_, v) = run_walk(&WalkSpec::Fleet(clean), 7, 16, &mut scratch);
+        assert!(v.is_none(), "unleaked quarantine must pass: {v:?}");
+    }
+
+    #[test]
+    fn shrinker_minimizes_the_quarantine_leak_repro() {
+        let spec = quarantine_leak_spec();
+        let sh = shrink_fleet(&spec, 7, 16, "storm-bound").expect("must reproduce");
+        assert_eq!(sh.violation.invariant, "storm-bound");
+        assert!(sh.spec.topo.len() <= 2, "nodes did not shrink: {}", fleet_dims(&sh.spec));
+        assert!(
+            !sh.spec.gray.is_off(),
+            "the zero-gray step must be rejected — the leak needs flapping"
+        );
     }
 }

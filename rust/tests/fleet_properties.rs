@@ -12,10 +12,11 @@ use biomaft::cluster::{preset, ClusterPreset};
 use biomaft::coordinator::ftmanager::Strategy;
 use biomaft::coordinator::livesim::{run_live, LiveCfg};
 use biomaft::failure::injector::{FailurePlan, FailureProcess};
+use biomaft::failure::{DetectorModel, FailSlow, Flapping, GrayPlane, QuarantinePolicy};
 use biomaft::net::{FaultPlane, LinkFaults, RetryPolicy, Topology};
 use biomaft::scenario::{
-    run_fleet, run_fleet_observed, run_sweep, ArrivalSpec, CellSpec, ChurnSpec, FleetMetric,
-    FleetScratch, FleetSpec, InvariantObserver, SweepSpec,
+    run_fleet, run_fleet_observed, run_sweep, ArrivalSpec, CellSpec, ChurnSpec, FleetEv,
+    FleetMetric, FleetScratch, FleetSpec, FleetView, Invariant, InvariantObserver, SweepSpec,
 };
 use biomaft::sim::Rng;
 
@@ -335,6 +336,185 @@ fn faulted_fleet_is_pure_and_thread_count_invariant() {
         assert_eq!(a.std.to_bits(), b.std.to_bits());
         assert_eq!(a.median.to_bits(), b.median.to_bits());
         assert_eq!(a.p95.to_bits(), b.p95.to_bits());
+    }
+}
+
+/// The fleet fixture with a hostile gray plane: an imperfect, jittery
+/// detector plus flap bursts and fail-slow episodes, all active at once.
+fn gray_spec() -> FleetSpec {
+    let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 24, 6.0, 1.0);
+    spec.gray.detector =
+        Some(DetectorModel { coverage: 0.6, precision: 0.4, lead_jitter_s: 30.0 });
+    spec.gray.flapping.rate_per_node_h = 1.0;
+    spec.gray.fail_slow.rate_per_node_h = 0.5;
+    spec
+}
+
+#[test]
+fn explicitly_zeroed_gray_plane_is_byte_identical_to_default() {
+    // A gray plane whose every rate is written out as 0.0 — and whose
+    // inert shape parameters are nothing like the defaults — must be
+    // indistinguishable from a spec that never mentions the plane:
+    // `is_off` short-circuits before any gray draw is taken.
+    let mut zeroed = FleetSpec::placentia_fleet(Strategy::Hybrid, 24, 6.0, 1.0);
+    zeroed.gray = GrayPlane {
+        detector: None,
+        fail_slow: FailSlow { rate_per_node_h: 0.0, mean_duration_s: 5.0, speed_factor: 0.9 },
+        flapping: Flapping { rate_per_node_h: 0.0, burst_len: 9, down_s: 1.0, gap_s: 0.0 },
+        quarantine: QuarantinePolicy {
+            threshold: 1,
+            probation_s: 1.0,
+            backoff_mult: 9.0,
+            max_probation_s: 9.0,
+        },
+    };
+    assert!(zeroed.gray.is_off());
+    let plain = FleetSpec::placentia_fleet(Strategy::Hybrid, 24, 6.0, 1.0);
+    for seed in [0u64, 5, 91] {
+        let a = run_fleet(&zeroed, seed);
+        let b = run_fleet(&plain, seed);
+        assert_eq!(a.events, b.events, "seed {seed}");
+        assert_eq!(a.jobs_completed, b.jobs_completed);
+        assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits());
+        assert_eq!(a.goodput_ratio.to_bits(), b.goodput_ratio.to_bits());
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        assert_eq!(a.last_completion_s.to_bits(), b.last_completion_s.to_bits());
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.rollbacks, b.rollbacks);
+        assert_eq!((a.spurious_migrations, a.quarantines, a.quarantine_releases), (0, 0, 0));
+        assert_eq!(a.degraded_node_s.to_bits(), 0f64.to_bits());
+    }
+
+    // ... and byte-identical through the threaded sweep too
+    let trials = 4;
+    let za = run_sweep(&SweepSpec {
+        threads: Some(1),
+        ..SweepSpec::new(vec![CellSpec::fleet(zeroed, FleetMetric::MeanSlowdown, 7)], trials)
+    });
+    let pb = run_sweep(&SweepSpec {
+        threads: Some(8),
+        ..SweepSpec::new(vec![CellSpec::fleet(plain, FleetMetric::MeanSlowdown, 7)], trials)
+    });
+    assert_eq!(za[0].mean.to_bits(), pb[0].mean.to_bits());
+    assert_eq!(za[0].std.to_bits(), pb[0].std.to_bits());
+    assert_eq!(za[0].p95.to_bits(), pb[0].p95.to_bits());
+}
+
+#[test]
+fn perfect_detector_reproduces_the_legacy_coin_byte_for_byte() {
+    // DetectorModel::perfect(pf) is the legacy `predictable_frac` coin:
+    // same coverage bits, precision 1 emits no false alarms, zero jitter
+    // takes no lead draw — the trial is byte-identical even though the
+    // plane reports itself on.
+    let plain = FleetSpec::placentia_fleet(Strategy::Hybrid, 24, 6.0, 1.0);
+    let mut detected = plain.clone();
+    detected.gray.detector = Some(DetectorModel::perfect(plain.job.predictable_frac));
+    assert!(!detected.gray.is_off());
+    for seed in [0u64, 5, 91] {
+        let a = run_fleet(&detected, seed);
+        let b = run_fleet(&plain, seed);
+        assert_eq!(a.events, b.events, "seed {seed}");
+        assert_eq!(a.jobs_completed, b.jobs_completed);
+        assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits());
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        assert_eq!(a.last_completion_s.to_bits(), b.last_completion_s.to_bits());
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.spurious_migrations, 0, "a perfect detector never cries wolf");
+    }
+}
+
+#[test]
+fn gray_fleet_is_pure_and_thread_count_invariant() {
+    // With the plane on, the trial stays a pure function of (spec, seed):
+    // every gray draw comes from a salted side-stream keyed by
+    // (seed, kind, node-or-event), never from the main RNG streams.
+    let spec = gray_spec();
+    for seed in [2u64, 13, 77] {
+        let a = run_fleet(&spec, seed);
+        let b = run_fleet(&spec, seed);
+        assert_eq!(a.events, b.events, "seed {seed}");
+        assert_eq!(a.jobs_completed, b.jobs_completed);
+        assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits());
+        assert_eq!(a.last_completion_s.to_bits(), b.last_completion_s.to_bits());
+        assert_eq!(a.spurious_migrations, b.spurious_migrations);
+        assert_eq!(a.quarantines, b.quarantines);
+        assert_eq!(a.quarantine_releases, b.quarantine_releases);
+        assert_eq!(a.degraded_node_s.to_bits(), b.degraded_node_s.to_bits());
+    }
+    // the fixture actually exercises every gray dimension
+    let o = run_fleet(&spec, 2);
+    assert!(o.spurious_migrations > 0, "imperfect detector drew nothing: {o:?}");
+    assert!(o.quarantines > 0, "flap bursts never crossed the threshold: {o:?}");
+    assert!(o.degraded_node_s > 0.0, "fail-slow sampled no episodes: {o:?}");
+
+    let trials = 5;
+    let cells = vec![CellSpec::fleet(spec, FleetMetric::Goodput, 41)];
+    let one = run_sweep(&SweepSpec { threads: Some(1), ..SweepSpec::new(cells.clone(), trials) });
+    let eight = run_sweep(&SweepSpec { threads: Some(8), ..SweepSpec::new(cells, trials) });
+    for (a, b) in one.iter().zip(&eight) {
+        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+        assert_eq!(a.std.to_bits(), b.std.to_bits());
+        assert_eq!(a.median.to_bits(), b.median.to_bits());
+        assert_eq!(a.p95.to_bits(), b.p95.to_bits());
+    }
+}
+
+#[test]
+fn no_job_lost_under_gray_faults() {
+    // Degraded, never lost: the full default checker set (including
+    // no-lost-job and the storm/quarantine bounds) holds under the
+    // hostile gray fixture.
+    let mut scratch = FleetScratch::new();
+    for seed in [1u64, 42, 1337] {
+        let mut obs = InvariantObserver::new(32);
+        let o = run_fleet_observed(&gray_spec(), seed, &mut scratch, &mut obs);
+        assert!(
+            obs.violation().is_none(),
+            "gray faults degrade, never lose: {:?}",
+            obs.violation()
+        );
+        assert!(o.jobs_completed > 0, "seed {seed}: {o:?}");
+    }
+}
+
+/// Occupancy on a quarantined node may only fall: placement, migration
+/// targeting and queue drain must all skip it.
+#[derive(Default)]
+struct NoQuarantinedPlacement {
+    prev: Vec<usize>,
+}
+
+impl Invariant for NoQuarantinedPlacement {
+    fn name(&self) -> &'static str {
+        "no-quarantined-placement"
+    }
+    fn check(&mut self, _ev: &FleetEv, view: &FleetView<'_>) -> Result<(), String> {
+        if self.prev.len() == view.occupancy.len() {
+            for (v, (&occ, &prev)) in view.occupancy.iter().zip(&self.prev).enumerate() {
+                if view.quarantined[v] && occ > prev {
+                    return Err(format!(
+                        "node {v} gained a sub while quarantined ({prev} -> {occ})"
+                    ));
+                }
+            }
+        }
+        self.prev.clear();
+        self.prev.extend_from_slice(view.occupancy);
+        Ok(())
+    }
+}
+
+#[test]
+fn quarantined_nodes_never_receive_placements() {
+    let mut scratch = FleetScratch::new();
+    for seed in [3u64, 29, 404] {
+        let mut obs = InvariantObserver::with_checkers(
+            vec![Box::new(NoQuarantinedPlacement::default())],
+            16,
+        );
+        let o = run_fleet_observed(&gray_spec(), seed, &mut scratch, &mut obs);
+        assert!(obs.violation().is_none(), "seed {seed}: {:?}", obs.violation());
+        assert!(o.quarantines > 0, "fixture must quarantine: {o:?}");
     }
 }
 

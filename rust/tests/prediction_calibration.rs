@@ -1,0 +1,45 @@
+//! Calibration bands for the failure-prediction pipeline (Discussion,
+//! "Predicting potential failures"): the prober → predictor census must
+//! reproduce the paper's operating point — 29 % of real faults predicted
+//! at 64 % prediction precision — within tolerance bands wide enough for
+//! the simulated census noise.
+//!
+//! These are contract tests, not unit tests: `DetectorModel::
+//! paper_calibrated()` (the gray-failure plane's detector preset, used by
+//! the `grayfail` experiment) hard-codes this operating point, so the
+//! bands pin the census and the preset to the same numbers.
+
+use biomaft::experiments::prediction::{run_prediction, PredictionCfg, PredictionStats};
+use biomaft::failure::DetectorModel;
+use biomaft::sim::Rng;
+
+fn stats() -> PredictionStats {
+    let mut rng = Rng::new(1234);
+    run_prediction(&PredictionCfg::default(), &mut rng)
+}
+
+#[test]
+fn coverage_matches_paper_band() {
+    let s = stats();
+    let c = s.coverage();
+    assert!((0.23..0.35).contains(&c), "coverage {c} outside the paper band around 0.29");
+}
+
+#[test]
+fn precision_matches_paper_band() {
+    let s = stats();
+    let p = s.precision();
+    assert!((0.55..0.74).contains(&p), "precision {p} outside the paper band around 0.64");
+}
+
+#[test]
+fn paper_calibrated_detector_preset_sits_inside_the_measured_bands() {
+    // The gray plane's preset and the census must never drift apart: the
+    // preset is the census's operating point, frozen as constants.
+    let d = DetectorModel::paper_calibrated();
+    assert!((0.23..0.35).contains(&d.coverage), "preset coverage {}", d.coverage);
+    assert!((0.55..0.74).contains(&d.precision), "preset precision {}", d.precision);
+    let s = stats();
+    assert!((s.coverage() - d.coverage).abs() < 0.06, "census {} vs preset {}", s.coverage(), d.coverage);
+    assert!((s.precision() - d.precision).abs() < 0.10, "census {} vs preset {}", s.precision(), d.precision);
+}

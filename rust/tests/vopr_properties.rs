@@ -39,6 +39,11 @@ fn view<'a>(occupancy: &'a [usize], doomed: &'a [bool], hosted: &'a [usize]) -> 
         remaining_ok: true,
         stale_node_subs: 0,
         abandoned: 0,
+        quarantined: &[false, false],
+        suspicion: &[0, 0],
+        suspicion_threshold: 3,
+        quarantines: 0,
+        quarantine_releases: 0,
     }
 }
 
@@ -133,6 +138,66 @@ fn queue_progress_fires_only_on_drain_points() {
     full.running = 1;
     full.sub_running = 1;
     assert!(c.check(&drain, &full).is_ok());
+
+    // a quarantined node's free slots don't count toward the queue head
+    let mut held = view(&[1, 0], &[false, false], &[1, 0]);
+    held.quarantined = &[false, true];
+    held.queued = 1;
+    held.live_jobs = 2;
+    held.arrived = 2;
+    held.running = 1;
+    held.sub_running = 1;
+    assert!(c.check(&drain, &held).is_ok(), "quarantined capacity is not free capacity");
+}
+
+#[test]
+fn storm_bound_passes_and_fails() {
+    let mut c = checker("storm-bound");
+    let mut v = view(&[1, 1], &[false, false], &[1, 1]);
+    v.suspicion = &[2, 0]; // below the threshold of 3
+    assert!(c.check(&EV, &v).is_ok());
+    assert!(c.at_end(&v, true).is_ok());
+
+    // at the threshold while quarantined: the policy did its job
+    let mut contained = view(&[1, 1], &[false, false], &[1, 1]);
+    contained.suspicion = &[3, 0];
+    contained.quarantined = &[true, false];
+    assert!(c.check(&EV, &contained).is_ok());
+
+    // at the threshold while still placeable: the leak storm-bound exists
+    // to catch
+    let mut leaked = view(&[1, 1], &[false, false], &[1, 1]);
+    leaked.suspicion = &[3, 0];
+    assert!(c.check(&EV, &leaked).is_err());
+    assert!(c.at_end(&leaked, false).is_err());
+
+    // threshold 0 disables the policy entirely
+    let mut off = view(&[1, 1], &[false, false], &[1, 1]);
+    off.suspicion = &[9, 9];
+    off.suspicion_threshold = 0;
+    assert!(c.check(&EV, &off).is_ok());
+}
+
+#[test]
+fn quarantine_releases_passes_and_fails() {
+    let mut c = checker("quarantine-releases");
+    let mut v = view(&[1, 1], &[false, false], &[1, 1]);
+    v.quarantines = 2;
+    v.quarantine_releases = 1;
+    assert!(c.check(&EV, &v).is_ok());
+    assert!(c.at_end(&v, true).is_ok());
+
+    let mut excess = view(&[1, 1], &[false, false], &[1, 1]);
+    excess.quarantines = 1;
+    excess.quarantine_releases = 2; // released more than were quarantined
+    assert!(c.check(&EV, &excess).is_err());
+
+    // quiescent with a node still quarantined: its release never fired
+    let mut stuck = view(&[1, 1], &[false, false], &[1, 1]);
+    stuck.quarantined = &[true, false];
+    stuck.quarantines = 1;
+    assert!(c.at_end(&stuck, false).is_err());
+    assert!(c.at_end(&stuck, true).is_ok(), "the horizon may cut a probation off");
 }
 
 #[test]
