@@ -18,8 +18,16 @@
 //! 1M-arrival lifetime (`FleetSpec::scale_fleet` sizing, ~90 % load)
 //! timed end to end through the timer-wheel queue, placement index and
 //! job slab. `BIOMAFT_BENCH_FLEET_NODES` / `BIOMAFT_BENCH_FLEET_ARRIVALS`
-//! shrink it (CI smokes at 1k nodes × 50k arrivals); at smoke sizes
-//! (≤ 200k arrivals) the lifetime is run twice and asserted bit-identical.
+//! resize it in both directions — CI smokes at 1k nodes × 50k arrivals,
+//! and `BIOMAFT_BENCH_FLEET_NODES=100000 BIOMAFT_BENCH_FLEET_ARRIVALS=10000000`
+//! is the 100k-node / 10M-job lifetime of EXPERIMENTS.md §fleet-scale. At
+//! smoke sizes (≤ 200k arrivals) the lifetime is run twice and asserted
+//! bit-identical.
+//!
+//! The same lifetime is then re-run sharded (`BIOMAFT_BENCH_FLEET_CELLS`
+//! cells, default 8) and asserted **byte-identical to the unsharded
+//! run** at every size — the sharded-cells determinism contract
+//! (DESIGN.md §Sharded cells) smoked at bench scale.
 
 use biomaft::bench::compare_to_baseline;
 use biomaft::checkpoint::CheckpointStrategy;
@@ -28,6 +36,7 @@ use biomaft::metrics::Summary;
 use biomaft::scenario::{
     default_threads, run_fleet, run_sweep, CellSpec, FleetMetric, FleetSpec, SweepSpec,
 };
+use std::num::NonZeroUsize;
 use std::time::Instant;
 
 const SEED: u64 = 2014;
@@ -116,13 +125,36 @@ fn main() {
         println!("fleet-scale determinism re-run: identical");
     }
 
+    // --- sharded cells: the same lifetime, cells > 1 -------------------
+    // Timed as its own headline, and asserted byte-identical to the
+    // unsharded run at every size: the cell count is a performance knob,
+    // never a semantics knob.
+    let shard_cells = env_usize("BIOMAFT_BENCH_FLEET_CELLS", 8).max(1);
+    let mut shard_spec = scale_spec.clone();
+    shard_spec.cells = NonZeroUsize::new(shard_cells).expect("max(1) above");
+    let (shard, shard_s) = time(|| run_fleet(&shard_spec, SEED));
+    let shard_events_per_s = shard.events as f64 / shard_s.max(1e-12);
+    println!(
+        "fleet-shard:    {shard_s:>10.4} s  ({shard_events_per_s:.0} events/s across \
+         {shard_cells} cells)"
+    );
+    assert_eq!(scale.events, shard.events, "sharded lifetime must be byte-identical");
+    assert_eq!(scale.jobs_arrived, shard.jobs_arrived);
+    assert_eq!(scale.jobs_completed, shard.jobs_completed);
+    assert_eq!(scale.peak_live_jobs, shard.peak_live_jobs);
+    assert_eq!(scale.mean_slowdown.to_bits(), shard.mean_slowdown.to_bits());
+    assert_eq!(scale.goodput_ratio.to_bits(), shard.goodput_ratio.to_bits());
+    assert_eq!(scale.utilization.to_bits(), shard.utilization.to_bits());
+    println!("fleet-shard x{shard_cells} cells vs x1: byte-identical");
+
     let json_path = std::env::var("BIOMAFT_BENCH_JSON").ok();
     if let Some(path) = &json_path {
         compare_to_baseline(path, "fleet_par_s", "fleet parallel s", par_s);
         compare_to_baseline(path, "fleet_scale_s", "fleet-scale lifetime s", scale_s);
+        compare_to_baseline(path, "fleet_shard_s", "fleet-shard lifetime s", shard_s);
     }
     let json = format!(
-        "{{\n  \"bench\": \"fleet\",\n  \"generated\": true,\n  \"machine_cores\": {cores},\n  \"cells\": {},\n  \"trials_per_cell\": {trials},\n  \"fleet_serial_s\": {serial_s:.4},\n  \"fleet_par_s\": {par_s:.4},\n  \"fleet_par_threads\": {cores},\n  \"speedup\": {speedup:.2},\n  \"lifetimes_per_s\": {lifetimes_per_s:.1},\n  \"fleet_scale_nodes\": {scale_nodes},\n  \"fleet_scale_arrivals\": {scale_arrivals},\n  \"fleet_scale_s\": {scale_s:.4},\n  \"fleet_scale_events\": {},\n  \"fleet_scale_events_per_s\": {scale_events_per_s:.0}\n}}\n",
+        "{{\n  \"bench\": \"fleet\",\n  \"generated\": true,\n  \"machine_cores\": {cores},\n  \"cells\": {},\n  \"trials_per_cell\": {trials},\n  \"fleet_serial_s\": {serial_s:.4},\n  \"fleet_par_s\": {par_s:.4},\n  \"fleet_par_threads\": {cores},\n  \"speedup\": {speedup:.2},\n  \"lifetimes_per_s\": {lifetimes_per_s:.1},\n  \"fleet_scale_nodes\": {scale_nodes},\n  \"fleet_scale_arrivals\": {scale_arrivals},\n  \"fleet_scale_s\": {scale_s:.4},\n  \"fleet_scale_events\": {},\n  \"fleet_scale_events_per_s\": {scale_events_per_s:.0},\n  \"fleet_shard_cells\": {shard_cells},\n  \"fleet_shard_s\": {shard_s:.4},\n  \"fleet_shard_events_per_s\": {shard_events_per_s:.0}\n}}\n",
         cells.len(),
         scale.events,
     );

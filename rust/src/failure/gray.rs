@@ -311,6 +311,26 @@ impl GrayPlane {
         }
     }
 
+    /// Upper bound on [`lead_s`](GrayPlane::lead_s) over every event `k`:
+    /// the base lead plus the detector's jitter half-width. The sharded
+    /// fleet's lazy churn pull uses this as its look-ahead margin — a churn
+    /// event failing at wall time `t` can schedule its doom no earlier than
+    /// `t - max_lead_s(base)`, so events whose failure time lies beyond
+    /// `now + max_lead_s(base)` can safely stay unmaterialized.
+    pub fn max_lead_s(&self, base_lead_s: f64) -> f64 {
+        base_lead_s + self.detector.as_ref().map_or(0.0, |d| d.lead_jitter_s)
+    }
+
+    /// True when [`false_alarms`](GrayPlane::false_alarms) can ever be
+    /// non-empty: a configured detector with sub-unit precision. False
+    /// alarms fire uniformly over the *whole* horizon, so when this holds
+    /// the fleet must drain its churn stream eagerly at setup (scheduling
+    /// each covered event's alarms alongside its doom) instead of lazily
+    /// ahead of the clock.
+    pub fn emits_false_alarms(&self) -> bool {
+        self.detector.as_ref().is_some_and(|d| d.precision < 1.0)
+    }
+
     /// False alarms dragged along by one *covered* plan-churn event `k`:
     /// `(node, fire time)` pairs on the side-stream, expected count
     /// `(1 - precision) / precision` so the overall prediction census
@@ -482,6 +502,32 @@ mod tests {
         let a: usize = (0..32).map(|n| p.flap_downs(1, n, 14400.0).len()).sum();
         let b: usize = (0..32).map(|n| p.flap_downs(2, n, 14400.0).len()).sum();
         let _ = (a, b); // counts may coincide; purity above is the contract
+    }
+
+    #[test]
+    fn max_lead_bounds_every_jittered_lead() {
+        let p = active();
+        let bound = p.max_lead_s(41.0);
+        assert!((bound - 51.0).abs() < 1e-12, "base 41 + jitter 10");
+        for k in 0..512 {
+            assert!(p.lead_s(42, k, 41.0) <= bound);
+        }
+        assert_eq!(GrayPlane::default().max_lead_s(41.0).to_bits(), 41.0f64.to_bits());
+    }
+
+    #[test]
+    fn emits_false_alarms_matches_the_emptiness_contract() {
+        assert!(!GrayPlane::default().emits_false_alarms());
+        let perfect =
+            GrayPlane { detector: Some(DetectorModel::perfect(0.9)), ..Default::default() };
+        assert!(!perfect.emits_false_alarms());
+        let imperfect = active();
+        assert!(imperfect.emits_false_alarms());
+        // predicate ⇔ some event somewhere can carry alarms
+        let any: usize = (0..64).map(|k| imperfect.false_alarms(3, k, 8, 3600.0).len()).sum();
+        assert!(any > 0);
+        let none: usize = (0..64).map(|k| perfect.false_alarms(3, k, 8, 3600.0).len()).sum();
+        assert_eq!(none, 0);
     }
 
     #[test]

@@ -70,19 +70,38 @@ impl FailureProcess {
         }
     }
 
+    /// Sample one window's failure events, appending them to `out` in draw
+    /// order: all offsets for the window first, then one victim draw per
+    /// event. This is exactly the per-window draw sequence of [`plan`], so a
+    /// lazy caller that materializes windows one at a time (in order, from
+    /// the same rng) consumes a stream identical to an eager `plan` call.
+    ///
+    /// [`plan`]: FailureProcess::plan
+    pub fn window_events(
+        &self,
+        window: usize,
+        window_s: f64,
+        n_nodes: usize,
+        rng: &mut Rng,
+        out: &mut Vec<FailureEvent>,
+    ) {
+        assert!(n_nodes > 0);
+        let base = window as f64 * window_s;
+        for off in self.sample_offsets(window_s, rng) {
+            out.push(FailureEvent {
+                at: SimTime::from_secs(base + off),
+                node: NodeId(rng.range_usize(0, n_nodes)),
+            });
+        }
+    }
+
     /// Build a plan over `windows` consecutive windows, picking a victim
     /// node uniformly among `n_nodes` for each failure.
     pub fn plan(&self, windows: usize, window_s: f64, n_nodes: usize, rng: &mut Rng) -> FailurePlan {
         assert!(n_nodes > 0);
         let mut events = Vec::new();
         for w in 0..windows {
-            let base = w as f64 * window_s;
-            for off in self.sample_offsets(window_s, rng) {
-                events.push(FailureEvent {
-                    at: SimTime::from_secs(base + off),
-                    node: NodeId(rng.range_usize(0, n_nodes)),
-                });
-            }
+            self.window_events(w, window_s, n_nodes, rng, &mut events);
         }
         events.sort_by_key(|e| e.at);
         FailurePlan { events }
@@ -165,6 +184,33 @@ mod tests {
         for (w, e) in plan.events.iter().enumerate() {
             assert_eq!(e.at, SimTime::from_secs(w as f64 * 3600.0 + 840.0));
             assert!(e.node.0 < 4);
+        }
+    }
+
+    #[test]
+    fn window_events_lockstep_with_plan() {
+        // Walking windows one at a time through `window_events` consumes the
+        // exact draw sequence of an eager `plan` call: same events (before
+        // the final sort, in identical push order) and an identically
+        // positioned rng afterwards.
+        let procs = [
+            FailureProcess::Periodic { offset_s: 840.0 },
+            FailureProcess::RandomUniform,
+            FailureProcess::RandomUniformK { k: 3 },
+            FailureProcess::Poisson { rate_per_window: 2.5 },
+            FailureProcess::Trace { offsets_s: vec![5.0, 1.0, 3600.0, 9999.0] },
+        ];
+        for (i, p) in procs.iter().enumerate() {
+            let mut eager_rng = Rng::new(100 + i as u64);
+            let mut lazy_rng = Rng::new(100 + i as u64);
+            let eager = p.plan(6, 3600.0, 4, &mut eager_rng);
+            let mut lazy = Vec::new();
+            for w in 0..6 {
+                p.window_events(w, 3600.0, 4, &mut lazy_rng, &mut lazy);
+            }
+            lazy.sort_by_key(|e| e.at);
+            assert_eq!(eager.events, lazy, "process {i}");
+            assert_eq!(eager_rng.next_u64(), lazy_rng.next_u64(), "process {i}");
         }
     }
 

@@ -117,6 +117,13 @@ fn commands() -> Vec<Command> {
                  on healthy nodes, each paying a spurious migration sweep \
                  (1 = oracle detector, no false alarms)",
             )
+            .opt(
+                "cells",
+                "1",
+                "shard the fleet into N loosely-coupled cells exchanging \
+                 cross-cell traffic at epoch boundaries — a pure \
+                 performance knob: any N is byte-identical to 1",
+            )
             .opt("seed", "2014", "trial seed"),
         Command::new("vopr", "chaos-explore spec/seed space with invariant checking")
             .opt("walks", "1000", "random (spec, seed) walks to explore")
@@ -254,6 +261,8 @@ fn run() -> anyhow::Result<()> {
                     lead_jitter_s: 0.0,
                 });
             }
+            spec.cells = std::num::NonZeroUsize::new(p.req("cells")?)
+                .ok_or_else(|| anyhow::anyhow!("--cells must be at least 1"))?;
             spec.validate().map_err(|e| anyhow::anyhow!("invalid fleet spec: {e}"))?;
             let o = run_fleet(&spec, p.req("seed")?);
             let rate_per_h = match &spec.arrivals {

@@ -71,6 +71,27 @@
 //! slab and the per-node lists are pure lookup structures: they change no
 //! draw and no event, and a mid-size trial is property-tested byte-
 //! identical through them at thread counts 1 and 8.
+//!
+//! ## Sharded cells (DESIGN.md §Sharded cells)
+//!
+//! At 100k nodes a single timer wheel, placement set and job arena stop
+//! scaling, so the cluster is partitioned into [`FleetSpec::cells`]
+//! loosely-coupled cells (node `v` → cell `v % cells`, job `j` → cell
+//! `j % cells`): each cell owns its own wheel in a
+//! [`ShardedQueue`](crate::sim::ShardedQueue), its own availability set in
+//! the [`PlacementIndex`] and its own [`JobSlab`] arena. Cross-cell
+//! traffic (a migration landing in another cell, a recovery resolving a
+//! job homed elsewhere) is exchanged only at event boundaries through the
+//! staging buffer, routed and merged in deterministic order. Sequence
+//! numbers are *banded* — `(band << 62) | counter` with setup bands for
+//! arrivals, churn and flap-downs below the run band — so the global
+//! min-(time, seq) pop order is one total order no matter how entries are
+//! distributed: `cells = 1` is byte-identical to the pre-shard path and
+//! any two cell counts are byte-identical to each other (property-tested
+//! in `tests/fleet_sharding.rs`). Per-node churn plans are materialized
+//! *lazily*, one window at a time ahead of the clock ([`Rng::fork_key`]
+//! keeps the per-node stream position-independent), so setup no longer
+//! allocates O(nodes) plans upfront.
 
 use crate::cluster::{preset, ClusterPreset};
 use crate::coordinator::ftmanager::Strategy;
@@ -81,8 +102,11 @@ use crate::hybrid::rules::{decide, Mover, RuleInputs};
 use crate::metrics::Accumulator;
 use crate::net::faults::{self, FaultPlane};
 use crate::net::{NodeId, Topology};
-use crate::sim::{Ctx, Harness, Rng, Scenario, SimTime, TrialScratch};
-use std::collections::{BTreeSet, VecDeque};
+use crate::sim::engine::pack_key;
+use crate::sim::{Rng, ShardedQueue, SimTime};
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap, VecDeque};
+use std::num::NonZeroUsize;
 
 /// Salt separating the arrival stream from the dynamics stream.
 const ARRIVAL_SALT: u64 = 0xA11_1FEE7_0F_A17A;
@@ -162,6 +186,14 @@ pub struct FleetSpec {
     pub ckpt_streams: usize,
     /// Virtual-time horizon of one trial in seconds.
     pub horizon_s: f64,
+    /// Loosely-coupled cells the cluster is partitioned into (node `v` →
+    /// cell `v % cells`, job `j` → cell `j % cells`): each cell owns its
+    /// own timer wheel, placement availability set and job arena, and
+    /// cross-cell traffic merges in deterministic order at event
+    /// boundaries. **Any** value produces byte-identical trials — `cells`
+    /// is a performance knob, not a semantics knob (property-tested in
+    /// `tests/fleet_sharding.rs`); 1 is the unsharded layout.
+    pub cells: NonZeroUsize,
     /// The network fault plane ([`net::faults`](crate::net::faults)):
     /// per-link-class message loss/duplication/extra delay, timed
     /// partitions, and the timeout/retry/backoff constants every recovery
@@ -207,6 +239,16 @@ pub enum InjectedFault {
     /// bound silently evaporates. Caught by the storm-bound checker on the
     /// first event that crosses the threshold.
     QuarantineLeak,
+    /// Drop the first job-carrying event routed *across* cells at an
+    /// epoch boundary (a migration landing, recovery resolution or
+    /// completion whose destination cell differs from the dispatching
+    /// cell) — the classic sharding bug where cross-cell traffic leaks at
+    /// the exchange. The job's continuation silently vanishes while every
+    /// counter stays self-consistent; caught by the job-conservation
+    /// checker's quiescence clause at end of trial, and the shrinker
+    /// converges to the minimal cell count that still crosses (≤ 2 beyond
+    /// the unsharded layout).
+    EpochLeak,
 }
 
 impl FleetSpec {
@@ -246,6 +288,7 @@ impl FleetSpec {
             },
             ckpt_streams: 2,
             horizon_s: 4.0 * 3600.0,
+            cells: NonZeroUsize::MIN,
             faults: FaultPlane::default(),
             gray: GrayPlane::default(),
             #[cfg(any(test, feature = "vopr-selftest"))]
@@ -580,7 +623,8 @@ pub struct FleetOutcome {
     /// Total node-seconds spent in fail-slow episodes (sum of merged
     /// degraded windows across nodes; 0 when the plane is off).
     pub degraded_node_s: f64,
-    /// Dispatched DES events (determinism fingerprint).
+    /// Dispatched DES events (determinism fingerprint — byte-identical
+    /// across cell counts and thread counts).
     pub events: u64,
 }
 
@@ -752,7 +796,7 @@ impl Derive {
         self.sub_running = 0;
         self.sub_migrating = 0;
         self.remaining_ok = true;
-        for rec in jobs.slots.iter().filter(|r| r.live) {
+        for rec in jobs.cells.iter().flat_map(|c| c.slots.iter()).filter(|r| r.live) {
             let mut not_done = 0;
             for s in &rec.state {
                 match s {
@@ -780,14 +824,20 @@ impl Derive {
         self.recs.dedup();
         self.distinct_recs = self.recs.len();
         self.stale_node_subs = 0;
+        let ncells = jobs.cells.len().max(1);
         for (v, set) in node_subs.iter().enumerate() {
             for &(arrival, sub, slot) in set {
-                let ok = jobs.slots.get(slot as usize).is_some_and(|r| {
-                    r.live
-                        && r.arrival == arrival
-                        && r.host.get(sub as usize) == Some(&NodeId(v))
-                        && r.state.get(sub as usize) != Some(&SubState::Done)
-                });
+                let cell = arrival as usize % ncells;
+                let ok = jobs
+                    .cells
+                    .get(cell)
+                    .and_then(|c| c.slots.get(slot as usize))
+                    .is_some_and(|r| {
+                        r.live
+                            && r.arrival == arrival
+                            && r.host.get(sub as usize) == Some(&NodeId(v))
+                            && r.state.get(sub as usize) != Some(&SubState::Done)
+                    });
                 if !ok {
                     self.stale_node_subs += 1;
                 }
@@ -799,9 +849,12 @@ impl Derive {
 /// Generation-checked handle into the [`JobSlab`]. A slot's generation
 /// bumps when its job retires, so an event that outlives its job (an
 /// aborted migration's `MigrationDone`) misses instead of touching the
-/// slot's next tenant.
+/// slot's next tenant. The cell rides along because slots are per-cell
+/// arenas — `(cell, slot)` is the physical address, and an event carrying
+/// a `JobId` routes to `cell` without a global lookup.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct JobId {
+    cell: u32,
     slot: u32,
     gen: u32,
 }
@@ -822,40 +875,55 @@ struct JobRec {
     remaining: usize,
 }
 
-/// Arena of live jobs. Retired slots (and their per-sub vectors) are
-/// reused for later arrivals, so a million-arrival lifetime allocates
-/// O(peak live jobs) — the slab never grows past the cluster's actual
-/// concurrency.
+/// One cell's share of the job arena: its slot storage and free list.
 #[derive(Debug, Default)]
-struct JobSlab {
+struct SlabCell {
     slots: Vec<JobRec>,
     free_slots: Vec<u32>,
+}
+
+/// Arena of live jobs, one [`SlabCell`] per fleet cell (job `j` lives in
+/// cell `j % cells`). Retired slots (and their per-sub vectors) are
+/// reused for later arrivals, so a million-arrival lifetime allocates
+/// O(peak live jobs) — the slab never grows past the cluster's actual
+/// concurrency, and each cell's arena only past its own.
+#[derive(Debug, Default)]
+struct JobSlab {
+    cells: Vec<SlabCell>,
     live: usize,
     peak_live: usize,
 }
 
 impl JobSlab {
-    /// Start a fresh trial on recycled slot storage.
-    fn reset(&mut self) {
-        for r in &mut self.slots {
-            r.live = false;
-            r.gen = 0;
+    /// Start a fresh trial on recycled slot storage, resized to `ncells`
+    /// arenas.
+    fn reset(&mut self, ncells: usize) {
+        self.cells.truncate(ncells);
+        for c in &mut self.cells {
+            for r in &mut c.slots {
+                r.live = false;
+                r.gen = 0;
+            }
+            c.free_slots.clear();
+            c.free_slots.extend((0..c.slots.len() as u32).rev());
         }
-        self.free_slots.clear();
-        self.free_slots.extend((0..self.slots.len() as u32).rev());
+        if self.cells.len() < ncells {
+            self.cells.resize_with(ncells, SlabCell::default);
+        }
         self.live = 0;
         self.peak_live = 0;
     }
 
-    fn alloc(&mut self, arrival: u32, arrived_at: SimTime) -> JobId {
-        let slot = match self.free_slots.pop() {
+    fn alloc(&mut self, cell: u32, arrival: u32, arrived_at: SimTime) -> JobId {
+        let c = &mut self.cells[cell as usize];
+        let slot = match c.free_slots.pop() {
             Some(s) => s,
             None => {
-                self.slots.push(JobRec::default());
-                (self.slots.len() - 1) as u32
+                c.slots.push(JobRec::default());
+                (c.slots.len() - 1) as u32
             }
         };
-        let r = &mut self.slots[slot as usize];
+        let r = &mut c.slots[slot as usize];
         r.live = true;
         r.arrival = arrival;
         r.arrived_at = arrived_at;
@@ -864,40 +932,56 @@ impl JobSlab {
         r.remaining = 0;
         self.live += 1;
         self.peak_live = self.peak_live.max(self.live);
-        JobId { slot, gen: r.gen }
+        JobId { cell, slot, gen: r.gen }
     }
 
     /// The job behind `id`, or None when the handle is stale (the job
     /// retired and the slot moved on).
     fn get(&self, id: JobId) -> Option<&JobRec> {
-        let r = self.slots.get(id.slot as usize)?;
+        let r = self.cells.get(id.cell as usize)?.slots.get(id.slot as usize)?;
         (r.live && r.gen == id.gen).then_some(r)
     }
 
     /// Mutable access for a handle already validated by [`get`](Self::get).
     fn rec_mut(&mut self, id: JobId) -> &mut JobRec {
-        let r = &mut self.slots[id.slot as usize];
+        let r = &mut self.cells[id.cell as usize].slots[id.slot as usize];
         debug_assert!(r.live && r.gen == id.gen, "stale JobId past validation");
         r
+    }
+
+    /// Raw slot access by physical `(cell, slot)` address — the per-node
+    /// scans carry the address in their [`NodeSub`] entries (cell derived
+    /// from the arrival index), already validated by the set's liveness
+    /// discipline.
+    fn raw(&self, cell: u32, slot: u32) -> &JobRec {
+        &self.cells[cell as usize].slots[slot as usize]
+    }
+
+    fn raw_mut(&mut self, cell: u32, slot: u32) -> &mut JobRec {
+        &mut self.cells[cell as usize].slots[slot as usize]
     }
 
     /// Retire a completed job: bump the generation (stale handles miss),
     /// keep the sub-job vectors' capacity for the slot's next tenant.
     fn retire(&mut self, id: JobId) {
-        let r = &mut self.slots[id.slot as usize];
+        let c = &mut self.cells[id.cell as usize];
+        let r = &mut c.slots[id.slot as usize];
         debug_assert!(r.live && r.gen == id.gen, "double retire");
         r.live = false;
         r.gen = r.gen.wrapping_add(1);
         self.live -= 1;
-        self.free_slots.push(id.slot);
+        c.free_slots.push(id.slot);
     }
 }
 
-/// The O(log n) placement index: per-node load and health plus a
-/// `BTreeSet<(load, node)>` of every healthy node with a spare slot.
-/// `best()` is the set's minimum — least loaded, ties to the lowest node
-/// index — the *same* choice the old O(n) full scan made. Maintained
-/// incrementally on every occupancy and health transition.
+/// The O(log n) placement index: per-node load and health plus one
+/// `BTreeSet<(load, node)>` of healthy spare-slot nodes *per cell* (node
+/// `v` → cell `v % cells`). `best()` compares the cells' minima, so the
+/// global choice — least loaded, ties to the lowest node index — is the
+/// *same* choice the old single-set (and before it, the O(n) full scan)
+/// made, at any cell count. Maintained incrementally on every occupancy
+/// and health transition; load/health vectors stay global (they are flat
+/// arrays, cheap at any scale — only the ordered set needed sharding).
 #[derive(Debug, Default)]
 struct PlacementIndex {
     occupancy: Vec<usize>,
@@ -907,11 +991,11 @@ struct PlacementIndex {
     /// until released ([`failure::gray::QuarantinePolicy`]).
     quarantined: Vec<bool>,
     capacity: usize,
-    avail: BTreeSet<(usize, usize)>,
+    avail: Vec<BTreeSet<(usize, usize)>>,
 }
 
 impl PlacementIndex {
-    fn reset(&mut self, n: usize, capacity: usize) {
+    fn reset(&mut self, n: usize, capacity: usize, ncells: usize) {
         self.occupancy.clear();
         self.occupancy.resize(n, 0);
         self.doomed.clear();
@@ -919,24 +1003,42 @@ impl PlacementIndex {
         self.quarantined.clear();
         self.quarantined.resize(n, false);
         self.capacity = capacity;
-        self.avail.clear();
-        self.avail.extend((0..n).map(|i| (0, i)));
+        self.avail.truncate(ncells);
+        for s in &mut self.avail {
+            s.clear();
+        }
+        if self.avail.len() < ncells {
+            self.avail.resize_with(ncells, BTreeSet::new);
+        }
+        for i in 0..n {
+            self.avail[i % ncells].insert((0, i));
+        }
+    }
+
+    /// The cell set holding (or due to hold) `node`'s availability entry.
+    fn cell_set(&mut self, node: usize) -> &mut BTreeSet<(usize, usize)> {
+        let c = node % self.avail.len();
+        &mut self.avail[c]
     }
 
     /// The least-loaded healthy node with a spare slot (ties to the
-    /// lowest node index), or None when the cluster is saturated.
+    /// lowest node index), or None when the cluster is saturated. The
+    /// minimum over the per-cell minima — identical to the single-set
+    /// minimum because the sets partition the same entries.
     fn best(&self) -> Option<NodeId> {
-        self.avail.iter().next().map(|&(_, n)| NodeId(n))
+        self.avail.iter().filter_map(|s| s.iter().next().copied()).min().map(|(_, n)| NodeId(n))
     }
 
     fn inc(&mut self, node: NodeId) {
         let o = self.occupancy[node.0];
+        let capacity = self.capacity;
         if !self.doomed[node.0] && !self.quarantined[node.0] {
-            if o < self.capacity {
-                self.avail.remove(&(o, node.0));
+            let set = self.cell_set(node.0);
+            if o < capacity {
+                set.remove(&(o, node.0));
             }
-            if o + 1 < self.capacity {
-                self.avail.insert((o + 1, node.0));
+            if o + 1 < capacity {
+                set.insert((o + 1, node.0));
             }
         }
         self.occupancy[node.0] = o + 1;
@@ -945,12 +1047,14 @@ impl PlacementIndex {
     fn dec(&mut self, node: NodeId) {
         let o = self.occupancy[node.0];
         debug_assert!(o > 0, "occupancy underflow on node {}", node.0);
+        let capacity = self.capacity;
         if !self.doomed[node.0] && !self.quarantined[node.0] {
-            if o < self.capacity {
-                self.avail.remove(&(o, node.0));
+            let set = self.cell_set(node.0);
+            if o < capacity {
+                set.remove(&(o, node.0));
             }
-            if o - 1 < self.capacity {
-                self.avail.insert((o - 1, node.0));
+            if o - 1 < capacity {
+                set.insert((o - 1, node.0));
             }
         }
         self.occupancy[node.0] = o - 1;
@@ -961,13 +1065,15 @@ impl PlacementIndex {
     fn doom(&mut self, node: NodeId) {
         debug_assert!(!self.doomed[node.0], "double doom");
         self.doomed[node.0] = true;
-        self.avail.remove(&(self.occupancy[node.0], node.0));
+        let o = self.occupancy[node.0];
+        self.cell_set(node.0).remove(&(o, node.0));
     }
 
     fn repair(&mut self, node: NodeId) {
         self.doomed[node.0] = false;
-        if !self.quarantined[node.0] && self.occupancy[node.0] < self.capacity {
-            self.avail.insert((self.occupancy[node.0], node.0));
+        let o = self.occupancy[node.0];
+        if !self.quarantined[node.0] && o < self.capacity {
+            self.cell_set(node.0).insert((o, node.0));
         }
     }
 
@@ -978,14 +1084,16 @@ impl PlacementIndex {
     fn quarantine(&mut self, node: NodeId) {
         debug_assert!(!self.quarantined[node.0], "double quarantine");
         self.quarantined[node.0] = true;
-        self.avail.remove(&(self.occupancy[node.0], node.0));
+        let o = self.occupancy[node.0];
+        self.cell_set(node.0).remove(&(o, node.0));
     }
 
     /// Probation expired: readmit the node (unless it is down or full).
     fn release(&mut self, node: NodeId) {
         self.quarantined[node.0] = false;
-        if !self.doomed[node.0] && self.occupancy[node.0] < self.capacity {
-            self.avail.insert((self.occupancy[node.0], node.0));
+        let o = self.occupancy[node.0];
+        if !self.doomed[node.0] && o < self.capacity {
+            self.cell_set(node.0).insert((o, node.0));
         }
     }
 
@@ -1048,11 +1156,16 @@ enum SubState {
 /// the slot rides along as the lookup payload.
 type NodeSub = (u32, u32, u32);
 
-/// Reusable per-trial allocations: the harness scratch plus the fleet's
-/// slab, placement index, per-node lists and scan buffer. Reuse never
-/// changes a result (tested).
+/// Reusable per-trial allocations: the per-cell timer wheels and staging
+/// buffer of the mesh event loop, the churn-cursor machinery, plus the
+/// fleet's slab, placement index, per-node lists and scan buffer. Reuse
+/// never changes a result (tested).
 pub struct FleetScratch {
-    sim: TrialScratch<Ev>,
+    wheels: ShardedQueue<Ev>,
+    staging: Vec<(SimTime, Ev)>,
+    churn_cursors: Vec<ChurnCursor>,
+    churn_heap: BinaryHeap<Reverse<(SimTime, u32)>>,
+    churn_tmp: Vec<FailureEvent>,
     jobs: JobSlab,
     queue: VecDeque<JobId>,
     placement: PlacementIndex,
@@ -1068,7 +1181,11 @@ pub struct FleetScratch {
 impl FleetScratch {
     pub fn new() -> Self {
         Self {
-            sim: TrialScratch::new(),
+            wheels: ShardedQueue::new(1),
+            staging: Vec::new(),
+            churn_cursors: Vec::new(),
+            churn_heap: BinaryHeap::new(),
+            churn_tmp: Vec::new(),
             jobs: JobSlab::default(),
             queue: VecDeque::new(),
             placement: PlacementIndex::default(),
@@ -1086,6 +1203,204 @@ impl FleetScratch {
 impl Default for FleetScratch {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Sequence-number bands of the mesh. A wheel entry's key is
+/// `pack_key(at, (band << 62) | counter)`; bands order the setup
+/// categories exactly as the old single-counter harness scheduled them
+/// (arrivals, then churn dooms/false alarms, then flap-downs, then
+/// everything staged at run time), and counters preserve insertion order
+/// within a band — so the global min-(time, seq) pop order is the
+/// pre-shard dispatch order verbatim, no matter which cell's wheel an
+/// entry sits in.
+const BAND_ARRIVAL: u64 = 0;
+const BAND_CHURN: u64 = 1;
+const BAND_FLAP: u64 = 2;
+const BAND_RUN: u64 = 3;
+
+fn band_key(at: SimTime, band: u64, counter: u64) -> u128 {
+    debug_assert!(counter < 1 << 62, "band counter overflow");
+    pack_key(at, (band << 62) | counter)
+}
+
+/// The cell an event is routed to: node events to the node's cell, job
+/// events to the job's home cell (`Arrival` derives it from the arrival
+/// index; handle-carrying events read it off the [`JobId`]). Routing is
+/// *display/partition* only — the banded keys make the pop order
+/// routing-independent — but a stable rule is what gives the epoch-leak
+/// self-test a meaningful "cross-cell" message to drop.
+fn route_ev(ev: &Ev, ncells: usize) -> usize {
+    match ev {
+        Ev::Arrival { job } => job % ncells,
+        Ev::Doom { node, .. }
+        | Ev::Prediction { node }
+        | Ev::Failure { node, .. }
+        | Ev::Repair { node }
+        | Ev::FalseAlarm { node }
+        | Ev::QuarantineRelease { node } => node.0 % ncells,
+        Ev::MigrationDone { to, .. } => to.0 % ncells,
+        Ev::RecoveryDone { job, .. } | Ev::SubDone { job, .. } => job.cell as usize,
+    }
+}
+
+/// The dispatch context handed to the [`System`] handlers by the mesh
+/// event loop: virtual now, the dynamics stream, and the staging buffer
+/// the handler's sends accumulate in. Same contract as the old actor
+/// harness `Ctx` — `send_at` clamps past times to now, and staged events
+/// drain in push order after the handler returns, each taking the next
+/// run-band sequence number.
+struct MeshCtx<'a> {
+    now: SimTime,
+    rng: &'a mut Rng,
+    staging: &'a mut Vec<(SimTime, Ev)>,
+}
+
+impl MeshCtx<'_> {
+    fn now(&self) -> SimTime {
+        self.now
+    }
+
+    fn rng(&mut self) -> &mut Rng {
+        self.rng
+    }
+
+    fn send_at(&mut self, at: SimTime, ev: Ev) {
+        self.staging.push((at.max(self.now), ev));
+    }
+
+    fn send_in(&mut self, delay: SimTime, ev: Ev) {
+        self.staging.push((self.now + delay, ev));
+    }
+}
+
+/// One node's lazily-materialized churn stream: the per-node rng
+/// (reconstructed position-independently from a [`Rng::fork_key`]), the
+/// next unmaterialized window, and a small buffer of drawn-but-unemitted
+/// events ordered by `(time, draw order)`. A head is *emittable* only
+/// once its time is at or below the floor of every unmaterialized window
+/// (window `w`'s events never precede `from_secs(w × window_s)`), which
+/// reproduces the eager plan's stable time sort exactly — including the
+/// float corner where a window's last offset rounds past the next
+/// window's floor.
+struct ChurnCursor {
+    rng: Rng,
+    next_window: usize,
+    /// `(at, draw_seq)` ascending; `draw_seq` is the per-node draw
+    /// counter, the stable-sort tiebreak for equal times.
+    buf: VecDeque<(SimTime, u64)>,
+    draw_seq: u64,
+}
+
+impl ChurnCursor {
+    /// The head event's time, materializing windows until the head is
+    /// emittable; None when the node's stream is exhausted.
+    fn head(
+        &mut self,
+        process: &FailureProcess,
+        window_s: f64,
+        windows: usize,
+        tmp: &mut Vec<FailureEvent>,
+    ) -> Option<SimTime> {
+        loop {
+            let floor = (self.next_window < windows)
+                .then(|| SimTime::from_secs(self.next_window as f64 * window_s));
+            match (self.buf.front(), floor) {
+                (Some(&(at, _)), Some(f)) if at > f => {} // a later window could still precede
+                (Some(&(at, _)), _) => return Some(at),
+                (None, Some(_)) => {}
+                (None, None) => return None,
+            }
+            tmp.clear();
+            process.window_events(self.next_window, window_s, 1, &mut self.rng, tmp);
+            self.next_window += 1;
+            for e in tmp.drain(..) {
+                let seq = self.draw_seq;
+                self.draw_seq += 1;
+                // almost always an append; float rounding can briefly
+                // overlap the previous window's tail
+                let pos = self.buf.partition_point(|&(a, s)| (a, s) <= (e.at, seq));
+                self.buf.insert(pos, (e.at, seq));
+            }
+        }
+    }
+
+    fn pop(&mut self) -> SimTime {
+        self.buf.pop_front().expect("pop follows a Some(head)").0
+    }
+}
+
+/// The global churn merge: one [`ChurnCursor`] per node and a heap of
+/// head times keyed `(at, node)` — the eager path's global
+/// `sort_by_key(|e| (e.at, e.node))` order, emitted one event at a time.
+/// `k` is the emission index, the per-event key into the gray plane's
+/// side streams (lead jitter, false alarms) and the root predictability
+/// coin's position — both identical to the eager path because emission
+/// order is.
+struct ChurnMerge<'a> {
+    process: &'a FailureProcess,
+    window_s: f64,
+    windows: usize,
+    cursors: Vec<ChurnCursor>,
+    heap: BinaryHeap<Reverse<(SimTime, u32)>>,
+    tmp: Vec<FailureEvent>,
+    next_k: u64,
+}
+
+impl<'a> ChurnMerge<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        process: &'a FailureProcess,
+        window_s: f64,
+        horizon_s: f64,
+        n: usize,
+        seed: u64,
+        mut cursors: Vec<ChurnCursor>,
+        mut heap: BinaryHeap<Reverse<(SimTime, u32)>>,
+        mut tmp: Vec<FailureEvent>,
+    ) -> Self {
+        assert!(n <= u32::MAX as usize, "node index must fit u32");
+        let windows = (horizon_s / window_s).ceil() as usize;
+        cursors.clear();
+        heap.clear();
+        // the fork *keys* are drawn sequentially (preserving the old
+        // `crng.fork(node)` stream positions exactly), but each node's
+        // plan stream is reconstructed from its key on demand — O(1)
+        // setup state per node instead of an O(windows) eager plan
+        let mut crng = Rng::new(seed ^ CHURN_SALT);
+        for node in 0..n {
+            let key = crng.fork_key();
+            let mut cur = ChurnCursor {
+                rng: Rng::from_fork(key, node as u64),
+                next_window: 0,
+                buf: VecDeque::new(),
+                draw_seq: 0,
+            };
+            if let Some(at) = cur.head(process, window_s, windows, &mut tmp) {
+                heap.push(Reverse((at, node as u32)));
+            }
+            cursors.push(cur);
+        }
+        Self { process, window_s, windows, cursors, heap, tmp, next_k: 0 }
+    }
+
+    /// Earliest unemitted churn event's failure time.
+    fn head_at(&self) -> Option<SimTime> {
+        self.heap.peek().map(|&Reverse((at, _))| at)
+    }
+
+    /// Emit the next churn event in global `(at, node)` order.
+    fn pop(&mut self) -> Option<(SimTime, NodeId, u64)> {
+        let Reverse((at, node)) = self.heap.pop()?;
+        let cur = &mut self.cursors[node as usize];
+        let t = cur.pop();
+        debug_assert_eq!(t, at, "heap head out of sync with cursor head");
+        if let Some(next) = cur.head(self.process, self.window_s, self.windows, &mut self.tmp) {
+            self.heap.push(Reverse((next, node)));
+        }
+        let k = self.next_k;
+        self.next_k += 1;
+        Some((at, NodeId(node as usize), k))
     }
 }
 
@@ -1179,7 +1494,7 @@ impl<O: FleetObserver> System<'_, O> {
     /// The per-strategy reinstate duration of one proactive migration —
     /// livesim's formula verbatim (same draw: one jitter off the harness
     /// stream), called only for multi-agent strategies.
-    fn reinstate_s(&self, ctx: &mut Ctx<'_, '_, Ev>) -> f64 {
+    fn reinstate_s(&self, ctx: &mut MeshCtx<'_>) -> f64 {
         let cfg = &self.spec.job;
         let inp = RuleInputs { z: cfg.z, data_kb: cfg.data_kb, proc_kb: cfg.proc_kb };
         let base = match cfg.strategy {
@@ -1198,7 +1513,7 @@ impl<O: FleetObserver> System<'_, O> {
     /// livesim's count-then-select (one draw iff a candidate exists) plus
     /// the fleet's capacity bound: a full neighbour is not a candidate,
     /// which is the "migrate under neighbour-capacity pressure" regime.
-    fn pick_target(&self, from: NodeId, ctx: &mut Ctx<'_, '_, Ev>) -> Option<NodeId> {
+    fn pick_target(&self, from: NodeId, ctx: &mut MeshCtx<'_>) -> Option<NodeId> {
         let nbrs = self.spec.topo.neighbours(from);
         let healthy = nbrs.iter().filter(|n| self.placement.has_slot(**n)).count();
         if healthy == 0 {
@@ -1232,7 +1547,7 @@ impl<O: FleetObserver> System<'_, O> {
     /// index, so an empty cluster places sub `i` on node `i % nodes` — the
     /// degenerate layout of `run_live`). Returns false (and rolls
     /// occupancy back) when the job does not fit. Draw-free.
-    fn try_place(&mut self, id: JobId, ctx: &mut Ctx<'_, '_, Ev>) -> bool {
+    fn try_place(&mut self, id: JobId, ctx: &mut MeshCtx<'_>) -> bool {
         let n_subs = self.spec.job.n_subs;
         for _ in 0..n_subs {
             match self.placement.best() {
@@ -1250,7 +1565,6 @@ impl<O: FleetObserver> System<'_, O> {
             }
         }
         let now = ctx.now();
-        let me = ctx.me();
         let done_at = now + SimTime::from_secs(self.spec.job.compute_s);
         let rec = self.jobs.rec_mut(id);
         rec.state.clear();
@@ -1272,7 +1586,7 @@ impl<O: FleetObserver> System<'_, O> {
                 self.jobs.rec_mut(id).state[sub] = SubState::Running { done_at: d };
                 d
             };
-            ctx.send_at(d, me, Ev::SubDone { job: id, sub });
+            ctx.send_at(d, Ev::SubDone { job: id, sub });
         }
         true
     }
@@ -1280,7 +1594,7 @@ impl<O: FleetObserver> System<'_, O> {
     /// Retry queued placements in FIFO order, stopping at the first job
     /// that still does not fit (head-of-line blocking keeps the order a
     /// pure function of the event sequence).
-    fn drain_queue(&mut self, ctx: &mut Ctx<'_, '_, Ev>) {
+    fn drain_queue(&mut self, ctx: &mut MeshCtx<'_>) {
         while let Some(&id) = self.queue.front() {
             if !self.try_place(id, ctx) {
                 break;
@@ -1318,7 +1632,7 @@ impl<O: FleetObserver> System<'_, O> {
     /// after an exponentially backed-off probation. A node already in
     /// quarantine accrues nothing — the counter stays strictly below the
     /// threshold after every event (the storm-bound invariant).
-    fn suspicion_accrue(&mut self, node: NodeId, ctx: &mut Ctx<'_, '_, Ev>) {
+    fn suspicion_accrue(&mut self, node: NodeId, ctx: &mut MeshCtx<'_>) {
         let q = &self.spec.gray.quarantine;
         if q.threshold == 0 || self.placement.is_quarantined(node) {
             return;
@@ -1342,15 +1656,23 @@ impl<O: FleetObserver> System<'_, O> {
         let probation = q.probation(self.offenses[node.0]);
         self.offenses[node.0] = self.offenses[node.0].saturating_add(1);
         self.suspicion[node.0] = 0;
-        let me = ctx.me();
-        ctx.send_in(SimTime::from_secs(probation), me, Ev::QuarantineRelease { node });
+        ctx.send_in(SimTime::from_secs(probation), Ev::QuarantineRelease { node });
+    }
+
+    /// The home cell of the job with arrival index `arrival` (allocation
+    /// rule: job `j` → cell `j % cells`).
+    fn job_cell(&self, arrival: u32) -> u32 {
+        (arrival as usize % self.spec.cells.get()) as u32
     }
 }
 
 /// Project the private event onto its public observer label. The
 /// post-state flags (`job_completed`, `landed`) are patched in afterwards
-/// from counter deltas.
-fn ev_kind(ev: &Ev) -> FleetEv {
+/// from counter deltas. Slots are labelled `slot × cells + cell` — the
+/// raw slot at `cells = 1`, and a stable flat name for a `(cell, slot)`
+/// address otherwise (observers only label, never dereference).
+fn ev_kind(ev: &Ev, ncells: usize) -> FleetEv {
+    let flat = |id: &JobId| (id.slot as u64 * ncells as u64 + id.cell as u64) as u32;
     match ev {
         Ev::Arrival { job } => FleetEv::Arrival { job: *job as u32 },
         Ev::Doom { node, predictable, .. } => {
@@ -1364,16 +1686,16 @@ fn ev_kind(ev: &Ev) -> FleetEv {
             FleetEv::QuarantineRelease { node: node.0 as u32 }
         }
         Ev::MigrationDone { job, sub, to } => FleetEv::MigrationDone {
-            slot: job.slot,
+            slot: flat(job),
             sub: *sub as u32,
             to: to.0 as u32,
             landed: false,
         },
         Ev::RecoveryDone { job, rec } => {
-            FleetEv::RecoveryDone { slot: job.slot, rec: *rec as u32 }
+            FleetEv::RecoveryDone { slot: flat(job), rec: *rec as u32 }
         }
         Ev::SubDone { job, sub } => {
-            FleetEv::SubDone { slot: job.slot, sub: *sub as u32, job_completed: false }
+            FleetEv::SubDone { slot: flat(job), sub: *sub as u32, job_completed: false }
         }
     }
 }
@@ -1455,15 +1777,15 @@ impl<O: FleetObserver> System<'_, O> {
     /// = false`, the node is doomed) and gray-plane false alarms
     /// (`spurious = true`, the node is healthy and every migration is
     /// pure waste, counted in `spurious_migrations`).
-    fn proactive_sweep(&mut self, ctx: &mut Ctx<'_, '_, Ev>, node: NodeId, spurious: bool) {
+    fn proactive_sweep(&mut self, ctx: &mut MeshCtx<'_>, node: NodeId, spurious: bool) {
         let now = ctx.now();
-        let me = ctx.me();
         self.scan.clear();
         self.scan.extend(self.node_subs[node.0].iter().copied());
         for k in 0..self.scan.len() {
             let (arrival, sub, slot) = self.scan[k];
+            let cell = self.job_cell(arrival);
             let i = sub as usize;
-            let rec = &self.jobs.slots[slot as usize];
+            let rec = self.jobs.raw(cell, slot);
             debug_assert!(rec.live && rec.arrival == arrival, "dead entry in node set");
             debug_assert_eq!(rec.host[i], node, "entry strayed off its node");
             if let SubState::Running { done_at } = rec.state[i] {
@@ -1499,7 +1821,7 @@ impl<O: FleetObserver> System<'_, O> {
                         delivered = cost.delivered;
                     }
                     if delivered {
-                        let rec = &mut self.jobs.slots[slot as usize];
+                        let rec = self.jobs.raw_mut(cell, slot);
                         rec.state[i] = SubState::Migrating { resume_remaining_s: remaining };
                         rec.host[i] = target;
                         self.placement.dec(node);
@@ -1514,8 +1836,7 @@ impl<O: FleetObserver> System<'_, O> {
                         }
                         ctx.send_in(
                             SimTime::from_secs(dur + extra_s),
-                            me,
-                            Ev::MigrationDone { job: JobId { slot, gen }, sub: i, to: target },
+                            Ev::MigrationDone { job: JobId { cell, slot, gen }, sub: i, to: target },
                         );
                     } else if drop_ack {
                         // injected self-test defect: the handshake
@@ -1524,7 +1845,7 @@ impl<O: FleetObserver> System<'_, O> {
                         // event scheduled, no fallback. Bookkeeping
                         // stays self-consistent so only the
                         // no-lost-job checker fires.
-                        let rec = &mut self.jobs.slots[slot as usize];
+                        let rec = self.jobs.raw_mut(cell, slot);
                         rec.state[i] = SubState::Migrating { resume_remaining_s: remaining };
                         rec.host[i] = target;
                         self.placement.dec(node);
@@ -1544,11 +1865,11 @@ impl<O: FleetObserver> System<'_, O> {
                         // (`extra_s`) delays the recovery's start.
                         let rec_id = self.next_rec;
                         self.next_rec += 1;
-                        self.jobs.slots[slot as usize].state[i] =
+                        self.jobs.raw_mut(cell, slot).state[i] =
                             SubState::Recovering { resume_remaining_s: remaining, rec: rec_id };
                         self.running -= 1;
                         if let Some(t) = self.pick_target(node, ctx) {
-                            self.jobs.slots[slot as usize].host[i] = t;
+                            self.jobs.raw_mut(cell, slot).host[i] = t;
                             self.placement.dec(node);
                             self.placement.inc(t);
                             self.node_subs[node.0].remove(&(arrival, sub, slot));
@@ -1561,8 +1882,7 @@ impl<O: FleetObserver> System<'_, O> {
                         self.fallbacks += 1;
                         ctx.send_in(
                             SimTime::from_secs(extra_s + rdur),
-                            me,
-                            Ev::RecoveryDone { job: JobId { slot, gen }, rec: rec_id },
+                            Ev::RecoveryDone { job: JobId { cell, slot, gen }, rec: rec_id },
                         );
                     }
                 }
@@ -1574,13 +1894,13 @@ impl<O: FleetObserver> System<'_, O> {
 
     /// Dispatch one event — the event-loop body, observer-free. Early
     /// returns here (absorbed strikes, stale handles) still reach the
-    /// observer: `on_msg` wraps this call.
-    fn handle(&mut self, ctx: &mut Ctx<'_, '_, Ev>, ev: Ev) {
+    /// observer: the mesh loop wraps this call.
+    fn handle(&mut self, ctx: &mut MeshCtx<'_>, ev: Ev) {
         let now = ctx.now();
-        let me = ctx.me();
         match ev {
             Ev::Arrival { job } => {
-                let id = self.jobs.alloc(job as u32, now);
+                let cell = self.job_cell(job as u32);
+                let id = self.jobs.alloc(cell, job as u32, now);
                 self.arrived += 1;
                 if !self.try_place(id, ctx) {
                     self.queue.push_back(id);
@@ -1603,9 +1923,9 @@ impl<O: FleetObserver> System<'_, O> {
                 }
                 if predictable {
                     self.predicted[node.0] = true;
-                    ctx.send_in(SimTime::from_secs(0.0), me, Ev::Prediction { node });
+                    ctx.send_in(SimTime::from_secs(0.0), Ev::Prediction { node });
                 }
-                ctx.send_in(SimTime::from_secs(fail_in_s), me, Ev::Failure { node, flap });
+                ctx.send_in(SimTime::from_secs(fail_in_s), Ev::Failure { node, flap });
             }
             Ev::Prediction { node } => {
                 // proactive path (multi-agent strategies only): migrate
@@ -1646,16 +1966,17 @@ impl<O: FleetObserver> System<'_, O> {
                 let mut k = 0;
                 while k < self.scan.len() {
                     let (arrival, _, slot) = self.scan[k];
+                    let cell = self.job_cell(arrival);
                     let rec_id = self.next_rec;
                     let mut lost = 0usize;
                     while k < self.scan.len() && self.scan[k].0 == arrival {
                         let (_, sub, _) = self.scan[k];
                         k += 1;
                         let i = sub as usize;
-                        match self.jobs.slots[slot as usize].state[i] {
+                        match self.jobs.raw(cell, slot).state[i] {
                             SubState::Running { done_at } => {
                                 let remaining = self.wall_to_work(node, now, done_at);
-                                self.jobs.slots[slot as usize].state[i] = SubState::Recovering {
+                                self.jobs.raw_mut(cell, slot).state[i] = SubState::Recovering {
                                     resume_remaining_s: remaining,
                                     rec: rec_id,
                                 };
@@ -1665,7 +1986,7 @@ impl<O: FleetObserver> System<'_, O> {
                                 // the in-flight move (targeting this node)
                                 // aborts; its MigrationDone will find a
                                 // non-Migrating state and be ignored
-                                self.jobs.slots[slot as usize].state[i] = SubState::Recovering {
+                                self.jobs.raw_mut(cell, slot).state[i] = SubState::Recovering {
                                     resume_remaining_s,
                                     rec: rec_id,
                                 };
@@ -1675,7 +1996,7 @@ impl<O: FleetObserver> System<'_, O> {
                         }
                         // move it off the dead node for the resume
                         if let Some(t) = self.pick_target(node, ctx) {
-                            self.jobs.slots[slot as usize].host[i] = t;
+                            self.jobs.raw_mut(cell, slot).host[i] = t;
                             self.placement.dec(node);
                             self.placement.inc(t);
                             self.node_subs[node.0].remove(&(arrival, sub, slot));
@@ -1713,11 +2034,10 @@ impl<O: FleetObserver> System<'_, O> {
                         }
                         self.rollbacks += 1;
                         self.subs_lost += lost;
-                        let gen = self.jobs.slots[slot as usize].gen;
+                        let gen = self.jobs.raw(cell, slot).gen;
                         ctx.send_in(
                             SimTime::from_secs(dur),
-                            me,
-                            Ev::RecoveryDone { job: JobId { slot, gen }, rec: rec_id },
+                            Ev::RecoveryDone { job: JobId { cell, slot, gen }, rec: rec_id },
                         );
                     }
                 }
@@ -1728,7 +2048,7 @@ impl<O: FleetObserver> System<'_, O> {
                 // down, see DESIGN.md §Gray-failure plane)
                 let repair = if flap { Some(self.flap_down_s) } else { self.repair_s };
                 if let Some(repair_s) = repair {
-                    ctx.send_in(SimTime::from_secs(repair_s), me, Ev::Repair { node });
+                    ctx.send_in(SimTime::from_secs(repair_s), Ev::Repair { node });
                 }
             }
             Ev::Repair { node } => {
@@ -1752,12 +2072,12 @@ impl<O: FleetObserver> System<'_, O> {
                     self.running += 1;
                     self.migr_inflight -= 1;
                     self.migrations += 1;
-                    ctx.send_at(done_at, me, Ev::SubDone { job, sub });
+                    ctx.send_at(done_at, Ev::SubDone { job, sub });
                     // the landed agent gathers predictions on arrival: a
                     // standing prediction for this very node sends it
                     // fleeing again
                     if self.predicted[to.0] {
-                        ctx.send_in(SimTime::from_secs(0.0), me, Ev::Prediction { node: to });
+                        ctx.send_in(SimTime::from_secs(0.0), Ev::Prediction { node: to });
                     }
                 }
             }
@@ -1772,7 +2092,7 @@ impl<O: FleetObserver> System<'_, O> {
                 let arrival = rec0.arrival;
                 for i in 0..n_state {
                     if let SubState::Recovering { resume_remaining_s, rec: r } =
-                        self.jobs.slots[job.slot as usize].state[i]
+                        self.jobs.raw(job.cell, job.slot).state[i]
                     {
                         if r == rec {
                             // the resume host chosen at loss time may have
@@ -1784,10 +2104,10 @@ impl<O: FleetObserver> System<'_, O> {
                             // must replay run_live bit for bit; such
                             // compute does count into goodput/utilization
                             // (documented in DESIGN.md §Fleet simulator).
-                            let old = self.jobs.slots[job.slot as usize].host[i];
+                            let old = self.jobs.raw(job.cell, job.slot).host[i];
                             if self.placement.is_doomed(old) {
                                 if let Some(t) = self.pick_target(old, ctx) {
-                                    self.jobs.slots[job.slot as usize].host[i] = t;
+                                    self.jobs.raw_mut(job.cell, job.slot).host[i] = t;
                                     self.placement.dec(old);
                                     self.placement.inc(t);
                                     self.node_subs[old.0].remove(&(
@@ -1798,17 +2118,17 @@ impl<O: FleetObserver> System<'_, O> {
                                     self.node_subs[t.0].insert((arrival, i as u32, job.slot));
                                 }
                             }
-                            let host = self.jobs.slots[job.slot as usize].host[i];
+                            let host = self.jobs.raw(job.cell, job.slot).host[i];
                             let done_at = now
                                 + SimTime::from_secs(self.work_to_wall(
                                     host,
                                     now,
                                     resume_remaining_s,
                                 ));
-                            self.jobs.slots[job.slot as usize].state[i] =
+                            self.jobs.raw_mut(job.cell, job.slot).state[i] =
                                 SubState::Running { done_at };
                             self.running += 1;
-                            ctx.send_at(done_at, me, Ev::SubDone { job, sub: i });
+                            ctx.send_at(done_at, Ev::SubDone { job, sub: i });
                         }
                     }
                 }
@@ -1868,32 +2188,6 @@ impl<O: FleetObserver> System<'_, O> {
     }
 }
 
-impl<O: FleetObserver> Scenario for System<'_, O> {
-    type Msg = Ev;
-
-    fn on_msg(&mut self, ctx: &mut Ctx<'_, '_, Ev>, ev: Ev) {
-        self.tick(ctx.now());
-        if !O::ENABLED {
-            self.handle(ctx, ev);
-            return;
-        }
-        let mut kind = ev_kind(&ev);
-        let (pre_completed, pre_migrations) = (self.completed, self.migrations);
-        self.handle(ctx, ev);
-        // post-state flags from counter deltas, so `handle` stays verbatim
-        match &mut kind {
-            FleetEv::SubDone { job_completed, .. } => {
-                *job_completed = self.completed > pre_completed;
-            }
-            FleetEv::MigrationDone { landed, .. } => {
-                *landed = self.migrations > pre_migrations;
-            }
-            _ => {}
-        }
-        self.observe(ctx.now(), kind);
-    }
-}
-
 /// Run one fleet trial. Deterministic in `(spec, seed)`.
 pub fn run_fleet(spec: &FleetSpec, seed: u64) -> FleetOutcome {
     run_fleet_scratch(spec, seed, &mut FleetScratch::new())
@@ -1945,41 +2239,72 @@ pub fn run_fleet_observed<O: FleetObserver>(
     scratch: &mut FleetScratch,
     obs: &mut O,
 ) -> FleetOutcome {
+    /// Emit one churn event into the wheels: one root predictability coin
+    /// (plan order), the gray-plane lead for covered events, the doom at
+    /// `at − lead`, and the covered event's false-alarm batch — the
+    /// pre-shard setup loop's body verbatim, shared by the eager paths
+    /// (explicit plans, sub-unit-precision detectors) and the lazy pull.
+    #[allow(clippy::too_many_arguments)]
+    fn schedule_churn(
+        spec: &FleetSpec,
+        seed: u64,
+        n: usize,
+        lead: f64,
+        coverage: f64,
+        root: &mut Rng,
+        wheels: &mut ShardedQueue<Ev>,
+        churn_seq: &mut u64,
+        ncells: usize,
+        at: SimTime,
+        node: NodeId,
+        k: u64,
+    ) {
+        let predictable = root.chance(coverage);
+        let lead_s = if predictable { spec.gray.lead_s(seed, k, lead) } else { lead };
+        let doom_at = at.saturating_sub(SimTime::from_secs(lead_s));
+        let seq = *churn_seq;
+        *churn_seq += 1;
+        wheels.push(
+            node.0 % ncells,
+            band_key(doom_at, BAND_CHURN, seq),
+            Ev::Doom { node, predictable, fail_in_s: lead_s, flap: false },
+        );
+        if predictable {
+            // sub-unit precision: every covered failure drags its
+            // expected share of false alarms on (a priori healthy) nodes
+            for (fp, t) in spec.gray.false_alarms(seed, k, n, spec.horizon_s) {
+                let seq = *churn_seq;
+                *churn_seq += 1;
+                wheels.push(
+                    fp % ncells,
+                    band_key(SimTime::from_secs(t), BAND_CHURN, seq),
+                    Ev::FalseAlarm { node: NodeId(fp) },
+                );
+            }
+        }
+    }
+
     assert!(spec.job.n_subs > 0, "fleet jobs need at least one sub-job");
     assert!(spec.capacity > 0, "fleet nodes need at least one slot");
     let n = spec.topo.len();
-    // Stream discipline (the degenerate-equivalence contract): the harness
-    // stream forks off the root *first*, then the root serves exactly one
-    // predictability draw per churn event in plan order — run_live's exact
-    // sequence. Arrivals and churn plans use salted side streams that
-    // never touch the root.
+    let ncells = spec.cells.get();
+    // Stream discipline (the degenerate-equivalence contract): the
+    // dynamics stream forks off the root *first*, then the root serves
+    // exactly one predictability draw per churn event in plan order —
+    // run_live's exact sequence. Arrivals and churn plans use salted side
+    // streams that never touch the root. Lazy churn defers the trailing
+    // coins past the last pulled event; nothing reads the root after
+    // setup, so the prefix actually drawn is identical.
     let mut root = Rng::new(seed);
-    let harness_rng = root.fork(1);
+    let mut hrng = root.fork(1);
     let at_s = sample_arrivals(spec, seed);
-    let (plan, repair_s) = match &spec.churn {
-        ChurnSpec::Plan(p) => (p.clone(), None),
-        ChurnSpec::PerNode { process, window_s, repair_s } => {
-            assert!(*window_s > 0.0, "churn window must be positive");
-            let windows = (spec.horizon_s / window_s).ceil() as usize;
-            let mut crng = Rng::new(seed ^ CHURN_SALT);
-            let mut events = Vec::new();
-            for node in 0..n {
-                let mut nrng = crng.fork(node as u64);
-                for e in process.plan(windows, *window_s, 1, &mut nrng).events {
-                    events.push(FailureEvent { at: e.at, node: NodeId(node) });
-                }
-            }
-            events.sort_by_key(|e| (e.at, e.node));
-            (FailurePlan { events }, Some(*repair_s))
-        }
-    };
 
     let mut jobs = std::mem::take(&mut scratch.jobs);
-    jobs.reset();
+    jobs.reset(ncells);
     let mut queue = std::mem::take(&mut scratch.queue);
     queue.clear();
     let mut placement = std::mem::take(&mut scratch.placement);
-    placement.reset(n, spec.capacity);
+    placement.reset(n, spec.capacity, ncells);
     let mut node_subs = std::mem::take(&mut scratch.node_subs);
     for s in &mut node_subs {
         s.clear();
@@ -2014,7 +2339,85 @@ pub fn run_fleet_observed<O: FleetObserver>(
         }
     }
     let derive = std::mem::take(&mut scratch.derive);
-    let system = System {
+
+    // ---- setup: load the wheels under the banded sequence scheme ----
+    let wheels = &mut scratch.wheels;
+    wheels.reset(ncells);
+    for (j, &t) in at_s.iter().enumerate() {
+        wheels.push(
+            j % ncells,
+            band_key(SimTime::from_secs(t), BAND_ARRIVAL, j as u64),
+            Ev::Arrival { job: j },
+        );
+    }
+    let lead = spec.job.costs.predict.predict_time_s + 20.0;
+    // The detector model overrides the raw predictable_frac coin with its
+    // coverage — still exactly one root draw per churn event in plan
+    // order, so the root stream is untouched by the gray plane; jitter
+    // and false alarms come from per-event side streams. With `detector:
+    // None` (the default) this is the legacy loop byte-for-byte.
+    let coverage = spec.gray.coverage(spec.job.predictable_frac);
+    let mut churn_seq: u64 = 0;
+    let mut churn: Option<ChurnMerge<'_>> = None;
+    let (repair_s, margin) = match &spec.churn {
+        ChurnSpec::Plan(p) => {
+            // explicit plans are a handful of literal events (and the
+            // run_live-equivalence mode): schedule them eagerly, in the
+            // plan's own order, exactly as before
+            for (k, e) in p.events.iter().enumerate() {
+                schedule_churn(
+                    spec, seed, n, lead, coverage, &mut root, wheels, &mut churn_seq, ncells,
+                    e.at, e.node, k as u64,
+                );
+            }
+            (None, SimTime::ZERO)
+        }
+        ChurnSpec::PerNode { process, window_s, repair_s } => {
+            assert!(*window_s > 0.0, "churn window must be positive");
+            let mut merge = ChurnMerge::new(
+                process,
+                *window_s,
+                spec.horizon_s,
+                n,
+                seed,
+                std::mem::take(&mut scratch.churn_cursors),
+                std::mem::take(&mut scratch.churn_heap),
+                std::mem::take(&mut scratch.churn_tmp),
+            );
+            if spec.gray.emits_false_alarms() {
+                // a sub-unit-precision detector batches false alarms at
+                // absolute side-stream times that may precede the doom
+                // that spawned them — stream the whole merge through
+                // setup (still no O(nodes) plan vectors: the cursors
+                // walk window by window)
+                while let Some((at, node, k)) = merge.pop() {
+                    schedule_churn(
+                        spec, seed, n, lead, coverage, &mut root, wheels, &mut churn_seq,
+                        ncells, at, node, k,
+                    );
+                }
+            }
+            // otherwise the merge stays live and the mesh loop pulls
+            // events just ahead of the clock; doom times trail failure
+            // times by at most this margin, which bounds the look-ahead
+            (Some(*repair_s), SimTime::from_secs(spec.gray.max_lead_s(lead)))
+        }
+    };
+    // Flap-downs: unpredicted, zero-lead dooms with the fast flap repair,
+    // drawn per node from the gray side stream at build time.
+    let mut flap_seq: u64 = 0;
+    for node in 0..n {
+        for t in spec.gray.flap_downs(seed, node, spec.horizon_s) {
+            wheels.push(
+                node % ncells,
+                band_key(SimTime::from_secs(t), BAND_FLAP, flap_seq),
+                Ev::Doom { node: NodeId(node), predictable: false, fail_in_s: 0.0, flap: true },
+            );
+            flap_seq += 1;
+        }
+    }
+
+    let mut system = System {
         spec,
         obs,
         derive,
@@ -2058,53 +2461,113 @@ pub fn run_fleet_observed<O: FleetObserver>(
         quarantine_releases: 0,
         abandoned: 0,
     };
-    let mut h = Harness::from_scratch(harness_rng, std::mem::take(&mut scratch.sim));
-    let sys = h.add(system);
-    for (j, &t) in at_s.iter().enumerate() {
-        h.schedule(SimTime::from_secs(t), sys, Ev::Arrival { job: j });
-    }
-    let lead = spec.job.costs.predict.predict_time_s + 20.0;
-    // The detector model overrides the raw predictable_frac coin with its
-    // coverage — still exactly one root draw per plan event, so the root
-    // stream is untouched by the gray plane; jitter and false alarms come
-    // from per-event side streams. With `detector: None` (the default)
-    // this loop is the legacy loop byte-for-byte.
-    let coverage = spec.gray.coverage(spec.job.predictable_frac);
-    for (k, e) in plan.events.iter().enumerate() {
-        let predictable = root.chance(coverage);
-        let lead_s = if predictable { spec.gray.lead_s(seed, k as u64, lead) } else { lead };
-        let doom_at = e.at.saturating_sub(SimTime::from_secs(lead_s));
-        h.schedule(
-            doom_at,
-            sys,
-            Ev::Doom { node: e.node, predictable, fail_in_s: lead_s, flap: false },
-        );
-        if predictable {
-            // sub-unit precision: every covered failure drags its
-            // expected share of false alarms on (a priori healthy) nodes
-            for (fp, t) in spec.gray.false_alarms(seed, k as u64, n, spec.horizon_s) {
-                h.schedule(SimTime::from_secs(t), sys, Ev::FalseAlarm { node: NodeId(fp) });
+    // ---- the mesh event loop ----
+    //
+    // Per-cell wheels + globally unique banded keys: popping the minimum
+    // key across cells *is* the single-queue dispatch order, so the loop
+    // below is the old harness loop with the queue sharded out from under
+    // it. Staged sends drain in push order after each handler (each
+    // taking the next run-band seq) and route to their destination cell —
+    // the epoch-boundary exchange of DESIGN.md §Sharded cells.
+    let horizon = SimTime::from_secs(spec.horizon_s);
+    let mut staging = std::mem::take(&mut scratch.staging);
+    staging.clear();
+    let mut run_seq: u64 = 0;
+    let mut dispatched: u64 = 0;
+    let mut now = SimTime::ZERO;
+    #[cfg(any(test, feature = "vopr-selftest"))]
+    let mut leak_armed = spec.fault == Some(InjectedFault::EpochLeak);
+    let end;
+    loop {
+        // Pull churn just ahead of the clock: any unemitted event whose
+        // doom could precede (or tie) the next wheel entry — or the
+        // horizon, when the wheels are empty — must be scheduled before
+        // the next pop decision. Dooms trail their failure time by at
+        // most `margin`, so the guard below is exact; pulled dooms are
+        // always ≥ the last dispatch time (no past scheduling).
+        if let Some(m) = churn.as_mut() {
+            while let Some(h) = m.head_at() {
+                let cap = match wheels.min_key() {
+                    Some(k) => SimTime((k >> 64) as u64).min(horizon),
+                    None => horizon,
+                };
+                if h.saturating_sub(margin) > cap {
+                    break;
+                }
+                let (at, node, k) = m.pop().expect("head_at was Some");
+                schedule_churn(
+                    spec, seed, n, lead, coverage, &mut root, wheels, &mut churn_seq, ncells,
+                    at, node, k,
+                );
             }
         }
-    }
-    // Flap-downs: unpredicted, zero-lead dooms with the fast flap repair,
-    // drawn per node from the gray side stream at build time.
-    for node in 0..n {
-        for t in spec.gray.flap_downs(seed, node, spec.horizon_s) {
-            h.schedule(
-                SimTime::from_secs(t),
-                sys,
-                Ev::Doom { node: NodeId(node), predictable: false, fail_in_s: 0.0, flap: true },
-            );
+        let Some(key) = wheels.min_key() else {
+            // wheels drained: quiescent — unless unpulled churn remains,
+            // which is then strictly post-horizon doom work (the old path
+            // had it queued and stopped at the horizon)
+            let churn_left = churn.as_ref().is_some_and(|m| m.head_at().is_some());
+            end = if churn_left { horizon } else { now };
+            break;
+        };
+        let at = SimTime((key >> 64) as u64);
+        if at > horizon {
+            end = horizon;
+            break;
+        }
+        let (cell, _, ev) = wheels.pop_min().expect("min_key was Some");
+        debug_assert!(cell < ncells, "wheel entry routed out of range");
+        now = at;
+        dispatched += 1;
+        system.tick(now);
+        let mut ctx = MeshCtx { now, rng: &mut hrng, staging: &mut staging };
+        if O::ENABLED {
+            let mut kind = ev_kind(&ev, ncells);
+            let (pre_completed, pre_migrations) = (system.completed, system.migrations);
+            system.handle(&mut ctx, ev);
+            // post-state flags from counter deltas, so `handle` stays
+            // verbatim
+            match &mut kind {
+                FleetEv::SubDone { job_completed, .. } => {
+                    *job_completed = system.completed > pre_completed;
+                }
+                FleetEv::MigrationDone { landed, .. } => {
+                    *landed = system.migrations > pre_migrations;
+                }
+                _ => {}
+            }
+            system.observe(now, kind);
+        } else {
+            system.handle(&mut ctx, ev);
+        }
+        for (t, ev) in staging.drain(..) {
+            let dest = route_ev(&ev, ncells);
+            // vopr self-test fault EpochLeak: the first job-carrying
+            // message crossing cells vanishes at the exchange — the
+            // job-conservation checker's quiescence clause must fire
+            #[cfg(any(test, feature = "vopr-selftest"))]
+            if leak_armed
+                && dest != cell
+                && matches!(
+                    &ev,
+                    Ev::SubDone { .. } | Ev::RecoveryDone { .. } | Ev::MigrationDone { .. }
+                )
+            {
+                leak_armed = false;
+                continue;
+            }
+            wheels.push(dest, band_key(t, BAND_RUN, run_seq), ev);
+            run_seq += 1;
         }
     }
-    let horizon = SimTime::from_secs(spec.horizon_s);
-    let (fin, sim) = h.run_until_reclaim(horizon);
-    scratch.sim = sim;
-    let events = fin.events;
+    let events = dispatched;
     // the queue drained before the horizon ⇔ the trial went quiescent
-    let hit_horizon = fin.end == horizon;
-    let mut system = fin.into_scenario();
+    let hit_horizon = end == horizon;
+    if let Some(m) = churn {
+        scratch.churn_cursors = m.cursors;
+        scratch.churn_heap = m.heap;
+        scratch.churn_tmp = m.tmp;
+    }
+    scratch.staging = staging;
     // integrate the idle tail so utilization covers the whole horizon
     system.tick(horizon);
     system.observe_end(horizon, hit_horizon);
@@ -2377,8 +2840,10 @@ mod tests {
         for _ in 0..200 {
             let n = 1 + rng.range_usize(0, 40);
             let cap = 1 + rng.range_usize(0, 3);
+            // cell count must not change which node best() returns
+            let ncells = 1 + rng.range_usize(0, 5);
             let mut idx = PlacementIndex::default();
-            idx.reset(n, cap);
+            idx.reset(n, cap, ncells);
             let mut doomed = vec![false; n];
             let mut quar = vec![false; n];
             let mut occ = vec![0usize; n];
@@ -2602,5 +3067,77 @@ mod tests {
         assert_eq!(a.degraded_node_s.to_bits(), b.degraded_node_s.to_bits());
         assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits());
         assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+    }
+
+    #[test]
+    fn lazy_churn_merge_matches_eager_plan_sort() {
+        // the lazy per-node cursors must emit the exact global stream the
+        // eager path produced: sequential forks off seed ^ CHURN_SALT, one
+        // plan per node, all events stably sorted by (at, node)
+        let procs = [
+            FailureProcess::Poisson { rate_per_window: 1.7 },
+            FailureProcess::RandomUniformK { k: 2 },
+            FailureProcess::Periodic { offset_s: 900.0 },
+        ];
+        for (pi, process) in procs.iter().enumerate() {
+            for seed in [3u64, 19] {
+                let (n, window_s, horizon_s) = (6usize, 3600.0, 4.5 * 3600.0);
+                let windows = (horizon_s / window_s).ceil() as usize;
+                let mut crng = Rng::new(seed ^ CHURN_SALT);
+                let mut eager: Vec<(SimTime, usize)> = Vec::new();
+                for node in 0..n {
+                    let mut prng = crng.fork(node as u64);
+                    let plan = process.plan(windows, window_s, 1, &mut prng);
+                    eager.extend(plan.events.iter().map(|e| (e.at, node)));
+                }
+                eager.sort_by_key(|&(at, node)| (at, node));
+                let mut merge = ChurnMerge::new(
+                    process,
+                    window_s,
+                    horizon_s,
+                    n,
+                    seed,
+                    Vec::new(),
+                    BinaryHeap::new(),
+                    Vec::new(),
+                );
+                let mut lazy: Vec<(SimTime, usize)> = Vec::new();
+                while let Some(head) = merge.head_at() {
+                    let (at, node, k) = merge.pop().expect("head_at promised an event");
+                    assert_eq!(at, head);
+                    assert_eq!(k, lazy.len() as u64, "k is the emission index");
+                    lazy.push((at, node.0));
+                }
+                assert_eq!(eager, lazy, "process {pi} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn cells_are_a_pure_performance_knob() {
+        // quick in-module smoke; the cross-plane sweep lives in
+        // tests/fleet_sharding.rs
+        let base = FleetSpec::placentia_fleet(Strategy::Hybrid, 32, 6.0, 1.0);
+        let a = run_fleet(&base, 21);
+        assert!(a.jobs_completed > 0, "{a:?}");
+        for cells in [2usize, 4, 7] {
+            let spec =
+                FleetSpec { cells: NonZeroUsize::new(cells).unwrap(), ..base.clone() };
+            let b = run_fleet(&spec, 21);
+            assert_eq!(a.events, b.events, "cells={cells}");
+            assert_eq!(a.migrations, b.migrations, "cells={cells}");
+            assert_eq!(a.rollbacks, b.rollbacks, "cells={cells}");
+            assert_eq!(
+                a.mean_slowdown.to_bits(),
+                b.mean_slowdown.to_bits(),
+                "cells={cells}"
+            );
+            assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "cells={cells}");
+            assert_eq!(
+                a.goodput_ratio.to_bits(),
+                b.goodput_ratio.to_bits(),
+                "cells={cells}"
+            );
+        }
     }
 }

@@ -61,6 +61,7 @@ use crate::scenario::spec::{FailureRegime, ScenarioSpec};
 use crate::sim::{Rng, SimTime};
 use std::collections::VecDeque;
 use std::fmt::Write as _;
+use std::num::NonZeroUsize;
 
 #[cfg(any(test, feature = "vopr-selftest"))]
 use crate::scenario::fleet::InjectedFault;
@@ -194,8 +195,22 @@ impl Invariant for JobConservation {
     fn check(&mut self, _ev: &FleetEv, view: &FleetView<'_>) -> Result<(), String> {
         Self::check_view(view)
     }
-    fn at_end(&mut self, view: &FleetView<'_>, _hit_horizon: bool) -> Result<(), String> {
-        Self::check_view(view)
+    fn at_end(&mut self, view: &FleetView<'_>, hit_horizon: bool) -> Result<(), String> {
+        Self::check_view(view)?;
+        // Quiescence clause: the event queue drained before the horizon,
+        // so no live job can still be *placed* — a placed sub-job always
+        // has a scheduled continuation event. Any live job beyond the
+        // waiting queue lost its continuation somewhere (the signature of
+        // a cross-cell message leaking at an epoch boundary; see
+        // `InjectedFault::EpochLeak`).
+        if !hit_horizon && view.live_jobs > view.queued {
+            return Err(format!(
+                "quiescent with {} live jobs but only {} queued: a placed job \
+                 lost its scheduled continuation",
+                view.live_jobs, view.queued
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -758,6 +773,14 @@ fn gen_fleet(rng: &mut Rng, cfg: &VoprCfg) -> FleetSpec {
     // dims sample exactly as they would without it.
     if rng.chance(0.5) {
         spec.gray = sample_gray_plane(&mut rng.fork(0x64AF));
+    }
+    // Sharded cells: half the walks run the sharded layout (a pure
+    // performance knob — byte-identity to cells = 1 is the contract under
+    // test), drawn from a forked stream after every other dimension so
+    // earlier dims sample exactly as they would without it.
+    if rng.chance(0.5) {
+        let cells = 2 + rng.fork(0xCE11).range_usize(0, 7);
+        spec.cells = NonZeroUsize::new(cells).expect("cells >= 2");
     }
     #[cfg(any(test, feature = "vopr-selftest"))]
     {
@@ -1411,6 +1434,13 @@ pub fn shrink_fleet(
         shrink_scalar(&mut ctx, &mut cur, &mut best, &mut changed, |s| s.job.n_subs, |s, n| {
             s.job.n_subs = n;
         });
+        // Sharded cells: halve toward the unsharded layout. A violation
+        // that survives at `cells = 1` is not a sharding bug at all; one
+        // that needs cross-cell traffic bottoms out at the smallest cell
+        // count whose routing still crosses.
+        shrink_scalar(&mut ctx, &mut cur, &mut best, &mut changed, |s| s.cells.get(), |s, n| {
+            s.cells = NonZeroUsize::new(n).expect("shrink_scalar keeps n >= 1");
+        });
 
         // Per-node churn: halve the rate toward quiet.
         while ctx.reruns < MAX_RERUNS {
@@ -1644,6 +1674,12 @@ pub fn encode_walk(spec: &WalkSpec) -> String {
                         p.events.iter().map(|e| format!("{}@{}", e.at.0, e.node.0)).collect();
                     let _ = write!(s, ";ch=pl|{}", evs.join(","));
                 }
+            }
+            // Sharded cells, only when sharded — the unsharded layout
+            // (including every pre-shard repro string) omits the key, so
+            // old strings keep decoding and re-encode unchanged.
+            if f.cells.get() > 1 {
+                let _ = write!(s, ";ce={}", f.cells);
             }
             // Fault plane, only when it can perturb a delivery — off planes
             // (including every pre-plane repro string) omit both keys, so
@@ -1915,6 +1951,13 @@ pub fn decode_walk(s: &str) -> Result<WalkSpec, String> {
                     backoff_mult: unfhex(&fs[2])?,
                     max_probation_s: unfhex(&fs[3])?,
                 };
+            }
+            // Optional cell count — absent in every pre-shard repro
+            // string, which therefore decodes to the unsharded layout.
+            if let Some(ce) = opt("ce") {
+                let cells: usize = uint(ce)?;
+                f.cells =
+                    NonZeroUsize::new(cells).ok_or("cell count must be at least 1")?;
             }
             f.validate().map_err(|e| e.to_string())?;
             Ok(WalkSpec::Fleet(f))
@@ -2329,5 +2372,108 @@ mod tests {
             !sh.spec.gray.is_off(),
             "the zero-gray step must be rejected — the leak needs flapping"
         );
+    }
+
+    /// A hand-built spec where the armed [`InjectedFault::EpochLeak`] must
+    /// fire: a 2-sub job lands one sub per node, an unpredicted failure
+    /// kills node 1's sub, and the recovery's `RecoveryDone` — staged in
+    /// node 1's cell, destined for the job's cell 0 — is the first
+    /// job-carrying message to cross cells, so the leak swallows it. The
+    /// fleet then drains with the job still live: only the
+    /// job-conservation quiescence clause can see the loss.
+    fn epoch_leak_spec() -> FleetSpec {
+        let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 2, 0.0, 0.0);
+        spec.capacity = 1;
+        spec.job.n_subs = 2;
+        spec.job.compute_s = 600.0;
+        spec.job.predictable_frac = 0.0; // reactive only: no migrations
+        spec.horizon_s = 10_000.0;
+        spec.arrivals = ArrivalSpec::Trace { at_s: vec![0.0] };
+        spec.churn = ChurnSpec::Plan(FailurePlan {
+            events: vec![FailureEvent { at: SimTime::from_secs(300.0), node: NodeId(1) }],
+        });
+        spec.cells = NonZeroUsize::new(7).unwrap();
+        spec.fault = Some(InjectedFault::EpochLeak);
+        spec
+    }
+
+    #[test]
+    fn epoch_leak_is_detected_by_job_conservation() {
+        let spec = epoch_leak_spec();
+        let mut scratch = FleetScratch::new();
+        let (_, v) = run_walk(&WalkSpec::Fleet(spec.clone()), 7, 16, &mut scratch);
+        let v = v.expect("a leaked cross-cell message must violate an invariant");
+        assert_eq!(v.invariant, "job-conservation", "{}", v.detail);
+        assert!(
+            v.detail.contains("lost its scheduled continuation"),
+            "the quiescence clause must be the one that fires: {}",
+            v.detail
+        );
+        // the same sharded fleet without the leak holds every invariant
+        let mut clean = spec;
+        clean.fault = None;
+        let (_, v) = run_walk(&WalkSpec::Fleet(clean), 7, 16, &mut scratch);
+        assert!(v.is_none(), "unleaked sharded run must pass: {v:?}");
+    }
+
+    #[test]
+    fn shrinker_minimizes_the_epoch_leak_repro() {
+        let spec = epoch_leak_spec();
+        let sh = shrink_fleet(&spec, 7, 16, "job-conservation").expect("must reproduce");
+        assert_eq!(sh.violation.invariant, "job-conservation");
+        assert!(sh.spec.topo.len() <= 2, "nodes did not shrink: {}", fleet_dims(&sh.spec));
+        // cells = 1 can never cross, so the leak needs at least 2 — and
+        // the scalar shrinker must land exactly there from 7
+        assert_eq!(
+            sh.spec.cells.get(),
+            2,
+            "cells must shrink to the smallest layout that still crosses"
+        );
+    }
+
+    #[test]
+    fn pre_shard_repro_strings_still_decode() {
+        // The same frozen pre-plane literal: an absent `ce` key must
+        // decode to the unsharded layout and re-encode untouched.
+        let legacy = "fleet;s=hybrid;n=4;cap=2;st=2;sub=1;z=4;dkb=524288;pkb=524288;\
+                      cs=409c200000000000;pf=0000000000000000;crs=408a800000000000;\
+                      cos=407e500000000000;hz=40cc200000000000;arr=t0000000000000000;ch=pl|";
+        let legacy: String = legacy.split_whitespace().collect();
+        let dec = decode_walk(&legacy).unwrap();
+        let WalkSpec::Fleet(f) = &dec else { panic!("kind changed") };
+        assert_eq!(f.cells.get(), 1, "absent `ce` must decode to the unsharded layout");
+        assert_eq!(encode_walk(&dec), legacy, "legacy strings must re-encode unchanged");
+    }
+
+    #[test]
+    fn sharded_cells_codec_round_trips() {
+        let mut spec = skip_requeue_spec();
+        spec.fault = None;
+        spec.cells = NonZeroUsize::new(5).unwrap();
+        let enc = encode_walk(&WalkSpec::Fleet(spec.clone()));
+        assert!(enc.contains(";ce=5"), "sharded specs must encode the cell count");
+        let dec = decode_walk(&enc).unwrap();
+        let WalkSpec::Fleet(g) = &dec else { panic!("kind changed") };
+        assert_eq!(g.cells, spec.cells);
+        assert_eq!(encode_walk(&dec), enc, "codec must round-trip byte-for-byte");
+        // the unsharded layout omits the key entirely
+        spec.cells = NonZeroUsize::MIN;
+        assert!(!encode_walk(&WalkSpec::Fleet(spec)).contains(";ce="));
+    }
+
+    #[test]
+    fn sampled_cell_counts_exercise_sharding() {
+        let cfg = VoprCfg { walks: 512, ..Default::default() };
+        let mut sharded = 0;
+        for i in 0..512 {
+            let (spec, _) = gen_walk(&cfg, i);
+            if let WalkSpec::Fleet(f) = spec {
+                if f.cells.get() > 1 {
+                    assert!((2..=8).contains(&f.cells.get()), "cells {} out of range", f.cells);
+                    sharded += 1;
+                }
+            }
+        }
+        assert!(sharded > 32, "too few sharded fleets sampled: {sharded}");
     }
 }

@@ -297,6 +297,98 @@ impl<T> EventQueue<T> {
     }
 }
 
+/// A bank of per-cell [`EventQueue`] wheels presenting a single global
+/// min-key pop order — the queue layer of the sharded fleet (DESIGN.md
+/// §Sharded cells).
+///
+/// Each cell owns its own timer wheel; the bank caches every cell's exact
+/// minimum pending key, so the global minimum is an O(cells) scan over a
+/// dense array of `u128`s rather than a touch of every wheel. Because the
+/// packed `(time, seq)` keys of one simulation are globally unique (the
+/// caller hands out `seq` from shared counters), popping the cached global
+/// minimum yields *exactly* the sequence a single [`EventQueue`] holding
+/// every entry would produce — for any cell count and any entry→cell
+/// routing. That identity is what makes sharding invisible to the
+/// determinism contract, and it is property-tested against a single wheel
+/// in the engine tests and end-to-end in `tests/fleet_sharding.rs`.
+pub struct ShardedQueue<T> {
+    cells: Vec<EventQueue<T>>,
+    /// Exact minimum pending key per cell (`None` ⇔ that cell is empty).
+    /// Maintained on push (min with the new key) and pop (re-peek).
+    mins: Vec<Option<u128>>,
+    len: usize,
+}
+
+impl<T> ShardedQueue<T> {
+    pub fn new(cells: usize) -> Self {
+        assert!(cells > 0, "a sharded queue needs at least one cell");
+        Self {
+            cells: (0..cells).map(|_| EventQueue::new()).collect(),
+            mins: vec![None; cells],
+            len: 0,
+        }
+    }
+
+    /// Empty every wheel and re-size the bank to `cells`, keeping existing
+    /// wheel allocations — the scratch-reuse half (wheels are recycled
+    /// across trials; growing the bank allocates only the new cells).
+    pub fn reset(&mut self, cells: usize) {
+        assert!(cells > 0, "a sharded queue needs at least one cell");
+        for q in &mut self.cells {
+            q.clear();
+        }
+        if self.cells.len() > cells {
+            self.cells.truncate(cells);
+        } else {
+            self.cells.resize_with(cells, EventQueue::new);
+        }
+        self.mins.clear();
+        self.mins.resize(cells, None);
+        self.len = 0;
+    }
+
+    pub fn cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn push(&mut self, cell: usize, key: u128, item: T) {
+        self.cells[cell].push(key, item);
+        self.mins[cell] = Some(match self.mins[cell] {
+            Some(m) => m.min(key),
+            None => key,
+        });
+        self.len += 1;
+    }
+
+    /// The globally minimum pending key across all cells.
+    pub fn min_key(&self) -> Option<u128> {
+        self.mins.iter().flatten().copied().min()
+    }
+
+    /// Remove and return the globally minimum entry as `(cell, key, item)`.
+    /// Keys are unique, so the argmin cell is unambiguous.
+    pub fn pop_min(&mut self) -> Option<(usize, u128, T)> {
+        let (cell, _) = self
+            .mins
+            .iter()
+            .enumerate()
+            .filter_map(|(c, m)| m.map(|k| (c, k)))
+            .min_by_key(|&(_, k)| k)?;
+        let (key, item) = self.cells[cell].pop().expect("cached min for empty cell");
+        self.mins[cell] = self.cells[cell].peek_key();
+        self.len -= 1;
+        Some((cell, key, item))
+    }
+}
+
 /// Collects the messages an actor emits while handling a delivery.
 ///
 /// The staging buffer is owned by the engine and reused across dispatches
@@ -559,6 +651,64 @@ mod tests {
         q.push(pack_key(SimTime::from_secs(1.0), 1), 2);
         assert_eq!(q.pop().map(|(_, i)| i), Some(2));
         assert_eq!(q.pop().map(|(_, i)| i), Some(1));
+    }
+
+    #[test]
+    fn sharded_queue_matches_single_wheel_for_any_cell_count() {
+        // The load-bearing identity: with globally unique keys, a sharded
+        // bank pops the exact sequence of one wheel holding every entry —
+        // regardless of cell count or of how entries are routed to cells.
+        let mut items: Vec<(u128, usize)> = Vec::new();
+        let mut state = 0x9E37_79B9u64;
+        for seq in 0..500u64 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            // times collide often (mod 16 granule seconds) to stress seq ties
+            let t = SimTime::from_secs((state >> 56) as f64);
+            items.push((pack_key(t, seq), seq as usize));
+        }
+        let mut reference: EventQueue<usize> = EventQueue::new();
+        for &(k, v) in &items {
+            reference.push(k, v);
+        }
+        let mut expect = Vec::new();
+        while let Some((k, v)) = reference.pop() {
+            expect.push((k, v));
+        }
+        for cells in [1usize, 2, 7, 64] {
+            let mut sq: ShardedQueue<usize> = ShardedQueue::new(cells);
+            for &(k, v) in &items {
+                sq.push(v % cells, k, v);
+            }
+            assert_eq!(sq.len(), items.len());
+            let mut got = Vec::new();
+            while let Some(min) = sq.min_key() {
+                let (_, k, v) = sq.pop_min().expect("non-empty");
+                assert_eq!(k, min);
+                got.push((k, v));
+            }
+            assert_eq!(got, expect, "cells={cells}");
+            assert!(sq.is_empty());
+        }
+    }
+
+    #[test]
+    fn sharded_queue_reset_recycles_and_resizes() {
+        let mut sq: ShardedQueue<u32> = ShardedQueue::new(4);
+        for i in 0..16u64 {
+            sq.push((i % 4) as usize, pack_key(SimTime::from_secs(i as f64), i), i as u32);
+        }
+        sq.reset(2);
+        assert_eq!(sq.cells(), 2);
+        assert!(sq.is_empty());
+        assert_eq!(sq.min_key(), None);
+        // interleave pushes with pops so cached mins re-peek correctly
+        sq.push(1, pack_key(SimTime::from_secs(5.0), 0), 50);
+        sq.push(0, pack_key(SimTime::from_secs(1.0), 1), 10);
+        assert_eq!(sq.pop_min().map(|(c, _, v)| (c, v)), Some((0, 10)));
+        sq.push(0, pack_key(SimTime::from_secs(9.0), 2), 90);
+        assert_eq!(sq.pop_min().map(|(c, _, v)| (c, v)), Some((1, 50)));
+        assert_eq!(sq.pop_min().map(|(c, _, v)| (c, v)), Some((0, 90)));
+        assert_eq!(sq.pop_min().map(|(_, _, v)| v), None);
     }
 
     #[test]

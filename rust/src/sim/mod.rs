@@ -13,6 +13,6 @@ pub mod engine;
 pub mod harness;
 pub mod rng;
 
-pub use engine::{Engine, EventLog, SimTime};
+pub use engine::{Engine, EventLog, ShardedQueue, SimTime};
 pub use harness::{Ctx, Finished, Harness, Scenario, StepTrace, TrialScratch};
 pub use rng::Rng;

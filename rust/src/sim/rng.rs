@@ -38,6 +38,21 @@ impl Rng {
         Rng::new(self.next_u64() ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Draw the raw fork key for a deferred child stream. Storing the key (a
+    /// plain `u64`) instead of the child keeps per-node setup O(1) memory and
+    /// lets the child be materialized later, position-independently:
+    /// `fork(salt)` ≡ `Rng::from_fork(fork_key(), salt)`.
+    pub fn fork_key(&mut self) -> u64 {
+        self.next_u64()
+    }
+
+    /// Materialize the child stream for a key drawn earlier via [`fork_key`].
+    ///
+    /// [`fork_key`]: Rng::fork_key
+    pub fn from_fork(key: u64, salt: u64) -> Rng {
+        Rng::new(key ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -142,6 +157,21 @@ mod tests {
         let mut c2 = root.fork(2);
         let same = (0..100).filter(|_| c1.next_u64() == c2.next_u64()).count();
         assert!(same < 3);
+    }
+
+    #[test]
+    fn fork_key_matches_fork() {
+        let mut a = Rng::new(77);
+        let mut b = Rng::new(77);
+        for salt in [0u64, 1, 2, 1403, u64::MAX] {
+            let mut eager = a.fork(salt);
+            let mut lazy = Rng::from_fork(b.fork_key(), salt);
+            for _ in 0..64 {
+                assert_eq!(eager.next_u64(), lazy.next_u64());
+            }
+        }
+        // Parent streams advanced identically too.
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! inventory):
 //!
 //! * a fleet trial is a pure function of `(spec, seed)`;
-//! * fleet sweep cells are byte-identical at thread counts 1 and 8;
+//! * fleet sweep cells are byte-identical at thread counts 1, 3 and 8
+//!   (3 covers the non-power-of-two work split);
 //! * the degenerate fleet — one traced job at t = 0, an explicit churn
 //!   plan, no binding capacity — reduces to `run_live` exactly (completion
 //!   time, migrations, rollbacks, lost sub-jobs);
@@ -53,6 +54,31 @@ fn degenerate(cfg: LiveCfg, topo: Topology, plan: FailurePlan) -> FleetSpec {
     spec
 }
 
+/// Run the sweep single-threaded, then at thread counts 3 and 8, and
+/// assert every summary statistic is byte-identical. 3 is deliberately
+/// not a power of two: it exercises the uneven work split, where an
+/// off-by-one in trial partitioning would first show up.
+fn assert_sweep_thread_invariant(cells: Vec<CellSpec>, trials: usize) {
+    let one =
+        run_sweep(&SweepSpec { threads: Some(1), ..SweepSpec::new(cells.clone(), trials) });
+    for threads in [3usize, 8] {
+        let multi = run_sweep(&SweepSpec {
+            threads: Some(threads),
+            ..SweepSpec::new(cells.clone(), trials)
+        });
+        assert_eq!(one.len(), multi.len());
+        for (a, b) in one.iter().zip(&multi) {
+            assert_eq!(a.n, b.n, "threads {threads}");
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "threads {threads}");
+            assert_eq!(a.std.to_bits(), b.std.to_bits(), "threads {threads}");
+            assert_eq!(a.median.to_bits(), b.median.to_bits(), "threads {threads}");
+            assert_eq!(a.p95.to_bits(), b.p95.to_bits(), "threads {threads}");
+            assert_eq!(a.min.to_bits(), b.min.to_bits(), "threads {threads}");
+            assert_eq!(a.max.to_bits(), b.max.to_bits(), "threads {threads}");
+        }
+    }
+}
+
 #[test]
 fn fleet_trial_is_pure_function_of_spec_and_seed() {
     let spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 40, 8.0, 1.0);
@@ -76,7 +102,7 @@ fn fleet_trial_is_pure_function_of_spec_and_seed() {
 }
 
 #[test]
-fn fleet_sweep_byte_identical_at_thread_counts_1_and_8() {
+fn fleet_sweep_byte_identical_across_thread_counts() {
     let mut cells = Vec::new();
     for (i, strategy) in [Strategy::Hybrid, Strategy::Agent].into_iter().enumerate() {
         for (k, arrival) in [4.0, 10.0].into_iter().enumerate() {
@@ -94,22 +120,11 @@ fn fleet_sweep_byte_identical_at_thread_counts_1_and_8() {
         FleetMetric::Utilization,
         99,
     ));
-    let trials = 5;
-    let one = run_sweep(&SweepSpec { threads: Some(1), ..SweepSpec::new(cells.clone(), trials) });
-    let eight = run_sweep(&SweepSpec { threads: Some(8), ..SweepSpec::new(cells, trials) });
-    assert_eq!(one.len(), eight.len());
-    for (a, b) in one.iter().zip(&eight) {
-        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
-        assert_eq!(a.std.to_bits(), b.std.to_bits());
-        assert_eq!(a.median.to_bits(), b.median.to_bits());
-        assert_eq!(a.p95.to_bits(), b.p95.to_bits());
-        assert_eq!(a.min.to_bits(), b.min.to_bits());
-        assert_eq!(a.max.to_bits(), b.max.to_bits());
-    }
+    assert_sweep_thread_invariant(cells, 5);
 }
 
 #[test]
-fn mid_size_scale_fleet_byte_identical_at_threads_1_and_8() {
+fn mid_size_scale_fleet_byte_identical_across_thread_counts() {
     // ≥ 500 nodes / ~10k arrivals through the timer-wheel event queue,
     // the (load, node) placement index and the generation-checked job
     // slab — the scale path keeps both fleet contracts: a trial is a pure
@@ -143,19 +158,8 @@ fn mid_size_scale_fleet_byte_identical_at_threads_1_and_8() {
     assert_eq!(a.migrations, b.migrations);
     assert_eq!(a.rollbacks, b.rollbacks);
 
-    let trials = 2;
     let cells = vec![CellSpec::fleet(spec, FleetMetric::MeanSlowdown, 31)];
-    let one = run_sweep(&SweepSpec { threads: Some(1), ..SweepSpec::new(cells.clone(), trials) });
-    let eight = run_sweep(&SweepSpec { threads: Some(8), ..SweepSpec::new(cells, trials) });
-    assert_eq!(one.len(), eight.len());
-    for (x, y) in one.iter().zip(&eight) {
-        assert_eq!(x.mean.to_bits(), y.mean.to_bits());
-        assert_eq!(x.std.to_bits(), y.std.to_bits());
-        assert_eq!(x.median.to_bits(), y.median.to_bits());
-        assert_eq!(x.p95.to_bits(), y.p95.to_bits());
-        assert_eq!(x.min.to_bits(), y.min.to_bits());
-        assert_eq!(x.max.to_bits(), y.max.to_bits());
-    }
+    assert_sweep_thread_invariant(cells, 2);
 }
 
 #[test]
@@ -327,16 +331,7 @@ fn faulted_fleet_is_pure_and_thread_count_invariant() {
         "faulted fixture drew nothing: {o:?}"
     );
 
-    let trials = 5;
-    let cells = vec![CellSpec::fleet(spec, FleetMetric::Goodput, 41)];
-    let one = run_sweep(&SweepSpec { threads: Some(1), ..SweepSpec::new(cells.clone(), trials) });
-    let eight = run_sweep(&SweepSpec { threads: Some(8), ..SweepSpec::new(cells, trials) });
-    for (a, b) in one.iter().zip(&eight) {
-        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
-        assert_eq!(a.std.to_bits(), b.std.to_bits());
-        assert_eq!(a.median.to_bits(), b.median.to_bits());
-        assert_eq!(a.p95.to_bits(), b.p95.to_bits());
-    }
+    assert_sweep_thread_invariant(vec![CellSpec::fleet(spec, FleetMetric::Goodput, 41)], 5);
 }
 
 /// The fleet fixture with a hostile gray plane: an imperfect, jittery
@@ -447,16 +442,7 @@ fn gray_fleet_is_pure_and_thread_count_invariant() {
     assert!(o.quarantines > 0, "flap bursts never crossed the threshold: {o:?}");
     assert!(o.degraded_node_s > 0.0, "fail-slow sampled no episodes: {o:?}");
 
-    let trials = 5;
-    let cells = vec![CellSpec::fleet(spec, FleetMetric::Goodput, 41)];
-    let one = run_sweep(&SweepSpec { threads: Some(1), ..SweepSpec::new(cells.clone(), trials) });
-    let eight = run_sweep(&SweepSpec { threads: Some(8), ..SweepSpec::new(cells, trials) });
-    for (a, b) in one.iter().zip(&eight) {
-        assert_eq!(a.mean.to_bits(), b.mean.to_bits());
-        assert_eq!(a.std.to_bits(), b.std.to_bits());
-        assert_eq!(a.median.to_bits(), b.median.to_bits());
-        assert_eq!(a.p95.to_bits(), b.p95.to_bits());
-    }
+    assert_sweep_thread_invariant(vec![CellSpec::fleet(spec, FleetMetric::Goodput, 41)], 5);
 }
 
 #[test]

@@ -1,0 +1,169 @@
+//! Sharded-cell determinism plane (DESIGN.md §Sharded cells).
+//!
+//! `FleetSpec::cells` is a *performance* knob, never a semantics knob: a
+//! trial must be byte-identical at any cell count, at any thread count,
+//! with every fault plane lit up at once. These tests pin that contract
+//! on the hardest fixture the repo has — Poisson churn, an imperfect
+//! jittery detector with flapping and fail-slow episodes (gray plane),
+//! lossy/duplicating/delaying links under retry (net plane), and a
+//! starved checkpoint server (contention) — across cells ∈ {1, 2, 7, 64}
+//! and sweep thread counts {1, 8}.
+//!
+//! 64 cells on a 32-node fleet is deliberate over-sharding: more cells
+//! than nodes leaves some cells permanently empty, the degenerate layout
+//! where routing or merge-order bugs would surface first.
+
+use biomaft::coordinator::ftmanager::Strategy;
+use biomaft::failure::DetectorModel;
+use biomaft::net::{LinkFaults, RetryPolicy};
+use biomaft::scenario::{
+    run_fleet, run_sweep, CellSpec, FleetMetric, FleetOutcome, FleetSpec, SweepSpec,
+};
+use std::num::NonZeroUsize;
+
+/// The kitchen-sink fleet: every plane on, all at once. The imperfect
+/// detector (precision < 1) also forces the eager-drain churn mode, so
+/// false alarms can precede their doom.
+fn hostile_spec() -> FleetSpec {
+    let mut spec = FleetSpec::placentia_fleet(Strategy::Hybrid, 32, 8.0, 1.0);
+    spec.ckpt_streams = 1; // checkpoint-server contention
+    spec.gray.detector =
+        Some(DetectorModel { coverage: 0.6, precision: 0.4, lead_jitter_s: 30.0 });
+    spec.gray.flapping.rate_per_node_h = 1.0;
+    spec.gray.fail_slow.rate_per_node_h = 0.5;
+    spec.faults.peer = LinkFaults { loss_p: 0.15, dup_p: 0.1, delay_p: 0.3, delay_mean_s: 0.5 };
+    spec.faults.ckpt = LinkFaults { loss_p: 0.1, dup_p: 0.05, delay_p: 0.2, delay_mean_s: 1.0 };
+    spec.faults.retry =
+        RetryPolicy { timeout_s: 0.4, max_retries: 3, backoff_base_s: 0.2, backoff_mult: 1.8 };
+    spec.validate().expect("fixture must validate");
+    spec
+}
+
+fn with_cells(mut spec: FleetSpec, cells: usize) -> FleetSpec {
+    spec.cells = NonZeroUsize::new(cells).expect("cells >= 1");
+    spec
+}
+
+/// Every outcome field, bit for bit.
+fn assert_outcomes_identical(a: &FleetOutcome, b: &FleetOutcome, what: &str) {
+    assert_eq!(a.events, b.events, "{what}");
+    assert_eq!(a.jobs_arrived, b.jobs_arrived, "{what}");
+    assert_eq!(a.jobs_completed, b.jobs_completed, "{what}");
+    assert_eq!(a.jobs_waiting, b.jobs_waiting, "{what}");
+    assert_eq!(a.peak_live_jobs, b.peak_live_jobs, "{what}");
+    assert_eq!(a.mean_slowdown.to_bits(), b.mean_slowdown.to_bits(), "{what}");
+    assert_eq!(a.p95_slowdown.to_bits(), b.p95_slowdown.to_bits(), "{what}");
+    assert_eq!(a.goodput_ratio.to_bits(), b.goodput_ratio.to_bits(), "{what}");
+    assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "{what}");
+    assert_eq!(a.last_completion_s.to_bits(), b.last_completion_s.to_bits(), "{what}");
+    assert_eq!(a.migrations, b.migrations, "{what}");
+    assert_eq!(a.rollbacks, b.rollbacks, "{what}");
+    assert_eq!(a.subs_lost, b.subs_lost, "{what}");
+    assert_eq!(a.absorbed_failures, b.absorbed_failures, "{what}");
+    assert_eq!(a.peak_concurrent_migrations, b.peak_concurrent_migrations, "{what}");
+    assert_eq!(a.peak_concurrent_recoveries, b.peak_concurrent_recoveries, "{what}");
+    assert_eq!(a.net_retries, b.net_retries, "{what}");
+    assert_eq!(a.net_timeouts, b.net_timeouts, "{what}");
+    assert_eq!(a.fallbacks, b.fallbacks, "{what}");
+    assert_eq!(a.dup_suppressed, b.dup_suppressed, "{what}");
+    assert_eq!(a.spurious_migrations, b.spurious_migrations, "{what}");
+    assert_eq!(a.quarantines, b.quarantines, "{what}");
+    assert_eq!(a.quarantine_releases, b.quarantine_releases, "{what}");
+    assert_eq!(a.degraded_node_s.to_bits(), b.degraded_node_s.to_bits(), "{what}");
+}
+
+#[test]
+fn sharded_fleet_byte_identical_across_cells_with_every_plane_on() {
+    let base = hostile_spec();
+    let reference = run_fleet(&base, 23);
+    // the fixture genuinely exercises all four planes at once
+    assert!(reference.jobs_completed > 0, "{reference:?}");
+    assert!(reference.migrations > 0 || reference.rollbacks > 0, "{reference:?}");
+    assert!(
+        reference.net_retries > 0 || reference.net_timeouts > 0,
+        "net plane drew nothing: {reference:?}"
+    );
+    assert!(
+        reference.spurious_migrations > 0,
+        "imperfect detector cried no wolf: {reference:?}"
+    );
+    assert!(reference.quarantines > 0, "flapping never quarantined: {reference:?}");
+    assert!(reference.degraded_node_s > 0.0, "fail-slow sampled nothing: {reference:?}");
+    for cells in [2usize, 7, 64] {
+        let o = run_fleet(&with_cells(base.clone(), cells), 23);
+        assert_outcomes_identical(&reference, &o, &format!("cells={cells}"));
+    }
+}
+
+#[test]
+fn lazy_churn_fleet_byte_identical_across_cells() {
+    // No detector ⇒ no false alarms ⇒ the lazy churn pull path (per-node
+    // plans materialized window-by-window, never all upfront) — with the
+    // net plane still on and heavy churn.
+    let mut base = FleetSpec::placentia_fleet(Strategy::Hybrid, 48, 10.0, 2.0);
+    base.faults.peer = LinkFaults { loss_p: 0.2, dup_p: 0.05, delay_p: 0.2, delay_mean_s: 0.4 };
+    base.validate().expect("fixture must validate");
+    let reference = run_fleet(&base, 29);
+    assert!(reference.jobs_completed > 0, "{reference:?}");
+    assert!(reference.rollbacks > 0, "churny fixture must roll back: {reference:?}");
+    for cells in [2usize, 7, 64] {
+        let o = run_fleet(&with_cells(base.clone(), cells), 29);
+        assert_outcomes_identical(&reference, &o, &format!("cells={cells}"));
+    }
+}
+
+#[test]
+fn sharded_sweep_byte_identical_across_cells_and_thread_counts() {
+    // The full grid: cells {1, 2, 7, 64} × threads {1, 8}, all eight
+    // sweeps landing on bit-identical summaries of the hostile fixture.
+    let base = hostile_spec();
+    let trials = 3;
+    let sweep = |cells: usize, threads: usize| {
+        run_sweep(&SweepSpec {
+            threads: Some(threads),
+            ..SweepSpec::new(
+                vec![CellSpec::fleet(
+                    with_cells(base.clone(), cells),
+                    FleetMetric::MeanSlowdown,
+                    23,
+                )],
+                trials,
+            )
+        })
+    };
+    let reference = sweep(1, 1);
+    for cells in [1usize, 2, 7, 64] {
+        for threads in [1usize, 8] {
+            if (cells, threads) == (1, 1) {
+                continue;
+            }
+            let got = sweep(cells, threads);
+            assert_eq!(reference.len(), got.len());
+            for (a, b) in reference.iter().zip(&got) {
+                let what = format!("cells={cells} threads={threads}");
+                assert_eq!(a.n, b.n, "{what}");
+                assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "{what}");
+                assert_eq!(a.std.to_bits(), b.std.to_bits(), "{what}");
+                assert_eq!(a.median.to_bits(), b.median.to_bits(), "{what}");
+                assert_eq!(a.p95.to_bits(), b.p95.to_bits(), "{what}");
+                assert_eq!(a.min.to_bits(), b.min.to_bits(), "{what}");
+                assert_eq!(a.max.to_bits(), b.max.to_bits(), "{what}");
+            }
+        }
+    }
+}
+
+#[test]
+fn scratch_reuse_stays_bit_identical_when_cell_counts_change_between_trials() {
+    // One scratch carried across trials whose cell counts differ — the
+    // per-cell wheels, slabs and placement sets must fully re-shape on
+    // every reset, never bleed state across layouts.
+    let base = hostile_spec();
+    let mut scratch = biomaft::scenario::FleetScratch::new();
+    for (cells, seed) in [(4usize, 5u64), (1, 5), (64, 7), (3, 5), (1, 7)] {
+        let spec = with_cells(base.clone(), cells);
+        let fresh = run_fleet(&spec, seed);
+        let reused = biomaft::scenario::run_fleet_scratch(&spec, seed, &mut scratch);
+        assert_outcomes_identical(&fresh, &reused, &format!("cells={cells} seed={seed}"));
+    }
+}
